@@ -1,0 +1,59 @@
+//! Device-count scaling (the paper's Fig 3 "multiple GPUs" claim):
+//! wall/modeled epoch time, communication volume, and quality as the
+//! simulated device count grows.
+//!
+//! ```bash
+//! cargo run --release --example multi_device_scaling -- [--n 8000]
+//! ```
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::bench::{fmt_secs, Table};
+use nomad::cli::Args;
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::text_corpus_like;
+use nomad::embed::NomadParams;
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 8000);
+    let epochs = args.usize("epochs", 60);
+
+    let mut rng = Rng::new(2);
+    let ds = text_corpus_like(n, &mut rng);
+    println!("corpus: {} ({} x {})", ds.name, ds.n(), ds.dim());
+
+    let eval_cfg = EvalCfg { np_sample: 250, triplets: 8000, ..Default::default() };
+    let mut table = Table::new(
+        "Multi-device scaling (modeled H100 node; measured on 1 CPU core)",
+        &["Devices", "Measured", "Modeled", "Modeled speedup", "All-gather", "NP@10", "RTA"],
+    );
+
+    let mut base_modeled = None;
+    for devices in [1usize, 2, 4, 8] {
+        let params = NomadParams { epochs, ..Default::default() };
+        let run_cfg = RunConfig {
+            n_devices: devices,
+            backend: BackendKind::Native,
+            index: IndexParams { n_clusters: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let coord = NomadCoordinator::new(params, run_cfg);
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let (np, rta) = evaluate(&ds, &run.positions, &eval_cfg);
+        let base = *base_modeled.get_or_insert(run.modeled_train_secs);
+        table.row(vec![
+            format!("{devices}").into(),
+            fmt_secs(run.train_secs).into(),
+            fmt_secs(run.modeled_train_secs).into(),
+            format!("{:.2}x", base / run.modeled_train_secs.max(1e-12)).into(),
+            format!("{:.0} KiB", run.comm.allgather_bytes_total as f64 / 1024.0).into(),
+            format!("{:.1}%", np * 100.0).into(),
+            format!("{:.1}%", rta * 100.0).into(),
+        ]);
+    }
+    table.print();
+    table.save_json("multi_device_scaling_example");
+}

@@ -1,0 +1,34 @@
+//! Noise-mass (|M|) sensitivity sweep on the PubMed-like corpus: the paper
+//! leaves |M| unspecified; this probe motivates the repo default (50).
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::WeightModel;
+use nomad::ann::IndexParams;
+use nomad::coordinator::{NomadCoordinator, RunConfig};
+use nomad::data::pubmed_like;
+use nomad::embed::NomadParams;
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::util::rng::Rng;
+fn main() {
+    let mut rng = Rng::new(0);
+    let ds = pubmed_like(8000, &mut rng);
+    let eval_cfg = EvalCfg { np_sample: 250, triplets: 4000, ..Default::default() };
+    let cases: Vec<(&str, NomadParams)> = vec![
+        ("base m=5 revrank", NomadParams { epochs: 300, ..Default::default() }),
+        ("m=20", NomadParams { epochs: 300, m_noise: 20.0, ..Default::default() }),
+        ("m=50", NomadParams { epochs: 300, m_noise: 50.0, ..Default::default() }),
+        ("m=100", NomadParams { epochs: 300, m_noise: 100.0, ..Default::default() }),
+        ("m=50 e600", NomadParams { epochs: 600, m_noise: 50.0, ..Default::default() }), ("m=50 negs32", NomadParams { epochs: 300, m_noise: 50.0, negs: 32, ..Default::default() }),
+    ];
+    for (name, p) in cases {
+        let k = p.k;
+        let coord = NomadCoordinator::new(p, RunConfig {
+            n_devices: 8,
+            index: IndexParams { n_clusters: 48, k, ..Default::default() },
+            ..Default::default()
+        });
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let (np, rta) = evaluate(&ds, &run.positions, &eval_cfg);
+        println!("{name}: NP@10={:.1}% RTA={:.1}% wall={:.2}s", np*100.0, rta*100.0, run.train_secs);
+    }
+}

@@ -1,0 +1,132 @@
+//! Table 1 analog: PubMed-like corpus, NOMAD vs OpenTSNE-like vs the
+//! single-GPU baselines, reporting NP@10, wall time, modeled time, speedup.
+//!
+//! ```bash
+//! cargo run --release --example pubmed_table1 -- [--n 10000] [--seeds 3]
+//! ```
+//!
+//! The paper's Table 1: OpenTSNE 6.2% NP@10 in 8 h on 16 CPUs; NOMAD
+//! 6.1±0.3% in 1.47 h on 8 H100s (5.4x); RapidsUMAP / t-SNE-CUDA OOM.
+//! Here the *shape* to reproduce is: NOMAD ≈ OpenTSNE quality, large
+//! speedup, and the single-GPU baselines exceeding their (simulated)
+//! memory budget.  See EXPERIMENTS.md §Table1.
+
+use nomad::ann::IndexParams;
+use nomad::bench::{fmt_pct, fmt_secs, Table};
+use nomad::cli::Args;
+use nomad::coordinator::BackendKind;
+use nomad::data::pubmed_like;
+use nomad::harness::{run_method, EvalCfg, Method};
+use nomad::util::rng::Rng;
+use nomad::util::stats::Summary;
+
+/// Simulated single-GPU memory budget (bytes) for the OOM column: both
+/// t-SNE-CUDA and RapidsUMAP materialize O(n·k) + O(n²/partition) device
+/// state; the paper hit 80 GB caps at PubMed scale.  We scale the cap to
+/// this testbed so the same *mechanism* (single-device memory wall vs
+/// NOMAD's sharding) is exercised.
+fn single_gpu_oom(n: usize, dim: usize, budget_bytes: usize) -> bool {
+    // embeddings + kNN graph + per-point force scratch, f32
+    let per_point = dim * 4 + 90 * 4 + 64;
+    n * per_point > budget_bytes
+}
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 10_000);
+    let seeds = args.u64("seeds", 3);
+    let epochs = args.usize("epochs", 120);
+    let budget = args.usize("gpu-bytes", 8 * 1024 * 1024); // scaled-down "vRAM"
+
+    let mut rng = Rng::new(0);
+    let ds = pubmed_like(n, &mut rng);
+    println!("corpus: {} ({} x {})", ds.name, ds.n(), ds.dim());
+    let index = IndexParams { n_clusters: 48, ..Default::default() };
+    let eval_cfg = EvalCfg { np_sample: 300, triplets: 10_000, ..Default::default() };
+
+    let mut table = Table::new(
+        "Table 1 analog — PubMed-like corpus",
+        &["Method", "Compute", "NP@10", "Time", "Modeled", "Speedup"],
+    );
+
+    // OpenTSNE row (the 1x reference)
+    let mut open_np = Vec::new();
+    let mut open_secs = Vec::new();
+    for seed in 0..seeds {
+        let r = run_method(&ds, &Method::OpenTsneLike, epochs * 2, 0, &index, &eval_cfg, seed);
+        open_np.push(r.checkpoints[0].np_at_10);
+        open_secs.push(r.total_secs);
+    }
+    let open_np_s = Summary::of(&open_np);
+    let open_time = Summary::of(&open_secs).mean;
+    table.row(vec![
+        "OpenTSNE-like".into(),
+        "1 core (CPU)".into(),
+        fmt_pct(open_np_s.mean, open_np_s.sem()).into(),
+        fmt_secs(open_time).into(),
+        "-".into(),
+        "1x".into(),
+    ]);
+
+    // NOMAD rows
+    let mut nomad_np = Vec::new();
+    let mut nomad_secs = Vec::new();
+    let mut nomad_modeled = Vec::new();
+    for seed in 0..seeds {
+        let r = run_method(
+            &ds,
+            &Method::Nomad { devices: 8, backend: BackendKind::Xla },
+            epochs,
+            0,
+            &index,
+            &eval_cfg,
+            seed,
+        );
+        nomad_np.push(r.checkpoints[0].np_at_10);
+        nomad_secs.push(r.total_secs);
+        nomad_modeled.push(r.modeled_secs);
+    }
+    let np_s = Summary::of(&nomad_np);
+    let t = Summary::of(&nomad_secs).mean;
+    let tm = Summary::of(&nomad_modeled).mean;
+    table.row(vec![
+        "NOMAD Projection".into(),
+        "8 sim-dev (XLA)".into(),
+        fmt_pct(np_s.mean, np_s.sem()).into(),
+        fmt_secs(t).into(),
+        fmt_secs(tm).into(),
+        format!("{:.1}x (modeled)", open_time / tm.max(1e-9)).into(),
+    ]);
+
+    // single-GPU baselines: exercised at reduced n, reported OOM at full n
+    for (name, method) in [
+        ("RapidsUMAP-like", Method::UmapLike),
+        ("tSNE-CUDA-like", Method::TsneCudaLike),
+    ] {
+        if single_gpu_oom(n, ds.dim(), budget) {
+            table.row(vec![
+                name.into(),
+                "1 sim-GPU".into(),
+                "-".into(),
+                "OOM".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        } else {
+            let r = run_method(&ds, &method, epochs, 0, &index, &eval_cfg, 0);
+            let cp = &r.checkpoints[0];
+            table.row(vec![
+                name.into(),
+                "1 sim-GPU".into(),
+                fmt_pct(cp.np_at_10, 0.0).into(),
+                fmt_secs(r.total_secs).into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    }
+
+    table.print();
+    table.save_json("table1_pubmed_example");
+    println!("\n(paper: OpenTSNE 6.2% / 8h; NOMAD 6.1±0.3% / 1.47h / 5.4x; others OOM)");
+}

@@ -1,0 +1,133 @@
+//! End-to-end driver (paper Fig 1 + Fig 4 analog): build a complete data
+//! map of a Multilingual-Wikipedia-like corpus on the full three-layer
+//! stack — K-Means ANN index, sharded multi-device NOMAD training through
+//! the AOT XLA artifacts, metric evaluation, and multiscale renders.
+//!
+//! ```bash
+//! cargo run --release --example wikipedia_map -- [--n 20000] [--devices 8] [--native]
+//! ```
+//!
+//! Outputs: out/wikipedia_map.png (global Fig 1), out/wikipedia_zoom{1,2}.png
+//! (the Fig 4(b)/(c)-style magnifications), plus headline stats on stdout.
+//! The run is recorded in EXPERIMENTS.md §Fig1/Fig4.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::cli::Args;
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::wikipedia_like;
+use nomad::embed::NomadParams;
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::metrics::label_knn_agreement;
+use nomad::util::rng::Rng;
+use nomad::viz::{density_map, png, View};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.usize("n", 20_000);
+    let devices = args.usize("devices", 8);
+    let epochs = args.usize("epochs", 120);
+    let backend = if args.bool("native") { BackendKind::Native } else { BackendKind::Xla };
+
+    println!("== Multilingual-Wikipedia-like data map (Fig 1 / Fig 4 analog) ==");
+    let mut rng = Rng::new(args.u64("seed", 1));
+    let ds = wikipedia_like(n, &mut rng);
+    println!(
+        "corpus: {} ({} x {}), 3-level hierarchy: {} languages / {} topics / {} article clusters",
+        ds.name,
+        ds.n(),
+        ds.dim(),
+        ds.labels[0].iter().max().unwrap() + 1,
+        ds.labels[1].iter().max().unwrap() + 1,
+        ds.labels[2].iter().max().unwrap() + 1,
+    );
+
+    let params = NomadParams { epochs, ..Default::default() };
+    let run_cfg = RunConfig {
+        n_devices: devices,
+        backend,
+        index: IndexParams { n_clusters: 64, ..Default::default() },
+        verbose: true,
+        ..Default::default()
+    };
+    let coord = NomadCoordinator::new(params, run_cfg);
+    let run = coord.fit(&ds, &NativeBackend::default());
+
+    println!(
+        "\nindex: {} clusters, {:.1}s | train: {:.1}s measured ({} sim devices, 1 core), {:.3}s modeled-8xH100",
+        run.n_clusters, run.index_secs, run.train_secs, devices, run.modeled_train_secs
+    );
+    println!(
+        "comm: {:.1} KiB means all-gathered over {} epochs; positive phase: 0 bytes",
+        run.comm.allgather_bytes_total as f64 / 1024.0,
+        run.comm.epochs
+    );
+
+    let eval_cfg = EvalCfg { np_sample: 300, triplets: 20_000, ..Default::default() };
+    let (np10, rta) = evaluate(&ds, &run.positions, &eval_cfg);
+    let mut mrng = Rng::new(9);
+    let lang_purity = label_knn_agreement(&run.positions, &ds.labels[0], 2000, &mut mrng);
+    let article_purity = label_knn_agreement(&run.positions, ds.fine_labels(), 2000, &mut mrng);
+    println!("quality: NP@10 = {:.1}%  RTA = {:.1}%", np10 * 100.0, rta * 100.0);
+    println!(
+        "map coherence: language-level 1-NN purity {:.1}%, article-cluster purity {:.1}%",
+        lang_purity * 100.0,
+        article_purity * 100.0
+    );
+
+    // ---- Fig 1: global map colored by language -------------------------
+    std::fs::create_dir_all("out")?;
+    let view = View::fit(&run.positions);
+    let global = density_map(&run.positions, Some(&ds.labels[0]), &view, 1000, 1000);
+    png::write_rgb(Path::new("out/wikipedia_map.png"), global.width, global.height, &global.pixels)?;
+
+    // ---- Fig 4: multiscale zooms around the densest article cluster ----
+    // find the largest fine cluster's centroid in embedding space
+    let fine = ds.fine_labels();
+    let n_fine = (*fine.iter().max().unwrap() + 1) as usize;
+    let mut counts = vec![0u32; n_fine];
+    for &l in fine {
+        counts[l as usize] += 1;
+    }
+    let target = counts.iter().enumerate().max_by_key(|(_, c)| **c).unwrap().0 as u32;
+    let mut cx = 0.0f64;
+    let mut cy = 0.0f64;
+    let mut m = 0.0f64;
+    for i in 0..ds.n() {
+        if fine[i] == target {
+            cx += run.positions.row(i)[0] as f64;
+            cy += run.positions.row(i)[1] as f64;
+            m += 1.0;
+        }
+    }
+    let (cx, cy) = ((cx / m) as f32, (cy / m) as f32);
+    for (file, factor, level) in [
+        ("out/wikipedia_zoom1.png", 20.0, 1usize), // Fig 4(b): 20x, topic colors
+        ("out/wikipedia_zoom2.png", 100.0, 2),     // Fig 4(c): deeper, article colors
+    ] {
+        let z = view.zoom(cx, cy, factor);
+        let r = density_map(&run.positions, Some(&ds.labels[level]), &z, 800, 800);
+        png::write_rgb(Path::new(file), r.width, r.height, &r.pixels)?;
+    }
+    println!("renders: out/wikipedia_map.png, out/wikipedia_zoom1.png, out/wikipedia_zoom2.png");
+
+    // machine-readable record for EXPERIMENTS.md
+    use nomad::bench::jsonx::*;
+    nomad::bench::log_experiment(
+        "fig1_fig4_wikipedia",
+        obj(vec![
+            ("n", num(n as f64)),
+            ("devices", num(devices as f64)),
+            ("epochs", num(epochs as f64)),
+            ("np10", num(np10)),
+            ("rta", num(rta)),
+            ("lang_purity", num(lang_purity)),
+            ("article_purity", num(article_purity)),
+            ("train_secs", num(run.train_secs)),
+            ("modeled_secs", num(run.modeled_train_secs)),
+            ("allgather_bytes", num(run.comm.allgather_bytes_total as f64)),
+        ]),
+    );
+    Ok(())
+}

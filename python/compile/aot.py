@@ -1,0 +1,191 @@
+"""AOT lowering: JAX (L2) -> HLO text artifacts + manifest for the Rust runtime.
+
+Interchange format is HLO *text*, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+The Makefile invokes this once; the Rust binary is self-contained afterwards.
+
+Artifacts are generated per shape *bucket* (shards are padded up to the next
+bucket).  ``manifest.json`` records every artifact's function, bucket
+parameters and input/output signature; the Rust runtime
+(rust/src/runtime/artifact.rs) parses it with the from-scratch JSON parser
+and picks buckets at run time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default bucket grids.  Kept deliberately small so `make artifacts` stays
+# fast; the Rust runtime falls back to its native implementation for any
+# shape without an artifact, so adding buckets is purely a perf knob.
+STEP_BUCKETS = [512, 1024, 2048, 4096, 8192]
+KMEANS_BUCKETS = [2048, 8192]
+KNN_BUCKETS = [512, 2048]
+DIMS = [32, 64, 256]
+K_NBRS = 15
+N_NEGS = 8
+R_MEANS = 256
+STEP_BLOCK = 256
+ASSIGN_BLOCK = 512
+KNN_BLOCK = 256
+C_CENTROIDS = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args, outs):
+    def one(x):
+        return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+    return [one(a) for a in args], [one(o) for o in outs]
+
+
+def lower_nomad_step(s, k, n, r, block):
+    f32, i32 = jnp.float32, jnp.int32
+    args = [
+        jax.ShapeDtypeStruct((s, 2), f32),     # pos
+        jax.ShapeDtypeStruct((s, k), i32),     # nbr_idx
+        jax.ShapeDtypeStruct((s, k), f32),     # nbr_w
+        jax.ShapeDtypeStruct((s, n), i32),     # neg_idx
+        jax.ShapeDtypeStruct((1,), f32),       # neg_w
+        jax.ShapeDtypeStruct((r, 2), f32),     # means
+        jax.ShapeDtypeStruct((r,), f32),       # mean_w
+        jax.ShapeDtypeStruct((s,), f32),       # valid
+        jax.ShapeDtypeStruct((), f32),         # lr
+    ]
+    fn = lambda *a: model.nomad_step(*a, block=block)
+    lowered = jax.jit(fn).lower(*args)
+    outs = [jax.ShapeDtypeStruct((s, 2), f32), jax.ShapeDtypeStruct((), f32)]
+    ins, os_ = _sig(args, outs)
+    return lowered, {
+        "fn": "nomad_step",
+        "params": {"s": s, "k": k, "neg": n, "r": r, "block": block},
+        "inputs": ins,
+        "outputs": os_,
+    }
+
+
+def lower_kmeans_em(n, d, c, block):
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((n, d), f32),
+        jax.ShapeDtypeStruct((c, d), f32),
+        jax.ShapeDtypeStruct((c,), f32),
+    ]
+    fn = lambda *a: model.kmeans_em_step(*a, block=block)
+    lowered = jax.jit(fn).lower(*args)
+    outs = [
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((c, d), f32),
+        jax.ShapeDtypeStruct((c,), f32),
+    ]
+    ins, os_ = _sig(args, outs)
+    return lowered, {
+        "fn": "kmeans_em_step",
+        "params": {"n": n, "d": d, "c": c, "block": block},
+        "inputs": ins,
+        "outputs": os_,
+    }
+
+
+def lower_knn(n, d, k, block):
+    f32 = jnp.float32
+    args = [
+        jax.ShapeDtypeStruct((n, d), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+    ]
+    fn = lambda *a: model.knn_build(*a, k=k, block=block)
+    lowered = jax.jit(fn).lower(*args)
+    outs = [
+        jax.ShapeDtypeStruct((n, k), jnp.int32),
+        jax.ShapeDtypeStruct((n, k), f32),
+    ]
+    ins, os_ = _sig(args, outs)
+    return lowered, {
+        "fn": "knn_build",
+        "params": {"n": n, "d": d, "k": k, "block": block},
+        "inputs": ins,
+        "outputs": os_,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--step-buckets", type=int, nargs="*", default=STEP_BUCKETS)
+    ap.add_argument("--kmeans-buckets", type=int, nargs="*", default=KMEANS_BUCKETS)
+    ap.add_argument("--knn-buckets", type=int, nargs="*", default=KNN_BUCKETS)
+    ap.add_argument("--dims", type=int, nargs="*", default=DIMS)
+    ap.add_argument("--k", type=int, default=K_NBRS)
+    ap.add_argument("--negs", type=int, default=N_NEGS)
+    ap.add_argument("--r", type=int, default=R_MEANS)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+
+    def emit(name, lowered, meta):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        meta["name"] = name
+        meta["file"] = f"{name}.hlo.txt"
+        entries.append(meta)
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    for s in args.step_buckets:
+        block = min(STEP_BLOCK, s)
+        name = f"nomad_step_s{s}_k{args.k}_n{args.negs}_r{args.r}"
+        print(f"lowering {name} ...")
+        lowered, meta = lower_nomad_step(s, args.k, args.negs, args.r, block)
+        emit(name, lowered, meta)
+
+    for n in args.kmeans_buckets:
+        for d in args.dims:
+            block = min(ASSIGN_BLOCK, n)
+            name = f"kmeans_em_n{n}_d{d}_c{C_CENTROIDS}"
+            print(f"lowering {name} ...")
+            lowered, meta = lower_kmeans_em(n, d, C_CENTROIDS, block)
+            emit(name, lowered, meta)
+
+    for n in args.knn_buckets:
+        for d in args.dims:
+            block = min(KNN_BLOCK, n)
+            name = f"knn_n{n}_d{d}_k{args.k}"
+            print(f"lowering {name} ...")
+            lowered, meta = lower_knn(n, d, args.k, block)
+            emit(name, lowered, meta)
+
+    manifest = {
+        "version": 1,
+        "defaults": {"k": args.k, "negs": args.negs, "r": args.r, "c": C_CENTROIDS},
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

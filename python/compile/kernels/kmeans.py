@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: K-Means nearest-centroid assignment.
+
+This is the high-dimensional hot spot of the NOMAD ANN index build: every EM
+iteration assigns all N points (D up to 768) to the nearest of C centroids.
+On TPU this is an MXU problem: the N x C distance matrix is
+|x|^2 + |c|^2 - 2 X C^T, dominated by the X C^T matmul, which we tile
+(B_N x D) x (D x C) per grid step so each tile's operands sit in VMEM and the
+systolic array does the contraction — the Pallas re-think of the brute-force
+CUDA distance loops in t-SNE-CUDA / RAPIDS.
+
+interpret=True for CPU-PJRT executability (see forces.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 3.4e38
+
+
+def _assign_kernel(x_ref, c_ref, cmask_ref, d2_ref):
+    x = x_ref[...]                       # [B, D]
+    c = c_ref[...]                       # [C, D]
+    cmask = cmask_ref[...]               # [C]
+    x2 = jnp.sum(x * x, -1)[:, None]
+    c2 = jnp.sum(c * c, -1)[None, :]
+    # MXU contraction; accumulate in f32.
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)
+    d2_ref[...] = jnp.where(cmask[None, :] > 0.0, d2, _BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def kmeans_assign(x, c, cmask, *, block=512):
+    """Tiled nearest-centroid assignment: returns (assign i32 [N], d2 [N]).
+
+    Same contract as ``ref.kmeans_assign_ref``.  N must be divisible by
+    ``block`` (callers pad to bucket sizes).
+    """
+    n, d = x.shape
+    cc = c.shape[0]
+    assert n % block == 0, (n, block)
+    d2 = pl.pallas_call(
+        _assign_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((cc, d), lambda i: (0, 0)),
+            pl.BlockSpec((cc,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, cc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, cc), jnp.float32),
+        interpret=True,
+    )(x, c, cmask)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    best = jnp.min(d2, axis=1)
+    return assign, best

@@ -1,0 +1,79 @@
+"""Layer-1 Pallas kernel: within-cluster exact kNN distance tiles.
+
+NOMAD's ANN index computes *exact* nearest neighbors inside each K-Means
+cluster (paper §3.2), so each cluster is a connected component of the ANN
+graph and shards freely across devices.  The inner computation is a padded
+N x N squared-distance matrix (N = cluster bucket size, D = ambient dim),
+again MXU work: -2 X X^T plus rank-1 norms, tiled (B x D) x (D x N).  The
+top-k selection runs as jax.lax.top_k on the tile output (Layer 2), which XLA
+fuses with the distance computation.
+
+interpret=True for CPU-PJRT executability (see forces.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 3.4e38
+
+
+def _dist_kernel(x_ref, xall_ref, vmask_ref, d2_ref):
+    x = x_ref[...]                        # [B, D] row tile
+    xa = xall_ref[...]                    # [N, D] full matrix
+    vmask = vmask_ref[...]                # [N]
+    x2 = jnp.sum(x * x, -1)[:, None]
+    a2 = jnp.sum(xa * xa, -1)[None, :]
+    xc = jax.lax.dot_general(
+        x, xa, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    d2 = jnp.maximum(x2 + a2 - 2.0 * xc, 0.0)
+    # mask invalid columns
+    d2 = jnp.where(vmask[None, :] > 0.0, d2, _BIG)
+    # mask the diagonal (self) for this row tile
+    b, n = d2.shape
+    row = pl.program_id(0) * b + jax.lax.iota(jnp.int32, b)[:, None]
+    col = jax.lax.iota(jnp.int32, n)[None, :]
+    d2_ref[...] = jnp.where(row == col, _BIG, d2)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def knn(x, vmask, *, k, block=256):
+    """Exact kNN within one padded cluster: (idx [N,k] i32, d2 [N,k]).
+
+    Same contract as ``ref.knn_ref``.
+    """
+    n, d = x.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    d2 = pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,
+    )(x, x, vmask)
+    # k rounds of masked argmin instead of lax.top_k: top_k lowers to a
+    # `sort` carrying the "largest" attribute, which the xla crate's
+    # xla_extension 0.5.1 HLO-text parser rejects.  k passes over the tile
+    # output are negligible next to the distance matmul and parse cleanly.
+    col = jnp.arange(n, dtype=jnp.int32)[None, :]
+    idxs = []
+    dists = []
+    cur = d2
+    for _ in range(k):
+        i = jnp.argmin(cur, axis=1).astype(jnp.int32)   # [N]
+        v = jnp.min(cur, axis=1)
+        idxs.append(i)
+        dists.append(v)
+        cur = jnp.where(col == i[:, None], _BIG, cur)
+    return jnp.stack(idxs, axis=1), jnp.stack(dists, axis=1)

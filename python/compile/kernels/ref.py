@@ -1,0 +1,160 @@
+"""Pure-jnp reference oracles for the NOMAD Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package must match its oracle here to float tolerance, and the analytic
+gradient oracle must itself match ``jax.grad`` of the scalar loss.
+
+Shapes / conventions (see DESIGN.md §7):
+  pos      [S, 2]  f32   low-dimensional positions of one shard (padded)
+  nbr_idx  [S, K]  i32   within-shard indices of each head's kNN (self for pad)
+  nbr_w    [S, K]  f32   p(j|i) edge weights (inverse-rank model; 0 for pad)
+  neg_idx  [S, N]  i32   within-shard exact-negative sample indices
+  neg_w    [1]     f32   scale |M| * p(m in own cell) / N for exact negatives
+  means    [R, 2]  f32   all-gathered cluster means (embedding space, padded)
+  mean_w   [R]     f32   |M| * p(m in r) weights (0 for padding rows)
+  valid    [S]     f32   1.0 for real points, 0.0 for shard padding
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cauchy(d2):
+    """The Cauchy / Student-t(1) kernel q = 1 / (1 + d^2)."""
+    return 1.0 / (1.0 + d2)
+
+
+def pairwise_d2(a, b):
+    """Squared euclidean distances between rows of a [n,d] and b [m,d]."""
+    a2 = jnp.sum(a * a, axis=-1)[:, None]
+    b2 = jnp.sum(b * b, axis=-1)[None, :]
+    return jnp.maximum(a2 + b2 - 2.0 * (a @ b.T), 0.0)
+
+
+def nomad_loss(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid):
+    """Scalar NOMAD Projection loss (paper Eq 3) for one shard.
+
+    Mean over valid heads of
+      -sum_j w_ij [ log q(ij) - log (q(ij) + A_i) ]
+    with A_i the mean-negative plus exact-negative mass.  ``means`` are
+    treated as constants (remote shards; stop_gradient), matching the
+    distributed algorithm where gradients never cross devices.
+    """
+    means = jax.lax.stop_gradient(means)
+    pn = jnp.take(pos, nbr_idx, axis=0)            # [S,K,2]
+    d2 = jnp.sum((pos[:, None, :] - pn) ** 2, -1)  # [S,K]
+    q_ij = cauchy(d2)
+
+    dm2 = pairwise_d2(pos, means)                  # [S,R]
+    q_ir = cauchy(dm2)
+
+    pneg = jnp.take(pos, neg_idx, axis=0)          # [S,N,2]
+    dn2 = jnp.sum((pos[:, None, :] - pneg) ** 2, -1)
+    q_in = cauchy(dn2)
+
+    a = jnp.sum(mean_w[None, :] * q_ir, -1) + neg_w[0] * jnp.sum(q_in, -1)
+    z = q_ij + a[:, None]
+    per_head = -jnp.sum(nbr_w * (jnp.log(q_ij) - jnp.log(z)), -1)
+    nvalid = jnp.maximum(jnp.sum(valid), 1.0)
+    return jnp.sum(per_head * valid) / nvalid
+
+
+def nomad_grad_autodiff(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid):
+    """jax.grad of the scalar loss — the gold oracle for the analytic forms."""
+    return jax.grad(nomad_loss)(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid)
+
+
+def nomad_forces_ref(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid):
+    """Analytic per-head force decomposition (the Pallas kernel contract).
+
+    Returns (head_grad [S,2], tail_grad [S,K,2], negtail_grad [S,N,2],
+    loss [S]).  The full position gradient of ``nomad_loss`` (times the number
+    of valid heads) is
+
+        head_grad + scatter_add(tail_grad @ nbr_idx)
+                  + scatter_add(negtail_grad @ neg_idx)
+
+    which ``nomad_grad_ref`` assembles below.
+    """
+    pn = jnp.take(pos, nbr_idx, axis=0)
+    delta_j = pos[:, None, :] - pn                 # [S,K,2]
+    q_ij = cauchy(jnp.sum(delta_j**2, -1))         # [S,K]
+
+    dm = pos[:, None, :] - means[None, :, :]       # [S,R,2]
+    q_ir = cauchy(jnp.sum(dm**2, -1))              # [S,R]
+
+    pneg = jnp.take(pos, neg_idx, axis=0)
+    delta_n = pos[:, None, :] - pneg               # [S,N,2]
+    q_in = cauchy(jnp.sum(delta_n**2, -1))         # [S,N]
+
+    a = jnp.sum(mean_w[None, :] * q_ir, -1) + neg_w[0] * jnp.sum(q_in, -1)
+    z = q_ij + a[:, None]                          # [S,K]
+    w = nbr_w * valid[:, None]
+
+    loss = -jnp.sum(w * (jnp.log(q_ij) - jnp.log(z)), -1)
+
+    # attraction: 2 w q (1 - q/Z) along delta; reaction on the tail.
+    c_att = 2.0 * w * q_ij * (1.0 - q_ij / z)      # [S,K]
+    att_i = jnp.sum(c_att[:, :, None] * delta_j, 1)
+    tail_grad = -c_att[:, :, None] * delta_j
+
+    # shared repulsion strength s_i = sum_j w_ij / Z_ij
+    s = jnp.sum(w / z, -1)                         # [S]
+
+    c_mr = 2.0 * s[:, None] * mean_w[None, :] * q_ir**2
+    rep_means = jnp.sum(c_mr[:, :, None] * dm, 1)
+
+    c_nr = 2.0 * s[:, None] * neg_w[0] * q_in**2
+    rep_negs = jnp.sum(c_nr[:, :, None] * delta_n, 1)
+    negtail_grad = c_nr[:, :, None] * delta_n
+
+    head_grad = att_i - rep_means - rep_negs
+    return head_grad, tail_grad, negtail_grad, loss
+
+
+def nomad_grad_ref(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid):
+    """Assemble the full analytic gradient of ``nomad_loss`` (mean-normalized)."""
+    hg, tg, ng, _ = nomad_forces_ref(
+        pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid
+    )
+    s, k = nbr_idx.shape
+    grad = hg
+    grad = grad.at[nbr_idx.reshape(-1)].add(tg.reshape(s * k, 2))
+    n = neg_idx.shape[1]
+    grad = grad.at[neg_idx.reshape(-1)].add(ng.reshape(s * n, 2))
+    nvalid = jnp.maximum(jnp.sum(valid), 1.0)
+    return grad / nvalid
+
+
+def kmeans_assign_ref(x, c, cmask):
+    """Nearest-centroid assignment.
+
+    x [N,D], c [C,D], cmask [C] (1 real / 0 padding) ->
+    (assign [N] i32, d2 [N] f32 squared distance to the chosen centroid).
+    Padding centroids are pushed to a huge distance so they are never chosen.
+    """
+    d2 = pairwise_d2(x, c)
+    big = jnp.float32(3.4e38)
+    d2 = jnp.where(cmask[None, :] > 0.0, d2, big)
+    assign = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    best = jnp.min(d2, axis=1)
+    return assign, best
+
+
+def knn_ref(x, vmask, k):
+    """Exact within-cluster kNN.
+
+    x [N,D], vmask [N] -> (idx [N,k] i32, d2 [N,k] f32), self excluded,
+    invalid rows/cols pushed to a huge distance (callers mask by vmask and
+    d2 < 1e37).
+    """
+    d2 = pairwise_d2(x, x)
+    n = x.shape[0]
+    big = jnp.float32(3.4e38)
+    eye = jnp.eye(n, dtype=bool)
+    d2 = jnp.where(eye, big, d2)
+    d2 = jnp.where(vmask[None, :] > 0.0, d2, big)
+    neg_d2, idx = jax.lax.top_k(-d2, k)
+    return idx.astype(jnp.int32), -neg_d2

@@ -1,0 +1,80 @@
+"""Layer-2 JAX model: the NOMAD Projection shard-step and index-build graphs.
+
+Everything here is build-time only: ``aot.py`` lowers these jitted functions
+once to HLO text which the Rust coordinator loads and executes via PJRT.
+Each function composes a Layer-1 Pallas kernel (kernels/*.py) with the XLA
+glue (scatter-adds, top-k, SGD update) that the paper's CUDA implementation
+did with separate kernel launches — XLA fuses them into one executable, so
+the Rust hot path makes exactly one ``execute`` call per shard per epoch.
+
+Contracts are mirrored 1:1 by:
+  * ``kernels/ref.py``         — jnp oracles (pytest, build time)
+  * ``rust/src/embed/native.rs`` etc. — the Rust fallback (cross-checked in
+    ``rust/tests/integration.rs``)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import forces as forces_k
+from .kernels import kmeans as kmeans_k
+from .kernels import knn as knn_k
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def nomad_step(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, lr, *, block=256):
+    """One full NOMAD gradient-descent step for one shard.
+
+    Inputs: see kernels/ref.py docstring; ``lr`` is a scalar f32.
+    Returns (pos_new [S,2], loss [] f32).  (No buffer donation: the AOT HLO
+    interchange drops aliasing info anyway, and tests reuse the input.)
+
+    The gradient is the mean-normalized analytic gradient of the NOMAD loss
+    (paper Eq 3) with remote cluster means treated as constants; padding
+    heads are masked so they never move.
+    """
+    hg, tg, ng, loss_h = forces_k.nomad_forces(
+        pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, block=block
+    )
+    s, k = nbr_idx.shape
+    n = neg_idx.shape[1]
+    grad = hg
+    grad = grad.at[nbr_idx.reshape(-1)].add(tg.reshape(s * k, 2))
+    grad = grad.at[neg_idx.reshape(-1)].add(ng.reshape(s * n, 2))
+    nvalid = jnp.maximum(jnp.sum(valid), 1.0)
+    grad = grad / nvalid
+    pos_new = pos - lr * grad * valid[:, None]
+    return pos_new, jnp.sum(loss_h) / nvalid
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def kmeans_em_step(x, c, cmask, *, block=512):
+    """One K-Means EM step over a padded point bucket.
+
+    x [N,D], c [C,D] centroids, cmask [C] -> (assign [N] i32, d2 [N],
+    sums [C,D], counts [C]).  ``sums``/``counts`` are the scatter-added
+    statistics for the M-step; the Rust coordinator divides (and re-seeds
+    empty clusters) because that logic is data-dependent control flow.
+    Padded points must be passed with x row = 0 and are excluded by the
+    caller via a validity mask applied to assign on the Rust side; here every
+    row participates (the coordinator always packs real points first and
+    slices the outputs).
+    """
+    assign, d2 = kmeans_k.kmeans_assign(x, c, cmask, block=block)
+    cc, d = c.shape
+    sums = jnp.zeros((cc, d), jnp.float32).at[assign].add(x)
+    counts = jnp.zeros((cc,), jnp.float32).at[assign].add(1.0)
+    return assign, d2, sums, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def knn_build(x, vmask, *, k, block=256):
+    """Exact within-cluster kNN over one padded cluster bucket.
+
+    x [N,D], vmask [N] -> (idx [N,k] i32, d2 [N,k] f32); see kernels/knn.py.
+    """
+    return knn_k.knn(x, vmask, k=k, block=block)

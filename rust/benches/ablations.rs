@@ -1,0 +1,79 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!  * p(j|i) model: paper reverse-rank (Eq 6) vs forward-rank vs uniform;
+//!  * R̃ selection: cluster-mean negatives vs exact negatives only
+//!    (Theorem-1 surrogate vs plain InfoNC-t-SNE);
+//!  * PCA vs random init (paper §3.4);
+//!  * early exaggeration on/off.
+//!
+//!   cargo bench --bench ablations  [-- --n 4000 --epochs 80]
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::WeightModel;
+use nomad::ann::IndexParams;
+use nomad::bench::{fmt_secs, Table};
+use nomad::cli::Args;
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::text_corpus_like;
+use nomad::embed::{ApproxMode, NomadParams};
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 4000);
+    let epochs = args.usize("epochs", 80);
+
+    let mut rng = Rng::new(7);
+    let ds = text_corpus_like(n, &mut rng);
+    let eval_cfg = EvalCfg { np_sample: 250, triplets: 8000, ..Default::default() };
+    let index = IndexParams { n_clusters: 32, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!("Ablations — {} (n={n}, {epochs} epochs, 2 devices)", ds.name),
+        &["Variant", "NP@10", "RTA", "Wall"],
+    );
+
+    let base = NomadParams { epochs, ..Default::default() };
+    let variants: Vec<(&str, NomadParams)> = vec![
+        ("paper default (Eq6 + means + PCA)", base.clone()),
+        (
+            "p(j|i): forward rank",
+            NomadParams { weight_model: WeightModel::InverseRankForward, ..base.clone() },
+        ),
+        (
+            "p(j|i): uniform",
+            NomadParams { weight_model: WeightModel::Uniform, ..base.clone() },
+        ),
+        (
+            "negatives: exact only (InfoNC-t-SNE)",
+            NomadParams { approx: ApproxMode::None, ..base.clone() },
+        ),
+        ("init: random", NomadParams { pca_init: false, ..base.clone() }),
+        (
+            "early exaggeration 4x/20ep",
+            NomadParams { exaggeration: 4.0, exaggeration_epochs: 20, ..base.clone() },
+        ),
+    ];
+
+    for (name, params) in variants {
+        let coord = NomadCoordinator::new(
+            params,
+            RunConfig {
+                n_devices: 2,
+                backend: BackendKind::Native,
+                index: index.clone(),
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let (np, rta) = evaluate(&ds, &run.positions, &eval_cfg);
+        table.row(vec![
+            name.into(),
+            format!("{:.1}%", np * 100.0).into(),
+            format!("{:.1}%", rta * 100.0).into(),
+            fmt_secs(run.train_secs).into(),
+        ]);
+    }
+    table.print();
+    table.save_json("ablations");
+}

@@ -1,0 +1,134 @@
+//! Layer-1/Layer-3 microbenchmarks: per-block NOMAD step latency for the
+//! native path vs the AOT XLA artifact, per bucket size, plus the ANN
+//! kernels (assignment, within-cluster kNN).  These drive the §Perf
+//! iteration log in EXPERIMENTS.md.
+//!
+//!   cargo bench --bench kernel_micro  [-- --runs 20]
+
+use nomad::ann::backend::{AnnBackend, NativeBackend};
+use nomad::ann::graph::{edge_weights, WeightModel};
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::bench::{fmt_secs, time_fn, Table};
+use nomad::cli::Args;
+use nomad::data::gaussian_mixture;
+use nomad::embed::native::NativeStepBackend;
+use nomad::embed::{ClusterBlock, StepBackend, StepInputs};
+use nomad::linalg::Matrix;
+use nomad::runtime::{XlaAnnBackend, XlaStepBackend};
+use nomad::util::rng::Rng;
+
+fn block_of_size(target_real: usize, r: usize, seed: u64) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let n = target_real + target_real / 8;
+    let ds = gaussian_mixture(n, 16, 2, 50.0, 0.0, 0.0, &mut rng);
+    // force one big cluster of ~target_real via params
+    let idx = ClusterIndex::build(
+        &ds.x,
+        &IndexParams {
+            n_clusters: 2,
+            k: 15,
+            max_cluster_size: 8192,
+            ..Default::default()
+        },
+        &NativeBackend::default(),
+        &mut rng,
+    );
+    let ew = edge_weights(&idx, WeightModel::InverseRankPaper);
+    let init: Vec<f32> = (0..n * 2).map(|_| rng.normal()).collect();
+    // pick the biggest cluster
+    let c = (0..idx.n_clusters())
+        .max_by_key(|&c| idx.clusters[c].len())
+        .unwrap();
+    let block = ClusterBlock::build(&idx, &ew, c, &init, n, 5.0, 8);
+    let means: Vec<f32> = (0..r * 2).map(|_| rng.normal() * 5.0).collect();
+    let mean_w: Vec<f32> = (0..r).map(|_| 1.0).collect();
+    (block, means, mean_w)
+}
+
+fn main() {
+    let args = Args::from_env();
+    let runs = args.usize("runs", 15);
+    let have_artifacts = nomad::runtime::artifacts_dir().join("manifest.json").exists();
+
+    let mut table = Table::new(
+        "L1/L3 microbench — per-block NOMAD step",
+        &["Bucket (real pts)", "R", "native", "xla", "xla/native"],
+    );
+    let xla = if have_artifacts { XlaStepBackend::from_env().ok() } else { None };
+    let native = NativeStepBackend::default();
+
+    for (target, r) in [(400usize, 64usize), (1500, 64), (1500, 255), (6000, 255)] {
+        let (block0, means, mean_w) = block_of_size(target, r, 1);
+        let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 0.5 };
+        let mut rng = Rng::new(2);
+
+        let mut bn = block0.clone();
+        let t_native = time_fn(2, runs, || {
+            native.step(&mut bn, &inputs, &mut rng);
+        });
+        let (t_xla, ratio) = if let Some(x) = &xla {
+            let mut bx = block0.clone();
+            let mut rng2 = Rng::new(2);
+            let t = time_fn(2, runs, || {
+                x.step(&mut bx, &inputs, &mut rng2);
+            });
+            (fmt_secs(t.mean), format!("{:.2}x", t.mean / t_native.mean))
+        } else {
+            ("n/a".into(), "-".into())
+        };
+        table.row(vec![
+            format!("{} (bucket {})", block0.n_real, block0.size).into(),
+            format!("{r}").into(),
+            fmt_secs(t_native.mean).into(),
+            t_xla.into(),
+            ratio.into(),
+        ]);
+    }
+    table.print();
+    table.save_json("kernel_micro_step");
+
+    // ---- ANN kernels ------------------------------------------------------
+    let mut t2 = Table::new(
+        "ANN microbench — assignment & within-cluster kNN",
+        &["Kernel", "Shape", "native", "xla"],
+    );
+    let mut rng = Rng::new(3);
+    let ds = gaussian_mixture(2000, 64, 8, 10.0, 0.2, 0.5, &mut rng);
+    let mut cent = Matrix::zeros(64, 64);
+    for v in cent.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let nb = NativeBackend::default();
+    let xab = if have_artifacts { XlaAnnBackend::from_env().ok() } else { None };
+
+    let t_assign_n = time_fn(1, runs, || {
+        std::hint::black_box(nb.assign(&ds.x, &cent));
+    });
+    let t_assign_x = xab
+        .as_ref()
+        .map(|x| time_fn(1, runs, || {
+            std::hint::black_box(x.assign(&ds.x, &cent));
+        }));
+    t2.row(vec![
+        "kmeans assign".into(),
+        "2000x64 vs 64".into(),
+        fmt_secs(t_assign_n.mean).into(),
+        t_assign_x.map(|t| fmt_secs(t.mean)).unwrap_or("n/a".into()).into(),
+    ]);
+
+    let sub = ds.x.gather(&(0..500).collect::<Vec<_>>());
+    let t_knn_n = time_fn(1, runs, || {
+        std::hint::black_box(nb.knn(&sub, 15));
+    });
+    let t_knn_x = xab.as_ref().map(|x| time_fn(1, runs, || {
+        std::hint::black_box(x.knn(&sub, 15));
+    }));
+    t2.row(vec![
+        "within-cluster knn".into(),
+        "500x64 k=15".into(),
+        fmt_secs(t_knn_n.mean).into(),
+        t_knn_x.map(|t| fmt_secs(t.mean)).unwrap_or("n/a".into()).into(),
+    ]);
+    t2.print();
+    t2.save_json("kernel_micro_ann");
+}

@@ -1,0 +1,80 @@
+//! Device-scaling bench: per-epoch step time, all-gather volume, modeled
+//! H100-node speedup and measured 1-core wall time for 1..8 devices, plus
+//! the cost-model sanity row the paper's Fig 2 narrative implies
+//! (positive phase: zero bytes).
+//!
+//!   cargo bench --bench scaling  [-- --n 8000 --epochs 40]
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::bench::{fmt_secs, Table};
+use nomad::cli::Args;
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::text_corpus_like;
+use nomad::embed::NomadParams;
+use nomad::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 8000);
+    let epochs = args.usize("epochs", 40);
+
+    let mut rng = Rng::new(5);
+    let ds = text_corpus_like(n, &mut rng);
+
+    let mut table = Table::new(
+        &format!("Scaling — {} (n={n}, {} epochs)", ds.name, epochs),
+        &[
+            "Devices",
+            "Wall",
+            "Max-dev step (total)",
+            "Step speedup",
+            "Modeled@24M/epoch",
+            "Modeled speedup@24M",
+            "All-gather bytes",
+            "Pos-phase bytes",
+        ],
+    );
+    // extrapolate the cost model to the paper's PubMed scale (24M points)
+    let paper_scale = 24.0e6 / n as f64;
+    let hw = nomad::distributed::comm_model::HwProfile::h100();
+    let mut base_step = None;
+    let mut base_modeled = None;
+    for devices in [1usize, 2, 4, 8] {
+        let coord = NomadCoordinator::new(
+            NomadParams { epochs, ..Default::default() },
+            RunConfig {
+                n_devices: devices,
+                backend: BackendKind::Native,
+                index: IndexParams { n_clusters: 64, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let max_dev = run
+            .device_step_secs
+            .iter()
+            .cloned()
+            .fold(0.0f64, f64::max);
+        let modeled_24m = nomad::distributed::comm_model::epoch_time_scaled(
+            &hw,
+            &run.last_epoch_work,
+            paper_scale,
+        );
+        let bs = *base_step.get_or_insert(max_dev);
+        let bm = *base_modeled.get_or_insert(modeled_24m);
+        table.row(vec![
+            format!("{devices}").into(),
+            fmt_secs(run.train_secs).into(),
+            fmt_secs(max_dev).into(),
+            format!("{:.2}x", bs / max_dev.max(1e-12)).into(),
+            fmt_secs(modeled_24m).into(),
+            format!("{:.2}x", bm / modeled_24m.max(1e-12)).into(),
+            format!("{}", run.comm.allgather_bytes_total).into(),
+            format!("{}", run.comm.positive_phase_bytes_total).into(),
+        ]);
+    }
+    table.print();
+    table.save_json("scaling");
+    println!("\n(expected shape: near-linear step/modeled speedup; positive-phase bytes identically 0)");
+}

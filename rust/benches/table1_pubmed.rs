@@ -1,0 +1,89 @@
+//! Table 1 regenerator (bench-grade, multi-seed): see
+//! examples/pubmed_table1.rs for the narrated version; this one runs the
+//! row set with seed repetition and writes bench_results/table1.json.
+//!
+//!   cargo bench --bench table1_pubmed  [-- --n 8000 --seeds 3]
+
+use nomad::ann::IndexParams;
+use nomad::bench::{fmt_pct, fmt_secs, log_experiment, Table};
+use nomad::bench::jsonx::*;
+use nomad::cli::Args;
+use nomad::coordinator::BackendKind;
+use nomad::data::pubmed_like;
+use nomad::harness::{run_method, EvalCfg, Method};
+use nomad::util::rng::Rng;
+use nomad::util::stats::Summary;
+
+fn main() {
+    let args = Args::from_env();
+    let n = args.usize("n", 8000);
+    let seeds = args.u64("seeds", 3);
+    let epochs = args.usize("epochs", 100);
+
+    let mut rng = Rng::new(0);
+    let ds = pubmed_like(n, &mut rng);
+    let index = IndexParams { n_clusters: 48, ..Default::default() };
+    let eval_cfg = EvalCfg { np_sample: 250, triplets: 8000, ..Default::default() };
+
+    let mut table = Table::new(
+        &format!("Table 1 — PubMed-like (n={n})"),
+        &["Method", "NP@10", "Wall", "Modeled-8xH100", "Speedup vs OpenTSNE"],
+    );
+
+    let mut reference_time = 0.0;
+    for (mi, method) in [
+        Method::OpenTsneLike,
+        Method::Nomad { devices: 8, backend: BackendKind::Xla },
+        Method::Nomad { devices: 8, backend: BackendKind::Native },
+        Method::UmapLike,
+        Method::TsneCudaLike,
+    ]
+    .iter()
+    .enumerate()
+    {
+        let mut nps = Vec::new();
+        let mut walls = Vec::new();
+        let mut modeled = Vec::new();
+        let reps = if matches!(method, Method::Nomad { .. }) { seeds } else { 1 };
+        for seed in 0..reps {
+            let e = if matches!(method, Method::OpenTsneLike) { epochs * 2 } else { epochs };
+            let r = run_method(&ds, method, e, 0, &index, &eval_cfg, seed);
+            nps.push(r.checkpoints[0].np_at_10);
+            walls.push(r.total_secs);
+            modeled.push(r.modeled_secs);
+        }
+        let np = Summary::of(&nps);
+        let wall = Summary::of(&walls).mean;
+        let modeled_t = Summary::of(&modeled).mean;
+        if mi == 0 {
+            reference_time = wall;
+        }
+        let is_nomad = matches!(method, Method::Nomad { .. });
+        table.row(vec![
+            method.name().into(),
+            fmt_pct(np.mean, np.sem()).into(),
+            fmt_secs(wall).into(),
+            if is_nomad { fmt_secs(modeled_t).into() } else { "-".into() },
+            if mi == 0 {
+                "1x".into()
+            } else if is_nomad {
+                format!("{:.1}x (modeled)", reference_time / modeled_t.max(1e-9)).into()
+            } else {
+                "-".into()
+            },
+        ]);
+        log_experiment(
+            "table1",
+            obj(vec![
+                ("method", s(&method.name())),
+                ("np10_mean", num(np.mean)),
+                ("np10_sem", num(np.sem())),
+                ("wall_secs", num(wall)),
+                ("modeled_secs", num(modeled_t)),
+            ]),
+        );
+    }
+    table.print();
+    table.save_json("table1_pubmed");
+    println!("\n(paper: NOMAD NP@10 parity with OpenTSNE at 5.4x speedup on 8xH100)");
+}

@@ -1,0 +1,199 @@
+//! The positive-edge distribution p(j|i) over the ANN graph.
+//!
+//! NOMAD models p(j|i) explicitly with the **inverse-rank model**
+//! (paper Eq 6):
+//!
+//! ```text
+//! p(j|i) = exp(1/rank_j(i)) / C   if rank_j(i) <= k, else 0
+//! C      = sum_{r=1..k} exp(1/r)
+//! ```
+//!
+//! where `rank_j(i)` is the (1-based) position of **i in j's** distance-
+//! sorted neighbor list — a *reverse* rank, as written in the paper.  We
+//! also provide the forward-rank and uniform models as ablations
+//! (`WeightModel`), benchmarked in `benches/ablations.rs`.
+
+use super::{ClusterIndex, NO_NEIGHBOR};
+
+/// How edge weights p(j|i) are computed from the kNN lists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightModel {
+    /// exp(1 / rank_j(i)) — the paper's Eq 6 (reverse rank).
+    InverseRankPaper,
+    /// exp(1 / rank_i(j)) — forward rank (i's own list), ablation.
+    InverseRankForward,
+    /// 1/k on every kNN edge, ablation (InfoNC-t-SNE's implicit model).
+    Uniform,
+}
+
+/// The per-head positive edge lists with weights, in CSR-like fixed-k
+/// layout aligned with `ClusterIndex::nbr_idx`.
+#[derive(Clone, Debug)]
+pub struct EdgeWeights {
+    /// flat n x k weights; 0.0 marks absent/pruned edges
+    pub w: Vec<f32>,
+    pub k: usize,
+}
+
+impl EdgeWeights {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.w[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// Compute p(j|i) for every kNN edge of the index.
+pub fn edge_weights(index: &ClusterIndex, model: WeightModel) -> EdgeWeights {
+    let n = index.n();
+    let k = index.k;
+    let norm: f32 = (1..=k).map(|r| (1.0f32 / r as f32).exp()).sum();
+    let mut w = vec![0.0f32; n * k];
+
+    match model {
+        WeightModel::Uniform => {
+            for i in 0..n {
+                for s in 0..k {
+                    if index.nbr_idx[i * k + s] != NO_NEIGHBOR {
+                        w[i * k + s] = 1.0 / k as f32;
+                    }
+                }
+            }
+        }
+        WeightModel::InverseRankForward => {
+            for i in 0..n {
+                for s in 0..k {
+                    if index.nbr_idx[i * k + s] != NO_NEIGHBOR {
+                        w[i * k + s] = ((1.0 / (s + 1) as f32).exp()) / norm;
+                    }
+                }
+            }
+        }
+        WeightModel::InverseRankPaper => {
+            // rank_j(i): position of i in j's sorted list. Build a reverse
+            // lookup: for each directed edge j -> i at slot s, set the weight
+            // of the edge i -> j (if present) to exp(1/(s+1))/C.
+            // First index the slots: slot_of[i][j] for j in i's list.
+            for i in 0..n {
+                for s in 0..k {
+                    let j = index.nbr_idx[i * k + s];
+                    if j == NO_NEIGHBOR {
+                        continue;
+                    }
+                    // find i in j's neighbor list
+                    let j = j as usize;
+                    let mut rank_ji = None;
+                    for t in 0..k {
+                        if index.nbr_idx[j * k + t] == i as u32 {
+                            rank_ji = Some(t + 1);
+                            break;
+                        }
+                    }
+                    if let Some(r) = rank_ji {
+                        w[i * k + s] = ((1.0 / r as f32).exp()) / norm;
+                    }
+                    // non-mutual edges keep weight 0 (pruned), per Eq 6.
+                }
+            }
+        }
+    }
+    EdgeWeights { w, k }
+}
+
+/// Fraction of kNN edges that are mutual (diagnostic; the paper's reverse-
+/// rank model zeroes non-mutual edges, so low mutuality means a sparser
+/// effective graph).
+pub fn mutuality(index: &ClusterIndex) -> f64 {
+    let n = index.n();
+    let k = index.k;
+    let mut present = 0usize;
+    let mut mutual = 0usize;
+    for i in 0..n {
+        for s in 0..k {
+            let j = index.nbr_idx[i * k + s];
+            if j == NO_NEIGHBOR {
+                continue;
+            }
+            present += 1;
+            let j = j as usize;
+            if (0..k).any(|t| index.nbr_idx[j * k + t] == i as u32) {
+                mutual += 1;
+            }
+        }
+    }
+    mutual as f64 / present.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::ann::IndexParams;
+    use crate::data::gaussian_mixture;
+    use crate::util::rng::Rng;
+
+    fn toy_index(n: usize, k: usize) -> ClusterIndex {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(n, 8, 3, 6.0, 0.2, 0.5, &mut rng);
+        ClusterIndex::build(
+            &ds.x,
+            &IndexParams { n_clusters: 3, k, ..Default::default() },
+            &NativeBackend::default(),
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn uniform_weights_sum_to_one() {
+        let idx = toy_index(200, 5);
+        let ew = edge_weights(&idx, WeightModel::Uniform);
+        for i in 0..200 {
+            let s: f32 = ew.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn forward_rank_weights_decrease_with_rank() {
+        let idx = toy_index(200, 6);
+        let ew = edge_weights(&idx, WeightModel::InverseRankForward);
+        for i in 0..200 {
+            let r = ew.row(i);
+            for s in 1..6 {
+                assert!(r[s] <= r[s - 1] + 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn paper_rank_uses_reverse_rank() {
+        // handcrafted: 3 colinear points, distances 0-1:1, 1-2:1, 0-2:4
+        use crate::linalg::Matrix;
+        let x = Matrix::from_vec(3, 1, vec![0.0, 1.0, 3.0]);
+        let be = NativeBackend::default();
+        let idx_raw = crate::ann::knn::within_clusters(&x, &[vec![0, 1, 2]], 2, &be);
+        let index = ClusterIndex {
+            assign: vec![0, 0, 0],
+            clusters: vec![vec![0, 1, 2]],
+            centroids: Matrix::zeros(1, 1),
+            nbr_idx: idx_raw.0,
+            nbr_d2: idx_raw.1,
+            k: 2,
+        };
+        let ew = edge_weights(&index, WeightModel::InverseRankPaper);
+        let norm: f32 = (1..=2).map(|r| (1.0f32 / r as f32).exp()).sum();
+        // point 0's list: [1, 2]; point 1's list: [0, 2]; point 2's list: [1, 0]
+        // edge 0->1: rank_1(0) = position of 0 in 1's list = 1 -> e^1/C
+        assert!((ew.row(0)[0] - (1.0f32).exp() / norm).abs() < 1e-6);
+        // edge 0->2: rank_2(0) = position of 0 in 2's list = 2 -> e^0.5/C
+        assert!((ew.row(0)[1] - (0.5f32).exp() / norm).abs() < 1e-6);
+        // edge 2->1: rank_1(2) = position of 2 in 1's list = 2 -> e^0.5/C
+        assert!((ew.row(2)[0] - (0.5f32).exp() / norm).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mutuality_in_unit_range() {
+        let idx = toy_index(300, 5);
+        let m = mutuality(&idx);
+        assert!((0.0..=1.0).contains(&m));
+        assert!(m > 0.2, "gaussian blobs should have substantial mutuality");
+    }
+}

@@ -1,0 +1,255 @@
+//! LSH-seeded K-Means (paper §3.2): "We initialize our K-Means clustering
+//! using a locally sensitive hash, run expectation maximization until
+//! convergence, and compute exact nearest neighbors for each point within
+//! its cluster."
+//!
+//! Additions beyond the paper text, needed for a production build:
+//!  * empty clusters are re-seeded to the point farthest from its centroid;
+//!  * clusters above `max_cluster_size` are recursively 2-means split so
+//!    shard buckets stay bounded (the AOT step artifacts have fixed shapes).
+
+use super::backend::AnnBackend;
+use super::IndexParams;
+use crate::linalg::{lsh::lsh_seed_centroids, Matrix};
+use crate::util::rng::Rng;
+
+/// K-Means result: assignment plus per-cluster member lists.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub assign: Vec<u32>,
+    pub clusters: Vec<Vec<u32>>,
+    pub centroids: Matrix,
+    pub iters_run: usize,
+}
+
+/// Run LSH-seeded EM, then enforce the max-cluster-size bound.
+pub fn run(
+    x: &Matrix,
+    params: &IndexParams,
+    backend: &dyn AnnBackend,
+    rng: &mut Rng,
+) -> KmeansResult {
+    let k = params.n_clusters.min(x.rows).max(1);
+    let mut centroids = lsh_seed_centroids(x, k, rng);
+    let mut assign = vec![0u32; x.rows];
+    let mut iters_run = 0;
+
+    for it in 0..params.max_iters {
+        let pairs = backend.assign(x, &centroids);
+        let mut changed = 0usize;
+        for (i, (a, _)) in pairs.iter().enumerate() {
+            if assign[i] != *a {
+                changed += 1;
+            }
+            assign[i] = *a;
+        }
+        iters_run = it + 1;
+
+        // M step
+        let c = centroids.rows;
+        let d = x.cols;
+        let mut sums = vec![0.0f64; c * d];
+        let mut counts = vec![0usize; c];
+        for i in 0..x.rows {
+            let a = assign[i] as usize;
+            counts[a] += 1;
+            let row = x.row(i);
+            for j in 0..d {
+                sums[a * d + j] += row[j] as f64;
+            }
+        }
+        for a in 0..c {
+            if counts[a] == 0 {
+                // re-seed to the point farthest from its current centroid
+                let far = (0..x.rows)
+                    .max_by(|&p, &q| {
+                        let dp = crate::linalg::d2(x.row(p), centroids.row(assign[p] as usize));
+                        let dq = crate::linalg::d2(x.row(q), centroids.row(assign[q] as usize));
+                        dp.partial_cmp(&dq).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(a).copy_from_slice(x.row(far));
+            } else {
+                let inv = 1.0 / counts[a] as f64;
+                let cr = centroids.row_mut(a);
+                for j in 0..d {
+                    cr[j] = (sums[a * d + j] * inv) as f32;
+                }
+            }
+        }
+
+        if it > 0 && (changed as f64) < params.tol_frac * x.rows as f64 {
+            break;
+        }
+    }
+
+    // final assignment against converged centroids
+    let pairs = backend.assign(x, &centroids);
+    for (i, (a, _)) in pairs.iter().enumerate() {
+        assign[i] = *a;
+    }
+
+    let mut result = KmeansResult {
+        clusters: members_of(&assign, centroids.rows),
+        assign,
+        centroids,
+        iters_run,
+    };
+    enforce_max_size(x, &mut result, params.max_cluster_size, backend, rng);
+    result
+}
+
+fn members_of(assign: &[u32], c: usize) -> Vec<Vec<u32>> {
+    let mut m = vec![Vec::new(); c];
+    for (i, &a) in assign.iter().enumerate() {
+        m[a as usize].push(i as u32);
+    }
+    m
+}
+
+/// Split any cluster above `max_size` with 2-means until all fit.
+fn enforce_max_size(
+    x: &Matrix,
+    km: &mut KmeansResult,
+    max_size: usize,
+    backend: &dyn AnnBackend,
+    rng: &mut Rng,
+) {
+    let mut queue: Vec<usize> = (0..km.clusters.len())
+        .filter(|&c| km.clusters[c].len() > max_size)
+        .collect();
+    while let Some(c) = queue.pop() {
+        let members = std::mem::take(&mut km.clusters[c]);
+        let sub = x.gather(&members.iter().map(|&m| m as usize).collect::<Vec<_>>());
+        // 2-means on the oversize cluster
+        let mut c2 = Matrix::zeros(2, x.cols);
+        let a = rng.below(sub.rows);
+        let b = (0..sub.rows)
+            .max_by(|&p, &q| {
+                let dp = crate::linalg::d2(sub.row(p), sub.row(a));
+                let dq = crate::linalg::d2(sub.row(q), sub.row(a));
+                dp.partial_cmp(&dq).unwrap()
+            })
+            .unwrap();
+        c2.row_mut(0).copy_from_slice(sub.row(a));
+        c2.row_mut(1).copy_from_slice(sub.row(b));
+        let mut sub_assign = vec![0u32; sub.rows];
+        for _ in 0..8 {
+            let pairs = backend.assign(&sub, &c2);
+            for (i, (aa, _)) in pairs.iter().enumerate() {
+                sub_assign[i] = *aa;
+            }
+            for half in 0..2 {
+                let mut cnt = 0usize;
+                let mut acc = vec![0.0f64; x.cols];
+                for i in 0..sub.rows {
+                    if sub_assign[i] as usize == half {
+                        cnt += 1;
+                        for (j, v) in sub.row(i).iter().enumerate() {
+                            acc[j] += *v as f64;
+                        }
+                    }
+                }
+                if cnt > 0 {
+                    let row = c2.row_mut(half);
+                    for j in 0..x.cols {
+                        row[j] = (acc[j] / cnt as f64) as f32;
+                    }
+                }
+            }
+        }
+        // degenerate split (all points identical): force a balanced halving
+        if sub_assign.iter().all(|&a| a == 0) || sub_assign.iter().all(|&a| a == 1) {
+            for (i, sa) in sub_assign.iter_mut().enumerate() {
+                *sa = (i % 2) as u32;
+            }
+        }
+
+        let new_c = km.clusters.len();
+        km.clusters.push(Vec::new());
+        // grow the centroid matrix by one row
+        let mut grown = Matrix::zeros(new_c + 1, x.cols);
+        grown.data[..km.centroids.data.len()].copy_from_slice(&km.centroids.data);
+        grown.row_mut(c).copy_from_slice(c2.row(0));
+        grown.row_mut(new_c).copy_from_slice(c2.row(1));
+        km.centroids = grown;
+
+        let mut keep = Vec::new();
+        for (local, &global) in members.iter().enumerate() {
+            if sub_assign[local] == 0 {
+                keep.push(global);
+            } else {
+                km.assign[global as usize] = new_c as u32;
+                km.clusters[new_c].push(global);
+            }
+        }
+        km.clusters[c] = keep;
+        for cc in [c, new_c] {
+            if km.clusters[cc].len() > max_size {
+                queue.push(cc);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::data::gaussian_mixture;
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(400, 8, 4, 25.0, 0.0, 0.0, &mut rng);
+        let params = IndexParams { n_clusters: 4, k: 5, ..Default::default() };
+        let km = run(&ds.x, &params, &NativeBackend::default(), &mut rng);
+        // purity: each kmeans cluster dominated by one true label
+        for members in &km.clusters {
+            if members.is_empty() {
+                continue;
+            }
+            let mut counts = std::collections::HashMap::new();
+            for &m in members {
+                *counts.entry(ds.labels[0][m as usize]).or_insert(0usize) += 1;
+            }
+            let max = counts.values().max().unwrap();
+            assert!(
+                *max as f64 / members.len() as f64 > 0.95,
+                "cluster purity too low"
+            );
+        }
+    }
+
+    #[test]
+    fn every_point_assigned_and_listed_once() {
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(257, 8, 5, 4.0, 0.4, 0.8, &mut rng);
+        let params = IndexParams { n_clusters: 5, k: 5, ..Default::default() };
+        let km = run(&ds.x, &params, &NativeBackend::default(), &mut rng);
+        let mut seen = vec![0usize; 257];
+        for (c, members) in km.clusters.iter().enumerate() {
+            for &m in members {
+                seen[m as usize] += 1;
+                assert_eq!(km.assign[m as usize] as usize, c);
+            }
+        }
+        assert!(seen.iter().all(|&s| s == 1));
+    }
+
+    #[test]
+    fn split_bounds_cluster_size() {
+        let mut rng = Rng::new(2);
+        let ds = gaussian_mixture(1000, 4, 1, 1.0, 0.0, 0.0, &mut rng);
+        let params = IndexParams {
+            n_clusters: 1,
+            k: 3,
+            max_cluster_size: 130,
+            ..Default::default()
+        };
+        let km = run(&ds.x, &params, &NativeBackend::default(), &mut rng);
+        assert!(km.clusters.iter().all(|c| c.len() <= 130));
+        assert_eq!(km.clusters.iter().map(|c| c.len()).sum::<usize>(), 1000);
+        assert_eq!(km.centroids.rows, km.clusters.len());
+    }
+}

@@ -1,0 +1,141 @@
+//! Within-cluster exact kNN (paper §3.2) plus the brute-force global kNN
+//! used as metric ground truth.
+
+use super::backend::AnnBackend;
+use super::NO_NEIGHBOR;
+use crate::linalg::{d2, Matrix};
+use crate::util::parallel::{num_threads, par_map};
+
+/// Exact kNN inside each cluster, results in *global* point ids.
+/// Returns flat `(idx, d2)` arrays of shape n x k.
+pub fn within_clusters(
+    x: &Matrix,
+    clusters: &[Vec<u32>],
+    k: usize,
+    backend: &dyn AnnBackend,
+) -> (Vec<u32>, Vec<f32>) {
+    let n = x.rows;
+    let mut nbr_idx = vec![NO_NEIGHBOR; n * k];
+    let mut nbr_d2 = vec![f32::INFINITY; n * k];
+
+    // process clusters serially; the backend parallelizes internally (the
+    // distributed coordinator overlaps clusters across devices instead)
+    for members in clusters {
+        if members.len() <= 1 {
+            continue;
+        }
+        let ids: Vec<usize> = members.iter().map(|&m| m as usize).collect();
+        let sub = x.gather(&ids);
+        let (l_idx, l_d2) = backend.knn(&sub, k);
+        for (local, &global) in members.iter().enumerate() {
+            let g = global as usize;
+            for s in 0..k {
+                let li = l_idx[local * k + s];
+                if li != NO_NEIGHBOR {
+                    nbr_idx[g * k + s] = members[li as usize];
+                    nbr_d2[g * k + s] = l_d2[local * k + s];
+                }
+            }
+        }
+    }
+    (nbr_idx, nbr_d2)
+}
+
+/// Brute-force exact global kNN — O(n²d), used only for metric ground truth
+/// and small-scale validation.  Parallel over query points.
+pub fn exact_global(x: &Matrix, k: usize) -> Vec<u32> {
+    let n = x.rows;
+    let threads = num_threads();
+    let rows = par_map(n, threads, |i| {
+        let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+        let xi = x.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let dist = d2(xi, x.row(j));
+            if best.len() < k {
+                best.push((dist, j as u32));
+                if best.len() == k {
+                    best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+                }
+            } else if dist < best[0].0 {
+                best[0] = (dist, j as u32);
+                let mut p = 0;
+                while p + 1 < k && best[p].0 < best[p + 1].0 {
+                    best.swap(p, p + 1);
+                    p += 1;
+                }
+            }
+        }
+        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = vec![NO_NEIGHBOR; k];
+        for (s, (_, j)) in best.into_iter().enumerate() {
+            out[s] = j;
+        }
+        out
+    });
+    rows.into_iter().flatten().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn within_cluster_ids_are_global_and_in_cluster() {
+        let mut rng = Rng::new(0);
+        let x = randm(&mut rng, 60, 4);
+        let clusters = vec![
+            (0..30u32).collect::<Vec<_>>(),
+            (30..60u32).collect::<Vec<_>>(),
+        ];
+        let (idx, dd) = within_clusters(&x, &clusters, 5, &NativeBackend::default());
+        for i in 0..60 {
+            let my_cluster = (i >= 30) as usize;
+            for s in 0..5 {
+                let j = idx[i * 5 + s];
+                assert_ne!(j, NO_NEIGHBOR);
+                assert_eq!((j >= 30) as usize, my_cluster, "edge stays in cluster");
+                assert!(dd[i * 5 + s].is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_cluster_padded() {
+        let mut rng = Rng::new(1);
+        let x = randm(&mut rng, 4, 3);
+        let clusters = vec![vec![0u32, 1], vec![2], vec![3]];
+        let (idx, _) = within_clusters(&x, &clusters, 3, &NativeBackend::default());
+        assert_eq!(idx[0 * 3], 1);
+        assert_eq!(idx[0 * 3 + 1], NO_NEIGHBOR);
+        assert_eq!(idx[2 * 3], NO_NEIGHBOR); // singleton has no neighbors
+    }
+
+    #[test]
+    fn exact_global_matches_naive() {
+        let mut rng = Rng::new(2);
+        let x = randm(&mut rng, 50, 5);
+        let k = 4;
+        let got = exact_global(&x, k);
+        for i in 0..50 {
+            let mut all: Vec<(f32, u32)> = (0..50)
+                .filter(|&j| j != i)
+                .map(|j| (d2(x.row(i), x.row(j)), j as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            assert_eq!(got[i * k], all[0].1, "nearest neighbor row {i}");
+        }
+    }
+}

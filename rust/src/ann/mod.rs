@@ -1,0 +1,186 @@
+//! The NOMAD ANN index (paper §3.2).
+//!
+//! NOMAD Projection deliberately avoids FAISS/PyNNDescent-style indexes
+//! because their kNN graphs do not shard cleanly.  Instead:
+//!
+//! 1. K-Means clustering, **initialized with a locality-sensitive hash**,
+//!    run to convergence with EM ([`kmeans`]);
+//! 2. **exact** kNN computed *within* each cluster ([`knn`]);
+//! 3. the resulting graph is a disjoint union of per-cluster components
+//!    ([`graph`]), so clusters shard across devices with zero inter-device
+//!    communication during positive (attractive) force computation.
+//!
+//! The high-dimensional distance work (assignment, within-cluster kNN) is
+//! behind the [`backend::AnnBackend`] trait: the native Rust implementation
+//! lives here; the AOT/XLA implementation lives in `crate::runtime` and is
+//! cross-checked against this one in the integration tests.
+
+pub mod backend;
+pub mod graph;
+pub mod kmeans;
+pub mod knn;
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// The built index: cluster structure plus the within-cluster kNN graph.
+#[derive(Clone, Debug)]
+pub struct ClusterIndex {
+    /// cluster id of every point
+    pub assign: Vec<u32>,
+    /// members of each cluster (global point ids)
+    pub clusters: Vec<Vec<u32>>,
+    /// centroids in the *ambient* space (c x d)
+    pub centroids: Matrix,
+    /// kNN edges: `nbr_idx[i*k..(i+1)*k]` = global ids of i's neighbors,
+    /// sorted ascending by distance; `u32::MAX` marks a missing slot
+    /// (cluster smaller than k+1).
+    pub nbr_idx: Vec<u32>,
+    /// squared distances matching `nbr_idx` (f32::INFINITY for missing)
+    pub nbr_d2: Vec<f32>,
+    pub k: usize,
+}
+
+/// Marker for an absent neighbor slot.
+pub const NO_NEIGHBOR: u32 = u32::MAX;
+
+/// Index build parameters.
+#[derive(Clone, Debug)]
+pub struct IndexParams {
+    /// number of K-Means clusters (devices shard these)
+    pub n_clusters: usize,
+    /// neighbors per point
+    pub k: usize,
+    /// max EM iterations
+    pub max_iters: usize,
+    /// EM stops when fewer than `tol_frac` of points change cluster
+    pub tol_frac: f64,
+    /// clusters larger than this are split (keeps shard buckets bounded)
+    pub max_cluster_size: usize,
+}
+
+impl Default for IndexParams {
+    fn default() -> Self {
+        IndexParams {
+            n_clusters: 32,
+            k: 15,
+            max_iters: 25,
+            tol_frac: 0.005,
+            max_cluster_size: 8192,
+        }
+    }
+}
+
+impl ClusterIndex {
+    /// Build the index over `x` using the given distance backend.
+    pub fn build(
+        x: &Matrix,
+        params: &IndexParams,
+        backend: &dyn backend::AnnBackend,
+        rng: &mut Rng,
+    ) -> ClusterIndex {
+        let km = kmeans::run(x, params, backend, rng);
+        let (nbr_idx, nbr_d2) = knn::within_clusters(x, &km.clusters, params.k, backend);
+        ClusterIndex {
+            assign: km.assign,
+            clusters: km.clusters,
+            centroids: km.centroids,
+            nbr_idx,
+            nbr_d2,
+            k: params.k,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.assign.len()
+    }
+
+    pub fn n_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    /// neighbors of point i (global ids, NO_NEIGHBOR-padded)
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.nbr_idx[i * self.k..(i + 1) * self.k]
+    }
+
+    pub fn neighbor_d2(&self, i: usize) -> &[f32] {
+        &self.nbr_d2[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Verify the defining invariant: every kNN edge stays inside one
+    /// cluster (no cross-device positive forces).  Used by tests and debug
+    /// assertions.
+    pub fn edges_respect_clusters(&self) -> bool {
+        for i in 0..self.n() {
+            for &j in self.neighbors(i) {
+                if j != NO_NEIGHBOR && self.assign[j as usize] != self.assign[i] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture;
+
+    #[test]
+    fn build_produces_consistent_index() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(600, 16, 6, 8.0, 0.3, 0.5, &mut rng);
+        let params = IndexParams { n_clusters: 6, k: 5, ..Default::default() };
+        let be = backend::NativeBackend::default();
+        let idx = ClusterIndex::build(&ds.x, &params, &be, &mut rng);
+
+        assert_eq!(idx.n(), 600);
+        assert!(idx.n_clusters() >= 6);
+        // members lists match assign
+        for (c, members) in idx.clusters.iter().enumerate() {
+            for &m in members {
+                assert_eq!(idx.assign[m as usize] as usize, c);
+            }
+        }
+        let total: usize = idx.clusters.iter().map(|c| c.len()).sum();
+        assert_eq!(total, 600);
+        assert!(idx.edges_respect_clusters());
+    }
+
+    #[test]
+    fn knn_edges_are_sorted_and_self_free() {
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(300, 8, 3, 10.0, 0.0, 0.0, &mut rng);
+        let params = IndexParams { n_clusters: 3, k: 7, ..Default::default() };
+        let be = backend::NativeBackend::default();
+        let idx = ClusterIndex::build(&ds.x, &params, &be, &mut rng);
+        for i in 0..idx.n() {
+            let ds_ = idx.neighbor_d2(i);
+            for w in ds_.windows(2) {
+                assert!(w[0] <= w[1], "distances sorted");
+            }
+            for &j in idx.neighbors(i) {
+                assert_ne!(j, i as u32, "no self edges");
+            }
+        }
+    }
+
+    #[test]
+    fn oversize_clusters_are_split() {
+        let mut rng = Rng::new(2);
+        // single blob forces everything into one cluster unless split
+        let ds = gaussian_mixture(500, 8, 1, 1.0, 0.0, 0.0, &mut rng);
+        let params = IndexParams {
+            n_clusters: 2,
+            k: 3,
+            max_cluster_size: 200,
+            ..Default::default()
+        };
+        let be = backend::NativeBackend::default();
+        let idx = ClusterIndex::build(&ds.x, &params, &be, &mut rng);
+        assert!(idx.clusters.iter().all(|c| c.len() <= 200));
+        assert!(idx.edges_respect_clusters());
+    }
+}

@@ -1,0 +1,474 @@
+//! Barnes–Hut t-SNE (van der Maaten 2013): sparse perplexity-calibrated P
+//! over a kNN graph, quadtree-approximated repulsion, momentum + gains.
+//!
+//! Configured two ways for the paper's comparisons:
+//!  * `exaggeration > 1` + PCA init  -> the **OpenTSNE** stand-in (Table 1);
+//!  * `exaggeration = 1` + random init -> the **t-SNE-CUDA** stand-in
+//!    (the paper notes t-SNE-CUDA lacks early exaggeration / spectral init
+//!    and attributes its weak triplet accuracy to that).
+
+use crate::linalg::Matrix;
+use crate::util::parallel::{num_threads, par_map};
+
+/// BH t-SNE hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TsneParams {
+    pub perplexity: f64,
+    pub theta: f32,
+    pub epochs: usize,
+    pub exaggeration: f32,
+    pub exaggeration_epochs: usize,
+    pub lr: Option<f64>,
+    pub momentum_start: f32,
+    pub momentum_final: f32,
+    pub seed: u64,
+}
+
+impl Default for TsneParams {
+    fn default() -> Self {
+        TsneParams {
+            perplexity: 30.0,
+            theta: 0.5,
+            epochs: 300,
+            exaggeration: 12.0,
+            exaggeration_epochs: 75,
+            lr: None,
+            momentum_start: 0.5,
+            momentum_final: 0.8,
+            seed: 42,
+        }
+    }
+}
+
+/// Sparse symmetric affinities.
+pub struct SparseP {
+    /// CSR: for row i, entries [indptr[i], indptr[i+1])
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+/// Perplexity-calibrated conditional affinities over a kNN list, then
+/// symmetrized: p_ij = (p_{j|i} + p_{i|j}) / 2n.
+pub fn calibrate_affinities(
+    nbr_idx: &[u32],
+    nbr_d2: &[f32],
+    n: usize,
+    k: usize,
+    perplexity: f64,
+) -> SparseP {
+    let log_perp = perplexity.ln();
+    let threads = num_threads();
+    // binary search beta_i per point
+    let rows: Vec<Vec<(u32, f32)>> = par_map(n, threads, |i| {
+        let ds = &nbr_d2[i * k..(i + 1) * k];
+        let js = &nbr_idx[i * k..(i + 1) * k];
+        let valid: Vec<(u32, f64)> = js
+            .iter()
+            .zip(ds)
+            .filter(|(j, d)| **j != u32::MAX && d.is_finite())
+            .map(|(j, d)| (*j, *d as f64))
+            .collect();
+        if valid.is_empty() {
+            return Vec::new();
+        }
+        let mut beta = 1.0f64;
+        let (mut lo, mut hi) = (0.0f64, f64::INFINITY);
+        let mut p: Vec<f64> = vec![0.0; valid.len()];
+        for _ in 0..60 {
+            let mut sum = 0.0;
+            for (t, (_, d)) in valid.iter().enumerate() {
+                p[t] = (-beta * d).exp();
+                sum += p[t];
+            }
+            if sum <= 1e-300 {
+                beta /= 2.0;
+                hi = beta * 2.0;
+                continue;
+            }
+            // entropy H = log(sum) + beta * <d>
+            let mut h = 0.0;
+            for (t, (_, d)) in valid.iter().enumerate() {
+                h += beta * d * p[t];
+            }
+            let h = h / sum + sum.ln();
+            let diff = h - log_perp;
+            if diff.abs() < 1e-5 {
+                break;
+            }
+            if diff > 0.0 {
+                lo = beta;
+                beta = if hi.is_finite() { (beta + hi) / 2.0 } else { beta * 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let sum: f64 = p.iter().sum::<f64>().max(1e-300);
+        valid
+            .iter()
+            .zip(&p)
+            .map(|((j, _), pv)| (*j, (pv / sum) as f32))
+            .collect()
+    });
+
+    // symmetrize into a hash map per row
+    let mut maps: Vec<std::collections::HashMap<u32, f32>> =
+        (0..n).map(|_| std::collections::HashMap::new()).collect();
+    for (i, row) in rows.iter().enumerate() {
+        for &(j, p) in row {
+            let half = p / (2.0 * n as f32);
+            *maps[i].entry(j).or_insert(0.0) += half;
+            *maps[j as usize].entry(i as u32).or_insert(0.0) += half;
+        }
+    }
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::new();
+    let mut values = Vec::new();
+    indptr.push(0);
+    for m in maps {
+        let mut row: Vec<(u32, f32)> = m.into_iter().collect();
+        row.sort_by_key(|e| e.0);
+        for (j, v) in row {
+            indices.push(j);
+            values.push(v);
+        }
+        indptr.push(indices.len());
+    }
+    SparseP { indptr, indices, values }
+}
+
+// ---------------------------------------------------------------------------
+// Quadtree for Barnes–Hut repulsion
+// ---------------------------------------------------------------------------
+
+struct QuadTree {
+    nodes: Vec<QtNode>,
+}
+
+#[derive(Clone, Copy)]
+struct QtNode {
+    // center of mass and count
+    com: [f32; 2],
+    count: f32,
+    // square cell
+    cx: f32,
+    cy: f32,
+    half: f32,
+    children: [i32; 4], // -1 = none
+    leaf_point: i32,    // index of the single point if leaf w/ 1 point
+}
+
+impl QuadTree {
+    fn build(pos: &[f32], n: usize) -> QuadTree {
+        let mut min = [f32::INFINITY; 2];
+        let mut max = [f32::NEG_INFINITY; 2];
+        for i in 0..n {
+            min[0] = min[0].min(pos[i * 2]);
+            max[0] = max[0].max(pos[i * 2]);
+            min[1] = min[1].min(pos[i * 2 + 1]);
+            max[1] = max[1].max(pos[i * 2 + 1]);
+        }
+        let cx = (min[0] + max[0]) / 2.0;
+        let cy = (min[1] + max[1]) / 2.0;
+        let half = ((max[0] - min[0]).max(max[1] - min[1]) / 2.0 + 1e-5).max(1e-5);
+        let root = QtNode {
+            com: [0.0; 2],
+            count: 0.0,
+            cx,
+            cy,
+            half,
+            children: [-1; 4],
+            leaf_point: -1,
+        };
+        let mut t = QuadTree { nodes: vec![root] };
+        for i in 0..n {
+            t.insert(0, pos, i, 0);
+        }
+        t
+    }
+
+    fn insert(&mut self, node: usize, pos: &[f32], p: usize, depth: usize) {
+        let (px, py) = (pos[p * 2], pos[p * 2 + 1]);
+        // update center of mass
+        let c = self.nodes[node].count;
+        self.nodes[node].com[0] = (self.nodes[node].com[0] * c + px) / (c + 1.0);
+        self.nodes[node].com[1] = (self.nodes[node].com[1] * c + py) / (c + 1.0);
+        self.nodes[node].count = c + 1.0;
+
+        if self.nodes[node].count == 1.0 {
+            self.nodes[node].leaf_point = p as i32;
+            return;
+        }
+        // split: push existing single point down, then insert new
+        if depth > 48 {
+            return; // coincident points: keep aggregated at this node
+        }
+        let existing = self.nodes[node].leaf_point;
+        self.nodes[node].leaf_point = -1;
+        if existing >= 0 {
+            let q = existing as usize;
+            let qd = self.quadrant(node, pos[q * 2], pos[q * 2 + 1]);
+            let ch = self.child(node, qd);
+            self.insert_into_child(ch, pos, q, depth);
+        }
+        let qd = self.quadrant(node, px, py);
+        let ch = self.child(node, qd);
+        self.insert_into_child(ch, pos, p, depth);
+    }
+
+    fn insert_into_child(&mut self, child: usize, pos: &[f32], p: usize, depth: usize) {
+        self.insert(child, pos, p, depth + 1);
+    }
+
+    fn quadrant(&self, node: usize, x: f32, y: f32) -> usize {
+        let n = &self.nodes[node];
+        ((x >= n.cx) as usize) | (((y >= n.cy) as usize) << 1)
+    }
+
+    fn child(&mut self, node: usize, q: usize) -> usize {
+        if self.nodes[node].children[q] >= 0 {
+            return self.nodes[node].children[q] as usize;
+        }
+        let parent = self.nodes[node];
+        let h = parent.half / 2.0;
+        let cx = parent.cx + if q & 1 == 1 { h } else { -h };
+        let cy = parent.cy + if q & 2 == 2 { h } else { -h };
+        let idx = self.nodes.len();
+        self.nodes.push(QtNode {
+            com: [0.0; 2],
+            count: 0.0,
+            cx,
+            cy,
+            half: h,
+            children: [-1; 4],
+            leaf_point: -1,
+        });
+        self.nodes[node].children[q] = idx as i32;
+        idx
+    }
+
+    /// Accumulate the BH-approximated repulsive numerator for point p,
+    /// returning (fx, fy, z_partial).
+    fn repulsion(&self, p: usize, pos: &[f32], theta2: f32) -> (f64, f64, f64) {
+        let (px, py) = (pos[p * 2], pos[p * 2 + 1]);
+        let mut fx = 0.0f64;
+        let mut fy = 0.0f64;
+        let mut z = 0.0f64;
+        let mut stack = vec![0usize];
+        while let Some(node) = stack.pop() {
+            let nd = &self.nodes[node];
+            if nd.count == 0.0 {
+                continue;
+            }
+            let dx = px - nd.com[0];
+            let dy = py - nd.com[1];
+            let d2 = dx * dx + dy * dy;
+            let is_self_leaf = nd.leaf_point == p as i32 && nd.count == 1.0;
+            let cell = 2.0 * nd.half;
+            if is_self_leaf {
+                continue;
+            }
+            if nd.leaf_point >= 0 || (cell * cell) < theta2 * d2 {
+                // treat as a single body of mass count (excluding self if
+                // the aggregated node contains p: the standard BH-tSNE
+                // approximation ignores that tiny error)
+                let q = 1.0 / (1.0 + d2);
+                let mult = nd.count as f64 * (q * q) as f64;
+                fx += mult * dx as f64;
+                fy += mult * dy as f64;
+                z += nd.count as f64 * q as f64;
+            } else {
+                for &c in &nd.children {
+                    if c >= 0 {
+                        stack.push(c as usize);
+                    }
+                }
+            }
+        }
+        (fx, fy, z)
+    }
+}
+
+/// Run BH t-SNE from `init` over a kNN graph (`nbr_idx/nbr_d2` flat n x k).
+pub fn run(
+    nbr_idx: &[u32],
+    nbr_d2: &[f32],
+    n: usize,
+    k: usize,
+    init: &Matrix,
+    p: &TsneParams,
+) -> Matrix {
+    let sp = calibrate_affinities(nbr_idx, nbr_d2, n, k, p.perplexity);
+    run_with_affinities(&sp, n, init, p)
+}
+
+/// Run from precomputed affinities (reused across configurations).
+pub fn run_with_affinities(sp: &SparseP, n: usize, init: &Matrix, p: &TsneParams) -> Matrix {
+    let mut pos = init.data.clone();
+    let mut vel = vec![0.0f32; n * 2];
+    let mut gains = vec![1.0f32; n * 2];
+    let lr = p.lr.unwrap_or(n as f64 / p.exaggeration as f64).max(50.0) as f32;
+    let theta2 = p.theta * p.theta;
+    let threads = num_threads();
+
+    for epoch in 0..p.epochs {
+        let exag = if epoch < p.exaggeration_epochs { p.exaggeration } else { 1.0 };
+        let momentum =
+            if epoch < p.exaggeration_epochs { p.momentum_start } else { p.momentum_final };
+
+        let tree = QuadTree::build(&pos, n);
+        // repulsion (parallel) -> also accumulates Z
+        let rep: Vec<(f64, f64, f64)> =
+            par_map(n, threads, |i| tree.repulsion(i, &pos, theta2));
+        let z: f64 = rep.iter().map(|r| r.2).sum::<f64>().max(1e-12);
+
+        // attraction (sparse, serial is fine: |E| ~ n*k)
+        let mut grad = vec![0.0f32; n * 2];
+        for i in 0..n {
+            let (px, py) = (pos[i * 2], pos[i * 2 + 1]);
+            let mut ax = 0.0f32;
+            let mut ay = 0.0f32;
+            for e in sp.indptr[i]..sp.indptr[i + 1] {
+                let j = sp.indices[e] as usize;
+                let pij = sp.values[e] * exag;
+                let dx = px - pos[j * 2];
+                let dy = py - pos[j * 2 + 1];
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                ax += pij * q * dx;
+                ay += pij * q * dy;
+            }
+            grad[i * 2] = 4.0 * (ax - (rep[i].0 / z) as f32);
+            grad[i * 2 + 1] = 4.0 * (ay - (rep[i].1 / z) as f32);
+        }
+
+        // momentum + gains update (vdM 2008 conventions)
+        for t in 0..n * 2 {
+            let same_sign = (grad[t] > 0.0) == (vel[t] > 0.0);
+            gains[t] = if same_sign { (gains[t] * 0.8).max(0.01) } else { gains[t] + 0.2 };
+            vel[t] = momentum * vel[t] - lr * gains[t] * grad[t];
+            pos[t] += vel[t];
+        }
+    }
+    Matrix::from_vec(n, 2, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::knn::exact_global;
+    use crate::util::rng::Rng;
+    use crate::data::gaussian_mixture;
+    use crate::linalg::d2;
+
+    #[test]
+    fn affinities_rows_sum_consistently() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(120, 8, 2, 10.0, 0.0, 0.0, &mut rng);
+        let k = 30;
+        let idx = exact_global(&ds.x, k);
+        let mut dd = vec![0.0f32; 120 * k];
+        for i in 0..120 {
+            for s in 0..k {
+                dd[i * k + s] = d2(ds.x.row(i), ds.x.row(idx[i * k + s] as usize));
+            }
+        }
+        let sp = calibrate_affinities(&idx, &dd, 120, k, 10.0);
+        let total: f32 = sp.values.iter().sum();
+        assert!((total - 1.0).abs() < 1e-3, "sum p = {total}");
+        // symmetry
+        for i in 0..120 {
+            for e in sp.indptr[i]..sp.indptr[i + 1] {
+                let j = sp.indices[e] as usize;
+                let back = (sp.indptr[j]..sp.indptr[j + 1])
+                    .find(|&f| sp.indices[f] as usize == i)
+                    .expect("symmetric entry");
+                assert!((sp.values[e] - sp.values[back]).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn quadtree_mass_conserved() {
+        let mut rng = Rng::new(1);
+        let pos: Vec<f32> = (0..200).map(|_| rng.normal()).collect();
+        let tree = QuadTree::build(&pos, 100);
+        assert_eq!(tree.nodes[0].count, 100.0);
+        // com equals mean
+        let mx: f32 = (0..100).map(|i| pos[i * 2]).sum::<f32>() / 100.0;
+        assert!((tree.nodes[0].com[0] - mx).abs() < 1e-3);
+    }
+
+    #[test]
+    fn bh_repulsion_close_to_exact() {
+        let mut rng = Rng::new(2);
+        let n = 300;
+        let pos: Vec<f32> = (0..n * 2).map(|_| rng.normal() * 3.0).collect();
+        let tree = QuadTree::build(&pos, n);
+        for &p in &[0usize, 17, 123] {
+            let (bx, by, bz) = tree.repulsion(p, &pos, 0.25);
+            // exact
+            let (mut ex, mut ey, mut ez) = (0.0f64, 0.0f64, 0.0f64);
+            for j in 0..n {
+                if j == p {
+                    continue;
+                }
+                let dx = pos[p * 2] - pos[j * 2];
+                let dy = pos[p * 2 + 1] - pos[j * 2 + 1];
+                let q = 1.0 / (1.0 + dx * dx + dy * dy);
+                ex += (q * q * dx) as f64;
+                ey += (q * q * dy) as f64;
+                ez += q as f64;
+            }
+            assert!((bx - ex).abs() < 0.05 * (1.0 + ex.abs()), "fx {bx} vs {ex}");
+            assert!((by - ey).abs() < 0.05 * (1.0 + ey.abs()), "fy {by} vs {ey}");
+            assert!((bz - ez).abs() < 0.05 * (1.0 + ez.abs()), "z {bz} vs {ez}");
+        }
+    }
+
+    #[test]
+    fn tsne_separates_blobs() {
+        let mut rng = Rng::new(3);
+        let ds = gaussian_mixture(200, 8, 2, 30.0, 0.0, 0.0, &mut rng);
+        let k = 20;
+        let idx = exact_global(&ds.x, k);
+        let mut dd = vec![0.0f32; 200 * k];
+        for i in 0..200 {
+            for s in 0..k {
+                dd[i * k + s] = d2(ds.x.row(i), ds.x.row(idx[i * k + s] as usize));
+            }
+        }
+        let mut init = Matrix::zeros(200, 2);
+        for v in init.data.iter_mut() {
+            *v = rng.normal() * 0.0001;
+        }
+        let y = run(
+            &idx,
+            &dd,
+            200,
+            k,
+            &init,
+            &TsneParams { epochs: 120, exaggeration_epochs: 40, ..Default::default() },
+        );
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        let mut within = 0.0f64;
+        let mut between = 0.0f64;
+        let (mut wn, mut bn) = (0, 0);
+        for i in (0..200).step_by(3) {
+            for j in (1..200).step_by(7) {
+                let d = d2(y.row(i), y.row(j)) as f64;
+                if ds.labels[0][i] == ds.labels[0][j] {
+                    within += d;
+                    wn += 1;
+                } else {
+                    between += d;
+                    bn += 1;
+                }
+            }
+        }
+        assert!(
+            between / bn as f64 > 3.0 * within / wn as f64,
+            "between {between} within {within}"
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! Baseline data-mapping algorithms the paper compares against (§4).
+//!
+//! We cannot run the authors' exact comparators offline, so each baseline
+//! is reimplemented from its defining paper, exercising the same ANN/metric
+//! substrates (DESIGN.md §3 documents the mapping):
+//!
+//! * [`bh_tsne`] — Barnes–Hut t-SNE (van der Maaten 2013) with sparse
+//!   perplexity-calibrated P.  With early exaggeration + PCA init it stands
+//!   in for **OpenTSNE** (Table 1); with both disabled it matches the
+//!   paper's characterization of **t-SNE-CUDA** (Fig 3: "does not take
+//!   advantage of techniques for improving global coherence").
+//! * [`umap_like`] — negative-sampling UMAP (McInnes et al.), the
+//!   **RapidsUMAP** stand-in.
+//! * exact InfoNC-t-SNE — NOMAD with `ApproxMode::None` (the surrogate's
+//!   exact counterpart); no separate module needed.
+
+pub mod bh_tsne;
+pub mod umap_like;

@@ -1,0 +1,141 @@
+//! UMAP-style baseline: per-edge SGD with negative sampling
+//! (McInnes, Healy & Melville 2020; a=b=1 kernel, the RAPIDS default family).
+//!
+//! Uses the same kNN graph machinery as NOMAD so comparisons isolate the
+//! *optimizer/loss* difference, not index quality.
+
+use crate::ann::{ClusterIndex, NO_NEIGHBOR};
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// UMAP baseline hyperparameters.
+#[derive(Clone, Debug)]
+pub struct UmapParams {
+    pub epochs: usize,
+    pub neg_per_edge: usize,
+    pub lr_initial: f32,
+    pub seed: u64,
+    /// gradient clip (UMAP clips to ±4)
+    pub clip: f32,
+}
+
+impl Default for UmapParams {
+    fn default() -> Self {
+        UmapParams { epochs: 200, neg_per_edge: 5, lr_initial: 1.0, seed: 42, clip: 4.0 }
+    }
+}
+
+/// Run UMAP-ish SGD from `init` (n x 2) over the index's kNN edges.
+pub fn run(index: &ClusterIndex, init: &Matrix, p: &UmapParams) -> Matrix {
+    let n = index.n();
+    let k = index.k;
+    let mut pos = init.data.clone();
+    let mut rng = Rng::new(p.seed);
+
+    // edge list (directed)
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * k);
+    for i in 0..n {
+        for s in 0..k {
+            let j = index.nbr_idx[i * k + s];
+            if j != NO_NEIGHBOR {
+                edges.push((i as u32, j));
+            }
+        }
+    }
+
+    let clip = p.clip;
+    for epoch in 0..p.epochs {
+        let lr = p.lr_initial * (1.0 - epoch as f32 / p.epochs as f32);
+        rng.shuffle(&mut edges);
+        for &(i, j) in &edges {
+            let (i, j) = (i as usize, j as usize);
+            let dx = pos[i * 2] - pos[j * 2];
+            let dy = pos[i * 2 + 1] - pos[j * 2 + 1];
+            let d2 = dx * dx + dy * dy;
+            // attractive gradient of log(1/(1+d^2)): -2/(1+d^2) * delta
+            let g = (-2.0 / (1.0 + d2)).clamp(-clip, clip);
+            let (gx, gy) = ((g * dx).clamp(-clip, clip), (g * dy).clamp(-clip, clip));
+            pos[i * 2] += lr * gx;
+            pos[i * 2 + 1] += lr * gy;
+            pos[j * 2] -= lr * gx;
+            pos[j * 2 + 1] -= lr * gy;
+
+            for _ in 0..p.neg_per_edge {
+                let m = rng.below(n);
+                if m == i {
+                    continue;
+                }
+                let dx = pos[i * 2] - pos[m * 2];
+                let dy = pos[i * 2 + 1] - pos[m * 2 + 1];
+                let d2 = dx * dx + dy * dy;
+                // repulsive gradient of log(1 - 1/(1+d^2)):
+                // 2 / (d^2 (1+d^2)) * delta  (eps-guarded)
+                let g = (2.0 / ((0.001 + d2) * (1.0 + d2))).clamp(-clip, clip);
+                let (gx, gy) = ((g * dx).clamp(-clip, clip), (g * dy).clamp(-clip, clip));
+                pos[i * 2] += lr * gx;
+                pos[i * 2 + 1] += lr * gy;
+            }
+        }
+    }
+    Matrix::from_vec(n, 2, pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::ann::IndexParams;
+    use crate::data::gaussian_mixture;
+
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(200, 8, 2, 30.0, 0.0, 0.0, &mut rng);
+        let idx = ClusterIndex::build(
+            &ds.x,
+            &IndexParams { n_clusters: 2, k: 8, ..Default::default() },
+            &NativeBackend::default(),
+            &mut rng,
+        );
+        let mut init = Matrix::zeros(200, 2);
+        for v in init.data.iter_mut() {
+            *v = rng.normal() * 0.01;
+        }
+        let y = run(&idx, &init, &UmapParams { epochs: 80, ..Default::default() });
+        // within-label distances must be far below between-label distances
+        let mut within = 0.0f64;
+        let mut between = 0.0f64;
+        let (mut wn, mut bn) = (0, 0);
+        for i in (0..200).step_by(3) {
+            for j in (1..200).step_by(7) {
+                let d = crate::linalg::d2(y.row(i), y.row(j)) as f64;
+                if ds.labels[0][i] == ds.labels[0][j] {
+                    within += d;
+                    wn += 1;
+                } else {
+                    between += d;
+                    bn += 1;
+                }
+            }
+        }
+        assert!(between / bn as f64 > 2.0 * within / wn as f64);
+    }
+
+    #[test]
+    fn positions_stay_finite() {
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(150, 8, 3, 5.0, 0.5, 0.7, &mut rng);
+        let idx = ClusterIndex::build(
+            &ds.x,
+            &IndexParams { n_clusters: 3, k: 5, ..Default::default() },
+            &NativeBackend::default(),
+            &mut rng,
+        );
+        let mut init = Matrix::zeros(150, 2);
+        for v in init.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let y = run(&idx, &init, &UmapParams { epochs: 30, ..Default::default() });
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,180 @@
+//! From-scratch benchmark framework (no `criterion` offline).
+//!
+//! Provides timed runs with warmup, summary statistics, aligned table
+//! printing (the paper-table regenerators in `rust/benches/` use this to
+//! print the same rows/series the paper reports), and JSON result dumps to
+//! `bench_results/` for EXPERIMENTS.md bookkeeping.
+
+use crate::util::json::{arr, obj, s, Json};
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Time `f` with `warmup` discarded runs and `runs` measured runs.
+pub fn time_fn<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples)
+}
+
+/// One measured value in a result table.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub text: String,
+}
+
+impl From<String> for Cell {
+    fn from(text: String) -> Cell {
+        Cell { text }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(text: &str) -> Cell {
+        Cell { text: text.to_string() }
+    }
+}
+
+/// Aligned-table printer + JSON sink.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|h| h.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    /// Print with aligned columns.
+    pub fn print(&self) {
+        println!("\n=== {} ===", self.title);
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.text.len());
+            }
+        }
+        let line = |cells: Vec<&str>| {
+            let mut out = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:w$}  ", c, w = widths[i]));
+            }
+            println!("{}", out.trim_end());
+        };
+        line(self.headers.iter().map(|h| h.as_str()).collect());
+        line(widths.iter().map(|_| "-").collect::<Vec<_>>());
+        for r in &self.rows {
+            line(r.iter().map(|c| c.text.as_str()).collect());
+        }
+    }
+
+    /// Dump to `bench_results/<name>.json`.
+    pub fn save_json(&self, name: &str) {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                obj(self
+                    .headers
+                    .iter()
+                    .zip(r)
+                    .map(|(h, c)| (h.as_str(), s(&c.text)))
+                    .collect())
+            })
+            .collect();
+        let v = obj(vec![("title", s(&self.title)), ("rows", arr(rows))]);
+        let _ = std::fs::create_dir_all("bench_results");
+        let _ = std::fs::write(format!("bench_results/{name}.json"), v.pretty());
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2}s", secs)
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+/// Format a mean ± sem pair as a percentage.
+pub fn fmt_pct(mean: f64, sem: f64) -> String {
+    if sem > 0.0 {
+        format!("{:.1}%±{:.1}", mean * 100.0, sem * 100.0)
+    } else {
+        format!("{:.1}%", mean * 100.0)
+    }
+}
+
+/// JSON helper re-exports for bench binaries.
+pub mod jsonx {
+    pub use crate::util::json::{arr, num, obj, s, Json};
+}
+
+/// Record an experiment result line to `bench_results/experiments.log`
+/// (append-only; EXPERIMENTS.md cites these).
+pub fn log_experiment(id: &str, payload: Json) {
+    let _ = std::fs::create_dir_all("bench_results");
+    let line = obj(vec![("id", s(id)), ("data", payload)]).to_string();
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results/experiments.log")
+    {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_sane_values() {
+        let s = time_fn(1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(s.n, 5);
+        assert!(s.mean >= 0.0 && s.mean < 1.0);
+    }
+
+    #[test]
+    fn table_rows_align() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["x".into(), "123".into()]);
+        t.row(vec!["longer".into(), "1".into()]);
+        t.print(); // should not panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert!(fmt_secs(0.5e-4).ends_with("µs"));
+        assert!(fmt_secs(0.5).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+        assert!(fmt_secs(600.0).ends_with("min"));
+        assert_eq!(fmt_pct(0.061, 0.003), "6.1%±0.3");
+    }
+}

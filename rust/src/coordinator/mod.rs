@@ -1,0 +1,421 @@
+//! The NOMAD Projection leader (Layer 3's core).
+//!
+//! `NomadCoordinator::fit` runs the full pipeline of the paper:
+//!
+//! 1. build the K-Means ANN index (LSH init -> EM -> within-cluster exact
+//!    kNN) — §3.2;
+//! 2. compute the inverse-rank edge distribution p(j|i) — Eq 6;
+//! 3. PCA-initialize the 2-d positions — §3.4;
+//! 4. cut clusters into padded [`ClusterBlock`]s and shard them across
+//!    simulated devices (Fig 2);
+//! 5. epoch-synchronous SGD with lr = n/10 linearly annealed to 0, where
+//!    each epoch all-gathers only the cluster-mean table — §3.3/§3.4;
+//! 6. collect positions, loss curve, snapshots, and communication stats.
+
+use crate::ann::backend::AnnBackend;
+use crate::ann::graph::{edge_weights, EdgeWeights};
+use crate::ann::{ClusterIndex, IndexParams};
+use crate::data::Dataset;
+use crate::distributed::comm_model::{self, CommStats, EpochWork, HwProfile};
+use crate::distributed::device::{spawn_device, DeviceCmd, DeviceReply};
+use crate::distributed::sharder::shard_clusters;
+use crate::distributed::{MeanEntry, MEAN_ENTRY_BYTES};
+use crate::embed::sgd::{Exaggeration, LrSchedule};
+use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
+use crate::linalg::{pca::pca_init, Matrix};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which step/ANN execution engine devices use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// pure Rust (always available)
+    Native,
+    /// AOT XLA artifacts via PJRT; falls back to native per-block when no
+    /// artifact bucket matches
+    Xla,
+}
+
+/// Run-level configuration (owned by the launcher/CLI, not the paper).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub n_devices: usize,
+    pub backend: BackendKind,
+    /// collect a positions snapshot every `k` epochs (for quality-vs-time
+    /// curves); None disables
+    pub snapshot_every: Option<usize>,
+    /// index build parameters
+    pub index: IndexParams,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n_devices: 1,
+            backend: BackendKind::Native,
+            snapshot_every: None,
+            index: IndexParams::default(),
+            verbose: false,
+        }
+    }
+}
+
+/// A positions snapshot taken during training.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub epoch: usize,
+    pub wall_secs: f64,
+    pub modeled_secs: f64,
+    pub positions: Matrix,
+}
+
+/// Everything `fit` produces.
+pub struct NomadRun {
+    pub positions: Matrix,
+    pub loss_history: Vec<f64>,
+    pub snapshots: Vec<Snapshot>,
+    pub comm: CommStats,
+    pub index_secs: f64,
+    pub train_secs: f64,
+    pub modeled_train_secs: f64,
+    pub n_clusters: usize,
+    pub device_step_secs: Vec<f64>,
+    /// epoch-work description of the final epoch (for cost-model
+    /// extrapolations in the scaling benches)
+    pub last_epoch_work: EpochWork,
+}
+
+/// The leader. Construct with [`NomadCoordinator::new`], then [`fit`].
+pub struct NomadCoordinator {
+    pub params: NomadParams,
+    pub run: RunConfig,
+    pub hw: HwProfile,
+}
+
+impl NomadCoordinator {
+    pub fn new(params: NomadParams, run: RunConfig) -> Self {
+        NomadCoordinator { params, run, hw: HwProfile::h100() }
+    }
+
+    /// Build the index + edges + init for `x` (steps 1–3).  Exposed
+    /// separately so benches can reuse an index across configurations.
+    pub fn prepare(&self, x: &Matrix, ann: &dyn AnnBackend) -> Prepared {
+        let mut rng = Rng::new(self.params.seed);
+        let t0 = Instant::now();
+        let index = ClusterIndex::build(x, &self.run.index, ann, &mut rng);
+        debug_assert!(index.edges_respect_clusters());
+        let weights = edge_weights(&index, self.params.weight_model);
+        let init = if self.params.pca_init {
+            pca_init(x, 2, &mut rng, self.params.init_std)
+        } else {
+            let mut m = Matrix::zeros(x.rows, 2);
+            for v in m.data.iter_mut() {
+                *v = rng.normal() * self.params.init_std;
+            }
+            m
+        };
+        Prepared { index, weights, init, index_secs: t0.elapsed().as_secs_f64() }
+    }
+
+    /// Full training run on a dataset.
+    pub fn fit(&self, ds: &Dataset, ann: &dyn AnnBackend) -> NomadRun {
+        let prep = self.prepare(&ds.x, ann);
+        self.fit_prepared(ds.n(), &prep)
+    }
+
+    /// Train from a prebuilt index/init (steps 4–6).
+    pub fn fit_prepared(&self, n: usize, prep: &Prepared) -> NomadRun {
+        let p = &self.params;
+        let index = &prep.index;
+        let n_clusters = index.n_clusters();
+
+        // ---- blocks + sharding (Fig 2) ----------------------------------
+        let blocks: Vec<ClusterBlock> = (0..n_clusters)
+            .map(|c| {
+                ClusterBlock::build(index, &prep.weights, c, &prep.init.data, n, p.m_noise, p.negs)
+            })
+            .collect();
+        let sizes: Vec<usize> = index.clusters.iter().map(|c| c.len()).collect();
+        let shards = shard_clusters(&sizes, self.run.n_devices);
+
+        // initial means table
+        let mut means_table: Vec<MeanEntry> = blocks
+            .iter()
+            .map(|b| MeanEntry {
+                cluster_id: b.cluster_id,
+                mean: b.mean(),
+                weight: match p.approx {
+                    ApproxMode::AllNonSelf => b.mean_weight(n, p.m_noise),
+                    ApproxMode::None => 0.0,
+                },
+            })
+            .collect();
+        means_table.sort_by_key(|e| e.cluster_id);
+
+        // ---- spawn devices ----------------------------------------------
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel::<DeviceReply>();
+        let mut block_by_id: Vec<Option<ClusterBlock>> = blocks.into_iter().map(Some).collect();
+        let backend_kind = self.run.backend;
+        let mut handles = Vec::new();
+        for (d, shard) in shards.iter().enumerate() {
+            let my_blocks: Vec<ClusterBlock> = shard
+                .iter()
+                .map(|&c| block_by_id[c].take().expect("cluster sharded once"))
+                .collect();
+            let make: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> = match backend_kind {
+                BackendKind::Native => {
+                    Box::new(|| Box::new(crate::embed::native::NativeStepBackend::default()))
+                }
+                BackendKind::Xla => Box::new(|| match crate::runtime::XlaStepBackend::from_env() {
+                    Ok(b) => Box::new(b),
+                    Err(e) => {
+                        eprintln!("[nomad] XLA backend unavailable ({e}); using native");
+                        Box::new(crate::embed::native::NativeStepBackend::default())
+                    }
+                }),
+            };
+            handles.push(spawn_device(
+                d,
+                my_blocks,
+                n,
+                p.m_noise,
+                p.seed,
+                make,
+                reply_tx.clone(),
+            ));
+        }
+
+        // ---- epoch loop ---------------------------------------------------
+        let lr_sched = LrSchedule::nomad_default(n, p.epochs, p.lr_initial);
+        let exag = Exaggeration { factor: p.exaggeration, epochs: p.exaggeration_epochs };
+        let mut loss_history = Vec::with_capacity(p.epochs);
+        let mut snapshots = Vec::new();
+        let mut comm = CommStats::default();
+        let mut modeled_total = 0.0f64;
+        let mut device_step_secs = vec![0.0f64; handles.len()];
+        let mut last_work = EpochWork::default();
+        let t_train = Instant::now();
+
+        for epoch in 0..p.epochs {
+            let lr = lr_sched.at(epoch) as f32;
+            let table = Arc::new(means_table.clone());
+            for h in &handles {
+                let _ = h.cmd.send(DeviceCmd::Epoch {
+                    lr,
+                    exaggeration: exag.factor_at(epoch),
+                    means: Arc::clone(&table),
+                });
+            }
+            let mut loss_sum = 0.0;
+            let mut loss_w = 0.0;
+            let mut max_dev_flops = 0.0f64;
+            let mut total_flops = 0.0f64;
+            let mut max_dev_secs = 0.0f64;
+            let mut fresh: Vec<MeanEntry> = Vec::with_capacity(means_table.len());
+            for _ in 0..handles.len() {
+                match reply_rx.recv().expect("device alive") {
+                    DeviceReply::EpochDone { device, means, loss_sum: ls, loss_weight: lw, step_secs, flops } => {
+                        loss_sum += ls;
+                        loss_w += lw;
+                        max_dev_flops = max_dev_flops.max(flops);
+                        total_flops += flops;
+                        max_dev_secs = max_dev_secs.max(step_secs);
+                        device_step_secs[device] += step_secs;
+                        fresh.extend(means);
+                    }
+                    DeviceReply::Collected { .. } => unreachable!("no collect pending"),
+                }
+            }
+            // all-gather: rebuild the table (weights honour the approx mode)
+            fresh.sort_by_key(|e| e.cluster_id);
+            if p.approx == ApproxMode::None {
+                for e in fresh.iter_mut() {
+                    e.weight = 0.0;
+                }
+            }
+            means_table = fresh;
+            let bytes = means_table.len() as u64 * MEAN_ENTRY_BYTES * handles.len() as u64;
+            comm.allgather_bytes_total += bytes;
+            let work = EpochWork {
+                max_dev_flops,
+                total_flops,
+                max_dev_secs,
+                allgather_bytes: bytes,
+                n_devices: handles.len(),
+            };
+            last_work = work;
+            modeled_total += comm_model::epoch_time(&self.hw, &work);
+            loss_history.push(loss_sum / loss_w.max(1.0));
+
+            if let Some(every) = self.run.snapshot_every {
+                if (epoch + 1) % every == 0 && epoch + 1 < p.epochs {
+                    let positions = collect_positions(&handles, &reply_rx, n);
+                    snapshots.push(Snapshot {
+                        epoch: epoch + 1,
+                        wall_secs: t_train.elapsed().as_secs_f64(),
+                        modeled_secs: modeled_total,
+                        positions,
+                    });
+                }
+            }
+            if self.run.verbose && (epoch % 25 == 0 || epoch + 1 == p.epochs) {
+                eprintln!(
+                    "[nomad] epoch {epoch:4} lr {lr:9.2} loss {:.5}",
+                    loss_history.last().unwrap()
+                );
+            }
+        }
+
+        let positions = collect_positions(&handles, &reply_rx, n);
+        for h in &handles {
+            let _ = h.cmd.send(DeviceCmd::Stop);
+        }
+        for h in handles {
+            let _ = h.join.join();
+        }
+
+        let train_secs = t_train.elapsed().as_secs_f64();
+        comm.epochs = p.epochs;
+        comm.modeled_secs_total = modeled_total;
+        comm.measured_secs_total = train_secs;
+
+        NomadRun {
+            positions,
+            loss_history,
+            snapshots,
+            comm,
+            index_secs: prep.index_secs,
+            train_secs,
+            modeled_train_secs: modeled_total,
+            n_clusters,
+            device_step_secs,
+            last_epoch_work: last_work,
+        }
+    }
+}
+
+/// Index + edges + init bundle reused across runs.
+pub struct Prepared {
+    pub index: ClusterIndex,
+    pub weights: EdgeWeights,
+    pub init: Matrix,
+    pub index_secs: f64,
+}
+
+fn collect_positions(
+    handles: &[crate::distributed::device::DeviceHandle],
+    reply_rx: &std::sync::mpsc::Receiver<DeviceReply>,
+    n: usize,
+) -> Matrix {
+    for h in handles {
+        let _ = h.cmd.send(DeviceCmd::Collect);
+    }
+    let mut m = Matrix::zeros(n, 2);
+    for _ in 0..handles.len() {
+        match reply_rx.recv().expect("device alive") {
+            DeviceReply::Collected { positions, .. } => {
+                for (g, p) in positions {
+                    let g = g as usize;
+                    m.data[g * 2] = p[0];
+                    m.data[g * 2 + 1] = p[1];
+                }
+            }
+            DeviceReply::EpochDone { .. } => unreachable!("no epoch pending"),
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::data::gaussian_mixture;
+
+    fn tiny_params(epochs: usize) -> NomadParams {
+        NomadParams { epochs, k: 5, negs: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn fit_runs_and_improves_loss() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(400, 16, 4, 10.0, 0.2, 0.5, &mut rng);
+        let coord = NomadCoordinator::new(
+            tiny_params(30),
+            RunConfig {
+                n_devices: 2,
+                index: IndexParams { n_clusters: 4, k: 5, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        assert_eq!(run.positions.rows, 400);
+        assert!(run.loss_history.len() == 30);
+        let first = run.loss_history[..3].iter().sum::<f64>() / 3.0;
+        let last = run.loss_history[27..].iter().sum::<f64>() / 3.0;
+        assert!(last < first, "loss should fall: {first} -> {last}");
+        // comm: only means cross devices
+        assert_eq!(run.comm.positive_phase_bytes_total, 0);
+        assert!(run.comm.allgather_bytes_total > 0);
+    }
+
+    #[test]
+    fn device_count_does_not_change_sharded_results_structure() {
+        let mut rng = Rng::new(1);
+        let ds = gaussian_mixture(300, 8, 3, 10.0, 0.0, 0.3, &mut rng);
+        for n_dev in [1, 3] {
+            let coord = NomadCoordinator::new(
+                tiny_params(10),
+                RunConfig {
+                    n_devices: n_dev,
+                    index: IndexParams { n_clusters: 3, k: 4, ..Default::default() },
+                    ..Default::default()
+                },
+            );
+            let run = coord.fit(&ds, &NativeBackend::default());
+            // every point moved from origin (all rows written back)
+            let moved = (0..300)
+                .filter(|&i| run.positions.row(i).iter().any(|v| *v != 0.0))
+                .count();
+            assert!(moved > 290, "{moved} rows written");
+        }
+    }
+
+    #[test]
+    fn snapshots_collected() {
+        let mut rng = Rng::new(2);
+        let ds = gaussian_mixture(200, 8, 2, 8.0, 0.0, 0.3, &mut rng);
+        let coord = NomadCoordinator::new(
+            tiny_params(20),
+            RunConfig {
+                n_devices: 2,
+                snapshot_every: Some(5),
+                index: IndexParams { n_clusters: 2, k: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        assert_eq!(run.snapshots.len(), 3); // epochs 5, 10, 15 (20 = final)
+        assert!(run.snapshots.windows(2).all(|w| w[0].wall_secs <= w[1].wall_secs));
+    }
+
+    #[test]
+    fn exact_mode_disables_mean_negatives() {
+        let mut rng = Rng::new(3);
+        let ds = gaussian_mixture(200, 8, 2, 8.0, 0.0, 0.3, &mut rng);
+        let mut params = tiny_params(5);
+        params.approx = ApproxMode::None;
+        let coord = NomadCoordinator::new(
+            params,
+            RunConfig {
+                index: IndexParams { n_clusters: 2, k: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        assert!(run.loss_history.iter().all(|l| l.is_finite()));
+    }
+}

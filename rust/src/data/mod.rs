@@ -1,0 +1,324 @@
+//! Synthetic vector-corpus generators — the dataset substitutions.
+//!
+//! The paper evaluates on ArXiv (Nomic-Embed), ImageNet (OpenCLIP), PubMed
+//! (custom BERT) and Multilingual Wikipedia (BGE-M3) embeddings, none of
+//! which are available offline.  These generators produce corpora with the
+//! *geometric* properties the evaluation metrics actually measure —
+//! cluster structure across scales, anisotropy, power-law cluster sizes —
+//! so that neighborhood preservation and random-triplet accuracy remain
+//! meaningful and method *orderings* transfer (see DESIGN.md §3).
+//!
+//! Every generator returns a [`Dataset`] with ground-truth labels at one or
+//! more hierarchy levels, which the metrics and the map renderer consume.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+
+/// A generated corpus: vectors plus (possibly hierarchical) labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Matrix,
+    /// labels[level][i] — level 0 is the coarsest.
+    pub labels: Vec<Vec<u32>>,
+    pub name: String,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.cols
+    }
+
+    pub fn fine_labels(&self) -> &[u32] {
+        self.labels.last().expect("at least one label level")
+    }
+}
+
+/// Power-law cluster sizes: size_i ∝ (i+1)^{-alpha}, normalized to n with
+/// every cluster guaranteed non-empty (each gets 1, the remainder is split
+/// proportionally with largest-remainder rounding).
+fn power_law_sizes(n: usize, clusters: usize, alpha: f64, rng: &mut Rng) -> Vec<usize> {
+    assert!(n >= clusters, "n {n} < clusters {clusters}");
+    let mut w: Vec<f64> = (0..clusters).map(|i| ((i + 1) as f64).powf(-alpha)).collect();
+    rng.shuffle(&mut w);
+    let total: f64 = w.iter().sum();
+    let spare = n - clusters;
+    let exact: Vec<f64> = w.iter().map(|v| v / total * spare as f64).collect();
+    let mut sizes: Vec<usize> = exact.iter().map(|e| 1 + e.floor() as usize).collect();
+    let mut left = n - sizes.iter().sum::<usize>();
+    // largest remainders get the leftover units
+    let mut order: Vec<usize> = (0..clusters).collect();
+    order.sort_by(|&a, &b| {
+        (exact[b] - exact[b].floor())
+            .partial_cmp(&(exact[a] - exact[a].floor()))
+            .unwrap()
+    });
+    for &i in order.iter().cycle().take(left.min(clusters * 2)) {
+        if left == 0 {
+            break;
+        }
+        sizes[i] += 1;
+        left -= 1;
+    }
+    debug_assert_eq!(sizes.iter().sum::<usize>(), n);
+    sizes
+}
+
+/// Gaussian mixture with anisotropic clusters on a low-dimensional manifold
+/// embedded in `dim` — the base generator all corpus analogs use.
+///
+/// `spread` controls between-cluster distance relative to within-cluster
+/// std; `aniso` in [0,1] controls how elongated clusters are.
+pub fn gaussian_mixture(
+    n: usize,
+    dim: usize,
+    clusters: usize,
+    spread: f32,
+    aniso: f32,
+    alpha: f64,
+    rng: &mut Rng,
+) -> Dataset {
+    let sizes = power_law_sizes(n, clusters, alpha, rng);
+    let mut x = Matrix::zeros(n, dim);
+    let mut labels = vec![0u32; n];
+
+    // cluster centers: random gaussian, scaled
+    let centers: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| (0..dim).map(|_| rng.normal() * spread).collect())
+        .collect();
+    // per-cluster anisotropic scales
+    let scales: Vec<Vec<f32>> = (0..clusters)
+        .map(|_| {
+            (0..dim)
+                .map(|_| 1.0 + aniso * (rng.f32() * 4.0 - 1.0).max(-0.9))
+                .collect()
+        })
+        .collect();
+
+    let mut row = 0;
+    for (c, &sz) in sizes.iter().enumerate() {
+        for _ in 0..sz {
+            let out = x.row_mut(row);
+            for d in 0..dim {
+                out[d] = centers[c][d] + rng.normal() * scales[c][d];
+            }
+            labels[row] = c as u32;
+            row += 1;
+        }
+    }
+    // shuffle rows so shards don't trivially align with clusters
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let xs = x.gather(&perm);
+    let ls: Vec<u32> = perm.iter().map(|&i| labels[i]).collect();
+    Dataset { x: xs, labels: vec![ls], name: format!("gmix_n{n}_d{dim}_c{clusters}") }
+}
+
+/// ArXiv-abstract-embedding analog: many topical clusters, power-law sizes,
+/// moderately anisotropic, 256-d.
+pub fn text_corpus_like(n: usize, rng: &mut Rng) -> Dataset {
+    let mut d = gaussian_mixture(n, 256, 96.min(n / 20).max(4), 6.0, 0.6, 0.9, rng);
+    d.name = format!("arxiv_like_n{n}");
+    d
+}
+
+/// ImageNet/OpenCLIP analog: class/superclass hierarchy, 64-d (CLIP-style
+/// geometry after PCA whitening), tighter clusters.
+pub fn image_corpus_like(n: usize, rng: &mut Rng) -> Dataset {
+    let supers = 12.min(n / 50).max(2);
+    let per_super = 8;
+    let d = hierarchical(n, 64, &[supers, per_super], 8.0, 3.0, rng);
+    Dataset { name: format!("imagenet_like_n{n}"), ..d }
+}
+
+/// PubMed analog: one dominant manifold with many overlapping subclusters —
+/// the hardest case for NP@k (the paper's Table 1 scores are ~6%).
+pub fn pubmed_like(n: usize, rng: &mut Rng) -> Dataset {
+    let mut d = gaussian_mixture(n, 256, 48.min(n / 30).max(4), 2.5, 0.8, 0.7, rng);
+    d.name = format!("pubmed_like_n{n}");
+    d
+}
+
+/// Multilingual-Wikipedia analog: 3-level hierarchy
+/// (language -> topic -> article cluster), 64-d.
+pub fn wikipedia_like(n: usize, rng: &mut Rng) -> Dataset {
+    let langs = 10.min(n / 100).max(2);
+    let d = hierarchical(n, 64, &[langs, 6, 5], 10.0, 4.0, rng);
+    Dataset { name: format!("wikipedia_like_n{n}"), ..d }
+}
+
+/// Generic hierarchical mixture: `branching` gives children per level;
+/// level-l centers are sampled around their parent with geometrically
+/// decreasing spread (factor `decay`).
+pub fn hierarchical(
+    n: usize,
+    dim: usize,
+    branching: &[usize],
+    top_spread: f32,
+    decay: f32,
+    rng: &mut Rng,
+) -> Dataset {
+    assert!(!branching.is_empty());
+    // enumerate leaves of the tree; each leaf is a cluster
+    let mut paths: Vec<Vec<usize>> = vec![vec![]];
+    for &b in branching {
+        let mut next = Vec::with_capacity(paths.len() * b);
+        for p in &paths {
+            for c in 0..b {
+                let mut q = p.clone();
+                q.push(c);
+                next.push(q);
+            }
+        }
+        paths = next;
+    }
+    // centers per node, sampled level by level
+    let mut leaf_centers: Vec<Vec<f32>> = Vec::with_capacity(paths.len());
+    let mut node_centers: std::collections::HashMap<Vec<usize>, Vec<f32>> =
+        std::collections::HashMap::new();
+    node_centers.insert(vec![], vec![0.0; dim]);
+    for p in &paths {
+        for l in 1..=p.len() {
+            let key = p[..l].to_vec();
+            if !node_centers.contains_key(&key) {
+                let parent = node_centers[&p[..l - 1]].clone();
+                let spread = top_spread / decay.powi(l as i32 - 1);
+                let c: Vec<f32> = parent
+                    .iter()
+                    .map(|v| v + rng.normal() * spread)
+                    .collect();
+                node_centers.insert(key, c);
+            }
+        }
+        leaf_centers.push(node_centers[p].clone());
+    }
+
+    let leaves = paths.len();
+    let sizes = power_law_sizes(n, leaves, 0.8, rng);
+    let noise = top_spread / decay.powi(branching.len() as i32);
+    let mut x = Matrix::zeros(n, dim);
+    let levels = branching.len();
+    let mut labels: Vec<Vec<u32>> = vec![vec![0; n]; levels];
+    let mut row = 0;
+    for (leaf, &sz) in sizes.iter().enumerate() {
+        let path = &paths[leaf];
+        for _ in 0..sz {
+            let out = x.row_mut(row);
+            for d in 0..dim {
+                out[d] = leaf_centers[leaf][d] + rng.normal() * noise;
+            }
+            // label at level l = index of the ancestor at that level
+            let mut flat = 0usize;
+            for l in 0..levels {
+                flat = flat * branching[l] + path[l];
+                labels[l][row] = flat as u32;
+            }
+            row += 1;
+        }
+    }
+    let mut perm: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut perm);
+    let xs = x.gather(&perm);
+    let ls: Vec<Vec<u32>> = labels
+        .iter()
+        .map(|lv| perm.iter().map(|&i| lv[i]).collect())
+        .collect();
+    Dataset { x: xs, labels: ls, name: format!("hier_n{n}_d{dim}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::d2;
+
+    #[test]
+    fn sizes_sum_to_n() {
+        let mut rng = Rng::new(0);
+        for (n, c) in [(100, 7), (1000, 13), (50, 50)] {
+            let s = power_law_sizes(n, c, 1.0, &mut rng);
+            assert_eq!(s.iter().sum::<usize>(), n);
+            assert!(s.iter().all(|&v| v >= 1));
+        }
+    }
+
+    #[test]
+    fn mixture_shapes_and_labels() {
+        let mut rng = Rng::new(1);
+        let d = gaussian_mixture(500, 16, 8, 5.0, 0.5, 1.0, &mut rng);
+        assert_eq!(d.n(), 500);
+        assert_eq!(d.dim(), 16);
+        assert_eq!(d.labels[0].len(), 500);
+        assert!(d.labels[0].iter().all(|&l| l < 8));
+        // every cluster non-empty
+        let mut seen = vec![false; 8];
+        for &l in &d.labels[0] {
+            seen[l as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        let mut rng = Rng::new(2);
+        let ds = gaussian_mixture(600, 32, 4, 20.0, 0.0, 0.0, &mut rng);
+        // mean within-cluster distance << mean between-cluster distance
+        let mut within = 0.0f64;
+        let mut wn = 0;
+        let mut between = 0.0f64;
+        let mut bn = 0;
+        for i in (0..600).step_by(7) {
+            for j in (1..600).step_by(11) {
+                let dist = d2(ds.x.row(i), ds.x.row(j)) as f64;
+                if ds.labels[0][i] == ds.labels[0][j] {
+                    within += dist;
+                    wn += 1;
+                } else {
+                    between += dist;
+                    bn += 1;
+                }
+            }
+        }
+        let w = within / wn.max(1) as f64;
+        let b = between / bn.max(1) as f64;
+        assert!(b > 3.0 * w, "between {b} within {w}");
+    }
+
+    #[test]
+    fn hierarchy_levels_consistent() {
+        let mut rng = Rng::new(3);
+        let ds = hierarchical(400, 16, &[3, 4], 10.0, 3.0, &mut rng);
+        assert_eq!(ds.labels.len(), 2);
+        // finer labels refine coarser: same fine label => same coarse label
+        let mut fine_to_coarse = std::collections::HashMap::new();
+        for i in 0..400 {
+            let f = ds.labels[1][i];
+            let c = ds.labels[0][i];
+            let e = fine_to_coarse.entry(f).or_insert(c);
+            assert_eq!(*e, c);
+        }
+        assert!(ds.labels[0].iter().all(|&l| l < 3));
+        assert!(ds.labels[1].iter().all(|&l| l < 12));
+    }
+
+    #[test]
+    fn named_generators_produce_expected_dims() {
+        let mut rng = Rng::new(4);
+        assert_eq!(text_corpus_like(300, &mut rng).dim(), 256);
+        assert_eq!(image_corpus_like(300, &mut rng).dim(), 64);
+        assert_eq!(pubmed_like(300, &mut rng).dim(), 256);
+        assert_eq!(wikipedia_like(300, &mut rng).dim(), 64);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        let a = text_corpus_like(200, &mut r1);
+        let b = text_corpus_like(200, &mut r2);
+        assert_eq!(a.x.data, b.x.data);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,165 @@
+//! Device worker: a long-lived thread owning a shard of cluster blocks.
+//!
+//! Each worker owns its own [`StepBackend`] instance, created *inside* the
+//! thread (the XLA backend wraps a PJRT client, which is not `Send` — and a
+//! real multi-GPU deployment gives each device its own PJRT client anyway).
+//! Communication with the leader is over channels carrying plain data:
+//! the epoch broadcast (learning rate + the all-gathered means table) and
+//! the per-epoch gather (fresh local means + loss + timing).
+
+use super::MeanEntry;
+use crate::embed::{ClusterBlock, StepBackend, StepInputs};
+use crate::util::rng::Rng;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Leader -> device commands.
+pub enum DeviceCmd {
+    /// Run one epoch over all local blocks.
+    Epoch {
+        lr: f32,
+        /// attractive-weight multiplier (early exaggeration; 1.0 = off)
+        exaggeration: f32,
+        /// full means table (every cluster in the run)
+        means: Arc<Vec<MeanEntry>>,
+    },
+    /// Send back (global_id, position) for every real point.
+    Collect,
+    /// Shut down.
+    Stop,
+}
+
+/// Device -> leader replies.
+pub enum DeviceReply {
+    EpochDone {
+        device: usize,
+        /// fresh means of the local clusters
+        means: Vec<MeanEntry>,
+        /// sum of block losses weighted by block valid counts
+        loss_sum: f64,
+        loss_weight: f64,
+        /// pure step compute time
+        step_secs: f64,
+        /// force-kernel FLOPs executed this epoch (for the cost model)
+        flops: f64,
+    },
+    Collected {
+        device: usize,
+        positions: Vec<(u32, [f32; 2])>,
+    },
+}
+
+/// Handle owned by the leader.
+pub struct DeviceHandle {
+    pub device: usize,
+    pub cmd: Sender<DeviceCmd>,
+    pub join: std::thread::JoinHandle<()>,
+}
+
+/// Spawn a device worker.
+///
+/// `make_backend` runs once inside the worker thread to build the step
+/// backend (native, or XLA with a thread-private PJRT client).
+pub fn spawn_device(
+    device: usize,
+    mut blocks: Vec<ClusterBlock>,
+    n_total: usize,
+    m_noise: f64,
+    seed: u64,
+    make_backend: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send>,
+    reply: Sender<DeviceReply>,
+) -> DeviceHandle {
+    let (cmd_tx, cmd_rx): (Sender<DeviceCmd>, Receiver<DeviceCmd>) = std::sync::mpsc::channel();
+    let join = std::thread::Builder::new()
+        .name(format!("nomad-dev{device}"))
+        .spawn(move || {
+            let backend = make_backend();
+            let mut rng = Rng::new(seed).fork(device as u64 + 1);
+            // scratch buffers for the remote-means view (excluding own cluster)
+            let mut means_buf: Vec<f32> = Vec::new();
+            let mut meanw_buf: Vec<f32> = Vec::new();
+
+            while let Ok(cmd) = cmd_rx.recv() {
+                match cmd {
+                    DeviceCmd::Stop => break,
+                    DeviceCmd::Collect => {
+                        let mut positions = Vec::new();
+                        for b in &blocks {
+                            for (l, &g) in b.global_ids.iter().enumerate() {
+                                positions.push((g, [b.pos[l * 2], b.pos[l * 2 + 1]]));
+                            }
+                        }
+                        let _ = reply.send(DeviceReply::Collected { device, positions });
+                    }
+                    DeviceCmd::Epoch { lr, exaggeration, means } => {
+                        let mut loss_sum = 0.0f64;
+                        let mut loss_weight = 0.0f64;
+                        let mut flops = 0.0f64;
+                        let t0 = Instant::now();
+                        for b in blocks.iter_mut() {
+                            // remote view: every cluster except this block's
+                            means_buf.clear();
+                            meanw_buf.clear();
+                            for e in means.iter() {
+                                if e.cluster_id != b.cluster_id {
+                                    means_buf.push(e.mean[0]);
+                                    means_buf.push(e.mean[1]);
+                                    meanw_buf.push(e.weight);
+                                }
+                            }
+                            // early exaggeration: swap in a cached scaled
+                            // copy of the attractive weights for this step
+                            let exaggerated = exaggeration != 1.0;
+                            if exaggerated {
+                                if b.nbr_w_exag.is_none() {
+                                    b.nbr_w_exag =
+                                        Some(b.nbr_w.iter().map(|w| w * exaggeration).collect());
+                                }
+                                let cache = b.nbr_w_exag.take().unwrap();
+                                b.nbr_w_exag = Some(std::mem::replace(&mut b.nbr_w, cache));
+                            }
+                            let inputs = StepInputs {
+                                means: &means_buf,
+                                mean_w: &meanw_buf,
+                                lr,
+                            };
+                            let l = backend.step(b, &inputs, &mut rng);
+                            if exaggerated {
+                                let orig = b.nbr_w_exag.take().unwrap();
+                                b.nbr_w_exag = Some(std::mem::replace(&mut b.nbr_w, orig));
+                            }
+                            loss_sum += l * b.n_real as f64;
+                            loss_weight += b.n_real as f64;
+                            flops += super::comm_model::step_flops(
+                                b.n_real,
+                                b.k,
+                                meanw_buf.len(),
+                                b.negs,
+                            );
+                        }
+                        let step_secs = t0.elapsed().as_secs_f64();
+                        let fresh: Vec<MeanEntry> = blocks
+                            .iter()
+                            .map(|b| MeanEntry {
+                                cluster_id: b.cluster_id,
+                                mean: b.mean(),
+                                weight: b.mean_weight(n_total, m_noise),
+                            })
+                            .collect();
+                        let _ = reply.send(DeviceReply::EpochDone {
+                            device,
+                            means: fresh,
+                            loss_sum,
+                            loss_weight,
+                            step_secs,
+                            flops,
+                        });
+                    }
+                }
+            }
+        })
+        .expect("spawn device thread");
+    DeviceHandle { device, cmd: cmd_tx, join }
+}
+

@@ -1,0 +1,35 @@
+//! The simulated multi-device runtime (paper Fig 2).
+//!
+//! A *device* is a long-lived OS thread owning a set of [`ClusterBlock`]s
+//! (whole K-Means clusters — the paper's sharding unit) and its own step
+//! backend (for the XLA path each device owns a private PJRT client, since
+//! a real deployment gives each GPU its own PJRT device).  The coordinator
+//! drives epoch-synchronous training:
+//!
+//! ```text
+//! per epoch:   leader ──Epoch{lr, means}──▶ every device      (bcast)
+//!              device: one NOMAD step per local block
+//!              device ──EpochDone{means, loss}──▶ leader       (gather)
+//!              leader: rebuild the global means table          (all-gather)
+//! ```
+//!
+//! Only the R x 3 floats of cluster means+weights cross device boundaries —
+//! exactly the communication pattern that lets NOMAD scale; [`comm_model`]
+//! converts the measured byte counts into modeled H100-node wall-clock so
+//! the paper's speedup *shape* can be reproduced on CPU hardware.
+
+pub mod comm_model;
+pub mod device;
+pub mod sharder;
+
+/// One all-gathered cluster mean.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MeanEntry {
+    pub cluster_id: u32,
+    pub mean: [f32; 2],
+    /// |M| * p(m in cluster)
+    pub weight: f32,
+}
+
+/// Bytes for one mean entry on the wire (id + 2 floats + weight).
+pub const MEAN_ENTRY_BYTES: u64 = 16;

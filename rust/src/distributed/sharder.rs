@@ -1,0 +1,82 @@
+//! Cluster-to-device sharding.
+//!
+//! Clusters are atomic (the whole point of the K-Means ANN index); devices
+//! should carry near-equal numbers of *points*.  Greedy largest-first (LPT)
+//! gives a 4/3-approximation to the optimal makespan, which is plenty —
+//! the paper's own strategy is equivalent.
+
+/// Assign clusters (by size) to `n_devices` bins; returns, per device, the
+/// list of cluster ids, and balances total point counts.
+pub fn shard_clusters(sizes: &[usize], n_devices: usize) -> Vec<Vec<usize>> {
+    let n_devices = n_devices.max(1);
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by(|&a, &b| sizes[b].cmp(&sizes[a]).then(a.cmp(&b)));
+    let mut loads = vec![0usize; n_devices];
+    let mut out = vec![Vec::new(); n_devices];
+    for c in order {
+        let d = (0..n_devices).min_by_key(|&d| (loads[d], d)).unwrap();
+        loads[d] += sizes[c];
+        out[d].push(c);
+    }
+    out
+}
+
+/// Imbalance diagnostic: max device load / mean device load.
+pub fn imbalance(sizes: &[usize], shards: &[Vec<usize>]) -> f64 {
+    let loads: Vec<usize> = shards
+        .iter()
+        .map(|s| s.iter().map(|&c| sizes[c]).sum())
+        .collect();
+    let max = *loads.iter().max().unwrap_or(&0) as f64;
+    let mean = loads.iter().sum::<usize>() as f64 / loads.len().max(1) as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_clusters_once() {
+        let sizes = vec![10, 20, 30, 40, 50, 5, 5];
+        let shards = shard_clusters(&sizes, 3);
+        let mut seen = vec![false; sizes.len()];
+        for s in &shards {
+            for &c in s {
+                assert!(!seen[c]);
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v));
+    }
+
+    #[test]
+    fn balances_loads() {
+        let sizes = vec![100; 8];
+        let shards = shard_clusters(&sizes, 4);
+        for s in &shards {
+            assert_eq!(s.len(), 2);
+        }
+        assert!((imbalance(&sizes, &shards) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lpt_heuristic_reasonable() {
+        let sizes = vec![9, 7, 6, 5, 5, 4, 4, 3, 3, 2];
+        let shards = shard_clusters(&sizes, 3);
+        let imb = imbalance(&sizes, &shards);
+        assert!(imb < 1.2, "imbalance {imb}");
+    }
+
+    #[test]
+    fn more_devices_than_clusters() {
+        let sizes = vec![10, 20];
+        let shards = shard_clusters(&sizes, 5);
+        let nonempty = shards.iter().filter(|s| !s.is_empty()).count();
+        assert_eq!(nonempty, 2);
+    }
+}

@@ -1,0 +1,281 @@
+//! [`ClusterBlock`]: one padded K-Means cluster, the shard unit of NOMAD.
+
+use crate::ann::{graph::EdgeWeights, ClusterIndex, NO_NEIGHBOR};
+use crate::util::rng::Rng;
+
+/// Shape buckets for block padding.  These must match the AOT artifact
+/// buckets (`python/compile/aot.py STEP_BUCKETS`); the runtime picks the
+/// smallest bucket that fits, and the native backend accepts any size.
+pub const STEP_BUCKETS: [usize; 5] = [512, 1024, 2048, 4096, 8192];
+
+/// Round a cluster size up to its padding bucket.
+pub fn bucket_for(n: usize) -> usize {
+    for b in STEP_BUCKETS {
+        if n <= b {
+            return b;
+        }
+    }
+    // beyond the largest bucket: pad to the next multiple (native path only)
+    let top = STEP_BUCKETS[STEP_BUCKETS.len() - 1];
+    n.div_ceil(top) * top
+}
+
+/// One cluster of points, padded to a bucket, with local-index edges.
+#[derive(Clone, Debug)]
+pub struct ClusterBlock {
+    /// global cluster id in the index
+    pub cluster_id: u32,
+    /// global point ids of the real rows (len = n_real)
+    pub global_ids: Vec<u32>,
+    /// padded row count (bucket)
+    pub size: usize,
+    /// real row count
+    pub n_real: usize,
+    /// positions, size x 2 (padded rows stay at 0 and never move)
+    pub pos: Vec<f32>,
+    /// local neighbor indices, size x k (self-loop for padding/missing)
+    pub nbr_idx: Vec<i32>,
+    /// p(j|i) weights, size x k (0 for padding/missing)
+    pub nbr_w: Vec<f32>,
+    /// lazily cached early-exaggeration copy of `nbr_w` (device worker use)
+    pub nbr_w_exag: Option<Vec<f32>>,
+    /// per-epoch exact-negative local indices, size x negs
+    pub neg_idx: Vec<i32>,
+    /// scalar weight |M| * p(m in this cluster) / negs
+    pub neg_w: f32,
+    /// 1.0 for real rows
+    pub valid: Vec<f32>,
+    pub k: usize,
+    pub negs: usize,
+}
+
+impl ClusterBlock {
+    /// Build the block for cluster `c` of the index.
+    ///
+    /// `n_total` is the full dataset size (for p(m in r) = |r|/n), `m_noise`
+    /// the nominal |M|.  Initial positions are gathered from `init` (n x 2
+    /// row-major).
+    pub fn build(
+        index: &ClusterIndex,
+        weights: &EdgeWeights,
+        c: usize,
+        init: &[f32],
+        n_total: usize,
+        m_noise: f64,
+        negs: usize,
+    ) -> ClusterBlock {
+        let members = &index.clusters[c];
+        let n_real = members.len();
+        let size = bucket_for(n_real.max(1));
+        let k = index.k;
+
+        // local index of each global member
+        let mut local_of = std::collections::HashMap::with_capacity(n_real * 2);
+        for (l, &g) in members.iter().enumerate() {
+            local_of.insert(g, l as i32);
+        }
+
+        let mut pos = vec![0.0f32; size * 2];
+        let mut nbr_idx = vec![0i32; size * k];
+        let mut nbr_w = vec![0.0f32; size * k];
+        let mut valid = vec![0.0f32; size];
+
+        for (l, &g) in members.iter().enumerate() {
+            let g = g as usize;
+            pos[l * 2] = init[g * 2];
+            pos[l * 2 + 1] = init[g * 2 + 1];
+            valid[l] = 1.0;
+            for s in 0..k {
+                let j = index.nbr_idx[g * k + s];
+                if j == NO_NEIGHBOR {
+                    nbr_idx[l * k + s] = l as i32; // self loop, weight 0
+                } else {
+                    let lj = *local_of
+                        .get(&j)
+                        .expect("kNN edge crossed cluster boundary — index invariant violated");
+                    nbr_idx[l * k + s] = lj;
+                    nbr_w[l * k + s] = weights.w[g * k + s];
+                }
+            }
+        }
+        // padded rows: self loops
+        for l in n_real..size {
+            for s in 0..k {
+                nbr_idx[l * k + s] = l as i32;
+            }
+        }
+
+        let p_cell = n_real as f64 / n_total.max(1) as f64;
+        let neg_w = ((m_noise * p_cell) / negs.max(1) as f64) as f32;
+
+        ClusterBlock {
+            cluster_id: c as u32,
+            global_ids: members.clone(),
+            size,
+            n_real,
+            pos,
+            nbr_idx: nbr_idx.clone(),
+            nbr_w,
+            nbr_w_exag: None,
+            neg_idx: vec![0i32; size * negs],
+            neg_w,
+            valid,
+            k,
+            negs,
+        }
+    }
+
+    /// Resample the exact negatives uniformly from this cluster's real rows
+    /// (padding heads self-loop so they contribute nothing).
+    pub fn resample_negatives(&mut self, rng: &mut Rng) {
+        let negs = self.negs;
+        if self.n_real <= 1 {
+            for l in 0..self.size {
+                for s in 0..negs {
+                    self.neg_idx[l * negs + s] = l as i32;
+                }
+            }
+            return;
+        }
+        for l in 0..self.size {
+            for s in 0..negs {
+                self.neg_idx[l * negs + s] = if l < self.n_real {
+                    let mut v = rng.below(self.n_real);
+                    if v == l {
+                        v = (v + 1) % self.n_real; // avoid self-negatives
+                    }
+                    v as i32
+                } else {
+                    l as i32
+                };
+            }
+        }
+    }
+
+    /// Mean of the real rows' positions (the cluster's embedding mean,
+    /// published in the all-gather).
+    pub fn mean(&self) -> [f32; 2] {
+        let mut m = [0.0f64; 2];
+        for l in 0..self.n_real {
+            m[0] += self.pos[l * 2] as f64;
+            m[1] += self.pos[l * 2 + 1] as f64;
+        }
+        let inv = 1.0 / self.n_real.max(1) as f64;
+        [(m[0] * inv) as f32, (m[1] * inv) as f32]
+    }
+
+    /// Scatter this block's positions back to the global position matrix.
+    pub fn write_back(&self, global_pos: &mut [f32]) {
+        for (l, &g) in self.global_ids.iter().enumerate() {
+            let g = g as usize;
+            global_pos[g * 2] = self.pos[l * 2];
+            global_pos[g * 2 + 1] = self.pos[l * 2 + 1];
+        }
+    }
+
+    /// Weight |M| * p(m in this cluster) for when OTHER blocks treat this
+    /// cluster as a mean-negative.
+    pub fn mean_weight(&self, n_total: usize, m_noise: f64) -> f32 {
+        (m_noise * self.n_real as f64 / n_total.max(1) as f64) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::ann::graph::{edge_weights, WeightModel};
+    use crate::ann::IndexParams;
+    use crate::data::gaussian_mixture;
+
+    fn setup(n: usize) -> (ClusterIndex, EdgeWeights, Vec<f32>) {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(n, 8, 4, 8.0, 0.2, 0.5, &mut rng);
+        let idx = ClusterIndex::build(
+            &ds.x,
+            &IndexParams { n_clusters: 4, k: 5, ..Default::default() },
+            &NativeBackend::default(),
+            &mut rng,
+        );
+        let ew = edge_weights(&idx, WeightModel::InverseRankForward);
+        let init: Vec<f32> = (0..n * 2).map(|i| (i % 17) as f32 * 0.1).collect();
+        (idx, ew, init)
+    }
+
+    #[test]
+    fn block_roundtrips_positions() {
+        let (idx, ew, init) = setup(300);
+        let mut global = init.clone();
+        for c in 0..idx.n_clusters() {
+            let b = ClusterBlock::build(&idx, &ew, c, &init, 300, 5.0, 4);
+            assert_eq!(b.size % 512, 0);
+            assert!(b.n_real <= b.size);
+            b.write_back(&mut global);
+        }
+        assert_eq!(global, init);
+    }
+
+    #[test]
+    fn local_edges_match_global_edges() {
+        let (idx, ew, init) = setup(300);
+        let b = ClusterBlock::build(&idx, &ew, 0, &init, 300, 5.0, 4);
+        for (l, &g) in b.global_ids.iter().enumerate() {
+            let g = g as usize;
+            for s in 0..b.k {
+                let lj = b.nbr_idx[l * b.k + s];
+                let w = b.nbr_w[l * b.k + s];
+                if w > 0.0 {
+                    let gj = b.global_ids[lj as usize];
+                    assert_eq!(gj, idx.nbr_idx[g * b.k + s]);
+                    assert_eq!(w, ew.w[g * b.k + s]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn negatives_avoid_self_and_padding() {
+        let (idx, ew, init) = setup(300);
+        let mut b = ClusterBlock::build(&idx, &ew, 1, &init, 300, 5.0, 6);
+        let mut rng = Rng::new(7);
+        b.resample_negatives(&mut rng);
+        for l in 0..b.n_real {
+            for s in 0..6 {
+                let v = b.neg_idx[l * 6 + s];
+                assert!((v as usize) < b.n_real);
+                assert_ne!(v as usize, l);
+            }
+        }
+        for l in b.n_real..b.size {
+            for s in 0..6 {
+                assert_eq!(b.neg_idx[l * 6 + s] as usize, l);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_is_average_of_real_rows() {
+        let (idx, ew, init) = setup(300);
+        let b = ClusterBlock::build(&idx, &ew, 2, &init, 300, 5.0, 4);
+        let m = b.mean();
+        let mut want = [0.0f64; 2];
+        for &g in &b.global_ids {
+            want[0] += init[g as usize * 2] as f64;
+            want[1] += init[g as usize * 2 + 1] as f64;
+        }
+        want[0] /= b.n_real as f64;
+        want[1] /= b.n_real as f64;
+        assert!((m[0] as f64 - want[0]).abs() < 1e-5);
+        assert!((m[1] as f64 - want[1]).abs() < 1e-5);
+    }
+
+    #[test]
+    fn bucket_rounding() {
+        assert_eq!(bucket_for(1), 512);
+        assert_eq!(bucket_for(512), 512);
+        assert_eq!(bucket_for(513), 1024);
+        assert_eq!(bucket_for(1025), 2048);
+        assert_eq!(bucket_for(8192), 8192);
+        assert_eq!(bucket_for(9000), 16384);
+    }
+}

@@ -1,0 +1,98 @@
+//! The NOMAD Projection embedding core.
+//!
+//! The unit of computation is a [`ClusterBlock`]: one K-Means cluster,
+//! padded to a shape bucket, carrying its positive kNN edges (weights from
+//! the inverse-rank model), its per-epoch exact-negative samples, and a
+//! scalar negative weight.  Remote clusters appear only through their
+//! all-gathered means (paper Eq 3–5).  A device owns a set of blocks; an
+//! epoch applies one NOMAD gradient step per block.
+//!
+//! The step itself runs through a [`StepBackend`]: the native Rust
+//! implementation ([`native`]) or the AOT-compiled XLA artifact
+//! (`crate::runtime::XlaStepBackend`), which must agree numerically.
+
+pub mod block;
+pub mod native;
+pub mod sgd;
+
+pub use block::ClusterBlock;
+
+use crate::util::rng::Rng;
+
+/// Which partition cells are approximated by their means (the R̃ choice).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApproxMode {
+    /// Approximate every cluster except the block's own (the NOMAD default:
+    /// matches the per-cluster compute model on any device count).
+    AllNonSelf,
+    /// No mean approximation at all: exact negative samples only — this is
+    /// plain InfoNC-t-SNE and serves as the exactness baseline/ablation.
+    None,
+}
+
+/// Hyperparameters of the NOMAD optimizer (paper §3.3–3.4).
+#[derive(Clone, Debug)]
+pub struct NomadParams {
+    /// neighbors per point (k of the kNN graph)
+    pub k: usize,
+    /// exact negative samples per head per step
+    pub negs: usize,
+    /// |M|: the nominal InfoNC-t-SNE noise-sample count the weights encode
+    pub m_noise: f64,
+    /// optimization epochs
+    pub epochs: usize,
+    /// initial learning rate; None -> n/10 (paper §3.4)
+    pub lr_initial: Option<f64>,
+    /// p(j|i) model (paper Eq 6 by default)
+    pub weight_model: crate::ann::graph::WeightModel,
+    /// R̃ selection
+    pub approx: ApproxMode,
+    /// early-exaggeration factor applied to attractive weights for the
+    /// first `exaggeration_epochs` (off by default; ablation knob)
+    pub exaggeration: f32,
+    pub exaggeration_epochs: usize,
+    /// PCA init when true, else random gaussian init
+    pub pca_init: bool,
+    /// initialization scale (std of the first PCA component)
+    pub init_std: f32,
+    pub seed: u64,
+}
+
+impl Default for NomadParams {
+    fn default() -> Self {
+        NomadParams {
+            k: 15,
+            negs: 8,
+            m_noise: 50.0,
+            epochs: 200,
+            lr_initial: None,
+            weight_model: crate::ann::graph::WeightModel::InverseRankPaper,
+            approx: ApproxMode::AllNonSelf,
+            exaggeration: 1.0,
+            exaggeration_epochs: 0,
+            pca_init: true,
+            init_std: 1.0,
+            seed: 42,
+        }
+    }
+}
+
+/// One cluster-step request: everything the backend needs besides the block.
+pub struct StepInputs<'a> {
+    /// all-gathered means, row-major r x 2 (remote clusters only)
+    pub means: &'a [f32],
+    /// per-mean weights |M| * p(m in r)
+    pub mean_w: &'a [f32],
+    /// learning rate for this epoch
+    pub lr: f32,
+}
+
+/// A pluggable executor for the per-block NOMAD step.
+pub trait StepBackend {
+    /// Apply one gradient step in place on `block.pos`; returns the block
+    /// mean loss (over valid heads).
+    fn step(&self, block: &mut ClusterBlock, inputs: &StepInputs, rng: &mut Rng) -> f64;
+
+    /// Human-readable backend name for logs/benches.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,332 @@
+//! Native (pure-Rust) implementation of the NOMAD per-block step.
+//!
+//! This mirrors the Pallas kernel / JAX graph **exactly** (see DESIGN.md §7
+//! for the shared math): same analytic gradient decomposition, same
+//! mean-over-valid-heads normalization, same masked SGD update.  It is the
+//! fallback when no AOT artifact matches a block's bucket, the oracle that
+//! the XLA path is cross-checked against, and the CPU performance baseline.
+
+use super::{ClusterBlock, StepBackend, StepInputs};
+use crate::util::rng::Rng;
+
+/// Pure-Rust step executor.
+#[derive(Default)]
+pub struct NativeStepBackend {}
+
+impl StepBackend for NativeStepBackend {
+    fn step(&self, block: &mut ClusterBlock, inputs: &StepInputs, rng: &mut Rng) -> f64 {
+        block.resample_negatives(rng);
+        let (grad, loss) = nomad_grad(
+            &block.pos,
+            &block.nbr_idx,
+            &block.nbr_w,
+            &block.neg_idx,
+            block.neg_w,
+            inputs.means,
+            inputs.mean_w,
+            &block.valid,
+            block.k,
+            block.negs,
+        );
+        let lr = inputs.lr;
+        for l in 0..block.n_real {
+            block.pos[l * 2] -= lr * grad[l * 2];
+            block.pos[l * 2 + 1] -= lr * grad[l * 2 + 1];
+        }
+        loss
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Cauchy kernel q = 1/(1+d²) on 2-d points.
+#[inline(always)]
+fn q2(ax: f32, ay: f32, bx: f32, by: f32) -> (f32, f32, f32) {
+    let dx = ax - bx;
+    let dy = ay - by;
+    (1.0 / (1.0 + dx * dx + dy * dy), dx, dy)
+}
+
+/// Assembled, mean-normalized NOMAD gradient for one padded block.
+///
+/// Returns `(grad, mean_loss)` where `grad` is size x 2 (padding rows 0).
+/// Mirrors `python/compile/kernels/ref.py::nomad_grad_ref` +
+/// `nomad_forces_ref` with the scatter folded in.
+#[allow(clippy::too_many_arguments)]
+pub fn nomad_grad(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    means: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+) -> (Vec<f32>, f64) {
+    let size = valid.len();
+    let r = mean_w.len();
+    let mut grad = vec![0.0f32; size * 2];
+    let mut loss_sum = 0.0f64;
+    let mut nvalid = 0.0f64;
+    // scratch buffers hoisted out of the head loop (§Perf iteration 1:
+    // per-head Vec allocation dominated the R-heavy profiles); deltas are
+    // cached alongside q so the repulsion pass is pure FMA (§Perf iter 3)
+    let mut q_ir = vec![0.0f32; r];
+    let mut dm = vec![0.0f32; r * 2];
+    let mut q_in = vec![0.0f32; negs];
+
+    for i in 0..size {
+        if valid[i] == 0.0 {
+            continue;
+        }
+        nvalid += 1.0;
+        let (pix, piy) = (pos[i * 2], pos[i * 2 + 1]);
+
+        // ---- negative mass A_i (means + exact negatives) ----------------
+        let mut a = 0.0f32;
+        for rr in 0..r {
+            let w = mean_w[rr];
+            let dx = pix - means[rr * 2];
+            let dy = piy - means[rr * 2 + 1];
+            let q = 1.0 / (1.0 + dx * dx + dy * dy);
+            q_ir[rr] = q;
+            dm[rr * 2] = dx;
+            dm[rr * 2 + 1] = dy;
+            a += w * q;
+        }
+        for s in 0..negs {
+            let nloc = neg_idx[i * negs + s] as usize;
+            let (q, _, _) = q2(pix, piy, pos[nloc * 2], pos[nloc * 2 + 1]);
+            q_in[s] = q;
+            a += neg_w * q;
+        }
+
+        // ---- positive edges: loss + attraction + s_i --------------------
+        let mut s_i = 0.0f32;
+        for s in 0..k {
+            let w = nbr_w[i * k + s];
+            if w == 0.0 {
+                continue;
+            }
+            let j = nbr_idx[i * k + s] as usize;
+            let (q, dx, dy) = q2(pix, piy, pos[j * 2], pos[j * 2 + 1]);
+            let z = q + a;
+            loss_sum -= (w * (q.ln() - z.ln())) as f64;
+            s_i += w / z;
+            let c_att = 2.0 * w * q * (1.0 - q / z);
+            grad[i * 2] += c_att * dx;
+            grad[i * 2 + 1] += c_att * dy;
+            grad[j * 2] -= c_att * dx;
+            grad[j * 2 + 1] -= c_att * dy;
+        }
+
+        if s_i == 0.0 {
+            continue;
+        }
+
+        // ---- mean repulsion (means are stop-gradient) --------------------
+        let mut gx = 0.0f32;
+        let mut gy = 0.0f32;
+        for rr in 0..r {
+            let q = q_ir[rr];
+            let c = mean_w[rr] * q * q;
+            gx += c * dm[rr * 2];
+            gy += c * dm[rr * 2 + 1];
+        }
+        grad[i * 2] -= 2.0 * s_i * gx;
+        grad[i * 2 + 1] -= 2.0 * s_i * gy;
+
+        // ---- exact-negative repulsion (both endpoints move) --------------
+        if neg_w != 0.0 {
+            for s in 0..negs {
+                let nloc = neg_idx[i * negs + s] as usize;
+                let q = q_in[s];
+                let dx = pix - pos[nloc * 2];
+                let dy = piy - pos[nloc * 2 + 1];
+                let c = 2.0 * s_i * neg_w * q * q;
+                grad[i * 2] -= c * dx;
+                grad[i * 2 + 1] -= c * dy;
+                grad[nloc * 2] += c * dx;
+                grad[nloc * 2 + 1] += c * dy;
+            }
+        }
+    }
+
+    let inv = 1.0 / nvalid.max(1.0);
+    for g in grad.iter_mut() {
+        *g = (*g as f64 * inv) as f32;
+    }
+    // padding rows must not move even if scatter touched them (it cannot:
+    // padding never appears as a neighbor/negative of a valid head)
+    (grad, loss_sum * inv)
+}
+
+/// Scalar NOMAD loss only (no gradient) — used by tests and line searches.
+#[allow(clippy::too_many_arguments)]
+pub fn nomad_loss(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    means: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+) -> f64 {
+    let size = valid.len();
+    let r = mean_w.len();
+    let mut loss_sum = 0.0f64;
+    let mut nvalid = 0.0f64;
+    for i in 0..size {
+        if valid[i] == 0.0 {
+            continue;
+        }
+        nvalid += 1.0;
+        let (pix, piy) = (pos[i * 2], pos[i * 2 + 1]);
+        let mut a = 0.0f32;
+        for rr in 0..r {
+            let (q, _, _) = q2(pix, piy, means[rr * 2], means[rr * 2 + 1]);
+            a += mean_w[rr] * q;
+        }
+        for s in 0..negs {
+            let nloc = neg_idx[i * negs + s] as usize;
+            let (q, _, _) = q2(pix, piy, pos[nloc * 2], pos[nloc * 2 + 1]);
+            a += neg_w * q;
+        }
+        for s in 0..k {
+            let w = nbr_w[i * k + s];
+            if w == 0.0 {
+                continue;
+            }
+            let j = nbr_idx[i * k + s] as usize;
+            let (q, _, _) = q2(pix, piy, pos[j * 2], pos[j * 2 + 1]);
+            let z = q + a;
+            loss_sum -= (w * (q.ln() - z.ln())) as f64;
+        }
+    }
+    loss_sum / nvalid.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a random padded problem mirroring the python test generator.
+    pub fn random_problem(
+        rng: &mut Rng,
+        size: usize,
+        k: usize,
+        negs: usize,
+        r: usize,
+        n_real: usize,
+    ) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>, f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let pos: Vec<f32> = (0..size * 2).map(|_| rng.normal() * 3.0).collect();
+        let mut nbr_idx = vec![0i32; size * k];
+        let mut nbr_w = vec![0.0f32; size * k];
+        let mut neg_idx = vec![0i32; size * negs];
+        for i in 0..size {
+            for s in 0..k {
+                nbr_idx[i * k + s] = rng.below(n_real.max(1)) as i32;
+                nbr_w[i * k + s] = if i < n_real { rng.f32() } else { 0.0 };
+            }
+            let wsum: f32 = nbr_w[i * k..(i + 1) * k].iter().sum();
+            if wsum > 0.0 {
+                for s in 0..k {
+                    nbr_w[i * k + s] /= wsum;
+                }
+            }
+            for s in 0..negs {
+                neg_idx[i * negs + s] =
+                    if i < n_real { rng.below(n_real.max(1)) as i32 } else { i as i32 };
+            }
+        }
+        let neg_w = rng.f32() + 0.1;
+        let means: Vec<f32> = (0..r * 2).map(|_| rng.normal() * 3.0).collect();
+        let mean_w: Vec<f32> = (0..r).map(|_| rng.f32() * 4.0).collect();
+        let mut valid = vec![0.0f32; size];
+        for v in valid.iter_mut().take(n_real) {
+            *v = 1.0;
+        }
+        (pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid)
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let mut rng = Rng::new(0);
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 32, 4, 3, 5, 28);
+        let (grad, _) = nomad_grad(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 4, 3);
+        let eps = 3e-4f32;
+        for probe in [0usize, 5, 11, 23, 54] {
+            let mut pp = pos.clone();
+            pp[probe] += eps;
+            let lp = nomad_loss(&pp, &ni, &nw, &gi, gw, &me, &mw, &va, 4, 3);
+            let mut pm = pos.clone();
+            pm[probe] -= eps;
+            let lm = nomad_loss(&pm, &ni, &nw, &gi, gw, &me, &mw, &va, 4, 3);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grad[probe] as f64;
+            assert!(
+                (fd - an).abs() < 3e-3 * (1.0 + an.abs()),
+                "coord {probe}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn padding_rows_have_zero_gradient() {
+        let mut rng = Rng::new(1);
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 48, 5, 3, 4, 30);
+        let (grad, _) = nomad_grad(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 5, 3);
+        for l in 30..48 {
+            assert_eq!(grad[l * 2], 0.0);
+            assert_eq!(grad[l * 2 + 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn steps_reduce_loss() {
+        let mut rng = Rng::new(2);
+        let (mut pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 64, 6, 4, 6, 64);
+        let l0 = nomad_loss(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4);
+        for _ in 0..20 {
+            let (grad, _) = nomad_grad(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4);
+            for (p, g) in pos.iter_mut().zip(&grad) {
+                *p -= 3.0 * g;
+            }
+        }
+        let l1 = nomad_loss(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4);
+        assert!(l1 < l0, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn loss_invariant_under_padding_growth() {
+        let mut rng = Rng::new(3);
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 32, 4, 3, 5, 32);
+        let l = nomad_loss(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 4, 3);
+        // grow to 64 with padding
+        let mut pos2 = pos.clone();
+        pos2.extend(std::iter::repeat(0.0).take(64));
+        let mut ni2 = ni.clone();
+        let mut nw2 = nw.clone();
+        let mut gi2 = gi.clone();
+        let mut va2 = va.clone();
+        for l2 in 32..64 {
+            for _ in 0..4 {
+                ni2.push(l2 as i32);
+                nw2.push(0.0);
+            }
+            for _ in 0..3 {
+                gi2.push(l2 as i32);
+            }
+            va2.push(0.0);
+        }
+        let lp = nomad_loss(&pos2, &ni2, &nw2, &gi2, gw, &me, &mw, &va2, 4, 3);
+        assert!((l - lp).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,74 @@
+//! SGD schedule (paper §3.4): initial learning rate n/10 (a factor of 10
+//! below the Belkina et al. t-SNE convention), linearly annealed to 0.
+
+/// Linear-decay learning-rate schedule.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub initial: f64,
+    pub epochs: usize,
+}
+
+impl LrSchedule {
+    /// The paper's default: lr0 = n/10 unless overridden.
+    pub fn nomad_default(n: usize, epochs: usize, lr_initial: Option<f64>) -> LrSchedule {
+        LrSchedule {
+            initial: lr_initial.unwrap_or(n as f64 / 10.0),
+            epochs: epochs.max(1),
+        }
+    }
+
+    /// Learning rate for `epoch` in [0, epochs): linear anneal to 0
+    /// (reaching exactly 0 only past the final epoch).
+    pub fn at(&self, epoch: usize) -> f64 {
+        let e = epoch.min(self.epochs) as f64;
+        self.initial * (1.0 - e / self.epochs as f64)
+    }
+}
+
+/// Early-exaggeration window: multiplies attractive edge weights during the
+/// first `epochs` epochs (ablation knob; off when factor == 1).
+#[derive(Clone, Copy, Debug)]
+pub struct Exaggeration {
+    pub factor: f32,
+    pub epochs: usize,
+}
+
+impl Exaggeration {
+    pub fn factor_at(&self, epoch: usize) -> f32 {
+        if epoch < self.epochs {
+            self.factor
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_n_over_10() {
+        let s = LrSchedule::nomad_default(5000, 100, None);
+        assert_eq!(s.initial, 500.0);
+        let s2 = LrSchedule::nomad_default(5000, 100, Some(3.0));
+        assert_eq!(s2.initial, 3.0);
+    }
+
+    #[test]
+    fn linear_anneal() {
+        let s = LrSchedule { initial: 100.0, epochs: 10 };
+        assert_eq!(s.at(0), 100.0);
+        assert_eq!(s.at(5), 50.0);
+        assert_eq!(s.at(10), 0.0);
+        assert_eq!(s.at(99), 0.0);
+    }
+
+    #[test]
+    fn exaggeration_window() {
+        let e = Exaggeration { factor: 4.0, epochs: 3 };
+        assert_eq!(e.factor_at(0), 4.0);
+        assert_eq!(e.factor_at(2), 4.0);
+        assert_eq!(e.factor_at(3), 1.0);
+    }
+}

@@ -1,0 +1,344 @@
+//! Experiment harness: one entry point that runs any *method* (NOMAD
+//! variants or baselines) on a dataset with timed quality checkpoints.
+//! Shared by the examples, the paper-table benches, and the CLI so every
+//! number in EXPERIMENTS.md comes from the same code path.
+
+use crate::ann::backend::NativeBackend;
+use crate::ann::graph::WeightModel;
+use crate::ann::{ClusterIndex, IndexParams};
+use crate::baselines::{bh_tsne, umap_like};
+use crate::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use crate::data::Dataset;
+use crate::embed::{ApproxMode, NomadParams};
+use crate::linalg::{pca::pca_init, Matrix};
+use crate::metrics::{neighborhood_preservation, random_triplet_accuracy};
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// A data-mapping method under evaluation.
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// NOMAD Projection with `devices` simulated devices.
+    Nomad { devices: usize, backend: BackendKind },
+    /// NOMAD machinery with exact negatives only (InfoNC-t-SNE).
+    InfoNcTsne,
+    /// BH t-SNE without early exaggeration / PCA init (t-SNE-CUDA analog).
+    TsneCudaLike,
+    /// BH t-SNE with early exaggeration + PCA init (OpenTSNE analog).
+    OpenTsneLike,
+    /// Negative-sampling UMAP (RapidsUMAP analog).
+    UmapLike,
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::Nomad { devices, backend } => format!(
+                "NOMAD-{}dev{}",
+                devices,
+                if *backend == BackendKind::Xla { "-xla" } else { "" }
+            ),
+            Method::InfoNcTsne => "InfoNC-t-SNE".into(),
+            Method::TsneCudaLike => "tSNE-CUDA-like".into(),
+            Method::OpenTsneLike => "OpenTSNE-like".into(),
+            Method::UmapLike => "RapidsUMAP-like".into(),
+        }
+    }
+}
+
+/// One quality checkpoint along a run.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub epoch: usize,
+    pub wall_secs: f64,
+    /// modeled GPU-node seconds (NOMAD only; copies wall time otherwise)
+    pub modeled_secs: f64,
+    pub np_at_10: f64,
+    pub rta: f64,
+}
+
+/// Full result of a harness run.
+pub struct MethodRun {
+    pub method: String,
+    pub positions: Matrix,
+    pub checkpoints: Vec<Checkpoint>,
+    pub total_secs: f64,
+    pub modeled_secs: f64,
+    pub index_secs: f64,
+}
+
+/// Quality-evaluation settings.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalCfg {
+    pub np_k: usize,
+    pub np_sample: usize,
+    pub triplets: usize,
+    pub seed: u64,
+}
+
+impl Default for EvalCfg {
+    fn default() -> Self {
+        EvalCfg { np_k: 10, np_sample: 400, triplets: 10_000, seed: 7 }
+    }
+}
+
+/// Evaluate NP@k and RTA for an embedding.
+pub fn evaluate(ds: &Dataset, y: &Matrix, cfg: &EvalCfg) -> (f64, f64) {
+    let mut rng = Rng::new(cfg.seed);
+    let np = neighborhood_preservation(&ds.x, y, cfg.np_k, cfg.np_sample, &mut rng);
+    let rta = random_triplet_accuracy(&ds.x, y, cfg.triplets, &mut rng);
+    (np, rta)
+}
+
+/// Run a method for `epochs` with quality checkpoints every
+/// `checkpoint_every` epochs (0 = final only).
+pub fn run_method(
+    ds: &Dataset,
+    method: &Method,
+    epochs: usize,
+    checkpoint_every: usize,
+    index: &IndexParams,
+    eval_cfg: &EvalCfg,
+    seed: u64,
+) -> MethodRun {
+    match method {
+        Method::Nomad { devices, backend } => run_nomad(
+            ds,
+            *devices,
+            *backend,
+            ApproxMode::AllNonSelf,
+            epochs,
+            checkpoint_every,
+            index,
+            eval_cfg,
+            seed,
+        ),
+        Method::InfoNcTsne => run_nomad(
+            ds,
+            1,
+            BackendKind::Native,
+            ApproxMode::None,
+            epochs,
+            checkpoint_every,
+            index,
+            eval_cfg,
+            seed,
+        ),
+        Method::TsneCudaLike => run_bh(ds, false, epochs, checkpoint_every, index, eval_cfg, seed),
+        Method::OpenTsneLike => run_bh(ds, true, epochs, checkpoint_every, index, eval_cfg, seed),
+        Method::UmapLike => run_umap(ds, epochs, checkpoint_every, index, eval_cfg, seed),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_nomad(
+    ds: &Dataset,
+    devices: usize,
+    backend: BackendKind,
+    approx: ApproxMode,
+    epochs: usize,
+    checkpoint_every: usize,
+    index: &IndexParams,
+    eval_cfg: &EvalCfg,
+    seed: u64,
+) -> MethodRun {
+    let params = NomadParams {
+        epochs,
+        k: index.k,
+        approx,
+        seed,
+        weight_model: WeightModel::InverseRankPaper,
+        ..Default::default()
+    };
+    let run_cfg = RunConfig {
+        n_devices: devices,
+        backend,
+        snapshot_every: if checkpoint_every > 0 { Some(checkpoint_every) } else { None },
+        index: index.clone(),
+        ..Default::default()
+    };
+    let method_name = Method::Nomad { devices, backend }.name();
+    let coord = NomadCoordinator::new(params, run_cfg);
+    let run = coord.fit(ds, &NativeBackend::default());
+
+    let mut checkpoints = Vec::new();
+    for s in &run.snapshots {
+        let (np, rta) = evaluate(ds, &s.positions, eval_cfg);
+        checkpoints.push(Checkpoint {
+            epoch: s.epoch,
+            wall_secs: s.wall_secs,
+            modeled_secs: s.modeled_secs,
+            np_at_10: np,
+            rta,
+        });
+    }
+    let (np, rta) = evaluate(ds, &run.positions, eval_cfg);
+    checkpoints.push(Checkpoint {
+        epoch: epochs,
+        wall_secs: run.train_secs,
+        modeled_secs: run.modeled_train_secs,
+        np_at_10: np,
+        rta,
+    });
+    MethodRun {
+        method: if approx == ApproxMode::None { "InfoNC-t-SNE".into() } else { method_name },
+        positions: run.positions,
+        checkpoints,
+        total_secs: run.train_secs,
+        modeled_secs: run.modeled_train_secs,
+        index_secs: run.index_secs,
+    }
+}
+
+fn knn_graph_for_baselines(
+    ds: &Dataset,
+    index: &IndexParams,
+    seed: u64,
+) -> (ClusterIndex, f64) {
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+    let idx = ClusterIndex::build(&ds.x, index, &NativeBackend::default(), &mut rng);
+    (idx, t0.elapsed().as_secs_f64())
+}
+
+fn run_bh(
+    ds: &Dataset,
+    global_structure: bool,
+    epochs: usize,
+    checkpoint_every: usize,
+    index: &IndexParams,
+    eval_cfg: &EvalCfg,
+    seed: u64,
+) -> MethodRun {
+    let (idx, index_secs) = knn_graph_for_baselines(ds, index, seed);
+    let mut rng = Rng::new(seed);
+    let init = if global_structure {
+        pca_init(&ds.x, 2, &mut rng, 1e-2)
+    } else {
+        let mut m = Matrix::zeros(ds.n(), 2);
+        for v in m.data.iter_mut() {
+            *v = rng.normal() * 1e-2;
+        }
+        m
+    };
+    // perplexity bounded by available neighbors
+    let perplexity = ((index.k as f64 - 1.0) / 3.0).max(2.0);
+    let sp = bh_tsne::calibrate_affinities(&idx.nbr_idx, &idx.nbr_d2, ds.n(), index.k, perplexity);
+
+    let mut pos = init;
+    let mut checkpoints = Vec::new();
+    let t0 = Instant::now();
+    let step = if checkpoint_every > 0 { checkpoint_every } else { epochs };
+    let mut done = 0;
+    while done < epochs {
+        let chunk = step.min(epochs - done);
+        let params = bh_tsne::TsneParams {
+            epochs: chunk,
+            exaggeration: if global_structure { 12.0 } else { 1.0 },
+            // exaggeration only in the first chunk's prefix
+            exaggeration_epochs: if global_structure && done == 0 {
+                (epochs / 4).min(chunk)
+            } else {
+                0
+            },
+            seed,
+            ..Default::default()
+        };
+        pos = bh_tsne::run_with_affinities(&sp, ds.n(), &pos, &params);
+        done += chunk;
+        let wall = t0.elapsed().as_secs_f64();
+        let (np, rta) = evaluate(ds, &pos, eval_cfg);
+        checkpoints.push(Checkpoint {
+            epoch: done,
+            wall_secs: wall,
+            modeled_secs: wall,
+            np_at_10: np,
+            rta,
+        });
+    }
+    let total = t0.elapsed().as_secs_f64();
+    MethodRun {
+        method: if global_structure { "OpenTSNE-like".into() } else { "tSNE-CUDA-like".into() },
+        positions: pos,
+        checkpoints,
+        total_secs: total,
+        modeled_secs: total,
+        index_secs,
+    }
+}
+
+fn run_umap(
+    ds: &Dataset,
+    epochs: usize,
+    checkpoint_every: usize,
+    index: &IndexParams,
+    eval_cfg: &EvalCfg,
+    seed: u64,
+) -> MethodRun {
+    let (idx, index_secs) = knn_graph_for_baselines(ds, index, seed);
+    let mut rng = Rng::new(seed);
+    let mut pos = Matrix::zeros(ds.n(), 2);
+    for v in pos.data.iter_mut() {
+        *v = rng.normal() * 10.0;
+    }
+    let mut checkpoints = Vec::new();
+    let t0 = Instant::now();
+    let step = if checkpoint_every > 0 { checkpoint_every } else { epochs };
+    let mut done = 0;
+    while done < epochs {
+        let chunk = step.min(epochs - done);
+        let params = umap_like::UmapParams { epochs: chunk, seed: seed + done as u64, ..Default::default() };
+        pos = umap_like::run(&idx, &pos, &params);
+        done += chunk;
+        let wall = t0.elapsed().as_secs_f64();
+        let (np, rta) = evaluate(ds, &pos, eval_cfg);
+        checkpoints.push(Checkpoint {
+            epoch: done,
+            wall_secs: wall,
+            modeled_secs: wall,
+            np_at_10: np,
+            rta,
+        });
+    }
+    let total = t0.elapsed().as_secs_f64();
+    MethodRun {
+        method: "RapidsUMAP-like".into(),
+        positions: pos,
+        checkpoints,
+        total_secs: total,
+        modeled_secs: total,
+        index_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian_mixture;
+
+    #[test]
+    fn all_methods_run_and_beat_random() {
+        let mut rng = Rng::new(0);
+        let ds = gaussian_mixture(400, 16, 4, 12.0, 0.2, 0.5, &mut rng);
+        let index = IndexParams { n_clusters: 4, k: 8, ..Default::default() };
+        let eval_cfg = EvalCfg { np_sample: 200, triplets: 3000, ..Default::default() };
+        for method in [
+            Method::Nomad { devices: 2, backend: BackendKind::Native },
+            Method::InfoNcTsne,
+            Method::TsneCudaLike,
+            Method::OpenTsneLike,
+            Method::UmapLike,
+        ] {
+            let run = run_method(&ds, &method, 30, 0, &index, &eval_cfg, 1);
+            assert_eq!(run.checkpoints.len(), 1, "{}", run.method);
+            let cp = &run.checkpoints[0];
+            assert!(cp.np_at_10.is_finite() && cp.rta.is_finite());
+            assert!(
+                cp.rta > 0.5,
+                "{}: rta {} should beat random",
+                run.method,
+                cp.rta
+            );
+        }
+    }
+}

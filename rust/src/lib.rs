@@ -1,0 +1,29 @@
+//! # NOMAD Projection
+//!
+//! A production-grade reproduction of *NOMAD Projection* (Duderstadt,
+//! Nussbaum, van der Maaten, 2025): distributed nonlinear dimensionality
+//! reduction that approximates an upper bound on the InfoNC-t-SNE loss so
+//! the computation factorizes across devices.
+//!
+//! Architecture (see DESIGN.md):
+//! * **Layer 3 (this crate)** — the coordinator: K-Means ANN index, cluster
+//!   sharding, simulated multi-device runtime with all-gathered cluster
+//!   means, SGD schedule, metrics, benches.
+//! * **Layer 2 (python/compile)** — JAX shard-step graph, AOT-lowered to
+//!   HLO text artifacts loaded at runtime via PJRT (`runtime`).
+//! * **Layer 1 (python/compile/kernels)** — Pallas force/assignment/kNN
+//!   kernels, interpret-mode for CPU execution.
+pub mod bench;
+pub mod cli;
+pub mod harness;
+pub mod util;
+pub mod linalg;
+pub mod data;
+pub mod ann;
+pub mod baselines;
+pub mod metrics;
+pub mod viz;
+pub mod coordinator;
+pub mod distributed;
+pub mod embed;
+pub mod runtime;

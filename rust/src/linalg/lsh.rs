@@ -1,0 +1,138 @@
+//! Random-hyperplane locality-sensitive hashing.
+//!
+//! NOMAD's ANN index seeds its K-Means clustering with an LSH (paper §3.2:
+//! "We initialize our K-Means clustering using a locally sensitive hash").
+//! Points are hashed by the sign pattern of `bits` random projections;
+//! K-Means centroids are then initialized as the means of the largest hash
+//! buckets, which spreads them across the data without a distance pass.
+
+use crate::linalg::Matrix;
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+/// A random-hyperplane hasher producing `bits`-bit signatures.
+pub struct HyperplaneLsh {
+    pub bits: usize,
+    planes: Matrix, // bits x d
+}
+
+impl HyperplaneLsh {
+    pub fn new(dim: usize, bits: usize, rng: &mut Rng) -> Self {
+        assert!(bits <= 64, "at most 64 hash bits");
+        let mut planes = Matrix::zeros(bits, dim);
+        for v in planes.data.iter_mut() {
+            *v = rng.normal();
+        }
+        HyperplaneLsh { bits, planes }
+    }
+
+    /// Hash one vector to its sign signature.
+    pub fn hash(&self, x: &[f32]) -> u64 {
+        let mut h = 0u64;
+        for b in 0..self.bits {
+            if super::dot(self.planes.row(b), x) >= 0.0 {
+                h |= 1 << b;
+            }
+        }
+        h
+    }
+
+    /// Hash every row of `x`.
+    pub fn hash_all(&self, x: &Matrix) -> Vec<u64> {
+        let threads = crate::util::parallel::num_threads();
+        crate::util::parallel::par_map(x.rows, threads, |r| self.hash(x.row(r)))
+    }
+}
+
+/// Seed `k` centroids from LSH buckets: take the `k` most populated buckets'
+/// means; if fewer buckets exist, fill the remainder with random points.
+pub fn lsh_seed_centroids(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let bits = (k.max(2) as f32).log2().ceil() as usize + 3;
+    let lsh = HyperplaneLsh::new(x.cols, bits.min(24), rng);
+    let hashes = lsh.hash_all(x);
+
+    let mut buckets: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, h) in hashes.iter().enumerate() {
+        buckets.entry(*h).or_default().push(i);
+    }
+    let mut by_size: Vec<(u64, Vec<usize>)> = buckets.into_iter().collect();
+    by_size.sort_by(|a, b| b.1.len().cmp(&a.1.len()).then(a.0.cmp(&b.0)));
+
+    let mut centroids = Matrix::zeros(k, x.cols);
+    let mut filled = 0;
+    for (_, members) in by_size.into_iter().take(k) {
+        let c = centroids.row_mut(filled);
+        for &m in &members {
+            for (cv, xv) in c.iter_mut().zip(x.row(m)) {
+                *cv += *xv;
+            }
+        }
+        let inv = 1.0 / members.len() as f32;
+        for cv in c.iter_mut() {
+            *cv *= inv;
+        }
+        filled += 1;
+    }
+    // fill any remainder with random data points
+    while filled < k {
+        let r = rng.below(x.rows);
+        centroids.row_mut(filled).copy_from_slice(x.row(r));
+        filled += 1;
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn identical_points_share_hash() {
+        let mut rng = Rng::new(0);
+        let lsh = HyperplaneLsh::new(16, 12, &mut rng);
+        let x = [0.3f32; 16];
+        assert_eq!(lsh.hash(&x), lsh.hash(&x));
+    }
+
+    #[test]
+    fn nearby_points_collide_more_than_far_points() {
+        let mut rng = Rng::new(1);
+        let d = 32;
+        let lsh = HyperplaneLsh::new(d, 16, &mut rng);
+        let mut same = 0;
+        let mut diff = 0;
+        for _ in 0..300 {
+            let a: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            let near: Vec<f32> = a.iter().map(|v| v + 0.01 * rng.normal()).collect();
+            let far: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+            same += (lsh.hash(&a) ^ lsh.hash(&near)).count_ones();
+            diff += (lsh.hash(&a) ^ lsh.hash(&far)).count_ones();
+        }
+        assert!(same < diff / 4, "near bit-diff {same} vs far {diff}");
+    }
+
+    #[test]
+    fn seed_centroids_shape_and_coverage() {
+        let mut rng = Rng::new(2);
+        // two well-separated blobs: seeds must land near both
+        let n = 400;
+        let mut m = toy(&mut rng, n, 8);
+        for r in 0..n / 2 {
+            m.row_mut(r)[0] += 50.0;
+        }
+        let c = lsh_seed_centroids(&m, 4, &mut rng);
+        assert_eq!(c.rows, 4);
+        assert_eq!(c.cols, 8);
+        let near_a = (0..4).any(|i| c.row(i)[0] > 25.0);
+        let near_b = (0..4).any(|i| c.row(i)[0] < 25.0);
+        assert!(near_a && near_b, "seeds must cover both blobs");
+    }
+}

@@ -1,0 +1,174 @@
+//! Dense linear algebra substrate: row-major f32 matrices, the operations
+//! NOMAD needs (norms, distances, matmul-free PCA via power iteration) and
+//! the LSH used to seed the K-Means ANN index.
+
+pub mod lsh;
+pub mod pca;
+
+/// A dense row-major f32 matrix (`rows x cols`).
+///
+/// This is deliberately minimal: NOMAD's heavy lifting happens either in the
+/// AOT-compiled XLA artifacts or in hand-tiled loops in `embed/`; `Matrix`
+/// is the container they share.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy the given rows into a new matrix (gather).
+    pub fn gather(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f32> {
+        let mut m = vec![0.0f64; self.cols];
+        for r in 0..self.rows {
+            for (c, v) in self.row(r).iter().enumerate() {
+                m[c] += *v as f64;
+            }
+        }
+        m.iter().map(|v| (*v / self.rows.max(1) as f64) as f32).collect()
+    }
+
+    /// Subtract a row vector from every row, in place.
+    pub fn sub_row(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.cols);
+        for r in 0..self.rows {
+            for (x, m) in self.row_mut(r).iter_mut().zip(v) {
+                *x -= m;
+            }
+        }
+    }
+}
+
+/// Squared euclidean distance of two equal-length slices.
+#[inline]
+pub fn d2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-way unrolled: autovectorizes well; this is the innermost loop of the
+    // native K-Means / kNN path.
+    let n = a.len();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2_ = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        acc += d0 * d0 + d1 * d1 + d2_ * d2_ + d3 * d3;
+    }
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    let n = a.len();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc += a[j] * b[j] + a[j + 1] * b[j + 1] + a[j + 2] * b[j + 2] + a[j + 3] * b[j + 3];
+    }
+    for j in chunks * 4..n {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Normalize a vector in place; returns the original norm.
+pub fn normalize(a: &mut [f32]) -> f32 {
+    let n = norm(a);
+    if n > 1e-30 {
+        for v in a.iter_mut() {
+            *v /= n;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_rows() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.row(0), &[1., 2., 3.]);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = Matrix::from_vec(3, 2, vec![0., 0., 1., 1., 2., 2.]);
+        let g = m.gather(&[2, 0]);
+        assert_eq!(g.data, vec![2., 2., 0., 0.]);
+    }
+
+    #[test]
+    fn col_means_and_center() {
+        let mut m = Matrix::from_vec(2, 2, vec![1., 10., 3., 30.]);
+        let mu = m.col_means();
+        assert_eq!(mu, vec![2., 20.]);
+        m.sub_row(&mu);
+        assert_eq!(m.data, vec![-1., -10., 1., 10.]);
+    }
+
+    #[test]
+    fn d2_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32).collect();
+        let b: Vec<f32> = (0..13).map(|i| (i * 2) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!((d2(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let a = [3.0f32, 4.0];
+        assert_eq!(norm(&a), 5.0);
+        assert_eq!(dot(&a, &a), 25.0);
+        let mut v = [3.0f32, 4.0];
+        let n = normalize(&mut v);
+        assert_eq!(n, 5.0);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+    }
+}

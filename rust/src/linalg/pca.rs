@@ -1,0 +1,188 @@
+//! PCA initialization (paper §3.4: "We initialize our projection with PCA,
+//! as it has been found to improve global structure").
+//!
+//! We compute the top-`k` principal components with randomized subspace
+//! power iteration on the centered data — no full covariance matrix is ever
+//! materialized (the datasets are n x d with n in the millions), only
+//! `X^T (X v)` products, which stream over rows and parallelize.
+
+use super::Matrix;
+use crate::util::parallel::par_map;
+use crate::util::rng::Rng;
+
+/// Project `x` (n x d) onto its top-`k` principal components.
+/// Returns an n x k matrix of scores, scaled to unit average std per
+/// component (the t-SNE convention: tiny init, handled by the caller).
+pub fn pca_project(x: &Matrix, k: usize, iters: usize, rng: &mut Rng) -> Matrix {
+    let (n, d) = (x.rows, x.cols);
+    assert!(k <= d, "k {k} > dim {d}");
+    let mean = x.col_means();
+
+    // subspace of k random directions
+    let mut basis: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| rng.normal()).collect())
+        .collect();
+    orthonormalize(&mut basis);
+
+    let threads = crate::util::parallel::num_threads();
+    for _ in 0..iters {
+        // y_j = X^T (X b_j), accumulated in chunks over rows
+        let new_basis: Vec<Vec<f32>> = basis
+            .iter()
+            .map(|b| {
+                let partials = par_map(threads, threads, |t| {
+                    let lo = n * t / threads;
+                    let hi = n * (t + 1) / threads;
+                    let mut acc = vec![0.0f64; d];
+                    for r in lo..hi {
+                        let row = x.row(r);
+                        let mut s = 0.0f32;
+                        for c in 0..d {
+                            s += (row[c] - mean[c]) * b[c];
+                        }
+                        for c in 0..d {
+                            acc[c] += (s * (row[c] - mean[c])) as f64;
+                        }
+                    }
+                    acc
+                });
+                let mut y = vec![0.0f32; d];
+                for p in partials {
+                    for c in 0..d {
+                        y[c] += p[c] as f32;
+                    }
+                }
+                y
+            })
+            .collect();
+        basis = new_basis;
+        orthonormalize(&mut basis);
+    }
+
+    // scores
+    let mut out = Matrix::zeros(n, k);
+    let scores: Vec<Vec<f32>> = par_map(n, threads, |r| {
+        let row = x.row(r);
+        basis
+            .iter()
+            .map(|b| {
+                let mut s = 0.0f32;
+                for c in 0..d {
+                    s += (row[c] - mean[c]) * b[c];
+                }
+                s
+            })
+            .collect()
+    });
+    for (r, sc) in scores.iter().enumerate() {
+        out.row_mut(r).copy_from_slice(sc);
+    }
+    out
+}
+
+/// Standard t-SNE-style initialization: PCA scores rescaled so the first
+/// component has std `target_std` (1e-4 x n-scale conventions live in the
+/// optimizer; here we use 1.0 and let the caller scale).
+pub fn pca_init(x: &Matrix, dim: usize, rng: &mut Rng, target_std: f32) -> Matrix {
+    let mut p = pca_project(x, dim, 12, rng);
+    // scale by the std of the first component
+    let n = p.rows;
+    let mut mean0 = 0.0f64;
+    for r in 0..n {
+        mean0 += p.row(r)[0] as f64;
+    }
+    mean0 /= n as f64;
+    let mut var0 = 0.0f64;
+    for r in 0..n {
+        let v = p.row(r)[0] as f64 - mean0;
+        var0 += v * v;
+    }
+    let std0 = (var0 / n.max(1) as f64).sqrt().max(1e-12) as f32;
+    let scale = target_std / std0;
+    for v in p.data.iter_mut() {
+        *v *= scale;
+    }
+    p
+}
+
+fn orthonormalize(basis: &mut [Vec<f32>]) {
+    for i in 0..basis.len() {
+        for j in 0..i {
+            let proj = super::dot(&basis[i], &basis[j]);
+            let bj = basis[j].clone();
+            for (v, w) in basis[i].iter_mut().zip(&bj) {
+                *v -= proj * w;
+            }
+        }
+        super::normalize(&mut basis[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // data stretched along (1, 1)/sqrt2 in 2-d
+        let mut rng = Rng::new(0);
+        let n = 2000;
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let t = rng.normal() * 10.0;
+            let e = rng.normal() * 0.5;
+            data.push(t + e);
+            data.push(t - e);
+        }
+        let x = Matrix::from_vec(n, 2, data);
+        let p = pca_project(&x, 1, 10, &mut rng);
+        // the first PC must capture nearly all the variance: correlation of
+        // score with (x0 + x1) should be ~±1
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for r in 0..n {
+            a.push(p.row(r)[0] as f64);
+            b.push((x.row(r)[0] + x.row(r)[1]) as f64);
+        }
+        let c = crate::util::stats::pearson(&a, &b).abs();
+        assert!(c > 0.99, "pearson {c}");
+    }
+
+    #[test]
+    fn components_are_decorrelated() {
+        let mut rng = Rng::new(1);
+        let n = 1500;
+        let d = 8;
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let a = rng.normal() * 5.0;
+            let b = rng.normal() * 2.0;
+            for c in 0..d {
+                data.push(a * (c as f32 + 1.0) / d as f32 + b * ((d - c) as f32) / d as f32 + rng.normal() * 0.1);
+            }
+        }
+        let x = Matrix::from_vec(n, d, data);
+        let p = pca_project(&x, 2, 15, &mut rng);
+        let c0: Vec<f64> = (0..n).map(|r| p.row(r)[0] as f64).collect();
+        let c1: Vec<f64> = (0..n).map(|r| p.row(r)[1] as f64).collect();
+        let corr = crate::util::stats::pearson(&c0, &c1).abs();
+        assert!(corr < 0.1, "pc0/pc1 correlation {corr}");
+    }
+
+    #[test]
+    fn init_scales_first_component() {
+        let mut rng = Rng::new(2);
+        let n = 500;
+        let mut data = Vec::with_capacity(n * 3);
+        for _ in 0..n {
+            for _ in 0..3 {
+                data.push(rng.normal() * 4.0);
+            }
+        }
+        let x = Matrix::from_vec(n, 3, data);
+        let p = pca_init(&x, 2, &mut rng, 1.0);
+        let mean: f64 = (0..n).map(|r| p.row(r)[0] as f64).sum::<f64>() / n as f64;
+        let var: f64 = (0..n).map(|r| (p.row(r)[0] as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((var.sqrt() - 1.0).abs() < 0.05, "std {}", var.sqrt());
+    }
+}

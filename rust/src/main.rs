@@ -1,0 +1,200 @@
+//! `nomad` — the NOMAD Projection command-line launcher.
+//!
+//! Subcommands:
+//!   embed    embed a dataset (synthetic generator or .npy file) and write
+//!            positions (.npy) + an optional density map (.png)
+//!   index    build and report on the K-Means ANN index only
+//!   metrics  score an embedding (.npy) against its source data (.npy)
+//!   info     print artifact-manifest and environment diagnostics
+//!
+//! Examples:
+//!   nomad embed --data wikipedia --n 20000 --devices 8 --out out/wiki
+//!   nomad embed --npy vectors.npy --epochs 200 --xla --out out/run1
+//!   nomad metrics --npy vectors.npy --embedding out/run1_positions.npy
+//!   nomad info
+
+use anyhow::{bail, Context, Result};
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::mutuality;
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::cli::Args;
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::{self, Dataset};
+use nomad::embed::NomadParams;
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::linalg::Matrix;
+use nomad::util::npy::NpyF32;
+use nomad::util::rng::Rng;
+use nomad::viz::{density_map, png, View};
+use std::path::Path;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("embed") => cmd_embed(&args),
+        Some("index") => cmd_index(&args),
+        Some("metrics") => cmd_metrics(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            eprintln!("usage: nomad <embed|index|metrics|info> [flags]  (see --help in source)");
+            Ok(())
+        }
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<Dataset> {
+    if let Some(path) = args.get("npy") {
+        let t = NpyF32::load(Path::new(path))?;
+        if t.shape.len() != 2 {
+            bail!("expected 2-d array, got shape {:?}", t.shape);
+        }
+        let (n, d) = (t.shape[0], t.shape[1]);
+        Ok(Dataset {
+            x: Matrix::from_vec(n, d, t.data),
+            labels: vec![vec![0; n]],
+            name: path.to_string(),
+        })
+    } else {
+        let n = args.usize("n", 10_000);
+        let mut rng = Rng::new(args.u64("seed", 0));
+        let name = args.str("data", "arxiv");
+        Ok(match name {
+            "arxiv" => data::text_corpus_like(n, &mut rng),
+            "imagenet" => data::image_corpus_like(n, &mut rng),
+            "pubmed" => data::pubmed_like(n, &mut rng),
+            "wikipedia" => data::wikipedia_like(n, &mut rng),
+            other => bail!("unknown --data '{other}' (arxiv|imagenet|pubmed|wikipedia)"),
+        })
+    }
+}
+
+fn index_params(args: &Args) -> IndexParams {
+    IndexParams {
+        n_clusters: args.usize("clusters", 64),
+        k: args.usize("k", 15),
+        max_cluster_size: args.usize("max-cluster", 8192),
+        ..Default::default()
+    }
+}
+
+fn cmd_embed(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    println!("dataset: {} ({} x {})", ds.name, ds.n(), ds.dim());
+    let params = NomadParams {
+        epochs: args.usize("epochs", 200),
+        k: args.usize("k", 15),
+        negs: args.usize("negs", 8),
+        pca_init: !args.bool("random-init"),
+        seed: args.u64("seed", 42),
+        ..Default::default()
+    };
+    let run_cfg = RunConfig {
+        n_devices: args.usize("devices", 1),
+        backend: if args.bool("xla") { BackendKind::Xla } else { BackendKind::Native },
+        index: index_params(args),
+        verbose: !args.bool("quiet"),
+        ..Default::default()
+    };
+    let coord = NomadCoordinator::new(params, run_cfg);
+    let run = coord.fit(&ds, &NativeBackend::default());
+    println!(
+        "done: {} clusters | index {:.2}s | train {:.2}s ({:.3}s modeled) | final loss {:.5}",
+        run.n_clusters,
+        run.index_secs,
+        run.train_secs,
+        run.modeled_train_secs,
+        run.loss_history.last().unwrap_or(&f64::NAN)
+    );
+
+    let out = args.str("out", "out/nomad");
+    if let Some(dir) = Path::new(out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let pos_path = format!("{out}_positions.npy");
+    NpyF32::new(vec![ds.n(), 2], run.positions.data.clone()).save(Path::new(&pos_path))?;
+    println!("positions: {pos_path}");
+
+    if !args.bool("no-png") {
+        let view = View::fit(&run.positions);
+        let labels = if ds.labels[0].iter().any(|&l| l != 0) { Some(ds.fine_labels()) } else { None };
+        let r = density_map(&run.positions, labels, &view, 900, 900);
+        let png_path = format!("{out}_map.png");
+        png::write_rgb(Path::new(&png_path), r.width, r.height, &r.pixels)?;
+        println!("map: {png_path}");
+    }
+    if !args.bool("no-metrics") {
+        let (np, rta) = evaluate(&ds, &run.positions, &EvalCfg::default());
+        println!("NP@10 = {:.1}%  RTA = {:.1}%", np * 100.0, rta * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_index(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let mut rng = Rng::new(args.u64("seed", 0));
+    let t0 = std::time::Instant::now();
+    let idx = ClusterIndex::build(&ds.x, &index_params(args), &NativeBackend::default(), &mut rng);
+    let secs = t0.elapsed().as_secs_f64();
+    let sizes: Vec<usize> = idx.clusters.iter().map(|c| c.len()).collect();
+    println!(
+        "index: {} clusters over {} points in {:.2}s",
+        idx.n_clusters(),
+        idx.n(),
+        secs
+    );
+    println!(
+        "cluster sizes: min {} / median {} / max {}",
+        sizes.iter().min().unwrap(),
+        {
+            let mut s = sizes.clone();
+            s.sort_unstable();
+            s[s.len() / 2]
+        },
+        sizes.iter().max().unwrap()
+    );
+    println!("kNN edge mutuality: {:.1}%", mutuality(&idx) * 100.0);
+    println!(
+        "invariant (edges stay in clusters): {}",
+        if idx.edges_respect_clusters() { "OK" } else { "VIOLATED" }
+    );
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let emb_path = args.get("embedding").context("--embedding <positions.npy> required")?;
+    let e = NpyF32::load(Path::new(emb_path))?;
+    if e.shape != vec![ds.n(), 2] {
+        bail!("embedding shape {:?} != [{}, 2]", e.shape, ds.n());
+    }
+    let y = Matrix::from_vec(ds.n(), 2, e.data);
+    let cfg = EvalCfg {
+        np_k: args.usize("np-k", 10),
+        np_sample: args.usize("np-sample", 400),
+        triplets: args.usize("triplets", 10_000),
+        seed: args.u64("seed", 7),
+    };
+    let (np, rta) = evaluate(&ds, &y, &cfg);
+    println!("NP@{} = {:.2}%  RTA = {:.2}%", cfg.np_k, np * 100.0, rta * 100.0);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = nomad::runtime::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    match nomad::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("manifest: {} artifacts", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {} ({}: {:?})", a.name, a.func, a.params);
+            }
+        }
+        Err(e) => println!("manifest unavailable: {e} (run `make artifacts`)"),
+    }
+    match xla::PjRtClient::cpu() {
+        Ok(c) => println!("PJRT: {} / {} device(s)", c.platform_name(), c.device_count()),
+        Err(e) => println!("PJRT unavailable: {e}"),
+    }
+    println!("threads: {}", nomad::util::parallel::num_threads());
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Evaluation metrics (paper §4).
+//!
+//! * **Neighborhood preservation at k (NP@k)** — mean overlap between the
+//!   k-neighborhoods in the ambient and embedded spaces; the paper's local
+//!   structure measure (Table 1 reports NP@10).
+//! * **Random triplet accuracy (RTA)** — probability that a random triplet
+//!   keeps its pairwise-distance ordering after embedding; the paper's
+//!   global structure measure (after Wang et al. 2021).
+//!
+//! Ground-truth ambient kNN is exact brute force (O(n²d), parallel); for
+//! large n both metrics are estimated on a uniform sample of query points,
+//! exactly as the referenced papers do.
+
+use crate::ann::knn::exact_global;
+use crate::linalg::{d2, Matrix};
+use crate::util::parallel::{num_threads, par_map};
+use crate::util::rng::Rng;
+
+/// NP@k between the high-dim data `x` and the embedding `y`, estimated on
+/// `sample` query points (all points when `sample >= n`).
+pub fn neighborhood_preservation(
+    x: &Matrix,
+    y: &Matrix,
+    k: usize,
+    sample: usize,
+    rng: &mut Rng,
+) -> f64 {
+    assert_eq!(x.rows, y.rows);
+    let n = x.rows;
+    if n <= k + 1 {
+        return 1.0;
+    }
+    let queries: Vec<usize> = if sample >= n {
+        (0..n).collect()
+    } else {
+        rng.sample_distinct(n, sample)
+    };
+    let threads = num_threads();
+    let overlaps: Vec<f64> = par_map(queries.len(), threads, |qi| {
+        let q = queries[qi];
+        let hi = knn_of(x, q, k);
+        let lo = knn_of(y, q, k);
+        let hi_set: std::collections::HashSet<u32> = hi.into_iter().collect();
+        let inter = lo.iter().filter(|j| hi_set.contains(j)).count();
+        inter as f64 / k as f64
+    });
+    overlaps.iter().sum::<f64>() / overlaps.len().max(1) as f64
+}
+
+/// Exact k nearest neighbors of one query point (excluding self).
+fn knn_of(m: &Matrix, q: usize, k: usize) -> Vec<u32> {
+    let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+    let row = m.row(q);
+    for j in 0..m.rows {
+        if j == q {
+            continue;
+        }
+        let dist = d2(row, m.row(j));
+        if best.len() < k {
+            best.push((dist, j as u32));
+            if best.len() == k {
+                best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            }
+        } else if dist < best[0].0 {
+            best[0] = (dist, j as u32);
+            let mut p = 0;
+            while p + 1 < k && best[p].0 < best[p + 1].0 {
+                best.swap(p, p + 1);
+                p += 1;
+            }
+        }
+    }
+    best.into_iter().map(|(_, j)| j).collect()
+}
+
+/// Random triplet accuracy on `triplets` sampled triplets.
+pub fn random_triplet_accuracy(
+    x: &Matrix,
+    y: &Matrix,
+    triplets: usize,
+    rng: &mut Rng,
+) -> f64 {
+    assert_eq!(x.rows, y.rows);
+    let n = x.rows;
+    if n < 3 {
+        return 1.0;
+    }
+    // pre-sample to keep rng sequential, evaluate in parallel
+    let samples: Vec<[usize; 3]> = (0..triplets)
+        .map(|_| {
+            let a = rng.below(n);
+            let mut b = rng.below(n);
+            while b == a {
+                b = rng.below(n);
+            }
+            let mut c = rng.below(n);
+            while c == a || c == b {
+                c = rng.below(n);
+            }
+            [a, b, c]
+        })
+        .collect();
+    let threads = num_threads();
+    let hits: Vec<u32> = par_map(samples.len(), threads, |t| {
+        let [a, b, c] = samples[t];
+        let hi = d2(x.row(a), x.row(b)) < d2(x.row(a), x.row(c));
+        let lo = d2(y.row(a), y.row(b)) < d2(y.row(a), y.row(c));
+        (hi == lo) as u32
+    });
+    hits.iter().sum::<u32>() as f64 / hits.len().max(1) as f64
+}
+
+/// Exact global kNN indices (ground truth helper re-export).
+pub fn exact_knn_indices(x: &Matrix, k: usize) -> Vec<u32> {
+    exact_global(x, k)
+}
+
+/// kNN-classification label agreement in the embedding: the fraction of
+/// points whose embedded nearest neighbor shares their generator label.
+/// A cheap supervised sanity check for the synthetic corpora.
+pub fn label_knn_agreement(y: &Matrix, labels: &[u32], sample: usize, rng: &mut Rng) -> f64 {
+    let n = y.rows;
+    let queries: Vec<usize> =
+        if sample >= n { (0..n).collect() } else { rng.sample_distinct(n, sample) };
+    let threads = num_threads();
+    let hits: Vec<u32> = par_map(queries.len(), threads, |qi| {
+        let q = queries[qi];
+        let nn = knn_of(y, q, 1)[0] as usize;
+        (labels[nn] == labels[q]) as u32
+    });
+    hits.iter().sum::<u32>() as f64 / hits.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn randm(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn identity_embedding_is_perfect() {
+        let mut rng = Rng::new(0);
+        let x = randm(&mut rng, 200, 2);
+        let np = neighborhood_preservation(&x, &x, 10, 200, &mut rng);
+        assert!((np - 1.0).abs() < 1e-12);
+        let rta = random_triplet_accuracy(&x, &x, 2000, &mut rng);
+        assert!((rta - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaling_and_rotation_preserve_metrics() {
+        let mut rng = Rng::new(1);
+        let x = randm(&mut rng, 150, 2);
+        // rotate by 30 degrees and scale by 5
+        let (s, c) = (0.5f32, 3f32.sqrt() / 2.0);
+        let mut y = Matrix::zeros(150, 2);
+        for i in 0..150 {
+            let (a, b) = (x.row(i)[0], x.row(i)[1]);
+            y.row_mut(i)[0] = 5.0 * (c * a - s * b);
+            y.row_mut(i)[1] = 5.0 * (s * a + c * b);
+        }
+        let np = neighborhood_preservation(&x, &y, 10, 150, &mut rng);
+        assert!(np > 0.999, "np {np}");
+        let rta = random_triplet_accuracy(&x, &y, 2000, &mut rng);
+        assert!(rta > 0.999, "rta {rta}");
+    }
+
+    #[test]
+    fn random_embedding_scores_low() {
+        let mut rng = Rng::new(2);
+        let x = randm(&mut rng, 300, 8);
+        let y = randm(&mut rng, 300, 2);
+        let np = neighborhood_preservation(&x, &y, 10, 300, &mut rng);
+        assert!(np < 0.15, "np of random embedding {np}");
+        let rta = random_triplet_accuracy(&x, &y, 4000, &mut rng);
+        assert!((rta - 0.5).abs() < 0.08, "rta of random embedding {rta}");
+    }
+
+    #[test]
+    fn sampled_estimate_tracks_full() {
+        let mut rng = Rng::new(3);
+        let x = randm(&mut rng, 400, 4);
+        let mut y = Matrix::zeros(400, 2);
+        for i in 0..400 {
+            y.row_mut(i)[0] = x.row(i)[0];
+            y.row_mut(i)[1] = x.row(i)[1];
+        }
+        let full = neighborhood_preservation(&x, &y, 10, 400, &mut rng);
+        let est = neighborhood_preservation(&x, &y, 10, 150, &mut rng);
+        assert!((full - est).abs() < 0.1, "full {full} est {est}");
+    }
+
+    #[test]
+    fn label_agreement_for_separated_blobs() {
+        let mut rng = Rng::new(4);
+        let ds = crate::data::gaussian_mixture(300, 2, 3, 30.0, 0.0, 0.0, &mut rng);
+        let agree = label_knn_agreement(&ds.x, &ds.labels[0], 300, &mut rng);
+        assert!(agree > 0.99, "agreement {agree}");
+    }
+}

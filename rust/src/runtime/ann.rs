@@ -1,0 +1,145 @@
+//! XLA-backed ANN distance engine: K-Means assignment and within-cluster
+//! kNN through the `kmeans_em_step` / `knn_build` artifacts.
+//!
+//! On TPU these are the MXU-bound kernels (see python/compile/kernels); on
+//! the CPU PJRT plugin they exercise the same artifact path end-to-end.
+//! Shapes without a matching artifact fall back to the native backend.
+
+use crate::ann::backend::{AnnBackend, NativeBackend};
+use crate::linalg::Matrix;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+pub struct XlaAnnBackend {
+    client: xla::PjRtClient,
+    manifest: super::Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    native: NativeBackend,
+}
+
+const BIG: f32 = 1.0e37;
+
+impl XlaAnnBackend {
+    pub fn from_env() -> Result<XlaAnnBackend> {
+        let dir = super::artifacts_dir();
+        let manifest = super::Manifest::load(&dir)
+            .with_context(|| format!("manifest in {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaAnnBackend {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            native: NativeBackend::default(),
+        })
+    }
+
+    fn get_exe(&self, name: &str, file: &std::path::Path) -> Result<()> {
+        if !self.cache.borrow().contains_key(name) {
+            let exe = super::compile_hlo_text(&self.client, file)
+                .with_context(|| format!("compile {name}"))?;
+            self.cache.borrow_mut().insert(name.to_string(), exe);
+        }
+        Ok(())
+    }
+
+    fn assign_xla(&self, x: &Matrix, c: &Matrix) -> Result<Option<Vec<(u32, f32)>>> {
+        let art = match self.manifest.kmeans_for(x.rows, x.cols, c.rows) {
+            Some(a) => a.clone(),
+            None => return Ok(None),
+        };
+        let np = art.param("n").unwrap();
+        let cp = art.param("c").unwrap();
+        let d = x.cols;
+        self.get_exe(&art.name, &art.file)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&art.name).unwrap();
+
+        let mut xp = vec![0.0f32; np * d];
+        xp[..x.rows * d].copy_from_slice(&x.data);
+        let mut cpd = vec![0.0f32; cp * d];
+        cpd[..c.rows * d].copy_from_slice(&c.data);
+        let mut cmask = vec![0.0f32; cp];
+        for v in cmask.iter_mut().take(c.rows) {
+            *v = 1.0;
+        }
+        let lits = [
+            xla::Literal::vec1(&xp).reshape(&[np as i64, d as i64])?,
+            xla::Literal::vec1(&cpd).reshape(&[cp as i64, d as i64])?,
+            xla::Literal::vec1(&cmask).reshape(&[cp as i64])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let (assign, d2, _sums, _counts) = result.to_tuple4()?;
+        let assign = assign.to_vec::<i32>()?;
+        let d2 = d2.to_vec::<f32>()?;
+        Ok(Some(
+            (0..x.rows).map(|i| (assign[i] as u32, d2[i])).collect(),
+        ))
+    }
+
+    fn knn_xla(&self, x: &Matrix, k: usize) -> Result<Option<(Vec<u32>, Vec<f32>)>> {
+        let art = match self.manifest.knn_for(x.rows, x.cols, k) {
+            Some(a) => a.clone(),
+            None => return Ok(None),
+        };
+        let np = art.param("n").unwrap();
+        let ka = art.param("k").unwrap();
+        let d = x.cols;
+        self.get_exe(&art.name, &art.file)?;
+        let cache = self.cache.borrow();
+        let exe = cache.get(&art.name).unwrap();
+
+        let mut xp = vec![0.0f32; np * d];
+        xp[..x.rows * d].copy_from_slice(&x.data);
+        let mut vmask = vec![0.0f32; np];
+        for v in vmask.iter_mut().take(x.rows) {
+            *v = 1.0;
+        }
+        let lits = [
+            xla::Literal::vec1(&xp).reshape(&[np as i64, d as i64])?,
+            xla::Literal::vec1(&vmask).reshape(&[np as i64])?,
+        ];
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let (idx, dd) = result.to_tuple2()?;
+        let idx = idx.to_vec::<i32>()?;
+        let dd = dd.to_vec::<f32>()?;
+        // slice to n rows and first k slots; convert BIG padding to misses
+        let n = x.rows;
+        let mut out_idx = vec![u32::MAX; n * k];
+        let mut out_dd = vec![f32::INFINITY; n * k];
+        for i in 0..n {
+            for s in 0..k {
+                let v = dd[i * ka + s];
+                if v < BIG {
+                    out_idx[i * k + s] = idx[i * ka + s] as u32;
+                    out_dd[i * k + s] = v;
+                }
+            }
+        }
+        Ok(Some((out_idx, out_dd)))
+    }
+}
+
+impl AnnBackend for XlaAnnBackend {
+    fn assign(&self, x: &Matrix, centroids: &Matrix) -> Vec<(u32, f32)> {
+        match self.assign_xla(x, centroids) {
+            Ok(Some(v)) => v,
+            Ok(None) => self.native.assign(x, centroids),
+            Err(e) => {
+                eprintln!("[nomad] XLA assign failed ({e:#}); native fallback");
+                self.native.assign(x, centroids)
+            }
+        }
+    }
+
+    fn knn(&self, x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>) {
+        match self.knn_xla(x, k) {
+            Ok(Some(v)) => v,
+            Ok(None) => self.native.knn(x, k),
+            Err(e) => {
+                eprintln!("[nomad] XLA knn failed ({e:#}); native fallback");
+                self.native.knn(x, k)
+            }
+        }
+    }
+}

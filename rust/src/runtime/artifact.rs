@@ -1,0 +1,141 @@
+//! Artifact manifest parsing and bucket selection.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One AOT artifact (an HLO-text file plus its signature).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub func: String,
+    /// bucket parameters as (key, value) pairs — e.g. s/k/neg/r/block
+    pub params: Vec<(String, usize)>,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+impl Artifact {
+    pub fn param(&self, key: &str) -> Option<usize> {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| *v)
+    }
+}
+
+/// The parsed `manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text).context("parse manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts").as_arr().context("artifacts array")?.iter() {
+            let name = a.get("name").as_str().context("name")?.to_string();
+            let file = dir.join(a.get("file").as_str().context("file")?);
+            let func = a.get("fn").as_str().context("fn")?.to_string();
+            let mut params = Vec::new();
+            if let Some(obj) = a.get("params").as_obj() {
+                for (k, v) in obj {
+                    if let Some(u) = v.as_usize() {
+                        params.push((k.clone(), u));
+                    }
+                }
+            }
+            let n_inputs = a.get("inputs").as_arr().map(|v| v.len()).unwrap_or(0);
+            let n_outputs = a.get("outputs").as_arr().map(|v| v.len()).unwrap_or(0);
+            if !file.exists() {
+                bail!("artifact file missing: {}", file.display());
+            }
+            artifacts.push(Artifact { name, file, func, params, n_inputs, n_outputs });
+        }
+        Ok(Manifest { artifacts, dir: dir.to_path_buf() })
+    }
+
+    /// All artifacts for a function name.
+    pub fn for_fn(&self, func: &str) -> Vec<&Artifact> {
+        self.artifacts.iter().filter(|a| a.func == func).collect()
+    }
+
+    /// Smallest `nomad_step` artifact with bucket `s` >= `size` and exactly
+    /// matching k / negs, and mean capacity `r` >= `r_needed`.
+    pub fn step_for(&self, size: usize, k: usize, negs: usize, r_needed: usize) -> Option<&Artifact> {
+        self.for_fn("nomad_step")
+            .into_iter()
+            .filter(|a| {
+                a.param("s").is_some_and(|s| s >= size)
+                    && a.param("k") == Some(k)
+                    && a.param("neg") == Some(negs)
+                    && a.param("r").is_some_and(|r| r >= r_needed)
+            })
+            .min_by_key(|a| a.param("s").unwrap())
+    }
+
+    /// Smallest `kmeans_em_step` artifact fitting (n, d, c).
+    pub fn kmeans_for(&self, n: usize, d: usize, c: usize) -> Option<&Artifact> {
+        self.for_fn("kmeans_em_step")
+            .into_iter()
+            .filter(|a| {
+                a.param("n").is_some_and(|an| an >= n)
+                    && a.param("d") == Some(d)
+                    && a.param("c").is_some_and(|ac| ac >= c)
+            })
+            .min_by_key(|a| a.param("n").unwrap())
+    }
+
+    /// Smallest `knn_build` artifact fitting (n, d) with k >= `k`.
+    pub fn knn_for(&self, n: usize, d: usize, k: usize) -> Option<&Artifact> {
+        self.for_fn("knn_build")
+            .into_iter()
+            .filter(|a| {
+                a.param("n").is_some_and(|an| an >= n)
+                    && a.param("d") == Some(d)
+                    && a.param("k").is_some_and(|ak| ak >= k)
+            })
+            .min_by_key(|a| a.param("n").unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_generated_manifest() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        let step = m.step_for(100, 15, 8, 50);
+        assert!(step.is_some(), "default step bucket present");
+        assert_eq!(step.unwrap().param("s"), Some(512));
+        // oversize request -> None
+        assert!(m.step_for(10_000_000, 15, 8, 50).is_none());
+        // mismatched k -> None
+        assert!(m.step_for(100, 3, 8, 50).is_none());
+    }
+
+    #[test]
+    fn kmeans_and_knn_selection() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.kmeans_for(1000, 64, 100).expect("kmeans artifact");
+        assert_eq!(a.param("n"), Some(2048));
+        let b = m.knn_for(400, 256, 15).expect("knn artifact");
+        assert_eq!(b.param("n"), Some(512));
+        assert!(m.kmeans_for(1000, 777, 10).is_none());
+    }
+}

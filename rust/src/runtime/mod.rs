@@ -1,0 +1,52 @@
+//! The PJRT runtime: loads the AOT HLO-text artifacts emitted by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//!
+//! Interchange contract (see /opt/xla-example/README.md and DESIGN.md §6):
+//! HLO **text**, not serialized protos — the published `xla` crate links
+//! xla_extension 0.5.1 which rejects jax>=0.5's 64-bit instruction ids; the
+//! text parser reassigns ids.  `artifacts/manifest.json` (parsed with the
+//! from-scratch JSON parser) describes every artifact's function, shape
+//! bucket and signature; executables are compiled lazily and cached.
+//!
+//! Every artifact-backed function has a bit-equivalent native fallback, so
+//! the system degrades gracefully when a shape has no artifact.
+
+pub mod ann;
+pub mod artifact;
+pub mod step;
+
+pub use ann::XlaAnnBackend;
+pub use artifact::{Artifact, Manifest};
+pub use step::XlaStepBackend;
+
+use anyhow::Result;
+
+/// Resolve the artifacts directory: `$NOMAD_ARTIFACTS` or `./artifacts`,
+/// walking up from the current directory so tests/benches work from any
+/// workspace subdirectory.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("NOMAD_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// Load + compile one HLO text file on a fresh CPU PJRT client (smoke/test
+/// helper; production paths use the cached executables in the backends).
+pub fn compile_hlo_text(
+    client: &xla::PjRtClient,
+    path: &std::path::Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    Ok(client.compile(&comp)?)
+}

@@ -1,0 +1,175 @@
+//! XLA-backed NOMAD step: executes the `nomad_step` AOT artifact per block.
+//!
+//! One `XlaStepBackend` lives per device thread (PJRT clients are not
+//! thread-portable and a real deployment is one client per GPU anyway).
+//! Executables are compiled lazily, once per shape bucket, and cached.
+//! Blocks whose (k, negs) or mean count exceed every artifact fall back to
+//! the native implementation — logged once.
+
+use crate::embed::{native, ClusterBlock, StepBackend, StepInputs};
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+pub struct XlaStepBackend {
+    client: xla::PjRtClient,
+    manifest: super::Manifest,
+    /// bucket size -> compiled executable (+ its r capacity)
+    cache: RefCell<HashMap<String, CachedExe>>,
+    #[allow(dead_code)]
+    native: native::NativeStepBackend,
+    warned_fallback: RefCell<bool>,
+}
+
+struct CachedExe {
+    exe: xla::PjRtLoadedExecutable,
+    s: usize,
+    r: usize,
+}
+
+impl XlaStepBackend {
+    /// Build from `$NOMAD_ARTIFACTS` / `./artifacts`.
+    pub fn from_env() -> Result<XlaStepBackend> {
+        let dir = super::artifacts_dir();
+        let manifest = super::Manifest::load(&dir)
+            .with_context(|| format!("manifest in {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaStepBackend {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            native: native::NativeStepBackend::default(),
+            warned_fallback: RefCell::new(false),
+        })
+    }
+
+    fn exec_block(
+        &self,
+        block: &mut ClusterBlock,
+        inputs: &StepInputs,
+    ) -> Result<Option<f64>> {
+        let r_needed = inputs.mean_w.len();
+        let art = match self
+            .manifest
+            .step_for(block.size, block.k, block.negs, r_needed)
+        {
+            Some(a) => a,
+            None => return Ok(None),
+        };
+        let s_pad = art.param("s").unwrap();
+        let r_pad = art.param("r").unwrap();
+
+        let mut cache = self.cache.borrow_mut();
+        let entry = match cache.get(&art.name) {
+            Some(_) => cache.get(&art.name).unwrap(),
+            None => {
+                let exe = super::compile_hlo_text(&self.client, &art.file)
+                    .with_context(|| format!("compile {}", art.name))?;
+                cache.insert(art.name.clone(), CachedExe { exe, s: s_pad, r: r_pad });
+                cache.get(&art.name).unwrap()
+            }
+        };
+
+        // ---- pad host buffers to the artifact bucket ---------------------
+        let k = block.k;
+        let negs = block.negs;
+        let s = block.size;
+        debug_assert!(entry.s >= s && entry.r >= r_needed);
+        let sp = entry.s;
+        let rp = entry.r;
+
+        let mut pos = vec![0.0f32; sp * 2];
+        pos[..s * 2].copy_from_slice(&block.pos);
+        let mut nbr_idx = vec![0i32; sp * k];
+        nbr_idx[..s * k].copy_from_slice(&block.nbr_idx);
+        let mut nbr_w = vec![0.0f32; sp * k];
+        nbr_w[..s * k].copy_from_slice(&block.nbr_w);
+        let mut neg_idx = vec![0i32; sp * negs];
+        neg_idx[..s * negs].copy_from_slice(&block.neg_idx);
+        let mut valid = vec![0.0f32; sp];
+        valid[..s].copy_from_slice(&block.valid);
+        // padded rows self-loop so gathers stay in bounds
+        for l in s..sp {
+            for t in 0..k {
+                nbr_idx[l * k + t] = l as i32;
+            }
+            for t in 0..negs {
+                neg_idx[l * negs + t] = l as i32;
+            }
+        }
+        let mut means = vec![0.0f32; rp * 2];
+        means[..r_needed * 2].copy_from_slice(inputs.means);
+        let mut mean_w = vec![0.0f32; rp];
+        mean_w[..r_needed].copy_from_slice(inputs.mean_w);
+
+        let lits = [
+            xla::Literal::vec1(&pos).reshape(&[sp as i64, 2])?,
+            xla::Literal::vec1(&nbr_idx).reshape(&[sp as i64, k as i64])?,
+            xla::Literal::vec1(&nbr_w).reshape(&[sp as i64, k as i64])?,
+            xla::Literal::vec1(&neg_idx).reshape(&[sp as i64, negs as i64])?,
+            xla::Literal::vec1(&[block.neg_w]),
+            xla::Literal::vec1(&means).reshape(&[rp as i64, 2])?,
+            xla::Literal::vec1(&mean_w).reshape(&[rp as i64])?,
+            xla::Literal::vec1(&valid).reshape(&[sp as i64])?,
+            xla::Literal::scalar(inputs.lr),
+        ];
+        let result = entry.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let (pos_new, loss) = result.to_tuple2()?;
+        let pos_out = pos_new.to_vec::<f32>()?;
+        block.pos.copy_from_slice(&pos_out[..s * 2]);
+        let loss = loss.to_vec::<f32>()?[0] as f64;
+        Ok(Some(loss))
+    }
+}
+
+impl StepBackend for XlaStepBackend {
+    fn step(&self, block: &mut ClusterBlock, inputs: &StepInputs, rng: &mut Rng) -> f64 {
+        block.resample_negatives(rng);
+        match self.exec_block(block, inputs) {
+            Ok(Some(loss)) => loss,
+            Ok(None) => {
+                if !*self.warned_fallback.borrow() {
+                    eprintln!(
+                        "[nomad] no step artifact for bucket s={} k={} negs={} r={}; native fallback",
+                        block.size, block.k, block.negs, inputs.mean_w.len()
+                    );
+                    *self.warned_fallback.borrow_mut() = true;
+                }
+                self.native_step_no_resample(block, inputs)
+            }
+            Err(e) => {
+                eprintln!("[nomad] XLA step failed ({e:#}); native fallback");
+                self.native_step_no_resample(block, inputs)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+impl XlaStepBackend {
+    /// Native step reusing the already-resampled negatives (so the XLA and
+    /// native paths stay comparable within an epoch).
+    fn native_step_no_resample(&self, block: &mut ClusterBlock, inputs: &StepInputs) -> f64 {
+        let (grad, loss) = native::nomad_grad(
+            &block.pos,
+            &block.nbr_idx,
+            &block.nbr_w,
+            &block.neg_idx,
+            block.neg_w,
+            inputs.means,
+            inputs.mean_w,
+            &block.valid,
+            block.k,
+            block.negs,
+        );
+        for l in 0..block.n_real {
+            block.pos[l * 2] -= inputs.lr * grad[l * 2];
+            block.pos[l * 2 + 1] -= inputs.lr * grad[l * 2 + 1];
+        }
+        loss
+    }
+}

@@ -1,0 +1,7 @@
+//! Foundational substrates built from scratch for the offline environment:
+//! PRNG, JSON, npy interchange, thread-pool parallelism, summary statistics.
+pub mod json;
+pub mod npy;
+pub mod parallel;
+pub mod rng;
+pub mod stats;

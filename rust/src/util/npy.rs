@@ -1,0 +1,154 @@
+//! Minimal NumPy `.npy` reader/writer (v1.0), f32/i32 little-endian.
+//!
+//! Used for tensor interchange between the python compile path and the rust
+//! runtime (e.g. exporting embeddings for external inspection, importing
+//! real vector datasets).  Only C-contiguous little-endian arrays are
+//! supported — exactly what `numpy.save` emits by default.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 6] = b"\x93NUMPY";
+
+/// A dense f32 tensor with shape metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyF32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl NpyF32 {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyF32 { shape, data }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        write_header(&mut f, "<f4", &self.shape)?;
+        let bytes: Vec<u8> = self.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let (descr, shape) = read_header(&mut f)?;
+        if descr != "<f4" {
+            bail!("expected <f4 dtype, got {descr}");
+        }
+        let count: usize = shape.iter().product();
+        let mut buf = vec![0u8; count * 4];
+        f.read_exact(&mut buf)?;
+        let data = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(NpyF32 { shape, data })
+    }
+}
+
+fn write_header(w: &mut impl Write, descr: &str, shape: &[usize]) -> Result<()> {
+    let shape_s = match shape.len() {
+        1 => format!("({},)", shape[0]),
+        _ => format!(
+            "({})",
+            shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    };
+    let mut header = format!(
+        "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape_s}, }}"
+    );
+    // pad so that magic(6)+ver(2)+len(2)+header is a multiple of 64
+    let unpadded = 10 + header.len() + 1;
+    let pad = (64 - unpadded % 64) % 64;
+    header.push_str(&" ".repeat(pad));
+    header.push('\n');
+    w.write_all(MAGIC)?;
+    w.write_all(&[1, 0])?;
+    w.write_all(&(header.len() as u16).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+    Ok(())
+}
+
+fn read_header(r: &mut impl Read) -> Result<(String, Vec<usize>)> {
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic[..6] != MAGIC {
+        bail!("not an npy file");
+    }
+    let mut len = [0u8; 2];
+    r.read_exact(&mut len)?;
+    let hlen = u16::from_le_bytes(len) as usize;
+    let mut header = vec![0u8; hlen];
+    r.read_exact(&mut header)?;
+    let header = String::from_utf8(header).context("npy header utf8")?;
+
+    let descr = extract(&header, "'descr':")
+        .context("descr missing")?
+        .trim()
+        .trim_matches(|c| c == '\'' || c == '"')
+        .to_string();
+    if header.contains("'fortran_order': True") {
+        bail!("fortran order unsupported");
+    }
+    let shape_part = header
+        .split("'shape':")
+        .nth(1)
+        .context("shape missing")?
+        .split('(')
+        .nth(1)
+        .context("shape paren")?
+        .split(')')
+        .next()
+        .context("shape close")?;
+    let shape: Vec<usize> = shape_part
+        .split(',')
+        .map(|s| s.trim())
+        .filter(|s| !s.is_empty())
+        .map(|s| s.parse::<usize>().context("shape int"))
+        .collect::<Result<_>>()?;
+    Ok((descr, shape))
+}
+
+fn extract<'a>(header: &'a str, key: &str) -> Option<&'a str> {
+    header.split(key).nth(1)?.split(',').next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_2d() {
+        let t = NpyF32::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
+        let dir = std::env::temp_dir().join("nomad_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("a.npy");
+        t.save(&p).unwrap();
+        let t2 = NpyF32::load(&p).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn roundtrip_1d() {
+        let t = NpyF32::new(vec![4], vec![-1.0, 0.0, 1.0, 2.0]);
+        let dir = std::env::temp_dir().join("nomad_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("b.npy");
+        t.save(&p).unwrap();
+        assert_eq!(NpyF32::load(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn rejects_non_npy() {
+        let dir = std::env::temp_dir().join("nomad_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.npy");
+        std::fs::write(&p, b"not an npy").unwrap();
+        assert!(NpyF32::load(&p).is_err());
+    }
+}

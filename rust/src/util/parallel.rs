@@ -1,0 +1,170 @@
+//! From-scratch data parallelism (no `rayon` offline).
+//!
+//! Two primitives cover every hot loop in NOMAD:
+//!  * [`par_for_chunks`] — split an index range over worker threads with
+//!    static chunking (our workloads are uniform per index).
+//!  * [`par_map`] — map a function over items, collecting results in order.
+//!
+//! Both use `std::thread::scope`, so borrows of the caller's data work
+//! without `Arc`.  Thread count defaults to the machine's parallelism and
+//! is overridable via the `NOMAD_THREADS` env var (useful for the scaling
+//! benchmarks where the device simulator owns the cores).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("NOMAD_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f(start, end)` over disjoint chunks of `0..n` on `threads` workers.
+/// Work is distributed dynamically in blocks of `chunk` to balance ragged
+/// workloads (e.g. variable-size clusters).
+pub fn par_for_chunks<F>(n: usize, chunk: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= chunk {
+        f(0, n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                f(start, (start + chunk).min(n));
+            });
+        }
+    });
+}
+
+/// Parallel map over `0..n`, returning results in index order.
+pub fn par_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots = out.as_mut_ptr() as usize;
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                // SAFETY: each index i is claimed exactly once via the atomic
+                // cursor, so no two threads write the same slot; the vector
+                // outlives the scope.
+                unsafe {
+                    let p = (slots as *mut Option<T>).add(i);
+                    std::ptr::write(p, Some(v));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+/// Parallel-for over mutable disjoint row chunks of a flat f32 matrix
+/// (`rows x cols`, row-major).  Each worker gets exclusive chunks of rows.
+pub fn par_rows_mut<F>(data: &mut [f32], cols: usize, chunk_rows: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = if cols == 0 { 0 } else { data.len() / cols };
+    let threads = threads.max(1);
+    if threads <= 1 || rows <= chunk_rows {
+        for (r0, chunk) in data.chunks_mut(chunk_rows * cols).enumerate() {
+            f(r0 * chunk_rows, chunk);
+        }
+        return;
+    }
+    let base = data.as_mut_ptr() as usize;
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let r0 = cursor.fetch_add(chunk_rows, Ordering::Relaxed);
+                if r0 >= rows {
+                    break;
+                }
+                let r1 = (r0 + chunk_rows).min(rows);
+                // SAFETY: row ranges [r0, r1) are disjoint across workers
+                // (claimed via the atomic cursor) and in-bounds.
+                let slice = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        (base as *mut f32).add(r0 * cols),
+                        (r1 - r0) * cols,
+                    )
+                };
+                f(r0, slice);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_all_indices_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        par_for_chunks(n, 64, 8, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let out = par_map(1000, 8, |i| i * 3);
+        assert_eq!(out, (0..1000).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_rows_mut_disjoint() {
+        let cols = 4;
+        let mut m = vec![0f32; 100 * cols];
+        par_rows_mut(&mut m, cols, 7, 8, |r0, chunk| {
+            for (dr, row) in chunk.chunks_mut(cols).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (r0 + dr) as f32;
+                }
+            }
+        });
+        for r in 0..100 {
+            for c in 0..cols {
+                assert_eq!(m[r * cols + c], r as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let out = par_map(5, 1, |i| i);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        par_for_chunks(3, 10, 4, |a, b| assert_eq!((a, b), (0, 3)));
+    }
+}

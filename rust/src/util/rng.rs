@@ -1,0 +1,260 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline build has no `rand` crate, so NOMAD ships its own generator:
+//! a PCG64-DXSM-style 128-bit state PCG (the same family rand uses for
+//! `StdRng` seeding paths) plus SplitMix64 for stream derivation.  Every
+//! stochastic component of the system (data generators, LSH, K-Means
+//! seeding, negative sampling, SGD shuffling) takes an explicit `Rng` so
+//! whole experiments replay bit-identically from a single `u64` seed.
+
+/// SplitMix64 — used to expand user seeds into well-mixed state words.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// A small, fast, statistically solid PRNG (PCG-DXSM flavored, 128-bit state).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u128,
+    inc: u128,
+}
+
+impl Rng {
+    /// Create a generator from a seed; different seeds give independent streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let a = splitmix64(&mut sm);
+        let b = splitmix64(&mut sm);
+        let c = splitmix64(&mut sm);
+        let d = splitmix64(&mut sm);
+        let mut rng = Rng {
+            state: ((a as u128) << 64) | b as u128,
+            inc: (((c as u128) << 64) | d as u128) | 1,
+        };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive the `i`-th independent child stream (device shards, workers).
+    pub fn fork(&self, i: u64) -> Self {
+        let mut sm = self.inc as u64 ^ i.wrapping_mul(0x9E3779B97F4A7C15);
+        let s = splitmix64(&mut sm) ^ (self.state as u64);
+        Rng::new(s ^ (i << 1 | 1))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // PCG-DXSM output function over a 128-bit LCG.
+        const MUL: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(self.inc);
+        let mut hi = (self.state >> 64) as u64;
+        let lo = (self.state as u64) | 1;
+        hi ^= hi >> 32;
+        hi = hi.wrapping_mul(0xDA942042E4DD58B5);
+        hi ^= hi >> 48;
+        hi.wrapping_mul(lo)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        ((self.next_u64() >> 40) as f32) * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire reduction).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Standard normal via Box–Muller (cached second value dropped for
+    /// simplicity; the force math dominates runtime, not sampling).
+    #[inline]
+    pub fn normal(&mut self) -> f32 {
+        let u1 = (self.f64().max(1e-300)) as f64;
+        let u2 = self.f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Normal with given mean / stddev.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates for
+    /// small k, rejection for tiny k relative to n).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 8 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let v = self.below(n);
+                if seen.insert(v) {
+                    out.push(v);
+                }
+            }
+            out
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn weighted(&mut self, w: &[f64]) -> usize {
+        let total: f64 = w.iter().sum();
+        let mut t = self.f64() * total;
+        for (i, &wi) in w.iter().enumerate() {
+            t -= wi;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        w.len() - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let root = Rng::new(7);
+        let mut c0 = root.fork(0);
+        let mut c1 = root.fork(1);
+        let same = (0..64).filter(|_| c0.next_u64() == c1.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[r.below(7)] += 1;
+        }
+        let expect = n / 7;
+        for &c in &counts {
+            assert!((c as i64 - expect as i64).abs() < (expect as i64) / 10);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean: f32 = xs.iter().sum::<f32>() / n as f32;
+        let var: f32 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut r = Rng::new(17);
+        for (n, k) in [(100, 5), (10, 10), (1000, 999), (50, 0)] {
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k);
+            assert!(s.iter().all(|&v| v < n));
+        }
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let mut r = Rng::new(19);
+        let w = [0.0, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..40_000 {
+            counts[r.weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        let ratio = counts[2] as f64 / counts[1] as f64;
+        assert!((ratio - 3.0).abs() < 0.3, "ratio {ratio}");
+    }
+}

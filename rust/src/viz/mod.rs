@@ -1,0 +1,205 @@
+//! Density-map rendering (paper Fig 1 / Fig 4).
+//!
+//! Renders an embedding as a log-density heat map — "bright regions
+//! indicate regions of high data density" — with optional per-label hue,
+//! plus the multiscale zoom crops of Fig 4.  The PNG encoder is written
+//! from scratch on top of `flate2` + `crc32fast` (no image crates offline).
+
+pub mod png;
+
+use crate::linalg::Matrix;
+
+/// A rendered RGB8 raster.
+pub struct Raster {
+    pub width: usize,
+    pub height: usize,
+    /// RGB, row-major, 3 bytes per pixel
+    pub pixels: Vec<u8>,
+}
+
+/// Viewport into embedding space.
+#[derive(Clone, Copy, Debug)]
+pub struct View {
+    pub cx: f32,
+    pub cy: f32,
+    pub half_w: f32,
+    pub half_h: f32,
+}
+
+impl View {
+    /// Bounding view of all points with 5% margin.
+    pub fn fit(y: &Matrix) -> View {
+        let mut min = [f32::INFINITY; 2];
+        let mut max = [f32::NEG_INFINITY; 2];
+        for i in 0..y.rows {
+            for d in 0..2 {
+                min[d] = min[d].min(y.row(i)[d]);
+                max[d] = max[d].max(y.row(i)[d]);
+            }
+        }
+        let cx = (min[0] + max[0]) / 2.0;
+        let cy = (min[1] + max[1]) / 2.0;
+        let half = ((max[0] - min[0]).max(max[1] - min[1]) / 2.0).max(1e-6) * 1.05;
+        View { cx, cy, half_w: half, half_h: half }
+    }
+
+    /// Zoom by `factor` around (cx, cy) — Fig 4's 20x / 5x magnifications.
+    pub fn zoom(&self, cx: f32, cy: f32, factor: f32) -> View {
+        View { cx, cy, half_w: self.half_w / factor, half_h: self.half_h / factor }
+    }
+}
+
+/// Render a log-density map.  When `labels` is given, pixels are tinted by
+/// the majority label's hue (like the paper's language-colored Fig 1).
+pub fn density_map(
+    y: &Matrix,
+    labels: Option<&[u32]>,
+    view: &View,
+    width: usize,
+    height: usize,
+) -> Raster {
+    let mut counts = vec![0.0f32; width * height];
+    let mut hue_acc: Vec<[f32; 3]> = vec![[0.0; 3]; width * height];
+
+    for i in 0..y.rows {
+        let px = (y.row(i)[0] - (view.cx - view.half_w)) / (2.0 * view.half_w) * width as f32;
+        let py = (y.row(i)[1] - (view.cy - view.half_h)) / (2.0 * view.half_h) * height as f32;
+        if px < 0.0 || py < 0.0 || px >= width as f32 || py >= height as f32 {
+            continue;
+        }
+        let (ix, iy) = (px as usize, py as usize);
+        let idx = iy * width + ix;
+        counts[idx] += 1.0;
+        if let Some(ls) = labels {
+            let rgb = label_color(ls[i]);
+            for c in 0..3 {
+                hue_acc[idx][c] += rgb[c];
+            }
+        }
+    }
+
+    let max_count = counts.iter().cloned().fold(0.0f32, f32::max).max(1.0);
+    let log_max = (1.0 + max_count).ln();
+    let mut pixels = vec![0u8; width * height * 3];
+    for p in 0..width * height {
+        let c = counts[p];
+        if c == 0.0 {
+            continue;
+        }
+        let lum = ((1.0 + c).ln() / log_max).clamp(0.0, 1.0);
+        let rgb = if labels.is_some() {
+            let inv = 1.0 / c;
+            let base = [hue_acc[p][0] * inv, hue_acc[p][1] * inv, hue_acc[p][2] * inv];
+            // brighten with density
+            [
+                (base[0] * (0.35 + 0.65 * lum)),
+                (base[1] * (0.35 + 0.65 * lum)),
+                (base[2] * (0.35 + 0.65 * lum)),
+            ]
+        } else {
+            inferno(lum)
+        };
+        for ch in 0..3 {
+            pixels[p * 3 + ch] = (rgb[ch] * 255.0).clamp(0.0, 255.0) as u8;
+        }
+    }
+    Raster { width, height, pixels }
+}
+
+/// Stable distinguishable color per label (golden-angle hue walk).
+fn label_color(label: u32) -> [f32; 3] {
+    let h = (label as f32 * 0.618_034) % 1.0;
+    hsv_to_rgb(h, 0.75, 1.0)
+}
+
+fn hsv_to_rgb(h: f32, s: f32, v: f32) -> [f32; 3] {
+    let i = (h * 6.0).floor();
+    let f = h * 6.0 - i;
+    let p = v * (1.0 - s);
+    let q = v * (1.0 - f * s);
+    let t = v * (1.0 - (1.0 - f) * s);
+    match (i as i32) % 6 {
+        0 => [v, t, p],
+        1 => [q, v, p],
+        2 => [p, v, t],
+        3 => [p, q, v],
+        4 => [t, p, v],
+        _ => [v, p, q],
+    }
+}
+
+/// A compact inferno-like colormap (dark purple -> orange -> bright yellow).
+fn inferno(t: f32) -> [f32; 3] {
+    let stops: [[f32; 3]; 5] = [
+        [0.0, 0.0, 0.02],
+        [0.23, 0.04, 0.33],
+        [0.7, 0.21, 0.33],
+        [0.97, 0.55, 0.04],
+        [0.99, 1.0, 0.75],
+    ];
+    let x = t.clamp(0.0, 1.0) * (stops.len() - 1) as f32;
+    let i = (x as usize).min(stops.len() - 2);
+    let f = x - i as f32;
+    [
+        stops[i][0] * (1.0 - f) + stops[i + 1][0] * f,
+        stops[i][1] * (1.0 - f) + stops[i + 1][1] * f,
+        stops[i][2] * (1.0 - f) + stops[i + 1][2] * f,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_fit_covers_points() {
+        let y = Matrix::from_vec(3, 2, vec![-1.0, -2.0, 5.0, 4.0, 0.0, 0.0]);
+        let v = View::fit(&y);
+        assert!(v.half_w >= 3.0);
+        assert!((v.cx - 2.0).abs() < 1e-6);
+        assert!((v.cy - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn density_concentrates_where_points_are() {
+        let mut data = Vec::new();
+        for _ in 0..100 {
+            data.push(0.0);
+            data.push(0.0);
+        }
+        data.push(10.0);
+        data.push(10.0);
+        let y = Matrix::from_vec(101, 2, data);
+        let v = View::fit(&y);
+        let r = density_map(&y, None, &v, 64, 64);
+        // the dense corner should be brighter than the lone point's pixel
+        let bright: u32 = r.pixels.iter().map(|&b| b as u32).sum();
+        assert!(bright > 0);
+        let max_px = r
+            .pixels
+            .chunks(3)
+            .map(|c| c.iter().map(|&b| b as u32).sum::<u32>())
+            .max()
+            .unwrap();
+        assert!(max_px > 300, "hot pixel {max_px}");
+    }
+
+    #[test]
+    fn zoom_shrinks_view() {
+        let v = View { cx: 0.0, cy: 0.0, half_w: 10.0, half_h: 10.0 };
+        let z = v.zoom(1.0, 2.0, 20.0);
+        assert!((z.half_w - 0.5).abs() < 1e-6);
+        assert_eq!((z.cx, z.cy), (1.0, 2.0));
+    }
+
+    #[test]
+    fn labels_tint_pixels() {
+        let y = Matrix::from_vec(2, 2, vec![-1.0, 0.0, 1.0, 0.0]);
+        let labels = [0u32, 7u32];
+        let v = View::fit(&y);
+        let r = density_map(&y, Some(&labels), &v, 32, 32);
+        let nonzero: Vec<&[u8]> = r.pixels.chunks(3).filter(|c| c.iter().any(|&b| b > 0)).collect();
+        assert_eq!(nonzero.len(), 2);
+        assert_ne!(nonzero[0], nonzero[1], "different labels, different colors");
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal PNG encoder (8-bit RGB, one IDAT, zlib via flate2).
+//!
+//! Written from scratch for the offline environment; enough of the spec to
+//! emit standards-compliant truecolor images for the map renders.
+
+use anyhow::Result;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::io::Write;
+use std::path::Path;
+
+/// Write an RGB8 buffer (row-major, 3 bytes/pixel) as a PNG file.
+pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
+    anyhow::ensure!(pixels.len() == width * height * 3, "pixel buffer size");
+    let mut out: Vec<u8> = Vec::with_capacity(pixels.len() / 2 + 1024);
+    out.extend_from_slice(&[0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n']);
+
+    // IHDR
+    let mut ihdr = Vec::with_capacity(13);
+    ihdr.extend_from_slice(&(width as u32).to_be_bytes());
+    ihdr.extend_from_slice(&(height as u32).to_be_bytes());
+    ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // 8-bit, truecolor, deflate, adaptive, no interlace
+    chunk(&mut out, b"IHDR", &ihdr);
+
+    // IDAT: filter byte 0 (None) per scanline, zlib-compressed
+    let mut raw = Vec::with_capacity(height * (1 + width * 3));
+    for row in 0..height {
+        raw.push(0u8);
+        raw.extend_from_slice(&pixels[row * width * 3..(row + 1) * width * 3]);
+    }
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&raw)?;
+    let compressed = enc.finish()?;
+    chunk(&mut out, b"IDAT", &compressed);
+
+    chunk(&mut out, b"IEND", &[]);
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], data: &[u8]) {
+    out.extend_from_slice(&(data.len() as u32).to_be_bytes());
+    let start = out.len();
+    out.extend_from_slice(tag);
+    out.extend_from_slice(data);
+    let crc = crc32fast::hash(&out[start..]);
+    out.extend_from_slice(&crc.to_be_bytes());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_valid_signature_and_chunks() {
+        let dir = std::env::temp_dir().join("nomad_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.png");
+        let pixels = vec![255u8; 4 * 3 * 3];
+        write_rgb(&p, 4, 3, &pixels).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(&bytes[..8], &[0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n']);
+        // IHDR directly after signature with width 4, height 3
+        assert_eq!(&bytes[12..16], b"IHDR");
+        assert_eq!(u32::from_be_bytes(bytes[16..20].try_into().unwrap()), 4);
+        assert_eq!(u32::from_be_bytes(bytes[20..24].try_into().unwrap()), 3);
+        assert!(bytes.windows(4).any(|w| w == b"IDAT"));
+        assert!(bytes.ends_with(&{
+            let mut e = Vec::new();
+            e.extend_from_slice(b"IEND");
+            e.extend_from_slice(&crc32fast::hash(b"IEND").to_be_bytes());
+            e
+        }));
+    }
+
+    #[test]
+    fn rejects_bad_buffer() {
+        let dir = std::env::temp_dir().join("nomad_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(write_rgb(&dir.join("bad.png"), 4, 4, &[0u8; 5]).is_err());
+    }
+}

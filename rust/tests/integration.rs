@@ -1,0 +1,218 @@
+//! Cross-layer integration: the AOT XLA artifacts must agree numerically
+//! with the native Rust implementations (which themselves are validated
+//! against jax.grad in the python test suite — closing the loop L1↔L2↔L3).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) when absent.
+
+use nomad::ann::backend::{AnnBackend, NativeBackend};
+use nomad::ann::graph::{edge_weights, WeightModel};
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::data::gaussian_mixture;
+use nomad::embed::native::NativeStepBackend;
+use nomad::embed::{ClusterBlock, NomadParams, StepBackend, StepInputs};
+use nomad::linalg::Matrix;
+use nomad::runtime::{XlaAnnBackend, XlaStepBackend};
+use nomad::util::rng::Rng;
+
+fn artifacts_available() -> bool {
+    let ok = nomad::runtime::artifacts_dir().join("manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: no artifacts/manifest.json — run `make artifacts`");
+    }
+    ok
+}
+
+/// Build one real block from a small dataset.
+fn make_block(seed: u64, n: usize) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let ds = gaussian_mixture(n, 16, 3, 8.0, 0.3, 0.5, &mut rng);
+    let idx = ClusterIndex::build(
+        &ds.x,
+        &IndexParams { n_clusters: 3, k: 15, ..Default::default() },
+        &NativeBackend::default(),
+        &mut rng,
+    );
+    let ew = edge_weights(&idx, WeightModel::InverseRankPaper);
+    let init: Vec<f32> = (0..n * 2).map(|_| rng.normal()).collect();
+    let block = ClusterBlock::build(&idx, &ew, 0, &init, n, 5.0, 8);
+    // means of the other clusters
+    let mut means = Vec::new();
+    let mut mean_w = Vec::new();
+    for c in 1..idx.n_clusters() {
+        let b = ClusterBlock::build(&idx, &ew, c, &init, n, 5.0, 8);
+        let m = b.mean();
+        means.push(m[0]);
+        means.push(m[1]);
+        mean_w.push(b.mean_weight(n, 5.0));
+    }
+    (block, means, mean_w)
+}
+
+#[test]
+fn xla_step_matches_native_step() {
+    if !artifacts_available() {
+        return;
+    }
+    let (block0, means, mean_w) = make_block(0, 600);
+    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 2.0 };
+
+    let xla = XlaStepBackend::from_env().expect("xla backend");
+    let native = NativeStepBackend::default();
+
+    // identical negative samples: same fork seed for both backends
+    let mut b_native = block0.clone();
+    let mut b_xla = block0.clone();
+    let mut rng1 = Rng::new(99);
+    let mut rng2 = Rng::new(99);
+    let l_native = native.step(&mut b_native, &inputs, &mut rng1);
+    let l_xla = xla.step(&mut b_xla, &inputs, &mut rng2);
+
+    assert!(
+        (l_native - l_xla).abs() < 1e-4 * (1.0 + l_native.abs()),
+        "loss native {l_native} vs xla {l_xla}"
+    );
+    let mut max_err = 0.0f32;
+    for i in 0..b_native.n_real * 2 {
+        let e = (b_native.pos[i] - b_xla.pos[i]).abs();
+        max_err = max_err.max(e);
+    }
+    assert!(max_err < 1e-3, "max position err {max_err}");
+}
+
+#[test]
+fn xla_step_multiple_epochs_stays_close() {
+    if !artifacts_available() {
+        return;
+    }
+    let (block0, means, mean_w) = make_block(1, 400);
+    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 1.0 };
+    let xla = XlaStepBackend::from_env().unwrap();
+    let native = NativeStepBackend::default();
+    let mut b_native = block0.clone();
+    let mut b_xla = block0;
+    for step in 0..5 {
+        let mut rng1 = Rng::new(1000 + step);
+        let mut rng2 = Rng::new(1000 + step);
+        native.step(&mut b_native, &inputs, &mut rng1);
+        xla.step(&mut b_xla, &inputs, &mut rng2);
+    }
+    let mut max_err = 0.0f32;
+    for i in 0..b_native.n_real * 2 {
+        max_err = max_err.max((b_native.pos[i] - b_xla.pos[i]).abs());
+    }
+    assert!(max_err < 5e-3, "5-step drift {max_err}");
+}
+
+#[test]
+fn xla_ann_assign_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut rng = Rng::new(2);
+    let ds = gaussian_mixture(700, 64, 6, 10.0, 0.2, 0.5, &mut rng);
+    let mut cent = Matrix::zeros(6, 64);
+    for c in 0..6 {
+        let r = rng.below(700);
+        cent.row_mut(c).copy_from_slice(ds.x.row(r));
+    }
+    let xla = XlaAnnBackend::from_env().unwrap();
+    let native = NativeBackend::default();
+    let a1 = xla.assign(&ds.x, &cent);
+    let a2 = native.assign(&ds.x, &cent);
+    let mut mismatched = 0;
+    for i in 0..700 {
+        if a1[i].0 != a2[i].0 {
+            // ties allowed: distances must then be equal
+            assert!(
+                (a1[i].1 - a2[i].1).abs() < 1e-2 * (1.0 + a2[i].1.abs()),
+                "row {i}: xla {:?} native {:?}",
+                a1[i],
+                a2[i]
+            );
+            mismatched += 1;
+        } else {
+            assert!((a1[i].1 - a2[i].1).abs() < 1e-2 * (1.0 + a2[i].1.abs()));
+        }
+    }
+    assert!(mismatched < 10, "{mismatched} tie mismatches");
+}
+
+#[test]
+fn xla_ann_knn_matches_native() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut rng = Rng::new(3);
+    let ds = gaussian_mixture(300, 64, 2, 6.0, 0.0, 0.3, &mut rng);
+    let xla = XlaAnnBackend::from_env().unwrap();
+    let native = NativeBackend::default();
+    let k = 15;
+    let (_, d1) = xla.knn(&ds.x, k);
+    let (_, d2_) = native.knn(&ds.x, k);
+    for i in 0..300 * k {
+        let (a, b) = (d1[i], d2_[i]);
+        if a.is_finite() || b.is_finite() {
+            assert!(
+                (a - b).abs() < 1e-2 * (1.0 + b.abs()),
+                "slot {i}: xla {a} native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn coordinator_runs_on_xla_backend() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut rng = Rng::new(4);
+    let ds = gaussian_mixture(500, 16, 4, 10.0, 0.2, 0.5, &mut rng);
+    let params = NomadParams { epochs: 8, k: 15, negs: 8, ..Default::default() };
+    let coord = NomadCoordinator::new(
+        params,
+        RunConfig {
+            n_devices: 2,
+            backend: BackendKind::Xla,
+            index: IndexParams { n_clusters: 4, k: 15, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let run = coord.fit(&ds, &NativeBackend::default());
+    assert_eq!(run.positions.rows, 500);
+    assert!(run.loss_history.iter().all(|l| l.is_finite()));
+    let first = run.loss_history.first().unwrap();
+    let last = run.loss_history.last().unwrap();
+    assert!(last < first, "loss {first} -> {last}");
+}
+
+#[test]
+fn native_and_xla_full_runs_agree_statistically() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut rng = Rng::new(5);
+    let ds = gaussian_mixture(400, 16, 3, 12.0, 0.1, 0.4, &mut rng);
+    let params = NomadParams { epochs: 12, k: 15, negs: 8, seed: 7, ..Default::default() };
+    let mk = |backend| {
+        NomadCoordinator::new(
+            params.clone(),
+            RunConfig {
+                n_devices: 1,
+                backend,
+                index: IndexParams { n_clusters: 3, k: 15, ..Default::default() },
+                ..Default::default()
+            },
+        )
+    };
+    let run_n = mk(BackendKind::Native).fit(&ds, &NativeBackend::default());
+    let run_x = mk(BackendKind::Xla).fit(&ds, &NativeBackend::default());
+    // same seed, same negative sampling order within each device -> final
+    // loss should agree tightly
+    let ln = run_n.loss_history.last().unwrap();
+    let lx = run_x.loss_history.last().unwrap();
+    assert!(
+        (ln - lx).abs() < 5e-3 * (1.0 + ln.abs()),
+        "final losses diverged: native {ln} xla {lx}"
+    );
+}

@@ -1,0 +1,176 @@
+//! End-to-end pipeline invariants — the properties Fig 2 of the paper
+//! promises, validated on the full coordinator stack.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::coordinator::{NomadCoordinator, RunConfig};
+use nomad::data::{gaussian_mixture, wikipedia_like};
+use nomad::distributed::sharder::shard_clusters;
+use nomad::distributed::MEAN_ENTRY_BYTES;
+use nomad::embed::NomadParams;
+use nomad::harness::{evaluate, EvalCfg};
+use nomad::metrics::random_triplet_accuracy;
+use nomad::util::rng::Rng;
+
+/// Fig 2's core claim: the ANN graph's edges never cross cluster (and
+/// therefore never cross device) boundaries.
+#[test]
+fn positive_edges_never_cross_devices() {
+    let mut rng = Rng::new(0);
+    let ds = wikipedia_like(3000, &mut rng);
+    let idx = ClusterIndex::build(
+        &ds.x,
+        &IndexParams { n_clusters: 24, ..Default::default() },
+        &NativeBackend::default(),
+        &mut rng,
+    );
+    assert!(idx.edges_respect_clusters());
+
+    // shard and double check at device granularity
+    let sizes: Vec<usize> = idx.clusters.iter().map(|c| c.len()).collect();
+    let shards = shard_clusters(&sizes, 4);
+    let mut device_of_cluster = vec![usize::MAX; idx.n_clusters()];
+    for (d, s) in shards.iter().enumerate() {
+        for &c in s {
+            device_of_cluster[c] = d;
+        }
+    }
+    for i in 0..idx.n() {
+        let di = device_of_cluster[idx.assign[i] as usize];
+        for &j in idx.neighbors(i) {
+            if j != nomad::ann::NO_NEIGHBOR {
+                let dj = device_of_cluster[idx.assign[j as usize] as usize];
+                assert_eq!(di, dj, "edge {i}->{j} crosses devices");
+            }
+        }
+    }
+}
+
+/// The all-gather volume is exactly |clusters| x 16 bytes x devices x epochs
+/// — nothing else crosses the (simulated) wire.
+#[test]
+fn allgather_volume_is_exactly_the_means_table() {
+    let mut rng = Rng::new(1);
+    let ds = gaussian_mixture(900, 16, 6, 10.0, 0.2, 0.5, &mut rng);
+    let devices = 3;
+    let epochs = 7;
+    let coord = NomadCoordinator::new(
+        NomadParams { epochs, ..Default::default() },
+        RunConfig {
+            n_devices: devices,
+            index: IndexParams { n_clusters: 6, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let run = coord.fit(&ds, &NativeBackend::default());
+    let expect =
+        run.n_clusters as u64 * MEAN_ENTRY_BYTES * devices as u64 * epochs as u64;
+    assert_eq!(run.comm.allgather_bytes_total, expect);
+    assert_eq!(run.comm.positive_phase_bytes_total, 0);
+}
+
+/// Same seed, same config -> bit-identical positions (native backend):
+/// whole-run determinism across index build, sharding, and SGD.
+#[test]
+fn runs_are_deterministic() {
+    let mut rng = Rng::new(2);
+    let ds = gaussian_mixture(500, 8, 4, 10.0, 0.2, 0.5, &mut rng);
+    let fit = || {
+        let coord = NomadCoordinator::new(
+            NomadParams { epochs: 15, seed: 5, ..Default::default() },
+            RunConfig {
+                n_devices: 2,
+                index: IndexParams { n_clusters: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        coord.fit(&ds, &NativeBackend::default())
+    };
+    let a = fit();
+    let b = fit();
+    assert_eq!(a.positions.data, b.positions.data);
+    assert_eq!(a.loss_history, b.loss_history);
+}
+
+/// Training must substantially beat a random projection on both metrics.
+#[test]
+fn quality_beats_random_projection() {
+    let mut rng = Rng::new(3);
+    let ds = gaussian_mixture(1200, 32, 8, 12.0, 0.3, 0.6, &mut rng);
+    let coord = NomadCoordinator::new(
+        NomadParams { epochs: 80, ..Default::default() },
+        RunConfig {
+            n_devices: 2,
+            index: IndexParams { n_clusters: 12, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let run = coord.fit(&ds, &NativeBackend::default());
+    let cfg = EvalCfg { np_sample: 250, triplets: 6000, ..Default::default() };
+    let (np, rta) = evaluate(&ds, &run.positions, &cfg);
+
+    let mut random = nomad::linalg::Matrix::zeros(ds.n(), 2);
+    for v in random.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let (np_r, rta_r) = evaluate(&ds, &random, &cfg);
+    assert!(np > np_r * 3.0 + 0.05, "NP {np} vs random {np_r}");
+    assert!(rta > rta_r + 0.1, "RTA {rta} vs random {rta_r}");
+}
+
+/// More devices must not degrade local quality catastrophically (paper
+/// reports NP parity/improvement with more GPUs; RTA may dip slightly).
+#[test]
+fn multi_device_preserves_local_quality() {
+    let mut rng = Rng::new(4);
+    let ds = gaussian_mixture(1000, 16, 8, 10.0, 0.2, 0.5, &mut rng);
+    let cfg = EvalCfg { np_sample: 250, triplets: 5000, ..Default::default() };
+    let mut nps = Vec::new();
+    for devices in [1usize, 4] {
+        let coord = NomadCoordinator::new(
+            NomadParams { epochs: 60, ..Default::default() },
+            RunConfig {
+                n_devices: devices,
+                index: IndexParams { n_clusters: 8, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let (np, _) = evaluate(&ds, &run.positions, &cfg);
+        nps.push(np);
+    }
+    assert!(
+        nps[1] > nps[0] * 0.7,
+        "4-device NP {} vs 1-device {}",
+        nps[1],
+        nps[0]
+    );
+}
+
+/// PCA init should give global structure (RTA) at least on par with random
+/// init, matching §3.4's motivation.
+#[test]
+fn pca_init_improves_global_structure() {
+    let mut rng = Rng::new(5);
+    let ds = gaussian_mixture(900, 32, 6, 14.0, 0.2, 0.4, &mut rng);
+    let mut rtas = Vec::new();
+    for pca in [true, false] {
+        let coord = NomadCoordinator::new(
+            NomadParams { epochs: 40, pca_init: pca, ..Default::default() },
+            RunConfig {
+                n_devices: 2,
+                index: IndexParams { n_clusters: 8, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        let mut mrng = Rng::new(11);
+        rtas.push(random_triplet_accuracy(&ds.x, &run.positions, 6000, &mut mrng));
+    }
+    assert!(
+        rtas[0] > rtas[1] - 0.02,
+        "PCA RTA {} should not trail random {}",
+        rtas[0],
+        rtas[1]
+    );
+}

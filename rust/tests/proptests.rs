@@ -1,0 +1,289 @@
+//! Property-based tests (hand-rolled generators over the crate PRNG; the
+//! offline environment has no proptest).  Each property runs across many
+//! random cases with printable failing seeds.
+
+use nomad::ann::backend::{AnnBackend, NativeBackend};
+use nomad::data::gaussian_mixture;
+use nomad::distributed::sharder::{imbalance, shard_clusters};
+use nomad::embed::block::bucket_for;
+use nomad::embed::native::{nomad_grad, nomad_loss};
+use nomad::embed::sgd::LrSchedule;
+use nomad::linalg::Matrix;
+use nomad::util::json::Json;
+use nomad::util::rng::Rng;
+
+const CASES: usize = 40;
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f32() < 0.5),
+        2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+        3 => {
+            let len = rng.below(12);
+            Json::Str((0..len).map(|_| char::from(32 + rng.below(94) as u8)).collect())
+        }
+        4 => {
+            let len = rng.below(5);
+            Json::Arr((0..len).map(|_| rand_json(rng, depth + 1)).collect())
+        }
+        _ => {
+            let len = rng.below(5);
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}_{}", rng.below(100)), rand_json(rng, depth + 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let v = rand_json(&mut rng, 0);
+        let parsed = Json::parse(&v.to_string())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e} on {}", v.to_string()));
+        assert_eq!(parsed, v, "seed {seed}");
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v, "seed {seed} (pretty)");
+    }
+}
+
+#[test]
+fn prop_sharder_partitions_and_balances() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n_clusters = 1 + rng.below(40);
+        let devices = 1 + rng.below(10);
+        let sizes: Vec<usize> = (0..n_clusters).map(|_| 1 + rng.below(1000)).collect();
+        let shards = shard_clusters(&sizes, devices);
+        let mut seen = vec![false; n_clusters];
+        for s in &shards {
+            for &c in s {
+                assert!(!seen[c], "seed {seed}: cluster {c} twice");
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&v| v), "seed {seed}: cluster missing");
+        // LPT bound: max load <= mean + max_item
+        let loads: Vec<usize> = shards.iter().map(|s| s.iter().map(|&c| sizes[c]).sum()).collect();
+        let total: usize = sizes.iter().sum();
+        let max_item = *sizes.iter().max().unwrap();
+        let bound = total / devices + max_item;
+        assert!(
+            *loads.iter().max().unwrap() <= bound,
+            "seed {seed}: load {} > bound {bound}",
+            loads.iter().max().unwrap()
+        );
+        let _ = imbalance(&sizes, &shards);
+    }
+}
+
+#[test]
+fn prop_native_gradient_matches_finite_differences() {
+    for seed in 0..12u64 {
+        let mut rng = Rng::new(seed);
+        let size = 16 + rng.below(32);
+        let n_real = 1 + rng.below(size);
+        let k = 1 + rng.below(6);
+        let negs = 1 + rng.below(4);
+        let r = 1 + rng.below(8);
+
+        let pos: Vec<f32> = (0..size * 2).map(|_| rng.normal() * 2.0).collect();
+        let mut nbr_idx = vec![0i32; size * k];
+        let mut nbr_w = vec![0.0f32; size * k];
+        let mut neg_idx = vec![0i32; size * negs];
+        for i in 0..size {
+            for s in 0..k {
+                nbr_idx[i * k + s] = rng.below(n_real) as i32;
+                nbr_w[i * k + s] = if i < n_real { rng.f32() } else { 0.0 };
+            }
+            for s in 0..negs {
+                neg_idx[i * negs + s] = if i < n_real { rng.below(n_real) as i32 } else { i as i32 };
+            }
+        }
+        let neg_w = rng.f32() + 0.05;
+        let means: Vec<f32> = (0..r * 2).map(|_| rng.normal() * 2.0).collect();
+        let mean_w: Vec<f32> = (0..r).map(|_| rng.f32() * 3.0).collect();
+        let mut valid = vec![0.0f32; size];
+        for v in valid.iter_mut().take(n_real) {
+            *v = 1.0;
+        }
+
+        let (grad, _) =
+            nomad_grad(&pos, &nbr_idx, &nbr_w, &neg_idx, neg_w, &means, &mean_w, &valid, k, negs);
+        // probe a few coordinates
+        for probe in 0..3 {
+            let c = rng.below(n_real * 2);
+            let eps = 2e-3f32;
+            let mut pp = pos.clone();
+            pp[c] += eps;
+            let lp = nomad_loss(&pp, &nbr_idx, &nbr_w, &neg_idx, neg_w, &means, &mean_w, &valid, k, negs);
+            let mut pm = pos.clone();
+            pm[c] -= eps;
+            let lm = nomad_loss(&pm, &nbr_idx, &nbr_w, &neg_idx, neg_w, &means, &mean_w, &valid, k, negs);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let an = grad[c] as f64;
+            assert!(
+                (fd - an).abs() < 5e-2 * (1.0 + an.abs().max(fd.abs())),
+                "seed {seed} probe {probe} coord {c}: fd {fd} vs analytic {an}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_kmeans_assignment_is_argmin() {
+    let be = NativeBackend::default();
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 20 + rng.below(100);
+        let d = 2 + rng.below(16);
+        let c = 2 + rng.below(10);
+        let mut x = Matrix::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut cent = Matrix::zeros(c, d);
+        for v in cent.data.iter_mut() {
+            *v = rng.normal();
+        }
+        for (i, (a, dist)) in be.assign(&x, &cent).into_iter().enumerate() {
+            let _ = a;
+            for j in 0..c {
+                let dj = nomad::linalg::d2(x.row(i), cent.row(j));
+                assert!(
+                    dist <= dj + 1e-4,
+                    "seed {seed} row {i}: assigned at {dist} but {j} at {dj}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_knn_distances_sorted_and_consistent() {
+    let be = NativeBackend::default();
+    for seed in 0..20u64 {
+        let mut rng = Rng::new(seed);
+        let n = 5 + rng.below(60);
+        let d = 2 + rng.below(8);
+        let k = 1 + rng.below(8);
+        let mut x = Matrix::zeros(n, d);
+        for v in x.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let (idx, dd) = be.knn(&x, k);
+        for i in 0..n {
+            for s in 0..k {
+                let j = idx[i * k + s];
+                if j == u32::MAX {
+                    assert!(s >= n - 1, "seed {seed}: premature padding");
+                    continue;
+                }
+                assert_ne!(j as usize, i);
+                let real = nomad::linalg::d2(x.row(i), x.row(j as usize));
+                assert!((real - dd[i * k + s]).abs() < 1e-3);
+                if s > 0 && dd[i * k + s - 1].is_finite() {
+                    assert!(dd[i * k + s - 1] <= dd[i * k + s] + 1e-6);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_bucket_for_is_minimal_cover() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(20_000);
+        let b = bucket_for(n);
+        assert!(b >= n, "bucket {b} < {n}");
+        // minimality among the bucket set
+        for cand in nomad::embed::block::STEP_BUCKETS {
+            if cand >= n {
+                assert!(b <= cand, "bucket {b} not minimal for {n} (cand {cand})");
+                break;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lr_schedule_monotone_nonnegative() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let epochs = 1 + rng.below(500);
+        let s = LrSchedule { initial: rng.f64() * 1000.0, epochs };
+        let mut prev = f64::INFINITY;
+        for e in 0..epochs + 2 {
+            let lr = s.at(e);
+            assert!(lr >= 0.0 && lr <= s.initial + 1e-12, "seed {seed}");
+            assert!(lr <= prev + 1e-12, "seed {seed}: lr not decreasing");
+            prev = lr;
+        }
+    }
+}
+
+#[test]
+fn prop_loss_decreases_under_descent_on_real_clusters() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed);
+        let ds = gaussian_mixture(200 + rng.below(200), 8, 3, 8.0, 0.2, 0.5, &mut rng);
+        let idx = nomad::ann::ClusterIndex::build(
+            &ds.x,
+            &nomad::ann::IndexParams { n_clusters: 3, k: 5, ..Default::default() },
+            &NativeBackend::default(),
+            &mut rng,
+        );
+        let ew = nomad::ann::graph::edge_weights(
+            &idx,
+            nomad::ann::graph::WeightModel::InverseRankForward,
+        );
+        let init: Vec<f32> = (0..ds.n() * 2).map(|_| rng.normal()).collect();
+        let mut block = nomad::embed::ClusterBlock::build(&idx, &ew, 0, &init, ds.n(), 5.0, 4);
+        block.resample_negatives(&mut rng);
+        let means = vec![0.0f32, 0.0];
+        let mean_w = vec![1.0f32];
+        let l0 = nomad_loss(
+            &block.pos, &block.nbr_idx, &block.nbr_w, &block.neg_idx, block.neg_w,
+            &means, &mean_w, &block.valid, block.k, block.negs,
+        );
+        for _ in 0..15 {
+            let (grad, _) = nomad_grad(
+                &block.pos, &block.nbr_idx, &block.nbr_w, &block.neg_idx, block.neg_w,
+                &means, &mean_w, &block.valid, block.k, block.negs,
+            );
+            for (p, g) in block.pos.iter_mut().zip(&grad) {
+                *p -= 5.0 * g;
+            }
+        }
+        let l1 = nomad_loss(
+            &block.pos, &block.nbr_idx, &block.nbr_w, &block.neg_idx, block.neg_w,
+            &means, &mean_w, &block.valid, block.k, block.negs,
+        );
+        assert!(l1 < l0, "seed {seed}: {l0} -> {l1}");
+    }
+}
+
+#[test]
+fn prop_npy_roundtrip_random_shapes() {
+    let dir = std::env::temp_dir().join("nomad_prop_npy");
+    std::fs::create_dir_all(&dir).unwrap();
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let shape = if rng.f32() < 0.5 {
+            vec![1 + rng.below(50)]
+        } else {
+            vec![1 + rng.below(30), 1 + rng.below(30)]
+        };
+        let count: usize = shape.iter().product();
+        let data: Vec<f32> = (0..count).map(|_| rng.normal()).collect();
+        let t = nomad::util::npy::NpyF32::new(shape, data);
+        let p = dir.join(format!("p{seed}.npy"));
+        t.save(&p).unwrap();
+        assert_eq!(nomad::util::npy::NpyF32::load(&p).unwrap(), t, "seed {seed}");
+    }
+}
