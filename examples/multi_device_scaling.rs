@@ -18,6 +18,7 @@ use nomad::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 8000);
     let epochs = args.usize("epochs", 60);
 

@@ -2,7 +2,6 @@
 //! leaves |M| unspecified; this probe motivates the repo default (50).
 
 use nomad::ann::backend::NativeBackend;
-use nomad::ann::graph::WeightModel;
 use nomad::ann::IndexParams;
 use nomad::coordinator::{NomadCoordinator, RunConfig};
 use nomad::data::pubmed_like;

@@ -33,6 +33,7 @@ fn single_gpu_oom(n: usize, dim: usize, budget_bytes: usize) -> bool {
 
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 10_000);
     let seeds = args.u64("seeds", 3);
     let epochs = args.usize("epochs", 120);

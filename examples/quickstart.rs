@@ -2,7 +2,7 @@
 //! report quality metrics, and render the map.
 //!
 //! ```bash
-//! cargo run --release --example quickstart -- [--n 4000] [--devices 2] [--xla]
+//! cargo run --release --example quickstart -- [--n 4000] [--devices 2] [--threads 4] [--xla]
 //! ```
 
 use nomad::ann::backend::NativeBackend;
@@ -15,8 +15,9 @@ use nomad::harness::{evaluate, EvalCfg};
 use nomad::util::rng::Rng;
 use nomad::viz::{density_map, png, View};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nomad::util::error::Result<()> {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 4000);
     let devices = args.usize("devices", 2);
     let backend = if args.bool("xla") { BackendKind::Xla } else { BackendKind::Native };

@@ -23,8 +23,9 @@ use nomad::util::rng::Rng;
 use nomad::viz::{density_map, png, View};
 use std::path::Path;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> nomad::util::error::Result<()> {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 20_000);
     let devices = args.usize("devices", 8);
     let epochs = args.usize("epochs", 120);

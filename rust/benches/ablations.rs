@@ -20,6 +20,7 @@ use nomad::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 4000);
     let epochs = args.usize("epochs", 80);
 

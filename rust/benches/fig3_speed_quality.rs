@@ -19,6 +19,7 @@ use nomad::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 5000);
     let epochs = args.usize("epochs", 120);
     let ckpt = args.usize("ckpt", 30);

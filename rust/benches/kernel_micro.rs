@@ -1,9 +1,14 @@
 //! Layer-1/Layer-3 microbenchmarks: per-block NOMAD step latency for the
-//! native path vs the AOT XLA artifact, per bucket size, plus the ANN
-//! kernels (assignment, within-cluster kNN).  These drive the §Perf
+//! native path (1 worker vs the full thread budget) and, when built with
+//! the `xla` feature and AOT artifacts exist, the XLA artifact path; plus
+//! the ANN kernels (assignment, within-cluster kNN).  These drive the §Perf
 //! iteration log in EXPERIMENTS.md.
 //!
 //!   cargo bench --bench kernel_micro  [-- --runs 20]
+//!
+//! The "speedup" column is the acceptance gauge for the parallel step path:
+//! run once with NOMAD_THREADS=1 and once with NOMAD_THREADS=4 (or just
+//! read the column — it times both thread counts in one invocation).
 
 use nomad::ann::backend::{AnnBackend, NativeBackend};
 use nomad::ann::graph::{edge_weights, WeightModel};
@@ -14,7 +19,6 @@ use nomad::data::gaussian_mixture;
 use nomad::embed::native::NativeStepBackend;
 use nomad::embed::{ClusterBlock, StepBackend, StepInputs};
 use nomad::linalg::Matrix;
-use nomad::runtime::{XlaAnnBackend, XlaStepBackend};
 use nomad::util::rng::Rng;
 
 fn block_of_size(target_real: usize, r: usize, seed: u64) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
@@ -45,41 +49,119 @@ fn block_of_size(target_real: usize, r: usize, seed: u64) -> (ClusterBlock, Vec<
     (block, means, mean_w)
 }
 
+/// Time one native step configuration with a fixed intra-step thread count.
+fn native_step_time(
+    block0: &ClusterBlock,
+    means: &[f32],
+    mean_w: &[f32],
+    runs: usize,
+    threads: usize,
+) -> f64 {
+    let native = NativeStepBackend::default();
+    let inputs = StepInputs { means, mean_w, lr: 0.5, threads };
+    let mut b = block0.clone();
+    let mut rng = Rng::new(2);
+    time_fn(2, runs, || {
+        native.step(&mut b, &inputs, &mut rng);
+    })
+    .mean
+}
+
+#[cfg(feature = "xla")]
+fn xla_step_cells(
+    block0: &ClusterBlock,
+    means: &[f32],
+    mean_w: &[f32],
+    runs: usize,
+    t_native: f64,
+) -> (String, String) {
+    use nomad::runtime::XlaStepBackend;
+    if !nomad::runtime::artifacts_dir().join("manifest.json").exists() {
+        return ("n/a".into(), "-".into());
+    }
+    match XlaStepBackend::from_env() {
+        Ok(x) => {
+            let inputs = StepInputs { means, mean_w, lr: 0.5, threads: 1 };
+            let mut b = block0.clone();
+            let mut rng = Rng::new(2);
+            let t = time_fn(2, runs, || {
+                x.step(&mut b, &inputs, &mut rng);
+            });
+            (fmt_secs(t.mean), format!("{:.2}x", t.mean / t_native))
+        }
+        Err(_) => ("n/a".into(), "-".into()),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_step_cells(
+    _block0: &ClusterBlock,
+    _means: &[f32],
+    _mean_w: &[f32],
+    _runs: usize,
+    _t_native: f64,
+) -> (String, String) {
+    ("n/a".into(), "-".into())
+}
+
+#[cfg(feature = "xla")]
+fn xla_ann_cells(x: &Matrix, cent: &Matrix, sub: &Matrix, runs: usize) -> (String, String) {
+    use nomad::runtime::XlaAnnBackend;
+    if !nomad::runtime::artifacts_dir().join("manifest.json").exists() {
+        return ("n/a".into(), "n/a".into());
+    }
+    match XlaAnnBackend::from_env() {
+        Ok(b) => {
+            let t_assign = time_fn(1, runs, || {
+                std::hint::black_box(b.assign(x, cent));
+            });
+            let t_knn = time_fn(1, runs, || {
+                std::hint::black_box(b.knn(sub, 15));
+            });
+            (fmt_secs(t_assign.mean), fmt_secs(t_knn.mean))
+        }
+        Err(_) => ("n/a".into(), "n/a".into()),
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_ann_cells(_x: &Matrix, _cent: &Matrix, _sub: &Matrix, _runs: usize) -> (String, String) {
+    ("n/a".into(), "n/a".into())
+}
+
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let runs = args.usize("runs", 15);
-    let have_artifacts = nomad::runtime::artifacts_dir().join("manifest.json").exists();
+    let threads = nomad::util::parallel::num_threads();
 
+    let par_header = format!("native x{threads}");
     let mut table = Table::new(
         "L1/L3 microbench — per-block NOMAD step",
-        &["Bucket (real pts)", "R", "native", "xla", "xla/native"],
+        &[
+            "Bucket (real pts)",
+            "R",
+            "native x1",
+            par_header.as_str(),
+            "speedup",
+            "xla",
+            "xla/native",
+        ],
     );
-    let xla = if have_artifacts { XlaStepBackend::from_env().ok() } else { None };
-    let native = NativeStepBackend::default();
 
     for (target, r) in [(400usize, 64usize), (1500, 64), (1500, 255), (6000, 255)] {
         let (block0, means, mean_w) = block_of_size(target, r, 1);
-        let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 0.5 };
-        let mut rng = Rng::new(2);
-
-        let mut bn = block0.clone();
-        let t_native = time_fn(2, runs, || {
-            native.step(&mut bn, &inputs, &mut rng);
-        });
-        let (t_xla, ratio) = if let Some(x) = &xla {
-            let mut bx = block0.clone();
-            let mut rng2 = Rng::new(2);
-            let t = time_fn(2, runs, || {
-                x.step(&mut bx, &inputs, &mut rng2);
-            });
-            (fmt_secs(t.mean), format!("{:.2}x", t.mean / t_native.mean))
-        } else {
-            ("n/a".into(), "-".into())
-        };
+        let t_serial = native_step_time(&block0, &means, &mean_w, runs, 1);
+        let t_par = native_step_time(&block0, &means, &mean_w, runs, threads);
+        // xla runs single-threaded per device, so its ratio is against the
+        // 1-worker native time (same comparison the pre-workspace bench made)
+        let (t_xla, ratio) = xla_step_cells(&block0, &means, &mean_w, runs, t_serial);
         table.row(vec![
             format!("{} (bucket {})", block0.n_real, block0.size).into(),
             format!("{r}").into(),
-            fmt_secs(t_native.mean).into(),
+            fmt_secs(t_serial).into(),
+            fmt_secs(t_par).into(),
+            format!("{:.2}x", t_serial / t_par.max(1e-12)).into(),
             t_xla.into(),
             ratio.into(),
         ]);
@@ -99,35 +181,27 @@ fn main() {
         *v = rng.normal();
     }
     let nb = NativeBackend::default();
-    let xab = if have_artifacts { XlaAnnBackend::from_env().ok() } else { None };
+    let sub = ds.x.gather(&(0..500).collect::<Vec<_>>());
+    let (xla_assign, xla_knn) = xla_ann_cells(&ds.x, &cent, &sub, runs);
 
     let t_assign_n = time_fn(1, runs, || {
         std::hint::black_box(nb.assign(&ds.x, &cent));
     });
-    let t_assign_x = xab
-        .as_ref()
-        .map(|x| time_fn(1, runs, || {
-            std::hint::black_box(x.assign(&ds.x, &cent));
-        }));
     t2.row(vec![
         "kmeans assign".into(),
         "2000x64 vs 64".into(),
         fmt_secs(t_assign_n.mean).into(),
-        t_assign_x.map(|t| fmt_secs(t.mean)).unwrap_or("n/a".into()).into(),
+        xla_assign.into(),
     ]);
 
-    let sub = ds.x.gather(&(0..500).collect::<Vec<_>>());
     let t_knn_n = time_fn(1, runs, || {
         std::hint::black_box(nb.knn(&sub, 15));
     });
-    let t_knn_x = xab.as_ref().map(|x| time_fn(1, runs, || {
-        std::hint::black_box(x.knn(&sub, 15));
-    }));
     t2.row(vec![
         "within-cluster knn".into(),
         "500x64 k=15".into(),
         fmt_secs(t_knn_n.mean).into(),
-        t_knn_x.map(|t| fmt_secs(t.mean)).unwrap_or("n/a".into()).into(),
+        xla_knn.into(),
     ]);
     t2.print();
     t2.save_json("kernel_micro_ann");

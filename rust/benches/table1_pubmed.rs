@@ -16,6 +16,7 @@ use nomad::util::stats::Summary;
 
 fn main() {
     let args = Args::from_env();
+    args.apply_thread_flag();
     let n = args.usize("n", 8000);
     let seeds = args.u64("seeds", 3);
     let epochs = args.usize("epochs", 100);

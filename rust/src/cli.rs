@@ -66,6 +66,16 @@ impl Args {
     pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
+
+    /// Bridge a `--threads N` flag to the `NOMAD_THREADS` env var that
+    /// [`crate::util::parallel::num_threads`] reads.  Every binary that
+    /// accepts the flag (the `nomad` CLI, the examples) calls this once,
+    /// right after parsing.
+    pub fn apply_thread_flag(&self) {
+        if let Some(t) = self.get("threads") {
+            std::env::set_var("NOMAD_THREADS", t);
+        }
+    }
 }
 
 #[cfg(test)]

@@ -76,6 +76,9 @@ pub struct Snapshot {
 pub struct NomadRun {
     pub positions: Matrix,
     pub loss_history: Vec<f64>,
+    /// the final all-gathered means table (for determinism checks and warm
+    /// restarts)
+    pub final_means: Vec<MeanEntry>,
     pub snapshots: Vec<Snapshot>,
     pub comm: CommStats,
     pub index_secs: f64,
@@ -166,16 +169,11 @@ impl NomadCoordinator {
                 .map(|&c| block_by_id[c].take().expect("cluster sharded once"))
                 .collect();
             let make: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> = match backend_kind {
-                BackendKind::Native => {
-                    Box::new(|| Box::new(crate::embed::native::NativeStepBackend::default()))
-                }
-                BackendKind::Xla => Box::new(|| match crate::runtime::XlaStepBackend::from_env() {
-                    Ok(b) => Box::new(b),
-                    Err(e) => {
-                        eprintln!("[nomad] XLA backend unavailable ({e}); using native");
-                        Box::new(crate::embed::native::NativeStepBackend::default())
-                    }
+                BackendKind::Native => Box::new(|| {
+                    Box::new(crate::embed::native::NativeStepBackend::default())
+                        as Box<dyn StepBackend>
                 }),
+                BackendKind::Xla => xla_step_factory(),
             };
             handles.push(spawn_device(
                 d,
@@ -183,6 +181,7 @@ impl NomadCoordinator {
                 n,
                 p.m_noise,
                 p.seed,
+                shards.len(),
                 make,
                 reply_tx.clone(),
             ));
@@ -209,25 +208,34 @@ impl NomadCoordinator {
                     means: Arc::clone(&table),
                 });
             }
+            // gather all replies first, then fold in device order so the
+            // f64 accumulation (and thus the loss history) is independent
+            // of reply arrival order
+            let mut done: Vec<(usize, Vec<MeanEntry>, f64, f64, f64, f64)> =
+                Vec::with_capacity(handles.len());
+            for _ in 0..handles.len() {
+                match reply_rx.recv().expect("device alive") {
+                    DeviceReply::EpochDone { device, means, loss_sum: ls, loss_weight: lw, step_secs, flops } => {
+                        done.push((device, means, ls, lw, step_secs, flops));
+                    }
+                    DeviceReply::Collected { .. } => unreachable!("no collect pending"),
+                }
+            }
+            done.sort_by_key(|d| d.0);
             let mut loss_sum = 0.0;
             let mut loss_w = 0.0;
             let mut max_dev_flops = 0.0f64;
             let mut total_flops = 0.0f64;
             let mut max_dev_secs = 0.0f64;
             let mut fresh: Vec<MeanEntry> = Vec::with_capacity(means_table.len());
-            for _ in 0..handles.len() {
-                match reply_rx.recv().expect("device alive") {
-                    DeviceReply::EpochDone { device, means, loss_sum: ls, loss_weight: lw, step_secs, flops } => {
-                        loss_sum += ls;
-                        loss_w += lw;
-                        max_dev_flops = max_dev_flops.max(flops);
-                        total_flops += flops;
-                        max_dev_secs = max_dev_secs.max(step_secs);
-                        device_step_secs[device] += step_secs;
-                        fresh.extend(means);
-                    }
-                    DeviceReply::Collected { .. } => unreachable!("no collect pending"),
-                }
+            for (device, means, ls, lw, step_secs, flops) in done {
+                loss_sum += ls;
+                loss_w += lw;
+                max_dev_flops = max_dev_flops.max(flops);
+                total_flops += flops;
+                max_dev_secs = max_dev_secs.max(step_secs);
+                device_step_secs[device] += step_secs;
+                fresh.extend(means);
             }
             // all-gather: rebuild the table (weights honour the approx mode)
             fresh.sort_by_key(|e| e.cluster_id);
@@ -285,6 +293,7 @@ impl NomadCoordinator {
         NomadRun {
             positions,
             loss_history,
+            final_means: means_table,
             snapshots,
             comm,
             index_secs: prep.index_secs,
@@ -295,6 +304,28 @@ impl NomadCoordinator {
             last_epoch_work: last_work,
         }
     }
+}
+
+/// Factory for the `BackendKind::Xla` device backend.
+#[cfg(feature = "xla")]
+fn xla_step_factory() -> Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> {
+    Box::new(|| match crate::runtime::XlaStepBackend::from_env() {
+        Ok(b) => Box::new(b) as Box<dyn StepBackend>,
+        Err(e) => {
+            eprintln!("[nomad] XLA backend unavailable ({e}); using native");
+            Box::new(crate::embed::native::NativeStepBackend::default()) as Box<dyn StepBackend>
+        }
+    })
+}
+
+/// Without the `xla` cargo feature the PJRT runtime is not compiled in;
+/// `BackendKind::Xla` degrades to the native backend with a notice.
+#[cfg(not(feature = "xla"))]
+fn xla_step_factory() -> Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> {
+    Box::new(|| {
+        eprintln!("[nomad] built without the `xla` feature; BackendKind::Xla uses native");
+        Box::new(crate::embed::native::NativeStepBackend::default()) as Box<dyn StepBackend>
+    })
 }
 
 /// Index + edges + init bundle reused across runs.

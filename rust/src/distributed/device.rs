@@ -6,9 +6,24 @@
 //! Communication with the leader is over channels carrying plain data:
 //! the epoch broadcast (learning rate + the all-gathered means table) and
 //! the per-epoch gather (fresh local means + loss + timing).
+//!
+//! # Intra-device parallelism
+//!
+//! When the backend is thread-safe ([`StepBackend::as_sync`]) the epoch
+//! loop steps the device's blocks concurrently with
+//! [`par_map_mut`](crate::util::parallel::par_map_mut) (dynamic chunking —
+//! blocks are ragged), splitting the machine's worker budget between the
+//! block level and the head loop inside each step.  Every block draws its
+//! negatives from an RNG forked deterministically from
+//! `(device seed, epoch, block index)`, so results are identical from run
+//! to run and independent of both the thread count and the scheduling
+//! order.  The worker budget is `NOMAD_THREADS` (or the machine's
+//! parallelism) divided by the simulated device count, so an 8-device
+//! simulation doesn't oversubscribe the host.
 
 use super::MeanEntry;
 use crate::embed::{ClusterBlock, StepBackend, StepInputs};
+use crate::util::parallel::{num_threads, par_map_mut};
 use crate::util::rng::Rng;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
@@ -60,13 +75,16 @@ pub struct DeviceHandle {
 /// Spawn a device worker.
 ///
 /// `make_backend` runs once inside the worker thread to build the step
-/// backend (native, or XLA with a thread-private PJRT client).
+/// backend (native, or XLA with a thread-private PJRT client).  `n_devices`
+/// is the total simulated device count, used to split the host's worker
+/// threads fairly across device threads.
 pub fn spawn_device(
     device: usize,
     mut blocks: Vec<ClusterBlock>,
     n_total: usize,
     m_noise: f64,
     seed: u64,
+    n_devices: usize,
     make_backend: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send>,
     reply: Sender<DeviceReply>,
 ) -> DeviceHandle {
@@ -75,10 +93,10 @@ pub fn spawn_device(
         .name(format!("nomad-dev{device}"))
         .spawn(move || {
             let backend = make_backend();
-            let mut rng = Rng::new(seed).fork(device as u64 + 1);
-            // scratch buffers for the remote-means view (excluding own cluster)
-            let mut means_buf: Vec<f32> = Vec::new();
-            let mut meanw_buf: Vec<f32> = Vec::new();
+            // root of this device's RNG tree; never advanced, only forked
+            // per (epoch, block) so stepping order cannot change results
+            let rng_root = Rng::new(seed).fork(device as u64 + 1);
+            let mut epoch_no: u64 = 0;
 
             while let Ok(cmd) = cmd_rx.recv() {
                 match cmd {
@@ -93,50 +111,54 @@ pub fn spawn_device(
                         let _ = reply.send(DeviceReply::Collected { device, positions });
                     }
                     DeviceCmd::Epoch { lr, exaggeration, means } => {
+                        let budget = (num_threads() / n_devices.max(1)).max(1);
+                        let eroot = rng_root.fork(epoch_no);
+                        epoch_no += 1;
+                        let t0 = Instant::now();
+
+                        // (weighted loss, weight, flops) per block, in order
+                        let results: Vec<(f64, f64, f64)> = match backend.as_sync() {
+                            Some(shared) if budget > 1 && blocks.len() > 1 => {
+                                let block_threads = budget.min(blocks.len());
+                                let step_threads = (budget / block_threads).max(1);
+                                par_map_mut(&mut blocks, block_threads, |bi, b| {
+                                    let mut brng = eroot.fork(bi as u64);
+                                    step_block(
+                                        shared,
+                                        b,
+                                        lr,
+                                        exaggeration,
+                                        &means,
+                                        &mut brng,
+                                        step_threads,
+                                    )
+                                })
+                            }
+                            _ => blocks
+                                .iter_mut()
+                                .enumerate()
+                                .map(|(bi, b)| {
+                                    let mut brng = eroot.fork(bi as u64);
+                                    step_block(
+                                        &*backend,
+                                        b,
+                                        lr,
+                                        exaggeration,
+                                        &means,
+                                        &mut brng,
+                                        budget,
+                                    )
+                                })
+                                .collect(),
+                        };
+
                         let mut loss_sum = 0.0f64;
                         let mut loss_weight = 0.0f64;
                         let mut flops = 0.0f64;
-                        let t0 = Instant::now();
-                        for b in blocks.iter_mut() {
-                            // remote view: every cluster except this block's
-                            means_buf.clear();
-                            meanw_buf.clear();
-                            for e in means.iter() {
-                                if e.cluster_id != b.cluster_id {
-                                    means_buf.push(e.mean[0]);
-                                    means_buf.push(e.mean[1]);
-                                    meanw_buf.push(e.weight);
-                                }
-                            }
-                            // early exaggeration: swap in a cached scaled
-                            // copy of the attractive weights for this step
-                            let exaggerated = exaggeration != 1.0;
-                            if exaggerated {
-                                if b.nbr_w_exag.is_none() {
-                                    b.nbr_w_exag =
-                                        Some(b.nbr_w.iter().map(|w| w * exaggeration).collect());
-                                }
-                                let cache = b.nbr_w_exag.take().unwrap();
-                                b.nbr_w_exag = Some(std::mem::replace(&mut b.nbr_w, cache));
-                            }
-                            let inputs = StepInputs {
-                                means: &means_buf,
-                                mean_w: &meanw_buf,
-                                lr,
-                            };
-                            let l = backend.step(b, &inputs, &mut rng);
-                            if exaggerated {
-                                let orig = b.nbr_w_exag.take().unwrap();
-                                b.nbr_w_exag = Some(std::mem::replace(&mut b.nbr_w, orig));
-                            }
-                            loss_sum += l * b.n_real as f64;
-                            loss_weight += b.n_real as f64;
-                            flops += super::comm_model::step_flops(
-                                b.n_real,
-                                b.k,
-                                meanw_buf.len(),
-                                b.negs,
-                            );
+                        for (ls, lw, fl) in &results {
+                            loss_sum += *ls;
+                            loss_weight += *lw;
+                            flops += *fl;
                         }
                         let step_secs = t0.elapsed().as_secs_f64();
                         let fresh: Vec<MeanEntry> = blocks
@@ -163,3 +185,164 @@ pub fn spawn_device(
     DeviceHandle { device, cmd: cmd_tx, join }
 }
 
+/// Step one block: build its remote-means view, apply (cached) early
+/// exaggeration, run the backend, restore the weights.  Returns
+/// `(weighted loss, weight, flops)`.
+fn step_block<B: StepBackend + ?Sized>(
+    backend: &B,
+    b: &mut ClusterBlock,
+    lr: f32,
+    exaggeration: f32,
+    means: &[MeanEntry],
+    rng: &mut Rng,
+    threads: usize,
+) -> (f64, f64, f64) {
+    // remote view: every cluster except this block's
+    let mut means_buf: Vec<f32> = Vec::with_capacity(means.len().saturating_sub(1) * 2);
+    let mut meanw_buf: Vec<f32> = Vec::with_capacity(means.len().saturating_sub(1));
+    for e in means {
+        if e.cluster_id != b.cluster_id {
+            means_buf.push(e.mean[0]);
+            means_buf.push(e.mean[1]);
+            meanw_buf.push(e.weight);
+        }
+    }
+
+    // early exaggeration: swap in a cached scaled copy of the attractive
+    // weights for this step; the cache is tagged with the multiplier it was
+    // built from and rebuilt whenever the (possibly annealed) factor moves
+    let exaggerated = exaggeration != 1.0;
+    if exaggerated {
+        let stale = match &b.nbr_w_exag {
+            Some((m, _)) => *m != exaggeration,
+            None => true,
+        };
+        if stale {
+            b.nbr_w_exag =
+                Some((exaggeration, b.nbr_w.iter().map(|w| w * exaggeration).collect()));
+        }
+        let (m, scaled) = b.nbr_w_exag.take().unwrap();
+        b.nbr_w_exag = Some((m, std::mem::replace(&mut b.nbr_w, scaled)));
+    } else if b.nbr_w_exag.is_some() {
+        // exaggeration window over: drop the cache
+        b.nbr_w_exag = None;
+    }
+
+    let inputs = StepInputs { means: &means_buf, mean_w: &meanw_buf, lr, threads };
+    let l = backend.step(b, &inputs, rng);
+
+    if exaggerated {
+        let (m, orig) = b.nbr_w_exag.take().unwrap();
+        b.nbr_w_exag = Some((m, std::mem::replace(&mut b.nbr_w, orig)));
+    }
+
+    let flops =
+        super::comm_model::step_flops(b.n_real, b.k, meanw_buf.len(), b.negs);
+    (l * b.n_real as f64, b.n_real as f64, flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::embed::native::NativeStepBackend;
+
+    /// A hand-built 4-row block (2 real points linked to each other).
+    fn mini_block() -> ClusterBlock {
+        ClusterBlock {
+            cluster_id: 0,
+            global_ids: vec![0, 1],
+            size: 4,
+            n_real: 2,
+            pos: vec![0.0, 0.0, 1.0, 0.5, 0.0, 0.0, 0.0, 0.0],
+            nbr_idx: vec![1, 0, 2, 3],
+            nbr_w: vec![1.0, 1.0, 0.0, 0.0],
+            nbr_w_exag: None,
+            neg_idx: vec![0; 4],
+            neg_w: 0.5,
+            valid: vec![1.0, 1.0, 0.0, 0.0],
+            k: 1,
+            negs: 1,
+        }
+    }
+
+    fn remote_means() -> Vec<MeanEntry> {
+        vec![
+            MeanEntry { cluster_id: 0, mean: [0.0, 0.0], weight: 1.0 },
+            MeanEntry { cluster_id: 1, mean: [3.0, -2.0], weight: 2.0 },
+        ]
+    }
+
+    #[test]
+    fn exaggeration_cache_rebuilt_on_multiplier_change() {
+        let backend = NativeStepBackend::default();
+        let mut b = mini_block();
+        let orig_w = b.nbr_w.clone();
+        let means = remote_means();
+
+        let mut rng = Rng::new(1);
+        step_block(&backend, &mut b, 0.1, 4.0, &means, &mut rng, 1);
+        let (tag, cached) = b.nbr_w_exag.clone().unwrap();
+        assert_eq!(tag, 4.0);
+        for (c, o) in cached.iter().zip(&orig_w) {
+            assert!((c - o * 4.0).abs() < 1e-6, "cache holds 4x weights");
+        }
+
+        // annealed multiplier: the cache must be rebuilt, not reused
+        let mut rng = Rng::new(2);
+        step_block(&backend, &mut b, 0.1, 2.0, &means, &mut rng, 1);
+        let (tag, cached) = b.nbr_w_exag.clone().unwrap();
+        assert_eq!(tag, 2.0);
+        for (c, o) in cached.iter().zip(&orig_w) {
+            assert!((c - o * 2.0).abs() < 1e-6, "cache rebuilt with 2x weights");
+        }
+        // originals restored after the step
+        assert_eq!(b.nbr_w, orig_w);
+
+        // window over: cache dropped
+        let mut rng = Rng::new(3);
+        step_block(&backend, &mut b, 0.1, 1.0, &means, &mut rng, 1);
+        assert!(b.nbr_w_exag.is_none());
+        assert_eq!(b.nbr_w, orig_w);
+    }
+
+    #[test]
+    fn exaggerated_step_equals_manually_scaled_weights() {
+        let backend = NativeStepBackend::default();
+        let means = remote_means();
+
+        let mut via_cache = mini_block();
+        let mut rng1 = Rng::new(7);
+        let l1 = step_block(&backend, &mut via_cache, 0.2, 3.0, &means, &mut rng1, 1).0;
+
+        let mut manual = mini_block();
+        for w in manual.nbr_w.iter_mut() {
+            *w *= 3.0;
+        }
+        let mut rng2 = Rng::new(7);
+        let l2 = step_block(&backend, &mut manual, 0.2, 1.0, &means, &mut rng2, 1).0;
+
+        assert_eq!(via_cache.pos, manual.pos, "positions must match");
+        assert!((l1 - l2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_block_excludes_own_cluster_mean() {
+        let backend = NativeStepBackend::default();
+        let means = remote_means();
+        let mut with_table = mini_block();
+        let mut rng1 = Rng::new(5);
+        step_block(&backend, &mut with_table, 0.3, 1.0, &means, &mut rng1, 1);
+
+        // hand-built inputs with only the remote cluster
+        let mut direct = mini_block();
+        let mut rng2 = Rng::new(5);
+        let inputs = StepInputs {
+            means: &[3.0, -2.0],
+            mean_w: &[2.0],
+            lr: 0.3,
+            threads: 1,
+        };
+        backend.step(&mut direct, &inputs, &mut rng2);
+        assert_eq!(with_table.pos, direct.pos);
+    }
+}

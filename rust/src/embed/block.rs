@@ -37,8 +37,12 @@ pub struct ClusterBlock {
     pub nbr_idx: Vec<i32>,
     /// p(j|i) weights, size x k (0 for padding/missing)
     pub nbr_w: Vec<f32>,
-    /// lazily cached early-exaggeration copy of `nbr_w` (device worker use)
-    pub nbr_w_exag: Option<Vec<f32>>,
+    /// Lazily cached early-exaggeration copy of `nbr_w`, tagged with the
+    /// multiplier it was built from so an annealed/changed factor rebuilds
+    /// it instead of silently reusing stale weights (device worker use).
+    /// While a step is in flight the device swaps the scaled copy into
+    /// `nbr_w` and parks the originals here under the same tag.
+    pub nbr_w_exag: Option<(f32, Vec<f32>)>,
     /// per-epoch exact-negative local indices, size x negs
     pub neg_idx: Vec<i32>,
     /// scalar weight |M| * p(m in this cluster) / negs

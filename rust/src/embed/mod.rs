@@ -85,6 +85,11 @@ pub struct StepInputs<'a> {
     pub mean_w: &'a [f32],
     /// learning rate for this epoch
     pub lr: f32,
+    /// worker threads the backend may use *inside* this step (the head loop
+    /// of the native gradient); 0 means "decide yourself" (the env/machine
+    /// default).  The device worker budgets this against its block-level
+    /// parallelism so the two layers don't oversubscribe the cores.
+    pub threads: usize,
 }
 
 /// A pluggable executor for the per-block NOMAD step.
@@ -95,4 +100,17 @@ pub trait StepBackend {
 
     /// Human-readable backend name for logs/benches.
     fn name(&self) -> &'static str;
+
+    /// Thread-safe view of this backend, if it has one.  Backends that
+    /// return `Some` are stepped concurrently across a device's blocks
+    /// ([`crate::util::parallel::par_map_mut`]); backends that are not
+    /// `Sync` — e.g. the XLA backend, which wraps a single PJRT client per
+    /// device thread — return `None` and step their blocks serially.
+    fn as_sync(&self) -> Option<&dyn SyncStepBackend> {
+        None
+    }
 }
+
+/// Marker for step backends that are safe to share across the intra-device
+/// worker threads (`step` takes `&self`, so `Sync` is all that's needed).
+pub trait SyncStepBackend: StepBackend + Sync {}

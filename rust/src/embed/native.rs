@@ -5,9 +5,31 @@
 //! mean-over-valid-heads normalization, same masked SGD update.  It is the
 //! fallback when no AOT artifact matches a block's bucket, the oracle that
 //! the XLA path is cross-checked against, and the CPU performance baseline.
+//!
+//! # Parallel execution
+//!
+//! The head loop scatters into `grad[j]`/`grad[nloc]` (both endpoints of an
+//! edge move), so naive head parallelism races.  [`nomad_grad_threaded`]
+//! therefore splits the heads into **fixed-size chunks** ([`HEAD_CHUNK`]),
+//! gives every chunk a private gradient accumulator, and reduces the
+//! accumulators **in chunk order** — which makes the result bitwise
+//! independent of the worker-thread count (only the chunk partition, fixed
+//! by the block size, determines the float summation order).
+//! [`nomad_grad_serial`] keeps the original single-pass loop as the oracle;
+//! the two agree to f32 reassociation error (cross-checked in tests).
 
-use super::{ClusterBlock, StepBackend, StepInputs};
+use super::{ClusterBlock, StepBackend, StepInputs, SyncStepBackend};
+use crate::util::parallel::{num_threads, par_map, par_rows_mut};
 use crate::util::rng::Rng;
+
+/// Heads per parallel chunk.  Fixed (not derived from the thread count) so
+/// that the chunk-ordered reduction yields identical results on any number
+/// of workers; small enough that even a 512-bucket block exposes 4-way
+/// parallelism.
+pub const HEAD_CHUNK: usize = 128;
+
+/// Coordinate rows per task in the parallel gradient reduction.
+const REDUCE_ROWS: usize = 512;
 
 /// Pure-Rust step executor.
 #[derive(Default)]
@@ -16,7 +38,8 @@ pub struct NativeStepBackend {}
 impl StepBackend for NativeStepBackend {
     fn step(&self, block: &mut ClusterBlock, inputs: &StepInputs, rng: &mut Rng) -> f64 {
         block.resample_negatives(rng);
-        let (grad, loss) = nomad_grad(
+        let threads = if inputs.threads == 0 { num_threads() } else { inputs.threads };
+        let (grad, loss) = nomad_grad_threaded(
             &block.pos,
             &block.nbr_idx,
             &block.nbr_w,
@@ -27,6 +50,7 @@ impl StepBackend for NativeStepBackend {
             &block.valid,
             block.k,
             block.negs,
+            threads,
         );
         let lr = inputs.lr;
         for l in 0..block.n_real {
@@ -39,7 +63,13 @@ impl StepBackend for NativeStepBackend {
     fn name(&self) -> &'static str {
         "native"
     }
+
+    fn as_sync(&self) -> Option<&dyn SyncStepBackend> {
+        Some(self)
+    }
 }
+
+impl SyncStepBackend for NativeStepBackend {}
 
 /// Cauchy kernel q = 1/(1+d²) on 2-d points.
 #[inline(always)]
@@ -49,13 +79,13 @@ fn q2(ax: f32, ay: f32, bx: f32, by: f32) -> (f32, f32, f32) {
     (1.0 / (1.0 + dx * dx + dy * dy), dx, dy)
 }
 
-/// Assembled, mean-normalized NOMAD gradient for one padded block.
-///
-/// Returns `(grad, mean_loss)` where `grad` is size x 2 (padding rows 0).
-/// Mirrors `python/compile/kernels/ref.py::nomad_grad_ref` +
-/// `nomad_forces_ref` with the scatter folded in.
-#[allow(clippy::too_many_arguments)]
-pub fn nomad_grad(
+/// Accumulate the unnormalized gradient and loss contributions of heads
+/// `lo..hi` into `grad` (full block size).  Shared verbatim by the serial
+/// oracle and every parallel chunk, so the two paths cannot drift.
+/// Returns `(loss_sum, nvalid)` for the processed range.
+fn accumulate_heads(
+    lo: usize,
+    hi: usize,
     pos: &[f32],
     nbr_idx: &[i32],
     nbr_w: &[f32],
@@ -66,10 +96,9 @@ pub fn nomad_grad(
     valid: &[f32],
     k: usize,
     negs: usize,
-) -> (Vec<f32>, f64) {
-    let size = valid.len();
+    grad: &mut [f32],
+) -> (f64, f64) {
     let r = mean_w.len();
-    let mut grad = vec![0.0f32; size * 2];
     let mut loss_sum = 0.0f64;
     let mut nvalid = 0.0f64;
     // scratch buffers hoisted out of the head loop (§Perf iteration 1:
@@ -79,7 +108,7 @@ pub fn nomad_grad(
     let mut dm = vec![0.0f32; r * 2];
     let mut q_in = vec![0.0f32; negs];
 
-    for i in 0..size {
+    for i in lo..hi {
         if valid[i] == 0.0 {
             continue;
         }
@@ -155,7 +184,11 @@ pub fn nomad_grad(
             }
         }
     }
+    (loss_sum, nvalid)
+}
 
+/// Divide by the valid-head count — the mean-normalization both paths share.
+fn finalize(mut grad: Vec<f32>, loss_sum: f64, nvalid: f64) -> (Vec<f32>, f64) {
     let inv = 1.0 / nvalid.max(1.0);
     for g in grad.iter_mut() {
         *g = (*g as f64 * inv) as f32;
@@ -165,8 +198,117 @@ pub fn nomad_grad(
     (grad, loss_sum * inv)
 }
 
+/// Assembled, mean-normalized NOMAD gradient for one padded block —
+/// **serial oracle**.  Returns `(grad, mean_loss)` where `grad` is
+/// size x 2 (padding rows 0).  Mirrors
+/// `python/compile/kernels/ref.py::nomad_grad_ref` + `nomad_forces_ref`
+/// with the scatter folded in.
+pub fn nomad_grad_serial(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    means: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+) -> (Vec<f32>, f64) {
+    let size = valid.len();
+    let mut grad = vec![0.0f32; size * 2];
+    let (loss_sum, nvalid) = accumulate_heads(
+        0, size, pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, k, negs, &mut grad,
+    );
+    finalize(grad, loss_sum, nvalid)
+}
+
+/// Parallel NOMAD gradient: fixed [`HEAD_CHUNK`]-head chunks with private
+/// accumulators, reduced in chunk order (see the module docs).  `threads`
+/// bounds the worker count; the *result* does not depend on it.  Falls back
+/// to [`nomad_grad_serial`] when the block is a single chunk.
+pub fn nomad_grad_threaded(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    means: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+    threads: usize,
+) -> (Vec<f32>, f64) {
+    let size = valid.len();
+    let n_chunks = size.div_ceil(HEAD_CHUNK);
+    if n_chunks <= 1 {
+        return nomad_grad_serial(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, k, negs);
+    }
+    let threads = threads.max(1).min(n_chunks);
+
+    // per-chunk private accumulators (scatter targets cover the whole
+    // block, so each buffer is full-size)
+    let partials: Vec<(Vec<f32>, f64, f64)> = par_map(n_chunks, threads, |c| {
+        let lo = c * HEAD_CHUNK;
+        let hi = (lo + HEAD_CHUNK).min(size);
+        let mut g = vec![0.0f32; size * 2];
+        let (ls, nv) = accumulate_heads(
+            lo, hi, pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, k, negs, &mut g,
+        );
+        (g, ls, nv)
+    });
+
+    let mut loss_sum = 0.0f64;
+    let mut nvalid = 0.0f64;
+    for (_, ls, nv) in &partials {
+        loss_sum += *ls;
+        nvalid += *nv;
+    }
+
+    // chunk-ordered reduction, parallel over disjoint coordinate ranges
+    let mut grad = vec![0.0f32; size * 2];
+    par_rows_mut(&mut grad, 2, REDUCE_ROWS, threads, |r0, rows| {
+        for (p, _, _) in &partials {
+            let src = &p[r0 * 2..r0 * 2 + rows.len()];
+            for (d, s) in rows.iter_mut().zip(src) {
+                *d += *s;
+            }
+        }
+    });
+    finalize(grad, loss_sum, nvalid)
+}
+
+/// Default-threaded NOMAD gradient (env/machine thread count).  This is the
+/// signature the rest of the crate and the property tests use.
+pub fn nomad_grad(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    means: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+) -> (Vec<f32>, f64) {
+    nomad_grad_threaded(
+        pos,
+        nbr_idx,
+        nbr_w,
+        neg_idx,
+        neg_w,
+        means,
+        mean_w,
+        valid,
+        k,
+        negs,
+        num_threads(),
+    )
+}
+
 /// Scalar NOMAD loss only (no gradient) — used by tests and line searches.
-#[allow(clippy::too_many_arguments)]
 pub fn nomad_loss(
     pos: &[f32],
     nbr_idx: &[i32],
@@ -287,6 +429,51 @@ mod tests {
             assert_eq!(grad[l * 2], 0.0);
             assert_eq!(grad[l * 2 + 1], 0.0);
         }
+    }
+
+    #[test]
+    fn parallel_grad_matches_serial_oracle() {
+        let mut rng = Rng::new(11);
+        for &(size, k, negs, r, n_real) in
+            &[(512usize, 6usize, 4usize, 33usize, 480usize), (384, 5, 3, 17, 300)]
+        {
+            let (pos, ni, nw, gi, gw, me, mw, va) =
+                random_problem(&mut rng, size, k, negs, r, n_real);
+            let (gs, ls) = nomad_grad_serial(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs);
+            let (gp, lp) =
+                nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs, 4);
+            assert!(
+                (ls - lp).abs() < 1e-5 * (1.0 + ls.abs()),
+                "loss serial {ls} vs parallel {lp}"
+            );
+            for i in 0..size * 2 {
+                let d = (gs[i] - gp[i]).abs();
+                assert!(
+                    d < 1e-5 * (1.0 + gs[i].abs()),
+                    "size {size} coord {i}: serial {} parallel {}",
+                    gs[i],
+                    gp[i]
+                );
+            }
+            // padding rows stay exactly zero on the parallel path too
+            for l in n_real..size {
+                assert_eq!(gp[l * 2], 0.0);
+                assert_eq!(gp[l * 2 + 1], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_grad_invariant_to_thread_count() {
+        let mut rng = Rng::new(12);
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 512, 6, 4, 20, 500);
+        let (g1, l1) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 1);
+        let (g2, l2) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 2);
+        let (g8, l8) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 8);
+        assert_eq!(g1, g2, "1 vs 2 workers must be bitwise identical");
+        assert_eq!(g2, g8, "2 vs 8 workers must be bitwise identical");
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(l2.to_bits(), l8.to_bits());
     }
 
     #[test]

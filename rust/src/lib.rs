@@ -10,7 +10,9 @@
 //!   sharding, simulated multi-device runtime with all-gathered cluster
 //!   means, SGD schedule, metrics, benches.
 //! * **Layer 2 (python/compile)** — JAX shard-step graph, AOT-lowered to
-//!   HLO text artifacts loaded at runtime via PJRT (`runtime`).
+//!   HLO text artifacts loaded at runtime via PJRT (`runtime`, behind the
+//!   off-by-default `xla` cargo feature — the default build is pure std and
+//!   works fully offline).
 //! * **Layer 1 (python/compile/kernels)** — Pallas force/assignment/kNN
 //!   kernels, interpret-mode for CPU execution.
 pub mod bench;
@@ -26,4 +28,5 @@ pub mod viz;
 pub mod coordinator;
 pub mod distributed;
 pub mod embed;
+#[cfg(feature = "xla")]
 pub mod runtime;

@@ -10,10 +10,13 @@
 //! Examples:
 //!   nomad embed --data wikipedia --n 20000 --devices 8 --out out/wiki
 //!   nomad embed --npy vectors.npy --epochs 200 --xla --out out/run1
+//!   nomad embed --data pubmed --n 50000 --threads 8 --out out/pm
 //!   nomad metrics --npy vectors.npy --embedding out/run1_positions.npy
 //!   nomad info
+//!
+//! `--threads N` (or the NOMAD_THREADS env var) bounds the worker threads
+//! used by the parallel kernels; the default is the machine's parallelism.
 
-use anyhow::{bail, Context, Result};
 use nomad::ann::backend::NativeBackend;
 use nomad::ann::graph::mutuality;
 use nomad::ann::{ClusterIndex, IndexParams};
@@ -23,13 +26,16 @@ use nomad::data::{self, Dataset};
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
 use nomad::linalg::Matrix;
+use nomad::util::error::{Context, Result};
 use nomad::util::npy::NpyF32;
 use nomad::util::rng::Rng;
 use nomad::viz::{density_map, png, View};
+use nomad::bail;
 use std::path::Path;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    args.apply_thread_flag();
     match args.positional.first().map(|s| s.as_str()) {
         Some("embed") => cmd_embed(&args),
         Some("index") => cmd_index(&args),
@@ -180,21 +186,26 @@ fn cmd_metrics(args: &Args) -> Result<()> {
 }
 
 fn cmd_info() -> Result<()> {
-    let dir = nomad::runtime::artifacts_dir();
-    println!("artifacts dir: {}", dir.display());
-    match nomad::runtime::Manifest::load(&dir) {
-        Ok(m) => {
-            println!("manifest: {} artifacts", m.artifacts.len());
-            for a in &m.artifacts {
-                println!("  {} ({}: {:?})", a.name, a.func, a.params);
+    #[cfg(feature = "xla")]
+    {
+        let dir = nomad::runtime::artifacts_dir();
+        println!("artifacts dir: {}", dir.display());
+        match nomad::runtime::Manifest::load(&dir) {
+            Ok(m) => {
+                println!("manifest: {} artifacts", m.artifacts.len());
+                for a in &m.artifacts {
+                    println!("  {} ({}: {:?})", a.name, a.func, a.params);
+                }
             }
+            Err(e) => println!("manifest unavailable: {e} (run `make artifacts`)"),
         }
-        Err(e) => println!("manifest unavailable: {e} (run `make artifacts`)"),
+        match xla::PjRtClient::cpu() {
+            Ok(c) => println!("PJRT: {} / {} device(s)", c.platform_name(), c.device_count()),
+            Err(e) => println!("PJRT unavailable: {e}"),
+        }
     }
-    match xla::PjRtClient::cpu() {
-        Ok(c) => println!("PJRT: {} / {} device(s)", c.platform_name(), c.device_count()),
-        Err(e) => println!("PJRT unavailable: {e}"),
-    }
+    #[cfg(not(feature = "xla"))]
+    println!("xla feature: disabled (pure-std offline build; --xla falls back to native)");
     println!("threads: {}", nomad::util::parallel::num_threads());
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 use crate::ann::backend::{AnnBackend, NativeBackend};
 use crate::linalg::Matrix;
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 

@@ -1,7 +1,8 @@
 //! Artifact manifest parsing and bucket selection.
 
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One AOT artifact (an HLO-text file plus its signature).

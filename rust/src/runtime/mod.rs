@@ -19,7 +19,7 @@ pub use ann::XlaAnnBackend;
 pub use artifact::{Artifact, Manifest};
 pub use step::XlaStepBackend;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Resolve the artifacts directory: `$NOMAD_ARTIFACTS` or `./artifacts`,
 /// walking up from the current directory so tests/benches work from any

@@ -7,8 +7,8 @@
 //! the native implementation — logged once.
 
 use crate::embed::{native, ClusterBlock, StepBackend, StepInputs};
+use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 
@@ -152,9 +152,16 @@ impl StepBackend for XlaStepBackend {
 
 impl XlaStepBackend {
     /// Native step reusing the already-resampled negatives (so the XLA and
-    /// native paths stay comparable within an epoch).
+    /// native paths stay comparable within an epoch).  Honors the caller's
+    /// intra-step thread budget instead of grabbing the machine default —
+    /// the device worker already divided the cores across devices.
     fn native_step_no_resample(&self, block: &mut ClusterBlock, inputs: &StepInputs) -> f64 {
-        let (grad, loss) = native::nomad_grad(
+        let threads = if inputs.threads == 0 {
+            crate::util::parallel::num_threads()
+        } else {
+            inputs.threads
+        };
+        let (grad, loss) = native::nomad_grad_threaded(
             &block.pos,
             &block.nbr_idx,
             &block.nbr_w,
@@ -165,6 +172,7 @@ impl XlaStepBackend {
             &block.valid,
             block.k,
             block.negs,
+            threads,
         );
         for l in 0..block.n_real {
             block.pos[l * 2] -= inputs.lr * grad[l * 2];

@@ -1,5 +1,7 @@
 //! Foundational substrates built from scratch for the offline environment:
-//! PRNG, JSON, npy interchange, thread-pool parallelism, summary statistics.
+//! PRNG, JSON, npy interchange, data parallelism, error handling, summary
+//! statistics.
+pub mod error;
 pub mod json;
 pub mod npy;
 pub mod parallel;

@@ -5,7 +5,8 @@
 //! real vector datasets).  Only C-contiguous little-endian arrays are
 //! supported — exactly what `numpy.save` emits by default.
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 

@@ -1,14 +1,20 @@
 //! From-scratch data parallelism (no `rayon` offline).
 //!
-//! Two primitives cover every hot loop in NOMAD:
-//!  * [`par_for_chunks`] — split an index range over worker threads with
-//!    static chunking (our workloads are uniform per index).
-//!  * [`par_map`] — map a function over items, collecting results in order.
+//! Four primitives cover every hot loop in NOMAD, all using **dynamic
+//! chunking** over an atomic cursor — our workloads are ragged (clusters
+//! and blocks vary in size), so workers grab the next chunk as they finish
+//! rather than receiving a fixed pre-split:
+//!  * [`par_for_chunks`] — run `f(start, end)` over chunks of an index range;
+//!  * [`par_map`] — map a function over indices, collecting results in order;
+//!  * [`par_map_mut`] — like `par_map`, but each index also gets exclusive
+//!    `&mut` access to its slice element (the per-block epoch loop);
+//!  * [`par_rows_mut`] — mutate disjoint row chunks of a flat matrix.
 //!
-//! Both use `std::thread::scope`, so borrows of the caller's data work
+//! All use `std::thread::scope`, so borrows of the caller's data work
 //! without `Arc`.  Thread count defaults to the machine's parallelism and
-//! is overridable via the `NOMAD_THREADS` env var (useful for the scaling
-//! benchmarks where the device simulator owns the cores).
+//! is overridable via the `NOMAD_THREADS` env var or the CLI's `--threads`
+//! flag (useful for the scaling benchmarks where the device simulator owns
+//! the cores).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -75,6 +81,47 @@ where
                 unsafe {
                     let p = (slots as *mut Option<T>).add(i);
                     std::ptr::write(p, Some(v));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+/// Parallel map over the elements of a mutable slice: `f(i, &mut items[i])`
+/// runs exactly once per index (claimed dynamically via an atomic cursor),
+/// and the results are returned in index order.  This is the primitive
+/// behind the intra-device parallel block step: each cluster block is
+/// mutated by exactly one worker per epoch.
+pub fn par_map_mut<T, R, F>(items: &mut [T], threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots = out.as_mut_ptr() as usize;
+    let base = items.as_mut_ptr() as usize;
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: each index i is claimed exactly once via the
+                // atomic cursor, so no two threads alias items[i] or the
+                // result slot; both vectors outlive the scope.
+                let item = unsafe { &mut *(base as *mut T).add(i) };
+                let v = f(i, item);
+                unsafe {
+                    std::ptr::write((slots as *mut Option<R>).add(i), Some(v));
                 }
             });
         }
@@ -159,6 +206,28 @@ mod tests {
                 assert_eq!(m[r * cols + c], r as f32);
             }
         }
+    }
+
+    #[test]
+    fn par_map_mut_mutates_and_orders() {
+        let mut items: Vec<u64> = (0..500).collect();
+        let out = par_map_mut(&mut items, 8, |i, v| {
+            *v += 1;
+            (i as u64) * 2
+        });
+        assert_eq!(items, (1..=500).collect::<Vec<_>>());
+        assert_eq!(out, (0..500).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_map_mut_single_thread() {
+        let mut items = vec![1u32, 2, 3];
+        let out = par_map_mut(&mut items, 1, |i, v| {
+            *v *= 10;
+            i
+        });
+        assert_eq!(items, vec![10, 20, 30]);
+        assert_eq!(out, vec![0, 1, 2]);
     }
 
     #[test]

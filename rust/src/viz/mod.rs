@@ -3,7 +3,8 @@
 //! Renders an embedding as a log-density heat map — "bright regions
 //! indicate regions of high data density" — with optional per-label hue,
 //! plus the multiscale zoom crops of Fig 4.  The PNG encoder is written
-//! from scratch on top of `flate2` + `crc32fast` (no image crates offline).
+//! entirely from scratch (stored-deflate zlib + bitwise CRC-32; the offline
+//! build has no image or compression crates).
 
 pub mod png;
 

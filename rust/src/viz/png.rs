@@ -1,18 +1,18 @@
-//! Minimal PNG encoder (8-bit RGB, one IDAT, zlib via flate2).
-//!
-//! Written from scratch for the offline environment; enough of the spec to
-//! emit standards-compliant truecolor images for the map renders.
+//! Minimal PNG encoder (8-bit RGB, one IDAT), written entirely from
+//! scratch for the offline environment: the zlib stream uses *stored*
+//! (uncompressed) deflate blocks with an Adler-32 trailer, and chunk CRCs
+//! come from a bitwise CRC-32 — no `flate2`/`crc32fast`/image crates.
+//! Stored blocks trade file size for zero dependencies; every PNG reader
+//! accepts them (BTYPE=00 is mandatory in the deflate spec).
 
-use anyhow::Result;
-use flate2::write::ZlibEncoder;
-use flate2::Compression;
-use std::io::Write;
+use crate::ensure;
+use crate::util::error::Result;
 use std::path::Path;
 
 /// Write an RGB8 buffer (row-major, 3 bytes/pixel) as a PNG file.
 pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
-    anyhow::ensure!(pixels.len() == width * height * 3, "pixel buffer size");
-    let mut out: Vec<u8> = Vec::with_capacity(pixels.len() / 2 + 1024);
+    ensure!(pixels.len() == width * height * 3, "pixel buffer size");
+    let mut out: Vec<u8> = Vec::with_capacity(pixels.len() + pixels.len() / 64 + 1024);
     out.extend_from_slice(&[0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n']);
 
     // IHDR
@@ -22,16 +22,13 @@ pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Res
     ihdr.extend_from_slice(&[8, 2, 0, 0, 0]); // 8-bit, truecolor, deflate, adaptive, no interlace
     chunk(&mut out, b"IHDR", &ihdr);
 
-    // IDAT: filter byte 0 (None) per scanline, zlib-compressed
+    // IDAT: filter byte 0 (None) per scanline, zlib-wrapped
     let mut raw = Vec::with_capacity(height * (1 + width * 3));
     for row in 0..height {
         raw.push(0u8);
         raw.extend_from_slice(&pixels[row * width * 3..(row + 1) * width * 3]);
     }
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&raw)?;
-    let compressed = enc.finish()?;
-    chunk(&mut out, b"IDAT", &compressed);
+    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
 
     chunk(&mut out, b"IEND", &[]);
     std::fs::write(path, out)?;
@@ -43,13 +40,113 @@ fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], data: &[u8]) {
     let start = out.len();
     out.extend_from_slice(tag);
     out.extend_from_slice(data);
-    let crc = crc32fast::hash(&out[start..]);
+    let crc = crc32(&out[start..]);
     out.extend_from_slice(&crc.to_be_bytes());
+}
+
+/// Wrap `raw` in a zlib stream of stored deflate blocks (RFC 1950/1951).
+fn zlib_stored(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() + raw.len() / 65535 * 5 + 16);
+    // CMF/FLG: deflate, 32K window, FCHECK chosen so 0x7801 % 31 == 0.
+    out.push(0x78);
+    out.push(0x01);
+    if raw.is_empty() {
+        // a single final stored block of length 0
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xFF, 0xFF]);
+    } else {
+        let mut blocks = raw.chunks(65535).peekable();
+        while let Some(b) = blocks.next() {
+            let bfinal = blocks.peek().is_none() as u8;
+            out.push(bfinal); // BFINAL + BTYPE=00 (stored)
+            let len = b.len() as u16;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&(!len).to_le_bytes());
+            out.extend_from_slice(b);
+        }
+    }
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
+/// Adler-32 checksum (RFC 1950). 5552 is the largest block size for which
+/// the u32 accumulators cannot overflow before the modulo.
+fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65521;
+    let mut a: u32 = 1;
+    let mut b: u32 = 0;
+    for block in data.chunks(5552) {
+        for &byte in block {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+/// Bitwise CRC-32 (IEEE, reflected, poly 0xEDB88320), as PNG requires.
+pub(crate) fn crc32(data: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Inflate a stream of stored deflate blocks (test-only decoder).
+    fn inflate_stored(zlib: &[u8]) -> Vec<u8> {
+        assert!(zlib.len() >= 6, "zlib too short");
+        assert_eq!(zlib[0], 0x78);
+        assert_eq!((((zlib[0] as u32) << 8) | zlib[1] as u32) % 31, 0, "FCHECK");
+        let mut i = 2;
+        let mut out = Vec::new();
+        loop {
+            let hdr = zlib[i];
+            assert_eq!(hdr & 0b110, 0, "stored blocks only");
+            let len = u16::from_le_bytes([zlib[i + 1], zlib[i + 2]]) as usize;
+            let nlen = u16::from_le_bytes([zlib[i + 3], zlib[i + 4]]);
+            assert_eq!(!(len as u16), nlen, "LEN/NLEN mismatch");
+            out.extend_from_slice(&zlib[i + 5..i + 5 + len]);
+            i += 5 + len;
+            if hdr & 1 == 1 {
+                break;
+            }
+        }
+        let adler = u32::from_be_bytes([zlib[i], zlib[i + 1], zlib[i + 2], zlib[i + 3]]);
+        assert_eq!(adler, adler32(&out), "adler32 trailer");
+        out
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard check value for "123456789"
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn adler32_known_vectors() {
+        // RFC 1950 check value for "Wikipedia"
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+        assert_eq!(adler32(b""), 1);
+    }
+
+    #[test]
+    fn zlib_stored_roundtrips() {
+        for n in [0usize, 1, 100, 65535, 65536, 200_000] {
+            let data: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
+            assert_eq!(inflate_stored(&zlib_stored(&data)), data, "n={n}");
+        }
+    }
 
     #[test]
     fn writes_valid_signature_and_chunks() {
@@ -68,9 +165,29 @@ mod tests {
         assert!(bytes.ends_with(&{
             let mut e = Vec::new();
             e.extend_from_slice(b"IEND");
-            e.extend_from_slice(&crc32fast::hash(b"IEND").to_be_bytes());
+            e.extend_from_slice(&crc32(b"IEND").to_be_bytes());
             e
         }));
+    }
+
+    #[test]
+    fn idat_payload_decodes_to_scanlines() {
+        let dir = std::env::temp_dir().join("nomad_png_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.png");
+        let (w, h) = (5usize, 2usize);
+        let pixels: Vec<u8> = (0..w * h * 3).map(|i| i as u8).collect();
+        write_rgb(&p, w, h, &pixels).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let idat_at = bytes.windows(4).position(|win| win == b"IDAT").unwrap();
+        let len = u32::from_be_bytes(bytes[idat_at - 4..idat_at].try_into().unwrap()) as usize;
+        let raw = inflate_stored(&bytes[idat_at + 4..idat_at + 4 + len]);
+        assert_eq!(raw.len(), h * (1 + w * 3));
+        for row in 0..h {
+            let at = row * (1 + w * 3);
+            assert_eq!(raw[at], 0, "filter byte");
+            assert_eq!(&raw[at + 1..at + 1 + w * 3], &pixels[row * w * 3..(row + 1) * w * 3]);
+        }
     }
 
     #[test]

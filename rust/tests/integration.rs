@@ -3,6 +3,10 @@
 //! against jax.grad in the python test suite — closing the loop L1↔L2↔L3).
 //!
 //! Requires `make artifacts`; tests skip (with a notice) when absent.
+//! The whole file is compiled only with the `xla` cargo feature — the
+//! default offline build has no PJRT runtime to integrate against.
+
+#![cfg(feature = "xla")]
 
 use nomad::ann::backend::{AnnBackend, NativeBackend};
 use nomad::ann::graph::{edge_weights, WeightModel};
@@ -55,7 +59,7 @@ fn xla_step_matches_native_step() {
         return;
     }
     let (block0, means, mean_w) = make_block(0, 600);
-    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 2.0 };
+    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 2.0, threads: 1 };
 
     let xla = XlaStepBackend::from_env().expect("xla backend");
     let native = NativeStepBackend::default();
@@ -86,7 +90,7 @@ fn xla_step_multiple_epochs_stays_close() {
         return;
     }
     let (block0, means, mean_w) = make_block(1, 400);
-    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 1.0 };
+    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 1.0, threads: 1 };
     let xla = XlaStepBackend::from_env().unwrap();
     let native = NativeStepBackend::default();
     let mut b_native = block0.clone();
