@@ -1,0 +1,208 @@
+//! Index-build benchmark: the tiled norm-trick distance engine vs the
+//! naive pointwise scans, across the build kernels (K-Means assignment,
+//! within-cluster kNN) and the end-to-end `ClusterIndex::build`, plus a
+//! bitwise determinism check across 1/2/4 worker threads — the acceptance
+//! gauge for the tiled engine (ISSUE 2).
+//!
+//!   cargo bench --bench index_build                 # full 20k x 64 run
+//!   cargo bench --bench index_build -- --smoke      # CI-sized (2k x 32)
+//!   cargo bench --bench index_build -- --n 50000 --d 128 --runs 5
+//!
+//! Emits `bench_results/BENCH_index_build.json`: shapes, naive vs tiled
+//! ns/op, naive/tiled and 1-vs-N speedups, and the determinism verdict.
+
+use nomad::ann::backend::{assign_naive, NativeBackend};
+use nomad::ann::knn::{within_clusters, within_clusters_naive};
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::bench::jsonx::{arr, num, obj, s, Json};
+use nomad::bench::{fmt_secs, save_bench_json, time_fn, Table};
+use nomad::cli::Args;
+use nomad::data::gaussian_mixture;
+use nomad::linalg::distance::{assign_tiled, self_knn_tiled};
+use nomad::linalg::Matrix;
+use nomad::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let args = Args::from_env();
+    args.apply_thread_flag();
+    let smoke = args.bool("smoke");
+    let n = args.usize("n", if smoke { 2_000 } else { 20_000 });
+    let d = args.usize("d", if smoke { 32 } else { 64 });
+    let n_clusters = args.usize("clusters", 32);
+    let k = args.usize("k", 15);
+    let runs = args.usize("runs", if smoke { 1 } else { 3 });
+    let threads = nomad::util::parallel::num_threads();
+
+    let mut rng = Rng::new(7);
+    let ds = gaussian_mixture(n, d, 16, 12.0, 0.2, 0.5, &mut rng);
+    let mut cent = Matrix::zeros(n_clusters, d);
+    for c in 0..n_clusters {
+        let r = rng.below(n);
+        cent.row_mut(c).copy_from_slice(ds.x.row(r));
+    }
+
+    let be = NativeBackend::default();
+    let par_header = format!("tiled x{threads}");
+    let mut table = Table::new(
+        &format!("index build — naive vs tiled engine ({n} x {d}, {n_clusters} clusters, k={k})"),
+        &["Kernel", "Shape", "naive x1", "tiled x1", par_header.as_str(), "naive/tiled", "x1/xN"],
+    );
+    let mut rows_json: Vec<Json> = Vec::new();
+    let push = |table: &mut Table,
+                    rows_json: &mut Vec<Json>,
+                    kernel: &str,
+                    shape: String,
+                    t_naive: f64,
+                    t_tiled1: f64,
+                    t_tiledn: f64| {
+        table.row(vec![
+            kernel.into(),
+            shape.clone().into(),
+            fmt_secs(t_naive).into(),
+            fmt_secs(t_tiled1).into(),
+            fmt_secs(t_tiledn).into(),
+            format!("{:.2}x", t_naive / t_tiled1.max(1e-12)).into(),
+            format!("{:.2}x", t_tiled1 / t_tiledn.max(1e-12)).into(),
+        ]);
+        rows_json.push(obj(vec![
+            ("kernel", s(kernel)),
+            ("shape", s(&shape)),
+            ("naive_ns_per_op", num(t_naive * 1e9)),
+            ("tiled_x1_ns_per_op", num(t_tiled1 * 1e9)),
+            ("tiled_xn_ns_per_op", num(t_tiledn * 1e9)),
+            ("speedup_naive_over_tiled_x1", num(t_naive / t_tiled1.max(1e-12))),
+            ("speedup_x1_over_xn", num(t_tiled1 / t_tiledn.max(1e-12))),
+        ]));
+    };
+
+    // ---- K-Means assignment ---------------------------------------------
+    let t_a_naive = time_fn(0, runs, || {
+        black_box(assign_naive(&ds.x, &cent));
+    })
+    .mean;
+    let t_a_tiled1 = time_fn(0, runs, || {
+        black_box(assign_tiled(&ds.x, &cent, 1));
+    })
+    .mean;
+    let t_a_tiledn = time_fn(0, runs, || {
+        black_box(assign_tiled(&ds.x, &cent, threads));
+    })
+    .mean;
+    push(
+        &mut table,
+        &mut rows_json,
+        "kmeans assign",
+        format!("{n}x{d} vs {n_clusters}"),
+        t_a_naive,
+        t_a_tiled1,
+        t_a_tiledn,
+    );
+
+    // ---- within-cluster kNN ---------------------------------------------
+    // cluster once with the tiled path, then time only the kNN stage
+    let params = IndexParams { n_clusters, k, ..Default::default() };
+    let km = nomad::ann::kmeans::run(&ds.x, &params, &be, &mut rng);
+    let sizes: Vec<usize> = km.clusters.iter().map(|c| c.len()).collect();
+    let biggest = sizes.iter().copied().max().unwrap_or(0);
+    let t_k_naive = time_fn(0, runs, || {
+        black_box(within_clusters_naive(&ds.x, &km.clusters, k));
+    })
+    .mean;
+    let t_k_tiled1 = {
+        std::env::set_var("NOMAD_THREADS", "1");
+        let t = time_fn(0, runs, || {
+            black_box(within_clusters(&ds.x, &km.clusters, k, &be));
+        })
+        .mean;
+        std::env::set_var("NOMAD_THREADS", threads.to_string());
+        t
+    };
+    let t_k_tiledn = time_fn(0, runs, || {
+        black_box(within_clusters(&ds.x, &km.clusters, k, &be));
+    })
+    .mean;
+    push(
+        &mut table,
+        &mut rows_json,
+        "within-cluster knn",
+        format!("{} clusters (max {biggest}) k={k}", km.clusters.len()),
+        t_k_naive,
+        t_k_tiled1,
+        t_k_tiledn,
+    );
+
+    // ---- end-to-end index build (tiled only at full scale) ---------------
+    let t_build = time_fn(0, runs, || {
+        let mut r = Rng::new(11);
+        black_box(ClusterIndex::build(&ds.x, &params, &be, &mut r));
+    })
+    .mean;
+    table.row(vec![
+        "full index build".into(),
+        format!("{n}x{d}").into(),
+        "-".into(),
+        "-".into(),
+        fmt_secs(t_build).into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    rows_json.push(obj(vec![
+        ("kernel", s("full index build")),
+        ("shape", s(&format!("{n}x{d}"))),
+        ("tiled_xn_ns_per_op", num(t_build * 1e9)),
+    ]));
+
+    // ---- determinism: bitwise identical across 1/2/4 threads -------------
+    let a1 = assign_tiled(&ds.x, &cent, 1);
+    let det_assign = assign_tiled(&ds.x, &cent, 2) == a1 && assign_tiled(&ds.x, &cent, 4) == a1;
+    let sub = {
+        let big = (0..km.clusters.len()).max_by_key(|&c| km.clusters[c].len()).unwrap();
+        let ids: Vec<usize> = km.clusters[big].iter().map(|&m| m as usize).collect();
+        ds.x.gather(&ids)
+    };
+    let k1 = self_knn_tiled(&sub, k, 1);
+    let det_knn = self_knn_tiled(&sub, k, 2) == k1 && self_knn_tiled(&sub, k, 4) == k1;
+    let mut det_build = true;
+    let mut first: Option<ClusterIndex> = None;
+    for t in [1usize, 2, 4] {
+        std::env::set_var("NOMAD_THREADS", t.to_string());
+        let mut r = Rng::new(23);
+        let idx = ClusterIndex::build(&ds.x, &params, &be, &mut r);
+        if let Some(f) = &first {
+            det_build &= idx.assign == f.assign
+                && idx.nbr_idx == f.nbr_idx
+                && idx.nbr_d2 == f.nbr_d2
+                && idx.centroids.data == f.centroids.data;
+        } else {
+            first = Some(idx);
+        }
+    }
+    std::env::set_var("NOMAD_THREADS", threads.to_string());
+    let deterministic = det_assign && det_knn && det_build;
+
+    table.print();
+    println!(
+        "\nbitwise identical across 1/2/4 threads: assign={det_assign} knn={det_knn} build={det_build}"
+    );
+    table.save_json("index_build");
+    save_bench_json(
+        "index_build",
+        obj(vec![
+            ("bench", s("index_build")),
+            ("n", num(n as f64)),
+            ("d", num(d as f64)),
+            ("n_clusters", num(n_clusters as f64)),
+            ("k", num(k as f64)),
+            ("threads", num(threads as f64)),
+            ("runs", num(runs as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("rows", arr(rows_json)),
+            ("deterministic_across_threads", Json::Bool(deterministic)),
+        ]),
+    );
+    if !deterministic {
+        eprintln!("FAIL: tiled results changed with thread count");
+        std::process::exit(1);
+    }
+}

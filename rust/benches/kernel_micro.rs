@@ -10,10 +10,11 @@
 //! run once with NOMAD_THREADS=1 and once with NOMAD_THREADS=4 (or just
 //! read the column — it times both thread counts in one invocation).
 
-use nomad::ann::backend::{AnnBackend, NativeBackend};
+use nomad::ann::backend::{assign_naive, knn_naive, AnnBackend, NativeBackend};
 use nomad::ann::graph::{edge_weights, WeightModel};
 use nomad::ann::{ClusterIndex, IndexParams};
-use nomad::bench::{fmt_secs, time_fn, Table};
+use nomad::bench::jsonx::{arr, num, obj, s, Json};
+use nomad::bench::{fmt_secs, save_bench_json, time_fn, Table};
 use nomad::cli::Args;
 use nomad::data::gaussian_mixture;
 use nomad::embed::native::NativeStepBackend;
@@ -149,6 +150,7 @@ fn main() {
         ],
     );
 
+    let mut step_rows: Vec<Json> = Vec::new();
     for (target, r) in [(400usize, 64usize), (1500, 64), (1500, 255), (6000, 255)] {
         let (block0, means, mean_w) = block_of_size(target, r, 1);
         let t_serial = native_step_time(&block0, &means, &mean_w, runs, 1);
@@ -165,14 +167,23 @@ fn main() {
             t_xla.into(),
             ratio.into(),
         ]);
+        step_rows.push(obj(vec![
+            ("shape", s(&format!("{}x{} r={r}", block0.n_real, block0.size))),
+            ("native_x1_ns_per_op", num(t_serial * 1e9)),
+            ("native_xn_ns_per_op", num(t_par * 1e9)),
+            ("speedup_x1_over_xn", num(t_serial / t_par.max(1e-12))),
+        ]));
     }
     table.print();
     table.save_json("kernel_micro_step");
 
     // ---- ANN kernels ------------------------------------------------------
+    // both sides single-threaded so the speedup column isolates the
+    // algorithmic win of the tiled engine; thread scaling is
+    // bench/index_build's job
     let mut t2 = Table::new(
-        "ANN microbench — assignment & within-cluster kNN",
-        &["Kernel", "Shape", "native", "xla"],
+        "ANN microbench — assignment & within-cluster kNN (naive vs tiled, both x1)",
+        &["Kernel", "Shape", "naive x1", "tiled x1", "speedup", "xla"],
     );
     let mut rng = Rng::new(3);
     let ds = gaussian_mixture(2000, 64, 8, 10.0, 0.2, 0.5, &mut rng);
@@ -183,26 +194,62 @@ fn main() {
     let nb = NativeBackend::default();
     let sub = ds.x.gather(&(0..500).collect::<Vec<_>>());
     let (xla_assign, xla_knn) = xla_ann_cells(&ds.x, &cent, &sub, runs);
+    let mut ann_rows: Vec<Json> = Vec::new();
 
+    let t_assign_naive = time_fn(1, runs, || {
+        std::hint::black_box(assign_naive(&ds.x, &cent));
+    });
     let t_assign_n = time_fn(1, runs, || {
-        std::hint::black_box(nb.assign(&ds.x, &cent));
+        std::hint::black_box(nomad::linalg::distance::assign_tiled(&ds.x, &cent, 1));
     });
     t2.row(vec![
         "kmeans assign".into(),
         "2000x64 vs 64".into(),
+        fmt_secs(t_assign_naive.mean).into(),
         fmt_secs(t_assign_n.mean).into(),
+        format!("{:.2}x", t_assign_naive.mean / t_assign_n.mean.max(1e-12)).into(),
         xla_assign.into(),
     ]);
+    ann_rows.push(obj(vec![
+        ("kernel", s("kmeans assign")),
+        ("shape", s("2000x64 vs 64")),
+        ("naive_ns_per_op", num(t_assign_naive.mean * 1e9)),
+        ("tiled_x1_ns_per_op", num(t_assign_n.mean * 1e9)),
+        ("speedup_naive_over_tiled_x1", num(t_assign_naive.mean / t_assign_n.mean.max(1e-12))),
+    ]));
 
+    let t_knn_naive = time_fn(1, runs, || {
+        std::hint::black_box(knn_naive(&sub, 15));
+    });
     let t_knn_n = time_fn(1, runs, || {
-        std::hint::black_box(nb.knn(&sub, 15));
+        std::hint::black_box(nb.knn_with_budget(&sub, 15, 1));
     });
     t2.row(vec![
         "within-cluster knn".into(),
         "500x64 k=15".into(),
+        fmt_secs(t_knn_naive.mean).into(),
         fmt_secs(t_knn_n.mean).into(),
+        format!("{:.2}x", t_knn_naive.mean / t_knn_n.mean.max(1e-12)).into(),
         xla_knn.into(),
     ]);
+    ann_rows.push(obj(vec![
+        ("kernel", s("within-cluster knn")),
+        ("shape", s("500x64 k=15")),
+        ("naive_ns_per_op", num(t_knn_naive.mean * 1e9)),
+        ("tiled_x1_ns_per_op", num(t_knn_n.mean * 1e9)),
+        ("speedup_naive_over_tiled_x1", num(t_knn_naive.mean / t_knn_n.mean.max(1e-12))),
+    ]));
     t2.print();
     t2.save_json("kernel_micro_ann");
+
+    save_bench_json(
+        "kernel_micro",
+        obj(vec![
+            ("bench", s("kernel_micro")),
+            ("threads", num(threads as f64)),
+            ("runs", num(runs as f64)),
+            ("step", arr(step_rows)),
+            ("ann", arr(ann_rows)),
+        ]),
+    );
 }

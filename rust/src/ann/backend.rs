@@ -1,16 +1,26 @@
 //! Distance-computation backend abstraction.
 //!
 //! The heavy O(N·C·D) assignment and O(n_c²·D) within-cluster kNN work can
-//! run either natively (tiled Rust loops, this file) or through the
-//! AOT-compiled XLA artifacts (`crate::runtime::XlaAnnBackend`).  Both
-//! implement [`AnnBackend`] and must agree numerically — the integration
-//! tests cross-check them.
+//! run either natively (the tiled norm-trick engine,
+//! `crate::linalg::distance`, DESIGN.md §8) or through the AOT-compiled
+//! XLA artifacts (`crate::runtime::XlaAnnBackend`).  Both implement
+//! [`AnnBackend`] and must agree numerically — the integration tests
+//! cross-check them.
+//!
+//! The pre-engine pointwise scans are kept here as [`assign_naive`] and
+//! [`knn_naive`]: slow, obviously-correct oracles implementing the same
+//! `(d², index)` ordering contract as the engine, which the property
+//! tests in `tests/distance_engine.rs` compare against exactly.
 
-use crate::linalg::{d2, Matrix};
-use crate::util::parallel::{num_threads, par_map};
+use crate::linalg::{d2, distance, Matrix};
+use crate::util::parallel::num_threads;
 
 /// Pluggable distance engine for the ANN index build.
-pub trait AnnBackend {
+///
+/// `Sync` is a supertrait: the within-cluster kNN build dispatches whole
+/// clusters across worker threads, each calling into the backend
+/// concurrently.
+pub trait AnnBackend: Sync {
     /// For each row of `x`, the nearest centroid and its squared distance.
     fn assign(&self, x: &Matrix, centroids: &Matrix) -> Vec<(u32, f32)>;
 
@@ -18,72 +28,97 @@ pub trait AnnBackend {
     /// Returns `(idx, d2)` of shape n x k (row-major), local indices,
     /// `u32::MAX` / `INFINITY` padding when n <= k.
     fn knn(&self, x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>);
+
+    /// Like [`AnnBackend::knn`], but with an explicit worker budget: the
+    /// within-cluster build runs whole clusters on separate threads and
+    /// hands each call its share of the pool.  Backends that do their own
+    /// scheduling (e.g. a device queue) may ignore the hint — the default
+    /// does.
+    fn knn_with_budget(&self, x: &Matrix, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
+        let _ = threads;
+        self.knn(x, k)
+    }
 }
 
-/// Tiled, multithreaded pure-Rust backend.
+/// Tiled, multithreaded pure-Rust backend over the norm-trick distance
+/// engine (`crate::linalg::distance`).
 #[derive(Default)]
 pub struct NativeBackend {}
 
 impl AnnBackend for NativeBackend {
     fn assign(&self, x: &Matrix, centroids: &Matrix) -> Vec<(u32, f32)> {
-        let threads = num_threads();
-        par_map(x.rows, threads, |i| {
+        distance::assign_tiled(x, centroids, num_threads())
+    }
+
+    fn knn(&self, x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>) {
+        distance::self_knn_tiled(x, k, num_threads())
+    }
+
+    fn knn_with_budget(&self, x: &Matrix, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
+        distance::self_knn_tiled(x, k, threads)
+    }
+}
+
+/// Pointwise assignment oracle: for each row, scan every centroid with the
+/// engine's ordering contract (strictly-smaller distance wins, so the
+/// smallest index wins ties; `total_cmp`, so NaN distances are skipped
+/// instead of panicking).
+pub fn assign_naive(x: &Matrix, centroids: &Matrix) -> Vec<(u32, f32)> {
+    (0..x.rows)
+        .map(|i| {
             let row = x.row(i);
             let mut best = (0u32, f32::INFINITY);
             for c in 0..centroids.rows {
                 let dist = d2(row, centroids.row(c));
-                if dist < best.1 {
+                if dist.total_cmp(&best.1) == std::cmp::Ordering::Less {
                     best = (c as u32, dist);
                 }
             }
             best
         })
-    }
+        .collect()
+}
 
-    fn knn(&self, x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>) {
-        let n = x.rows;
-        let threads = num_threads();
-        let rows: Vec<(Vec<u32>, Vec<f32>)> = par_map(n, threads, |i| {
-            // bounded max-heap of the k closest
-            let mut heap: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-            let xi = x.row(i);
-            for j in 0..n {
-                if j == i {
+/// Pointwise kNN oracle: the pre-engine per-row scan with a bounded
+/// sorted buffer (O(n·(d+k)) per row, no full sort, serial), updated to
+/// the engine's `(d², index)` ordering contract so ties break identically.
+/// Used by tests and as the naive side of `bench/index_build`.
+pub fn knn_naive(x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>) {
+    let n = x.rows;
+    let mut idx = vec![u32::MAX; n * k];
+    let mut dd = vec![f32::INFINITY; n * k];
+    if k == 0 {
+        return (idx, dd);
+    }
+    let lex = |a: (f32, u32), b: (f32, u32)| match a.0.total_cmp(&b.0) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => a.1 < b.1,
+    };
+    for i in 0..n {
+        // ascending (d², index) buffer of the k best so far
+        let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+        let xi = x.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let cand = (d2(xi, x.row(j)), j as u32);
+            if best.len() == k {
+                if !lex(cand, *best.last().unwrap()) {
                     continue;
                 }
-                let dist = d2(xi, x.row(j));
-                if heap.len() < k {
-                    heap.push((dist, j as u32));
-                    if heap.len() == k {
-                        heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-                    }
-                } else if dist < heap[0].0 {
-                    // replace current max, restore descending order
-                    heap[0] = (dist, j as u32);
-                    let mut p = 0;
-                    while p + 1 < k && heap[p].0 < heap[p + 1].0 {
-                        heap.swap(p, p + 1);
-                        p += 1;
-                    }
-                }
+                best.pop();
             }
-            heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-            let mut idx = vec![u32::MAX; k];
-            let mut dd = vec![f32::INFINITY; k];
-            for (slot, (dist, j)) in heap.into_iter().enumerate() {
-                idx[slot] = j;
-                dd[slot] = dist;
-            }
-            (idx, dd)
-        });
-        let mut idx = Vec::with_capacity(n * k);
-        let mut dd = Vec::with_capacity(n * k);
-        for (i, d_) in rows {
-            idx.extend(i);
-            dd.extend(d_);
+            let pos = best.iter().position(|&b| lex(cand, b)).unwrap_or(best.len());
+            best.insert(pos, cand);
         }
-        (idx, dd)
+        for (slot, (dist, j)) in best.into_iter().enumerate() {
+            idx[i * k + slot] = j;
+            dd[i * k + slot] = dist;
+        }
     }
+    (idx, dd)
 }
 
 #[cfg(test)]
@@ -110,9 +145,20 @@ mod tests {
             let best = naive
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap();
-            assert_eq!(a as usize, best.0);
+            // the tiled engine's norm-trick distances differ from the
+            // pointwise ones by rounding, so a different winner is legal
+            // only at a (near-)tie
+            if a as usize != best.0 {
+                assert!(
+                    (naive[a as usize] - best.1).abs() < 1e-4,
+                    "row {i}: picked {a} at {} but argmin {} at {}",
+                    naive[a as usize],
+                    best.0,
+                    best.1
+                );
+            }
             assert!((dist - naive[a as usize]).abs() < 1e-4);
         }
     }
@@ -129,7 +175,7 @@ mod tests {
                 .filter(|&j| j != i)
                 .map(|j| (d2(x.row(i), x.row(j)), j as u32))
                 .collect();
-            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            all.sort_by(|a, b| a.0.total_cmp(&b.0));
             for s in 0..k {
                 assert!((dd[i * k + s] - all[s].0).abs() < 1e-4, "row {i} slot {s}");
             }
@@ -165,5 +211,15 @@ mod tests {
             assert!(dd[i * 5 + 2].is_infinite());
             assert_ne!(idx[i * 5], u32::MAX);
         }
+    }
+
+    #[test]
+    fn budgeted_knn_is_bitwise_equal() {
+        let mut rng = Rng::new(3);
+        let x = randm(&mut rng, 70, 5);
+        let be = NativeBackend::default();
+        let a = be.knn(&x, 6);
+        let b = be.knn_with_budget(&x, 6, 1);
+        assert_eq!(a, b);
     }
 }

@@ -7,6 +7,9 @@
 //!  * empty clusters are re-seeded to the point farthest from its centroid;
 //!  * clusters above `max_cluster_size` are recursively 2-means split so
 //!    shard buckets stay bounded (the AOT step artifacts have fixed shapes).
+//!
+//! The E-step assignment runs on the backend's distance engine — natively,
+//! the tiled norm-trick kernels of `crate::linalg::distance` (DESIGN.md §8).
 
 use super::backend::AnnBackend;
 use super::IndexParams;
@@ -65,7 +68,7 @@ pub fn run(
                     .max_by(|&p, &q| {
                         let dp = crate::linalg::d2(x.row(p), centroids.row(assign[p] as usize));
                         let dq = crate::linalg::d2(x.row(q), centroids.row(assign[q] as usize));
-                        dp.partial_cmp(&dq).unwrap()
+                        dp.total_cmp(&dq)
                     })
                     .unwrap();
                 centroids.row_mut(a).copy_from_slice(x.row(far));
@@ -128,7 +131,7 @@ fn enforce_max_size(
             .max_by(|&p, &q| {
                 let dp = crate::linalg::d2(sub.row(p), sub.row(a));
                 let dq = crate::linalg::d2(sub.row(q), sub.row(a));
-                dp.partial_cmp(&dq).unwrap()
+                dp.total_cmp(&dq)
             })
             .unwrap();
         c2.row_mut(0).copy_from_slice(sub.row(a));

@@ -1,13 +1,18 @@
 //! Within-cluster exact kNN (paper §3.2) plus the brute-force global kNN
-//! used as metric ground truth.
+//! used as metric ground truth.  Distance work runs on the tiled
+//! norm-trick engine (`crate::linalg::distance`, DESIGN.md §8); the
+//! `*_naive` functions keep the pointwise scans as exact-match oracles.
 
-use super::backend::AnnBackend;
+use super::backend::{knn_naive, AnnBackend};
 use super::NO_NEIGHBOR;
-use crate::linalg::{d2, Matrix};
-use crate::util::parallel::{num_threads, par_map};
+use crate::linalg::{distance, Matrix};
+use crate::util::parallel::{num_threads, par_for_chunks};
 
 /// Exact kNN inside each cluster, results in *global* point ids.
 /// Returns flat `(idx, d2)` arrays of shape n x k.
+///
+/// Clusters must be disjoint subsets of `0..x.rows` (checked); points not
+/// listed in any cluster keep the `NO_NEIGHBOR`/∞ padding.
 pub fn within_clusters(
     x: &Matrix,
     clusters: &[Vec<u32>],
@@ -18,22 +23,105 @@ pub fn within_clusters(
     let mut nbr_idx = vec![NO_NEIGHBOR; n * k];
     let mut nbr_d2 = vec![f32::INFINITY; n * k];
 
-    // process clusters serially; the backend parallelizes internally (the
-    // distributed coordinator overlaps clusters across devices instead)
+    // The raw-pointer scatter below is sound only if cluster member lists
+    // are in-range and pairwise disjoint — validate up front (O(n), free
+    // next to the O(n_c²·d) kNN work) instead of risking racing writes.
+    let mut seen = vec![false; n];
+    for members in clusters {
+        for &m in members {
+            let m = m as usize;
+            assert!(
+                m < n && !seen[m],
+                "clusters must be disjoint subsets of 0..{n} (bad id {m})"
+            );
+            seen[m] = true;
+        }
+    }
+
+    // Clusters are dispatched to workers largest-first over par_for_chunks'
+    // dynamic cursor; each worker gathers its cluster, runs the backend's
+    // kNN with a share of the thread pool, and scatters results straight
+    // into the per-cluster slices of the global neighbor arrays.  Member
+    // lists are disjoint (checked above), so those row ranges are written
+    // by exactly one worker; results are position-addressed, so the output
+    // is independent of scheduling.  (The distributed coordinator overlaps
+    // clusters across devices on top of this.)
+    let mut order: Vec<usize> =
+        (0..clusters.len()).filter(|&c| clusters[c].len() > 1).collect();
+    order.sort_by_key(|&c| std::cmp::Reverse(clusters[c].len()));
+    if order.is_empty() {
+        return (nbr_idx, nbr_d2);
+    }
+    let threads = num_threads().max(1);
+    // Split the pool between cluster-level and intra-cluster parallelism by
+    // the work profile: per-cluster kNN is O(n_c²·d), so cap the number of
+    // concurrently running clusters at total_work / max_work — when one
+    // giant cluster dominates, outer collapses toward 1 and the giant gets
+    // the whole pool via `knn_with_budget` instead of serializing on a
+    // single thread while the other workers idle.
+    let work: Vec<u64> = order.iter().map(|&c| (clusters[c].len() as u64).pow(2)).collect();
+    let total_work: u64 = work.iter().sum();
+    let max_work = work[0].max(1); // order is largest-first
+    let par_limit = (total_work / max_work).max(1) as usize;
+    let outer = threads.min(order.len()).min(par_limit);
+    let inner = (threads / outer).max(1);
+    // distribute the remainder: the first `rem` (largest) clusters get one
+    // extra worker so no thread idles when threads % outer != 0
+    let rem = threads % outer;
+    let idx_base = nbr_idx.as_mut_ptr() as usize;
+    let d2_base = nbr_d2.as_mut_ptr() as usize;
+    par_for_chunks(order.len(), 1, outer, |t0, t1| {
+        for t in t0..t1 {
+            let members = &clusters[order[t]];
+            let ids: Vec<usize> = members.iter().map(|&m| m as usize).collect();
+            let sub = x.gather(&ids);
+            let budget = inner + usize::from(t < rem);
+            let (l_idx, l_d2) = backend.knn_with_budget(&sub, k, budget);
+            for (local, &global) in members.iter().enumerate() {
+                let g = global as usize;
+                // SAFETY: member lists are pairwise disjoint and in-range
+                // (validated above), so rows [g*k, (g+1)*k) are written by
+                // exactly one worker; both vectors outlive the call.
+                let oi = unsafe {
+                    std::slice::from_raw_parts_mut((idx_base as *mut u32).add(g * k), k)
+                };
+                let od = unsafe {
+                    std::slice::from_raw_parts_mut((d2_base as *mut f32).add(g * k), k)
+                };
+                for slot in 0..k {
+                    let li = l_idx[local * k + slot];
+                    if li != NO_NEIGHBOR {
+                        oi[slot] = members[li as usize];
+                        od[slot] = l_d2[local * k + slot];
+                    }
+                }
+            }
+        }
+    });
+    (nbr_idx, nbr_d2)
+}
+
+/// The pre-engine serial build: clusters walked one after another through
+/// the [`knn_naive`] oracle.  Kept for the exact-match property tests and
+/// the naive side of `bench/index_build`.
+pub fn within_clusters_naive(x: &Matrix, clusters: &[Vec<u32>], k: usize) -> (Vec<u32>, Vec<f32>) {
+    let n = x.rows;
+    let mut nbr_idx = vec![NO_NEIGHBOR; n * k];
+    let mut nbr_d2 = vec![f32::INFINITY; n * k];
     for members in clusters {
         if members.len() <= 1 {
             continue;
         }
         let ids: Vec<usize> = members.iter().map(|&m| m as usize).collect();
         let sub = x.gather(&ids);
-        let (l_idx, l_d2) = backend.knn(&sub, k);
+        let (l_idx, l_d2) = knn_naive(&sub, k);
         for (local, &global) in members.iter().enumerate() {
             let g = global as usize;
-            for s in 0..k {
-                let li = l_idx[local * k + s];
+            for slot in 0..k {
+                let li = l_idx[local * k + slot];
                 if li != NO_NEIGHBOR {
-                    nbr_idx[g * k + s] = members[li as usize];
-                    nbr_d2[g * k + s] = l_d2[local * k + s];
+                    nbr_idx[g * k + slot] = members[li as usize];
+                    nbr_d2[g * k + slot] = l_d2[local * k + slot];
                 }
             }
         }
@@ -41,47 +129,25 @@ pub fn within_clusters(
     (nbr_idx, nbr_d2)
 }
 
-/// Brute-force exact global kNN — O(n²d), used only for metric ground truth
-/// and small-scale validation.  Parallel over query points.
+/// Brute-force exact global kNN — O(n²d), used only for metric ground
+/// truth and small-scale validation.  Runs on the tiled engine.
 pub fn exact_global(x: &Matrix, k: usize) -> Vec<u32> {
-    let n = x.rows;
-    let threads = num_threads();
-    let rows = par_map(n, threads, |i| {
-        let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-        let xi = x.row(i);
-        for j in 0..n {
-            if j == i {
-                continue;
-            }
-            let dist = d2(xi, x.row(j));
-            if best.len() < k {
-                best.push((dist, j as u32));
-                if best.len() == k {
-                    best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-                }
-            } else if dist < best[0].0 {
-                best[0] = (dist, j as u32);
-                let mut p = 0;
-                while p + 1 < k && best[p].0 < best[p + 1].0 {
-                    best.swap(p, p + 1);
-                    p += 1;
-                }
-            }
-        }
-        best.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        let mut out = vec![NO_NEIGHBOR; k];
-        for (s, (_, j)) in best.into_iter().enumerate() {
-            out[s] = j;
-        }
-        out
-    });
-    rows.into_iter().flatten().collect()
+    let (idx, _) = distance::self_knn_tiled(x, k, num_threads());
+    idx
+}
+
+/// Sort-everything oracle for [`exact_global`] (same `(d², index)`
+/// ordering contract), single-threaded.
+pub fn exact_global_naive(x: &Matrix, k: usize) -> Vec<u32> {
+    let (idx, _) = knn_naive(x, k);
+    idx
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::ann::backend::NativeBackend;
+    use crate::linalg::d2;
     use crate::util::rng::Rng;
 
     fn randm(rng: &mut Rng, n: usize, d: usize) -> Matrix {
@@ -134,8 +200,38 @@ mod tests {
                 .filter(|&j| j != i)
                 .map(|j| (d2(x.row(i), x.row(j)), j as u32))
                 .collect();
-            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            all.sort_by(|a, b| a.0.total_cmp(&b.0));
             assert_eq!(got[i * k], all[0].1, "nearest neighbor row {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_dispatch_matches_serial_oracle_on_many_clusters() {
+        // more clusters than threads, ragged sizes — the dynamic dispatch
+        // must land every cluster's rows exactly once
+        let mut rng = Rng::new(3);
+        let x = randm(&mut rng, 157, 6);
+        let mut clusters: Vec<Vec<u32>> = vec![Vec::new(); 12];
+        for i in 0..157u32 {
+            clusters[rng.below(12)].push(i);
+        }
+        let (idx, _) = within_clusters(&x, &clusters, 4, &NativeBackend::default());
+        // structural check against the membership map (distances are
+        // engine-vs-naive checked exactly in tests/distance_engine.rs)
+        let mut owner = vec![u32::MAX; 157];
+        for (c, members) in clusters.iter().enumerate() {
+            for &m in members {
+                owner[m as usize] = c as u32;
+            }
+        }
+        for i in 0..157 {
+            for s in 0..4 {
+                let j = idx[i * 4 + s];
+                if j != NO_NEIGHBOR {
+                    assert_eq!(owner[j as usize], owner[i], "edge stays in cluster");
+                    assert_ne!(j as usize, i);
+                }
+            }
         }
     }
 }

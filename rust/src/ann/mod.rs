@@ -11,9 +11,11 @@
 //!    communication during positive (attractive) force computation.
 //!
 //! The high-dimensional distance work (assignment, within-cluster kNN) is
-//! behind the [`backend::AnnBackend`] trait: the native Rust implementation
-//! lives here; the AOT/XLA implementation lives in `crate::runtime` and is
-//! cross-checked against this one in the integration tests.
+//! behind the [`backend::AnnBackend`] trait: the native implementation
+//! runs on the tiled norm-trick distance engine (`crate::linalg::distance`,
+//! see DESIGN.md §8 for the tile layout and tie-breaking contract); the
+//! AOT/XLA implementation lives in `crate::runtime` and is cross-checked
+//! against this one in the integration tests.
 
 pub mod backend;
 pub mod graph;

@@ -105,6 +105,15 @@ impl Table {
     }
 }
 
+/// Dump a machine-readable bench payload to
+/// `bench_results/BENCH_<name>.json` — the CI smoke run and perf-tracking
+/// tooling consume these (shapes, ns/op, speedups), while
+/// [`Table::save_json`] keeps the human-oriented table mirror.
+pub fn save_bench_json(name: &str, payload: Json) {
+    let _ = std::fs::create_dir_all("bench_results");
+    let _ = std::fs::write(format!("bench_results/BENCH_{name}.json"), payload.pretty());
+}
+
 /// Format seconds human-readably.
 pub fn fmt_secs(secs: f64) -> String {
     if secs < 1e-3 {

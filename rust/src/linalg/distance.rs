@@ -1,0 +1,586 @@
+//! Tiled norm-trick distance engine (DESIGN.md §8).
+//!
+//! Every distance consumer in the ANN build pipeline — K-Means assignment,
+//! within-cluster kNN, the brute-force global kNN used as metric ground
+//! truth — reduces to "for each query row, the (arg)min-k squared
+//! distances to a corpus of rows".  Following t-SNE-CUDA (Chan et al.,
+//! 2018), this module casts that as blocked matrix work via the norm
+//! trick:
+//!
+//! ```text
+//! d²(x, y) = ‖x‖² + ‖y‖² − 2⟨x, y⟩
+//! ```
+//!
+//! Row squared-norms are precomputed once; the inner loop is a
+//! cache-blocked x·yᵀ microkernel ([`TILE_Q`] query rows × [`TILE_C`]
+//! corpus rows per tile, one corpus tile stays L1-resident while every
+//! query row of the chunk streams over it) with a **fused** top-k
+//! selection pass ([`TopK`]) consuming each d² tile as it is produced —
+//! the full n×m distance matrix is never materialized.
+//!
+//! **Determinism contract** (mirrors the step path, DESIGN.md §7): tile
+//! sizes are fixed constants, each query row is processed start-to-finish
+//! by exactly one worker, and the corpus is always walked in ascending
+//! index order — so results are bitwise independent of the thread count.
+//! Candidates are ordered by the lexicographic `(d², index)` contract
+//! (ties go to the smaller corpus index, `total_cmp` so NaN never
+//! panics); the naive oracles in `crate::ann` implement the identical
+//! contract, and the property tests in `tests/distance_engine.rs` check
+//! exact agreement.
+
+use super::{dot, Matrix};
+use crate::util::parallel::par_for_chunks;
+
+/// Query rows per worker chunk (i-tile).  Each chunk is claimed by one
+/// worker and processed whole — the unit of the determinism argument.
+pub const TILE_Q: usize = 32;
+
+/// Corpus rows per j-tile.  A 64-row × 64-dim f32 tile is 16 KiB, so it
+/// stays L1-resident while all [`TILE_Q`] query rows stream over it.
+pub const TILE_C: usize = 64;
+
+/// k at or below which [`TopK`] uses the insertion array instead of the
+/// binary heap (replace cost is O(k) either way at this size, but the
+/// insertion array is branch-light and stays in registers/L1).
+const INSERTION_MAX_K: usize = 16;
+
+/// Missing-slot marker (same value as `crate::ann::NO_NEIGHBOR`).
+const NO_IDX: u32 = u32::MAX;
+
+/// The engine's total order on candidates: ascending squared distance,
+/// ties broken toward the smaller corpus index.  `total_cmp` keeps NaN
+/// from panicking (NaN sorts above +∞, so it never wins a slot).
+#[inline]
+fn lex_less(da: f32, ia: u32, db: f32, ib: u32) -> bool {
+    match da.total_cmp(&db) {
+        std::cmp::Ordering::Less => true,
+        std::cmp::Ordering::Greater => false,
+        std::cmp::Ordering::Equal => ia < ib,
+    }
+}
+
+/// Clamp the norm-trick cancellation to zero **without absorbing NaN**:
+/// `f32::max(NaN, 0.0)` returns 0.0, which would let a NaN row win every
+/// top-k/argmin slot with a perfect distance — the opposite of the
+/// documented contract.  `NaN < 0.0` is false, so NaN passes through and
+/// `total_cmp` sorts it above +∞ where it never wins.
+#[inline]
+fn clamp0(d: f32) -> f32 {
+    if d < 0.0 {
+        0.0
+    } else {
+        d
+    }
+}
+
+/// Per-row squared norms ‖x_i‖², accumulated with the same association
+/// order as [`dot`] — so a corpus row that is bitwise equal to a query row
+/// yields an exact-zero self distance under the norm trick.
+pub fn row_sq_norms(m: &Matrix) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| {
+            let row = m.row(r);
+            dot(row, row)
+        })
+        .collect()
+}
+
+/// Dot products of one query row against four corpus rows in one pass.
+/// Each accumulator follows exactly the 4-way-unrolled association order
+/// of [`dot`], so `dot4(a, b0, b1, b2, b3)[t]` is bitwise equal to
+/// `dot(a, bt)` — the engine's numerics do not depend on the microkernel
+/// blocking.
+#[inline]
+fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b0[j] + a[j + 1] * b0[j + 1] + a[j + 2] * b0[j + 2] + a[j + 3] * b0[j + 3];
+        s1 += a[j] * b1[j] + a[j + 1] * b1[j + 1] + a[j + 2] * b1[j + 2] + a[j + 3] * b1[j + 3];
+        s2 += a[j] * b2[j] + a[j + 1] * b2[j + 1] + a[j + 2] * b2[j + 2] + a[j + 3] * b2[j + 3];
+        s3 += a[j] * b3[j] + a[j + 1] * b3[j + 1] + a[j + 2] * b3[j + 2] + a[j + 3] * b3[j + 3];
+    }
+    for j in chunks * 4..n {
+        s0 += a[j] * b0[j];
+        s1 += a[j] * b1[j];
+        s2 += a[j] * b2[j];
+        s3 += a[j] * b3[j];
+    }
+    [s0, s1, s2, s3]
+}
+
+/// Bounded best-k accumulator under the `(d², index)` order: an
+/// insertion-sorted array for small k, a binary max-heap above
+/// [`INSERTION_MAX_K`].  Both variants keep the current *worst* kept
+/// candidate at slot 0 and accept/reject identically, so the hybrid is
+/// invisible in the results.
+pub struct TopK {
+    k: usize,
+    heap: bool,
+    items: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        TopK { k, heap: k > INSERTION_MAX_K, items: Vec::with_capacity(k) }
+    }
+
+    /// Offer a candidate; keeps the k least under the `(d², index)` order.
+    #[inline]
+    pub fn push(&mut self, d: f32, j: u32) {
+        if self.items.len() < self.k {
+            self.items.push((d, j));
+            let p = self.items.len() - 1;
+            if self.heap {
+                self.sift_up(p);
+            } else {
+                // keep worst-first (descending) order
+                let mut p = p;
+                while p > 0 && self.less(p - 1, p) {
+                    self.items.swap(p - 1, p);
+                    p -= 1;
+                }
+            }
+        } else if self.k > 0 && lex_less(d, j, self.items[0].0, self.items[0].1) {
+            self.items[0] = (d, j);
+            if self.heap {
+                self.sift_down(0);
+            } else {
+                let mut p = 0;
+                while p + 1 < self.k && self.less(p, p + 1) {
+                    self.items.swap(p, p + 1);
+                    p += 1;
+                }
+            }
+        }
+    }
+
+    #[inline]
+    fn less(&self, a: usize, b: usize) -> bool {
+        lex_less(self.items[a].0, self.items[a].1, self.items[b].0, self.items[b].1)
+    }
+
+    fn sift_up(&mut self, mut p: usize) {
+        while p > 0 {
+            let parent = (p - 1) / 2;
+            if self.less(parent, p) {
+                self.items.swap(p, parent);
+                p = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut p: usize) {
+        let n = self.items.len();
+        loop {
+            let l = 2 * p + 1;
+            if l >= n {
+                break;
+            }
+            let r = l + 1;
+            let mut big = l;
+            if r < n && self.less(l, r) {
+                big = r;
+            }
+            if self.less(p, big) {
+                self.items.swap(p, big);
+                p = big;
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Drain into one output row, ascending by `(d², index)`; slots beyond
+    /// the number of candidates seen keep the caller's padding.
+    pub fn write_into(mut self, out_idx: &mut [u32], out_d2: &mut [f32]) {
+        self.items.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        for (slot, (d, j)) in self.items.iter().enumerate() {
+            out_idx[slot] = *j;
+            out_d2[slot] = *d;
+        }
+    }
+}
+
+/// For each row of `q`, the k nearest rows of `corpus` under the clamped
+/// norm-trick squared distance, excluding corpus row `exclude[i]` for
+/// query i when given (`u32::MAX` excludes nothing).  Results land in
+/// `out_idx`/`out_d2` (shape `q.rows × k`, prefilled here with
+/// `u32::MAX`/∞ padding), each row sorted ascending under the
+/// `(d², index)` contract.
+pub fn topk_tiled_into(
+    q: &Matrix,
+    exclude: Option<&[u32]>,
+    corpus: &Matrix,
+    corpus_norms: &[f32],
+    k: usize,
+    threads: usize,
+    out_idx: &mut [u32],
+    out_d2: &mut [f32],
+) {
+    assert_eq!(q.cols, corpus.cols, "dimension mismatch");
+    assert_eq!(corpus_norms.len(), corpus.rows, "corpus norms mismatch");
+    assert_eq!(out_idx.len(), q.rows * k, "out_idx shape");
+    assert_eq!(out_d2.len(), q.rows * k, "out_d2 shape");
+    if let Some(ex) = exclude {
+        assert_eq!(ex.len(), q.rows, "exclusion list shape");
+    }
+    out_idx.fill(NO_IDX);
+    out_d2.fill(f32::INFINITY);
+    if k == 0 || q.rows == 0 || corpus.rows == 0 {
+        return;
+    }
+    let m = corpus.rows;
+    let idx_base = out_idx.as_mut_ptr() as usize;
+    let d2_base = out_d2.as_mut_ptr() as usize;
+    par_for_chunks(q.rows, TILE_Q, threads, |i0, i1| {
+        let q_norms: Vec<f32> = (i0..i1)
+            .map(|i| {
+                let r = q.row(i);
+                dot(r, r)
+            })
+            .collect();
+        let mut sel: Vec<TopK> = (i0..i1).map(|_| TopK::new(k)).collect();
+        // j-tile outer, query inner: the corpus tile stays hot in L1 while
+        // every query row of this chunk consumes it.  Per query row the j
+        // order is globally ascending, which fixes both the accumulation
+        // order and the tie outcomes.
+        let mut j0 = 0usize;
+        while j0 < m {
+            let j1 = (j0 + TILE_C).min(m);
+            for (bi, i) in (i0..i1).enumerate() {
+                let qi = q.row(i);
+                let nqi = q_norms[bi];
+                let ex = exclude.map(|e| e[i]).unwrap_or(NO_IDX);
+                let top = &mut sel[bi];
+                let mut j = j0;
+                while j + 4 <= j1 {
+                    let ds = dot4(
+                        qi,
+                        corpus.row(j),
+                        corpus.row(j + 1),
+                        corpus.row(j + 2),
+                        corpus.row(j + 3),
+                    );
+                    for (t, &dv) in ds.iter().enumerate() {
+                        let jj = (j + t) as u32;
+                        if jj != ex {
+                            let dist = clamp0(nqi + corpus_norms[j + t] - 2.0 * dv);
+                            top.push(dist, jj);
+                        }
+                    }
+                    j += 4;
+                }
+                while j < j1 {
+                    let jj = j as u32;
+                    if jj != ex {
+                        let dist = clamp0(nqi + corpus_norms[j] - 2.0 * dot(qi, corpus.row(j)));
+                        top.push(dist, jj);
+                    }
+                    j += 1;
+                }
+            }
+            j0 = j1;
+        }
+        // SAFETY: par_for_chunks hands out disjoint [i0, i1) ranges, so
+        // output rows [i0*k, i1*k) are written by exactly one worker and
+        // both vectors outlive the scope.
+        let oi = unsafe {
+            std::slice::from_raw_parts_mut((idx_base as *mut u32).add(i0 * k), (i1 - i0) * k)
+        };
+        let od = unsafe {
+            std::slice::from_raw_parts_mut((d2_base as *mut f32).add(i0 * k), (i1 - i0) * k)
+        };
+        for (bi, top) in sel.into_iter().enumerate() {
+            top.write_into(&mut oi[bi * k..(bi + 1) * k], &mut od[bi * k..(bi + 1) * k]);
+        }
+    });
+}
+
+/// Exact kNN among the rows of `x`, excluding self: `(idx, d²)` of shape
+/// n×k with `u32::MAX`/∞ padding when n ≤ k.  Tiled replacement for the
+/// old per-row scan; `crate::ann::backend::knn_naive` is the oracle.
+pub fn self_knn_tiled(x: &Matrix, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
+    let mut idx = vec![NO_IDX; x.rows * k];
+    let mut dd = vec![f32::INFINITY; x.rows * k];
+    let norms = row_sq_norms(x);
+    let ids: Vec<u32> = (0..x.rows as u32).collect();
+    topk_tiled_into(x, Some(&ids), x, &norms, k, threads, &mut idx, &mut dd);
+    (idx, dd)
+}
+
+/// k nearest corpus rows for a gathered set of query rows, excluding each
+/// query's own corpus id; indices only (the metric ground-truth shape).
+pub fn knn_for_queries(
+    q: &Matrix,
+    q_ids: &[u32],
+    corpus: &Matrix,
+    k: usize,
+    threads: usize,
+) -> Vec<u32> {
+    let norms = row_sq_norms(corpus);
+    let mut idx = vec![NO_IDX; q.rows * k];
+    let mut dd = vec![f32::INFINITY; q.rows * k];
+    topk_tiled_into(q, Some(q_ids), corpus, &norms, k, threads, &mut idx, &mut dd);
+    idx
+}
+
+/// For each row of `q`, the nearest row of `corpus` and its clamped
+/// squared distance — argmin under the `(d², index)` contract, i.e. the
+/// k = 1 special case with the selection structure collapsed to one
+/// register pair.  `crate::ann::backend::assign_naive` is the oracle.
+pub fn assign_tiled(q: &Matrix, corpus: &Matrix, threads: usize) -> Vec<(u32, f32)> {
+    assert_eq!(q.cols, corpus.cols, "dimension mismatch");
+    let m = corpus.rows;
+    let mut out = vec![(0u32, f32::INFINITY); q.rows];
+    if q.rows == 0 || m == 0 {
+        return out;
+    }
+    let corpus_norms = row_sq_norms(corpus);
+    let base = out.as_mut_ptr() as usize;
+    par_for_chunks(q.rows, TILE_Q, threads, |i0, i1| {
+        let q_norms: Vec<f32> = (i0..i1)
+            .map(|i| {
+                let r = q.row(i);
+                dot(r, r)
+            })
+            .collect();
+        let mut best: Vec<(f32, u32)> = vec![(f32::INFINITY, NO_IDX); i1 - i0];
+        let mut j0 = 0usize;
+        while j0 < m {
+            let j1 = (j0 + TILE_C).min(m);
+            for (bi, i) in (i0..i1).enumerate() {
+                let qi = q.row(i);
+                let nqi = q_norms[bi];
+                let (mut bd, mut bj) = best[bi];
+                let mut j = j0;
+                while j + 4 <= j1 {
+                    let ds = dot4(
+                        qi,
+                        corpus.row(j),
+                        corpus.row(j + 1),
+                        corpus.row(j + 2),
+                        corpus.row(j + 3),
+                    );
+                    for (t, &dv) in ds.iter().enumerate() {
+                        let jj = (j + t) as u32;
+                        let dist = clamp0(nqi + corpus_norms[j + t] - 2.0 * dv);
+                        if lex_less(dist, jj, bd, bj) {
+                            bd = dist;
+                            bj = jj;
+                        }
+                    }
+                    j += 4;
+                }
+                while j < j1 {
+                    let jj = j as u32;
+                    let dist = clamp0(nqi + corpus_norms[j] - 2.0 * dot(qi, corpus.row(j)));
+                    if lex_less(dist, jj, bd, bj) {
+                        bd = dist;
+                        bj = jj;
+                    }
+                    j += 1;
+                }
+                best[bi] = (bd, bj);
+            }
+            j0 = j1;
+        }
+        // SAFETY: par_for_chunks chunks are disjoint, so out[i0..i1] is
+        // written by exactly one worker; the vector outlives the scope.
+        let o = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut (u32, f32)).add(i0), i1 - i0)
+        };
+        for (bi, &(d, j)) in best.iter().enumerate() {
+            // no candidate won (all-NaN query row): mirror the naive
+            // oracle's initial (0, ∞) answer
+            o[bi] = if j == NO_IDX { (0, f32::INFINITY) } else { (j, d) };
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::d2;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    #[test]
+    fn dot4_is_bitwise_equal_to_dot() {
+        let mut rng = Rng::new(0);
+        for len in [1usize, 3, 4, 7, 16, 33, 64, 67] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let bs: Vec<Vec<f32>> =
+                (0..4).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+            let got = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for t in 0..4 {
+                assert_eq!(
+                    got[t].to_bits(),
+                    dot(&a, &bs[t]).to_bits(),
+                    "len {len} lane {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn row_sq_norms_match_dot() {
+        let mut rng = Rng::new(1);
+        let m = randm(&mut rng, 9, 13);
+        let norms = row_sq_norms(&m);
+        for r in 0..9 {
+            assert_eq!(norms[r].to_bits(), dot(m.row(r), m.row(r)).to_bits());
+        }
+    }
+
+    #[test]
+    fn duplicate_rows_have_exact_zero_distance() {
+        let mut rng = Rng::new(2);
+        let mut m = randm(&mut rng, 50, 17);
+        let dup = m.row(7).to_vec();
+        m.row_mut(23).copy_from_slice(&dup);
+        let (idx, dd) = self_knn_tiled(&m, 3, 4);
+        assert_eq!(idx[7 * 3], 23, "row 7's nearest is its duplicate");
+        assert_eq!(dd[7 * 3], 0.0, "exact zero under the norm trick");
+        assert_eq!(idx[23 * 3], 7);
+        assert_eq!(dd[23 * 3], 0.0);
+    }
+
+    #[test]
+    fn topk_tie_contract_prefers_smaller_index() {
+        // same distance streamed in ascending index order, more candidates
+        // than slots: the k smallest indices must survive, ascending.
+        for k in [2usize, 5, 20] {
+            let mut top = TopK::new(k);
+            for j in 0..40u32 {
+                top.push(1.0, j);
+            }
+            let mut idx = vec![NO_IDX; k];
+            let mut dd = vec![f32::INFINITY; k];
+            top.write_into(&mut idx, &mut dd);
+            let want: Vec<u32> = (0..k as u32).collect();
+            assert_eq!(idx, want, "k {k}");
+            assert!(dd.iter().all(|&d| d == 1.0));
+        }
+    }
+
+    #[test]
+    fn topk_pads_when_underfull() {
+        let mut top = TopK::new(4);
+        top.push(2.0, 9);
+        top.push(1.0, 3);
+        let mut idx = vec![NO_IDX; 4];
+        let mut dd = vec![f32::INFINITY; 4];
+        top.write_into(&mut idx, &mut dd);
+        assert_eq!(idx, vec![3, 9, NO_IDX, NO_IDX]);
+        assert_eq!(dd[0], 1.0);
+        assert!(dd[2].is_infinite() && dd[3].is_infinite());
+    }
+
+    #[test]
+    fn topk_zero_k_is_inert() {
+        let mut top = TopK::new(0);
+        top.push(1.0, 1);
+        top.write_into(&mut [], &mut []);
+    }
+
+    #[test]
+    fn heap_and_insertion_variants_agree() {
+        // force both variants onto the same stream by straddling the
+        // crossover: k=16 (insertion) vs k=17 (heap) prefixes must agree.
+        let mut rng = Rng::new(3);
+        let stream: Vec<(f32, u32)> =
+            (0..300u32).map(|j| ((rng.below(40) as f32) * 0.5, j)).collect();
+        let (mut a, mut b) = (TopK::new(16), TopK::new(17));
+        for &(d, j) in &stream {
+            a.push(d, j);
+            b.push(d, j);
+        }
+        let (mut ia, mut da) = (vec![NO_IDX; 16], vec![f32::INFINITY; 16]);
+        let (mut ib, mut db) = (vec![NO_IDX; 17], vec![f32::INFINITY; 17]);
+        a.write_into(&mut ia, &mut da);
+        b.write_into(&mut ib, &mut db);
+        assert_eq!(&ia[..], &ib[..16], "first 16 slots agree across variants");
+        assert_eq!(&da[..], &db[..16]);
+    }
+
+    #[test]
+    fn tiled_distances_track_naive_d2_on_gaussian_data() {
+        let mut rng = Rng::new(4);
+        // sizes straddle both tile constants
+        let x = randm(&mut rng, TILE_Q * 2 + 5, 19);
+        let (idx, dd) = self_knn_tiled(&x, 4, 3);
+        for i in 0..x.rows {
+            for s in 0..4 {
+                let j = idx[i * 4 + s] as usize;
+                let err = (dd[i * 4 + s] - d2(x.row(i), x.row(j))).abs();
+                assert!(err < 1e-3, "row {i} slot {s}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn assign_tiled_empty_corpus() {
+        let mut rng = Rng::new(5);
+        let x = randm(&mut rng, 4, 3);
+        let c = Matrix::zeros(0, 3);
+        let out = assign_tiled(&x, &c, 2);
+        assert_eq!(out.len(), 4);
+        assert!(out.iter().all(|&(j, d)| j == 0 && d.is_infinite()));
+    }
+
+    #[test]
+    fn nan_inputs_do_not_panic() {
+        let mut rng = Rng::new(6);
+        let mut x = randm(&mut rng, 40, 6);
+        x.data[13] = f32::NAN;
+        x.data[77] = f32::NAN;
+        let c = randm(&mut rng, 5, 6);
+        let a = assign_tiled(&x, &c, 2);
+        assert_eq!(a.len(), 40);
+        let (idx, dd) = self_knn_tiled(&x, 3, 2);
+        assert_eq!(idx.len(), 120);
+        assert_eq!(dd.len(), 120);
+    }
+
+    #[test]
+    fn nan_rows_never_win_a_slot() {
+        // clamp0 must not absorb NaN into 0.0 — a NaN centroid would
+        // otherwise beat every real centroid with a perfect distance
+        let mut rng = Rng::new(7);
+        let x = randm(&mut rng, 60, 8);
+        let mut c = randm(&mut rng, 6, 8);
+        c.row_mut(2)[4] = f32::NAN;
+        for (i, (a, d)) in assign_tiled(&x, &c, 2).into_iter().enumerate() {
+            assert_ne!(a, 2, "row {i} assigned to the NaN centroid");
+            assert!(d.is_finite());
+        }
+        // and in kNN a NaN row must come last, not first
+        let mut y = randm(&mut rng, 20, 8);
+        let nan_row = 5usize;
+        for v in y.row_mut(nan_row) {
+            *v = f32::NAN;
+        }
+        let (idx, _) = self_knn_tiled(&y, 3, 2);
+        for i in 0..20 {
+            if i == nan_row {
+                continue;
+            }
+            for s in 0..3 {
+                assert_ne!(idx[i * 3 + s], nan_row as u32, "row {i} picked the NaN row");
+            }
+        }
+    }
+}

@@ -1,7 +1,10 @@
 //! Dense linear algebra substrate: row-major f32 matrices, the operations
-//! NOMAD needs (norms, distances, matmul-free PCA via power iteration) and
-//! the LSH used to seed the K-Means ANN index.
+//! NOMAD needs (norms, distances, matmul-free PCA via power iteration),
+//! the LSH used to seed the K-Means ANN index, and the tiled norm-trick
+//! distance engine behind the ANN build pipeline ([`distance`],
+//! DESIGN.md §8).
 
+pub mod distance;
 pub mod lsh;
 pub mod pca;
 

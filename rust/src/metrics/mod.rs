@@ -7,11 +7,15 @@
 //!   keeps its pairwise-distance ordering after embedding; the paper's
 //!   global structure measure (after Wang et al. 2021).
 //!
-//! Ground-truth ambient kNN is exact brute force (O(n²d), parallel); for
-//! large n both metrics are estimated on a uniform sample of query points,
-//! exactly as the referenced papers do.
+//! Ground-truth ambient kNN is exact brute force on the tiled norm-trick
+//! distance engine (`crate::linalg::distance`, DESIGN.md §8): the sampled
+//! query rows are gathered into one batch and answered against the full
+//! corpus in a single tiled pass per space.  For large n both metrics are
+//! estimated on a uniform sample of query points, exactly as the
+//! referenced papers do.
 
 use crate::ann::knn::exact_global;
+use crate::linalg::distance::knn_for_queries;
 use crate::linalg::{d2, Matrix};
 use crate::util::parallel::{num_threads, par_map};
 use crate::util::rng::Rng;
@@ -35,42 +39,36 @@ pub fn neighborhood_preservation(
     } else {
         rng.sample_distinct(n, sample)
     };
+    let qids: Vec<u32> = queries.iter().map(|&q| q as u32).collect();
     let threads = num_threads();
-    let overlaps: Vec<f64> = par_map(queries.len(), threads, |qi| {
-        let q = queries[qi];
-        let hi = knn_of(x, q, k);
-        let lo = knn_of(y, q, k);
-        let hi_set: std::collections::HashSet<u32> = hi.into_iter().collect();
-        let inter = lo.iter().filter(|j| hi_set.contains(j)).count();
-        inter as f64 / k as f64
-    });
-    overlaps.iter().sum::<f64>() / overlaps.len().max(1) as f64
-}
-
-/// Exact k nearest neighbors of one query point (excluding self).
-fn knn_of(m: &Matrix, q: usize, k: usize) -> Vec<u32> {
-    let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-    let row = m.row(q);
-    for j in 0..m.rows {
-        if j == q {
-            continue;
-        }
-        let dist = d2(row, m.row(j));
-        if best.len() < k {
-            best.push((dist, j as u32));
-            if best.len() == k {
-                best.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
-            }
-        } else if dist < best[0].0 {
-            best[0] = (dist, j as u32);
-            let mut p = 0;
-            while p + 1 < k && best[p].0 < best[p + 1].0 {
-                best.swap(p, p + 1);
-                p += 1;
-            }
-        }
+    // full-sample queries are the identity — skip the gather copy
+    let (hi, lo) = if queries.len() == n {
+        (
+            knn_for_queries(x, &qids, x, k, threads),
+            knn_for_queries(y, &qids, y, k, threads),
+        )
+    } else {
+        let xq = x.gather(&queries);
+        let yq = y.gather(&queries);
+        (
+            knn_for_queries(&xq, &qids, x, k, threads),
+            knn_for_queries(&yq, &qids, y, k, threads),
+        )
+    };
+    let mut total = 0.0f64;
+    for qi in 0..queries.len() {
+        let hi_set: std::collections::HashSet<u32> = hi[qi * k..(qi + 1) * k]
+            .iter()
+            .copied()
+            .filter(|&j| j != u32::MAX)
+            .collect();
+        let inter = lo[qi * k..(qi + 1) * k]
+            .iter()
+            .filter(|j| hi_set.contains(j))
+            .count();
+        total += inter as f64 / k as f64;
     }
-    best.into_iter().map(|(_, j)| j).collect()
+    total / queries.len().max(1) as f64
 }
 
 /// Random triplet accuracy on `triplets` sampled triplets.
@@ -122,13 +120,21 @@ pub fn label_knn_agreement(y: &Matrix, labels: &[u32], sample: usize, rng: &mut 
     let n = y.rows;
     let queries: Vec<usize> =
         if sample >= n { (0..n).collect() } else { rng.sample_distinct(n, sample) };
-    let threads = num_threads();
-    let hits: Vec<u32> = par_map(queries.len(), threads, |qi| {
-        let q = queries[qi];
-        let nn = knn_of(y, q, 1)[0] as usize;
-        (labels[nn] == labels[q]) as u32
-    });
-    hits.iter().sum::<u32>() as f64 / hits.len().max(1) as f64
+    let qids: Vec<u32> = queries.iter().map(|&q| q as u32).collect();
+    let nn = if queries.len() == n {
+        knn_for_queries(y, &qids, y, 1, num_threads())
+    } else {
+        let yq = y.gather(&queries);
+        knn_for_queries(&yq, &qids, y, 1, num_threads())
+    };
+    let mut hits = 0usize;
+    for (qi, &q) in queries.iter().enumerate() {
+        let j = nn[qi];
+        if j != u32::MAX && labels[j as usize] == labels[q] {
+            hits += 1;
+        }
+    }
+    hits as f64 / queries.len().max(1) as f64
 }
 
 #[cfg(test)]
@@ -139,6 +145,14 @@ mod tests {
         let mut m = Matrix::zeros(n, d);
         for v in m.data.iter_mut() {
             *v = rng.normal();
+        }
+        m
+    }
+
+    fn intm(rng: &mut Rng, n: usize, d: usize, hi: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.below(hi) as f32;
         }
         m
     }
@@ -202,5 +216,31 @@ mod tests {
         let ds = crate::data::gaussian_mixture(300, 2, 3, 30.0, 0.0, 0.0, &mut rng);
         let agree = label_knn_agreement(&ds.x, &ds.labels[0], 300, &mut rng);
         assert!(agree > 0.99, "agreement {agree}");
+    }
+
+    #[test]
+    fn np_ground_truth_matches_naive_oracle_exactly() {
+        // Integer-valued corpora: the engine's norm-trick distances are
+        // exact, so its neighbor lists must equal the sort-everything
+        // oracle's bitwise — including tie order — and the NP estimates
+        // must agree to the last bit.
+        let mut rng = Rng::new(5);
+        let n = 120;
+        let k = 5;
+        let x = intm(&mut rng, n, 6, 5);
+        let y = intm(&mut rng, n, 2, 5);
+        let np = neighborhood_preservation(&x, &y, k, n, &mut rng);
+
+        let hi = crate::ann::knn::exact_global_naive(&x, k);
+        let lo = crate::ann::knn::exact_global_naive(&y, k);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let hi_set: std::collections::HashSet<u32> =
+                hi[i * k..(i + 1) * k].iter().copied().collect();
+            let inter = lo[i * k..(i + 1) * k].iter().filter(|j| hi_set.contains(j)).count();
+            total += inter as f64 / k as f64;
+        }
+        let np_naive = total / n as f64;
+        assert_eq!(np, np_naive, "engine NP {np} vs naive {np_naive}");
     }
 }

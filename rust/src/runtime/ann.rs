@@ -8,15 +8,24 @@
 use crate::ann::backend::{AnnBackend, NativeBackend};
 use crate::linalg::Matrix;
 use crate::util::error::{Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 pub struct XlaAnnBackend {
     client: xla::PjRtClient,
     manifest: super::Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    // Arc so callers clone a handle and drop the lock before `execute` —
+    // concurrent per-cluster kNN calls must not serialize on the cache.
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     native: NativeBackend,
 }
+
+// SAFETY: `AnnBackend` is a `Sync` trait (the within-cluster build calls
+// the backend from several worker threads).  The executable cache is
+// behind a `Mutex`, the manifest and native fallback are immutable, and
+// PJRT clients/executables are internally synchronized — the PJRT C API
+// is documented as thread-safe for compile/execute.
+unsafe impl Sync for XlaAnnBackend {}
 
 const BIG: f32 = 1.0e37;
 
@@ -29,18 +38,25 @@ impl XlaAnnBackend {
         Ok(XlaAnnBackend {
             client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            cache: Mutex::new(HashMap::new()),
             native: NativeBackend::default(),
         })
     }
 
-    fn get_exe(&self, name: &str, file: &std::path::Path) -> Result<()> {
-        if !self.cache.borrow().contains_key(name) {
-            let exe = super::compile_hlo_text(&self.client, file)
-                .with_context(|| format!("compile {name}"))?;
-            self.cache.borrow_mut().insert(name.to_string(), exe);
+    fn get_exe(&self, name: &str, file: &std::path::Path) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        // hold the lock across check + compile so concurrent cluster
+        // workers cannot both compile the same artifact; the returned Arc
+        // lets the caller execute without holding the lock
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(name) {
+            return Ok(exe.clone());
         }
-        Ok(())
+        let exe = Arc::new(
+            super::compile_hlo_text(&self.client, file)
+                .with_context(|| format!("compile {name}"))?,
+        );
+        cache.insert(name.to_string(), exe.clone());
+        Ok(exe)
     }
 
     fn assign_xla(&self, x: &Matrix, c: &Matrix) -> Result<Option<Vec<(u32, f32)>>> {
@@ -51,9 +67,7 @@ impl XlaAnnBackend {
         let np = art.param("n").unwrap();
         let cp = art.param("c").unwrap();
         let d = x.cols;
-        self.get_exe(&art.name, &art.file)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(&art.name).unwrap();
+        let exe = self.get_exe(&art.name, &art.file)?;
 
         let mut xp = vec![0.0f32; np * d];
         xp[..x.rows * d].copy_from_slice(&x.data);
@@ -85,9 +99,7 @@ impl XlaAnnBackend {
         let np = art.param("n").unwrap();
         let ka = art.param("k").unwrap();
         let d = x.cols;
-        self.get_exe(&art.name, &art.file)?;
-        let cache = self.cache.borrow();
-        let exe = cache.get(&art.name).unwrap();
+        let exe = self.get_exe(&art.name, &art.file)?;
 
         let mut xp = vec![0.0f32; np * d];
         xp[..x.rows * d].copy_from_slice(&x.data);

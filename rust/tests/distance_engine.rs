@@ -1,0 +1,198 @@
+//! Property tests for the tiled norm-trick distance engine (DESIGN.md §8):
+//! the tiled paths must match the naive oracles **exactly** — ties broken
+//! identically — and be bitwise invariant to the worker count.
+//!
+//! Exactness strategy: most cases use matrices of small-integer values.
+//! There, every dot product, norm, and squared distance is an exact f32
+//! integer in both the naive `Σ(a−b)²` and the tiled `‖a‖²+‖b‖²−2⟨a,b⟩`
+//! formulations, so equality (including every tie outcome) is guaranteed
+//! by construction rather than by luck — and low-cardinality integer data
+//! is riddled with duplicate rows and genuinely tied distances, which
+//! exercises the `(d², index)` contract for real.  Shapes are drawn
+//! ragged on purpose: n, m, d deliberately straddle the tile constants.
+
+use nomad::ann::backend::{assign_naive, knn_naive, AnnBackend, NativeBackend};
+use nomad::ann::knn::{exact_global, exact_global_naive, within_clusters, within_clusters_naive};
+use nomad::linalg::distance::{assign_tiled, self_knn_tiled, TILE_C, TILE_Q};
+use nomad::linalg::Matrix;
+use nomad::util::rng::Rng;
+
+const CASES: usize = 25;
+
+/// Matrix of uniform integers in [0, hi) stored as f32 — exact arithmetic
+/// in both distance formulations.
+fn int_matrix(rng: &mut Rng, n: usize, d: usize, hi: usize) -> Matrix {
+    let mut m = Matrix::zeros(n, d);
+    for v in m.data.iter_mut() {
+        *v = rng.below(hi) as f32;
+    }
+    m
+}
+
+fn gauss_matrix(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+    let mut m = Matrix::zeros(n, d);
+    for v in m.data.iter_mut() {
+        *v = rng.normal();
+    }
+    m
+}
+
+/// Ragged dimension draw: sizes cross the given tile boundary about half
+/// the time and are rarely aligned to it.
+fn ragged(rng: &mut Rng, tile: usize) -> usize {
+    1 + rng.below(2 * tile + 5)
+}
+
+#[test]
+fn prop_assign_tiled_matches_naive_exactly() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = ragged(&mut rng, TILE_Q);
+        let m = ragged(&mut rng, TILE_C);
+        let d = 1 + rng.below(40);
+        let x = int_matrix(&mut rng, n, d, 6);
+        let c = int_matrix(&mut rng, m, d, 6);
+        for threads in [1usize, 3] {
+            let tiled = assign_tiled(&x, &c, threads);
+            let naive = assign_naive(&x, &c);
+            assert_eq!(tiled, naive, "seed {seed} n {n} m {m} d {d} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_knn_tiled_matches_naive_exactly() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(100 + seed);
+        let n = 2 + rng.below(2 * TILE_C + 9);
+        let d = 1 + rng.below(33);
+        // k straddles the insertion/heap crossover (16)
+        let k = 1 + rng.below(24);
+        let x = int_matrix(&mut rng, n, d, 5);
+        for threads in [1usize, 4] {
+            let (ti, td) = self_knn_tiled(&x, k, threads);
+            let (ni, nd) = knn_naive(&x, k);
+            assert_eq!(ti, ni, "idx: seed {seed} n {n} d {d} k {k} threads {threads}");
+            assert_eq!(td, nd, "d2: seed {seed} n {n} d {d} k {k} threads {threads}");
+        }
+    }
+}
+
+#[test]
+fn prop_exact_global_matches_naive_exactly() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(200 + seed);
+        let n = 2 + rng.below(150);
+        let d = 1 + rng.below(20);
+        let k = 1 + rng.below(10);
+        let x = int_matrix(&mut rng, n, d, 7);
+        assert_eq!(
+            exact_global(&x, k),
+            exact_global_naive(&x, k),
+            "seed {seed} n {n} d {d} k {k}"
+        );
+    }
+}
+
+#[test]
+fn prop_within_clusters_matches_naive_exactly() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(300 + seed);
+        let n = 5 + rng.below(180);
+        let d = 1 + rng.below(16);
+        let k = 1 + rng.below(8);
+        let n_clusters = 1 + rng.below(9);
+        let x = int_matrix(&mut rng, n, d, 6);
+        // random partition, including empty clusters and singletons
+        let mut clusters: Vec<Vec<u32>> = vec![Vec::new(); n_clusters];
+        for i in 0..n as u32 {
+            clusters[rng.below(n_clusters)].push(i);
+        }
+        let tiled = within_clusters(&x, &clusters, k, &NativeBackend::default());
+        let naive = within_clusters_naive(&x, &clusters, k);
+        assert_eq!(tiled, naive, "seed {seed} n {n} d {d} k {k} clusters {n_clusters}");
+    }
+}
+
+#[test]
+fn prop_tiled_results_invariant_to_thread_count() {
+    // continuous data here: thread-count invariance must hold for real
+    // float distances, not just the exact-integer regime
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(400 + seed);
+        let n = TILE_Q + 1 + rng.below(3 * TILE_Q);
+        let d = 1 + rng.below(48);
+        let k = 1 + rng.below(20);
+        let x = gauss_matrix(&mut rng, n, d);
+        let c = gauss_matrix(&mut rng, 1 + rng.below(2 * TILE_C), d);
+        let assign_1 = assign_tiled(&x, &c, 1);
+        let knn_1 = self_knn_tiled(&x, k, 1);
+        for threads in [2usize, 4] {
+            assert_eq!(
+                assign_tiled(&x, &c, threads),
+                assign_1,
+                "assign: seed {seed} threads {threads}"
+            );
+            assert_eq!(
+                self_knn_tiled(&x, k, threads),
+                knn_1,
+                "knn: seed {seed} threads {threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_tiled_distances_accurate_on_gaussian_data() {
+    // norm-trick rounding vs the pointwise formula stays tiny relative to
+    // unit-scale gaussian data
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(500 + seed);
+        let n = 10 + rng.below(120);
+        let d = 2 + rng.below(30);
+        let k = 1 + rng.below(6).min(n - 2);
+        let x = gauss_matrix(&mut rng, n, d);
+        let (idx, dd) = self_knn_tiled(&x, k, 2);
+        for i in 0..n {
+            for s in 0..k {
+                let j = idx[i * k + s];
+                if j == u32::MAX {
+                    continue;
+                }
+                let real = nomad::linalg::d2(x.row(i), x.row(j as usize));
+                let err = (dd[i * k + s] - real).abs();
+                assert!(err < 1e-3, "seed {seed} row {i} slot {s}: err {err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn nan_rows_do_not_panic_anywhere() {
+    let mut rng = Rng::new(600);
+    let mut x = gauss_matrix(&mut rng, 30, 5);
+    x.data[7] = f32::NAN;
+    x.data[60] = f32::NAN;
+    let c = gauss_matrix(&mut rng, 4, 5);
+    // engine paths
+    assert_eq!(assign_tiled(&x, &c, 2).len(), 30);
+    assert_eq!(self_knn_tiled(&x, 3, 2).0.len(), 90);
+    // naive oracles (the old partial_cmp sorts would panic here)
+    assert_eq!(assign_naive(&x, &c).len(), 30);
+    assert_eq!(knn_naive(&x, 3).0.len(), 90);
+    let be = NativeBackend::default();
+    let clusters = vec![(0..30u32).collect::<Vec<_>>()];
+    assert_eq!(within_clusters(&x, &clusters, 3, &be).0.len(), 90);
+}
+
+#[test]
+fn backend_trait_paths_match_engine() {
+    // NativeBackend must be a thin veneer over the engine
+    let mut rng = Rng::new(700);
+    let x = int_matrix(&mut rng, 90, 12, 6);
+    let c = int_matrix(&mut rng, 11, 12, 6);
+    let be = NativeBackend::default();
+    assert_eq!(be.assign(&x, &c), assign_naive(&x, &c));
+    assert_eq!(be.knn(&x, 7), knn_naive(&x, 7));
+    assert_eq!(be.knn_with_budget(&x, 7, 2), knn_naive(&x, 7));
+}
