@@ -1,14 +1,17 @@
-//! Layer-1/Layer-3 microbenchmarks: per-block NOMAD step latency for the
-//! native path (1 worker vs the full thread budget) and, when built with
-//! the `xla` feature and AOT artifacts exist, the XLA artifact path; plus
-//! the ANN kernels (assignment, within-cluster kNN).  These drive the §Perf
-//! iteration log in EXPERIMENTS.md.
+//! Layer-1/Layer-3 microbenchmarks: per-block NOMAD gradient latency for
+//! the retired chunked **scatter** path vs the production **gather** force
+//! engine (DESIGN.md §9) at 1 worker and the full thread budget — plus,
+//! when built with the `xla` feature and AOT artifacts exist, the XLA
+//! artifact path; and the ANN kernels (assignment, within-cluster kNN).
+//! These drive the §Perf iteration log in EXPERIMENTS.md.
 //!
 //!   cargo bench --bench kernel_micro  [-- --runs 20]
 //!
-//! The "speedup" column is the acceptance gauge for the parallel step path:
-//! run once with NOMAD_THREADS=1 and once with NOMAD_THREADS=4 (or just
-//! read the column — it times both thread counts in one invocation).
+//! The "sc/ga" column is the acceptance gauge for the gather engine
+//! (scatter-x1 time over gather-x1 time: the algorithmic win with no
+//! threading in play); "x1/xN" shows the gather engine's thread scaling.
+//! The JSON also records each engine's gradient working set —
+//! O(size × n_chunks) for scatter, O(size) for gather.
 
 use nomad::ann::backend::{assign_naive, knn_naive, AnnBackend, NativeBackend};
 use nomad::ann::graph::{edge_weights, WeightModel};
@@ -17,12 +20,18 @@ use nomad::bench::jsonx::{arr, num, obj, s, Json};
 use nomad::bench::{fmt_secs, save_bench_json, time_fn, Table};
 use nomad::cli::Args;
 use nomad::data::gaussian_mixture;
-use nomad::embed::native::NativeStepBackend;
-use nomad::embed::{ClusterBlock, StepBackend, StepInputs};
+use nomad::embed::native::{nomad_grad_gather, nomad_grad_scatter, HEAD_CHUNK};
+use nomad::embed::ClusterBlock;
+#[cfg(feature = "xla")]
+use nomad::embed::{StepBackend, StepInputs};
 use nomad::linalg::Matrix;
 use nomad::util::rng::Rng;
 
-fn block_of_size(target_real: usize, r: usize, seed: u64) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
+fn block_of_size(
+    target_real: usize,
+    r: usize,
+    seed: u64,
+) -> (ClusterBlock, Vec<f32>, Vec<f32>, Vec<f32>) {
     let mut rng = Rng::new(seed);
     let n = target_real + target_real / 8;
     let ds = gaussian_mixture(n, 16, 2, 50.0, 0.0, 0.0, &mut rng);
@@ -45,33 +54,62 @@ fn block_of_size(target_real: usize, r: usize, seed: u64) -> (ClusterBlock, Vec<
         .max_by_key(|&c| idx.clusters[c].len())
         .unwrap();
     let block = ClusterBlock::build(&idx, &ew, c, &init, n, 5.0, 8);
-    let means: Vec<f32> = (0..r * 2).map(|_| rng.normal() * 5.0).collect();
+    let mean_x: Vec<f32> = (0..r).map(|_| rng.normal() * 5.0).collect();
+    let mean_y: Vec<f32> = (0..r).map(|_| rng.normal() * 5.0).collect();
     let mean_w: Vec<f32> = (0..r).map(|_| 1.0).collect();
-    (block, means, mean_w)
+    (block, mean_x, mean_y, mean_w)
 }
 
-/// Time one native step configuration with a fixed intra-step thread count.
-fn native_step_time(
-    block0: &ClusterBlock,
-    means: &[f32],
+/// Time the two gradient engines on identical inputs (negatives resampled
+/// once up front, so the comparison is kernel-only): the retired scatter
+/// path at 1 worker, the gather engine at 1 and `threads` workers.
+fn engine_times(
+    block: &mut ClusterBlock,
+    mean_x: &[f32],
+    mean_y: &[f32],
     mean_w: &[f32],
     runs: usize,
     threads: usize,
-) -> f64 {
-    let native = NativeStepBackend::default();
-    let inputs = StepInputs { means, mean_w, lr: 0.5, threads };
-    let mut b = block0.clone();
+) -> (f64, f64, f64) {
     let mut rng = Rng::new(2);
-    time_fn(2, runs, || {
-        native.step(&mut b, &inputs, &mut rng);
+    block.resample_negatives(&mut rng);
+    let b = &*block;
+    let means_aos: Vec<f32> = mean_x.iter().zip(mean_y).flat_map(|(&x, &y)| [x, y]).collect();
+    let t_scatter = time_fn(2, runs, || {
+        std::hint::black_box(nomad_grad_scatter(
+            &b.pos, &b.nbr_idx, &b.nbr_w, &b.neg_idx, b.neg_w, &means_aos, mean_w, &b.valid,
+            b.k, b.negs, 1,
+        ));
     })
-    .mean
+    .mean;
+    let gather = |t: usize| {
+        time_fn(2, runs, || {
+            std::hint::black_box(nomad_grad_gather(
+                &b.pos, &b.nbr_idx, &b.nbr_w, &b.nbr_in, &b.neg_idx, &b.neg_in, b.neg_w,
+                mean_x, mean_y, mean_w, &b.valid, b.k, b.negs, t,
+            ));
+        })
+        .mean
+    };
+    (t_scatter, gather(1), gather(threads))
+}
+
+/// Gradient working-set bytes per engine: the scatter path allocates a
+/// full `size x 2` accumulator **per head chunk** plus the reduced output;
+/// the gather engine a fixed O(size) set (gradient + per-edge reaction
+/// coefficients + per-head loss), independent of any chunk count.
+fn grad_bytes(size: usize, k: usize, negs: usize) -> (f64, f64) {
+    let n_chunks = size.div_ceil(HEAD_CHUNK);
+    let scatter = (n_chunks * size * 2 + size * 2) * 4;
+    let gather = (size * 2 + size * k + size * negs) * 4 + size * 8;
+    (scatter as f64, gather as f64)
 }
 
 #[cfg(feature = "xla")]
 fn xla_step_cells(
     block0: &ClusterBlock,
-    means: &[f32],
+    mean_x: &[f32],
+    mean_y: &[f32],
     mean_w: &[f32],
     runs: usize,
     t_native: f64,
@@ -82,7 +120,7 @@ fn xla_step_cells(
     }
     match XlaStepBackend::from_env() {
         Ok(x) => {
-            let inputs = StepInputs { means, mean_w, lr: 0.5, threads: 1 };
+            let inputs = StepInputs { mean_x, mean_y, mean_w, lr: 0.5, threads: 1 };
             let mut b = block0.clone();
             let mut rng = Rng::new(2);
             let t = time_fn(2, runs, || {
@@ -97,7 +135,8 @@ fn xla_step_cells(
 #[cfg(not(feature = "xla"))]
 fn xla_step_cells(
     _block0: &ClusterBlock,
-    _means: &[f32],
+    _mean_x: &[f32],
+    _mean_y: &[f32],
     _mean_w: &[f32],
     _runs: usize,
     _t_native: f64,
@@ -136,15 +175,17 @@ fn main() {
     let runs = args.usize("runs", 15);
     let threads = nomad::util::parallel::num_threads();
 
-    let par_header = format!("native x{threads}");
+    let par_header = format!("gather x{threads}");
     let mut table = Table::new(
-        "L1/L3 microbench — per-block NOMAD step",
+        "L1/L3 microbench — per-block NOMAD gradient (scatter vs gather engine)",
         &[
             "Bucket (real pts)",
             "R",
-            "native x1",
+            "scatter x1",
+            "gather x1",
             par_header.as_str(),
-            "speedup",
+            "sc/ga",
+            "x1/xN",
             "xla",
             "xla/native",
         ],
@@ -152,26 +193,33 @@ fn main() {
 
     let mut step_rows: Vec<Json> = Vec::new();
     for (target, r) in [(400usize, 64usize), (1500, 64), (1500, 255), (6000, 255)] {
-        let (block0, means, mean_w) = block_of_size(target, r, 1);
-        let t_serial = native_step_time(&block0, &means, &mean_w, runs, 1);
-        let t_par = native_step_time(&block0, &means, &mean_w, runs, threads);
+        let (mut block0, mean_x, mean_y, mean_w) = block_of_size(target, r, 1);
+        let (t_scatter, t_ga1, t_gan) =
+            engine_times(&mut block0, &mean_x, &mean_y, &mean_w, runs, threads);
         // xla runs single-threaded per device, so its ratio is against the
-        // 1-worker native time (same comparison the pre-workspace bench made)
-        let (t_xla, ratio) = xla_step_cells(&block0, &means, &mean_w, runs, t_serial);
+        // 1-worker gather time (the production native engine)
+        let (t_xla, ratio) = xla_step_cells(&block0, &mean_x, &mean_y, &mean_w, runs, t_ga1);
+        let (sc_bytes, ga_bytes) = grad_bytes(block0.size, block0.k, block0.negs);
         table.row(vec![
             format!("{} (bucket {})", block0.n_real, block0.size).into(),
             format!("{r}").into(),
-            fmt_secs(t_serial).into(),
-            fmt_secs(t_par).into(),
-            format!("{:.2}x", t_serial / t_par.max(1e-12)).into(),
+            fmt_secs(t_scatter).into(),
+            fmt_secs(t_ga1).into(),
+            fmt_secs(t_gan).into(),
+            format!("{:.2}x", t_scatter / t_ga1.max(1e-12)).into(),
+            format!("{:.2}x", t_ga1 / t_gan.max(1e-12)).into(),
             t_xla.into(),
             ratio.into(),
         ]);
         step_rows.push(obj(vec![
             ("shape", s(&format!("{}x{} r={r}", block0.n_real, block0.size))),
-            ("native_x1_ns_per_op", num(t_serial * 1e9)),
-            ("native_xn_ns_per_op", num(t_par * 1e9)),
-            ("speedup_x1_over_xn", num(t_serial / t_par.max(1e-12))),
+            ("scatter_x1_ns_per_op", num(t_scatter * 1e9)),
+            ("gather_x1_ns_per_op", num(t_ga1 * 1e9)),
+            ("gather_xn_ns_per_op", num(t_gan * 1e9)),
+            ("speedup_scatter_over_gather_x1", num(t_scatter / t_ga1.max(1e-12))),
+            ("speedup_gather_x1_over_xn", num(t_ga1 / t_gan.max(1e-12))),
+            ("scatter_grad_bytes", num(sc_bytes)),
+            ("gather_grad_bytes", num(ga_bytes)),
         ]));
     }
     table.print();

@@ -143,6 +143,9 @@ impl NomadCoordinator {
             .collect();
         let sizes: Vec<usize> = index.clusters.iter().map(|c| c.len()).collect();
         let shards = shard_clusters(&sizes, self.run.n_devices);
+        // thread budgets divide across the shards that own blocks: when
+        // n_devices > n_clusters the empty shards must not hold a share
+        let n_active = shards.iter().filter(|s| !s.is_empty()).count().max(1);
 
         // initial means table
         let mut means_table: Vec<MeanEntry> = blocks
@@ -181,7 +184,7 @@ impl NomadCoordinator {
                 n,
                 p.m_noise,
                 p.seed,
-                shards.len(),
+                n_active,
                 make,
                 reply_tx.clone(),
             ));
@@ -256,7 +259,7 @@ impl NomadCoordinator {
             };
             last_work = work;
             modeled_total += comm_model::epoch_time(&self.hw, &work);
-            loss_history.push(loss_sum / loss_w.max(1.0));
+            loss_history.push(epoch_mean_loss(loss_sum, loss_w));
 
             if let Some(every) = self.run.snapshot_every {
                 if (epoch + 1) % every == 0 && epoch + 1 < p.epochs {
@@ -303,6 +306,19 @@ impl NomadCoordinator {
             device_step_secs,
             last_epoch_work: last_work,
         }
+    }
+}
+
+/// Weight-normalized epoch loss.  The old `loss_sum / loss_w.max(1.0)`
+/// silently divided by 1.0 whenever the total valid weight fell in (0, 1),
+/// misreporting tiny shards; and turned an empty epoch into `loss_sum`
+/// verbatim.  Exact division when any weight exists, an honest NaN-free
+/// 0.0 when none does.
+pub fn epoch_mean_loss(loss_sum: f64, loss_w: f64) -> f64 {
+    if loss_w > 0.0 {
+        loss_sum / loss_w
+    } else {
+        0.0
     }
 }
 
@@ -431,6 +447,43 @@ mod tests {
         let run = coord.fit(&ds, &NativeBackend::default());
         assert_eq!(run.snapshots.len(), 3); // epochs 5, 10, 15 (20 = final)
         assert!(run.snapshots.windows(2).all(|w| w[0].wall_secs <= w[1].wall_secs));
+    }
+
+    #[test]
+    fn epoch_mean_loss_divides_exactly_and_handles_empty() {
+        // weights in (0, 1) must divide, not fall through a max(1.0) clamp
+        assert_eq!(epoch_mean_loss(0.5, 0.25), 2.0);
+        assert_eq!(epoch_mean_loss(-3.0, 0.5), -6.0);
+        assert_eq!(epoch_mean_loss(4.0, 2.0), 2.0);
+        // zero total weight: honest NaN-free zero, not loss_sum verbatim
+        let z = epoch_mean_loss(7.0, 0.0);
+        assert_eq!(z, 0.0);
+        assert!(epoch_mean_loss(0.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn more_devices_than_clusters_trains_fine() {
+        // 8 spawned devices over ~2 clusters: the empty shards must neither
+        // stall the epoch barrier nor hold a slice of the thread budget
+        let mut rng = Rng::new(9);
+        let ds = gaussian_mixture(240, 8, 2, 8.0, 0.0, 0.3, &mut rng);
+        let coord = NomadCoordinator::new(
+            tiny_params(12),
+            RunConfig {
+                n_devices: 8,
+                index: IndexParams { n_clusters: 2, k: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let run = coord.fit(&ds, &NativeBackend::default());
+        assert_eq!(run.positions.rows, 240);
+        assert_eq!(run.loss_history.len(), 12);
+        assert!(run.loss_history.iter().all(|l| l.is_finite()));
+        // every real row was stepped and written back by some device
+        let moved = (0..240)
+            .filter(|&i| run.positions.row(i).iter().any(|v| *v != 0.0))
+            .count();
+        assert!(moved > 230, "{moved} rows written");
     }
 
     #[test]

@@ -18,8 +18,10 @@
 //! `(device seed, epoch, block index)`, so results are identical from run
 //! to run and independent of both the thread count and the scheduling
 //! order.  The worker budget is `NOMAD_THREADS` (or the machine's
-//! parallelism) divided by the simulated device count, so an 8-device
-//! simulation doesn't oversubscribe the host.
+//! parallelism) divided by the number of devices that actually own blocks
+//! ([`intra_device_budget`]) — empty shards (a `n_devices > n_clusters`
+//! run) hold no share — so a multi-device simulation neither oversubscribes
+//! the host nor idles workers on do-nothing device threads.
 
 use super::MeanEntry;
 use crate::embed::{ClusterBlock, StepBackend, StepInputs};
@@ -72,19 +74,29 @@ pub struct DeviceHandle {
     pub join: std::thread::JoinHandle<()>,
 }
 
+/// Split the host's worker threads across the devices that actually own
+/// blocks.  `active_devices` must count only non-empty shards: a device
+/// with no blocks does no step work, so giving it a share (as dividing by
+/// the *spawned* count would) just idles workers whenever
+/// `n_devices > n_clusters`.
+pub fn intra_device_budget(total_threads: usize, active_devices: usize) -> usize {
+    (total_threads / active_devices.max(1)).max(1)
+}
+
 /// Spawn a device worker.
 ///
 /// `make_backend` runs once inside the worker thread to build the step
-/// backend (native, or XLA with a thread-private PJRT client).  `n_devices`
-/// is the total simulated device count, used to split the host's worker
-/// threads fairly across device threads.
+/// backend (native, or XLA with a thread-private PJRT client).
+/// `n_active_devices` is the number of simulated devices that own at least
+/// one block, used to split the host's worker threads fairly across the
+/// device threads that have work.
 pub fn spawn_device(
     device: usize,
     mut blocks: Vec<ClusterBlock>,
     n_total: usize,
     m_noise: f64,
     seed: u64,
-    n_devices: usize,
+    n_active_devices: usize,
     make_backend: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send>,
     reply: Sender<DeviceReply>,
 ) -> DeviceHandle {
@@ -111,7 +123,7 @@ pub fn spawn_device(
                         let _ = reply.send(DeviceReply::Collected { device, positions });
                     }
                     DeviceCmd::Epoch { lr, exaggeration, means } => {
-                        let budget = (num_threads() / n_devices.max(1)).max(1);
+                        let budget = intra_device_budget(num_threads(), n_active_devices);
                         let eroot = rng_root.fork(epoch_no);
                         epoch_no += 1;
                         let t0 = Instant::now();
@@ -197,13 +209,19 @@ fn step_block<B: StepBackend + ?Sized>(
     rng: &mut Rng,
     threads: usize,
 ) -> (f64, f64, f64) {
-    // remote view: every cluster except this block's
-    let mut means_buf: Vec<f32> = Vec::with_capacity(means.len().saturating_sub(1) * 2);
-    let mut meanw_buf: Vec<f32> = Vec::with_capacity(means.len().saturating_sub(1));
+    // remote view, SoA for the gather engine's mean microkernel: every
+    // cluster except this block's.  Zero-weight entries contribute exactly
+    // nothing to the negative mass or the repulsion, so they are dropped
+    // here — under `ApproxMode::None` every weight is 0.0 and the per-head
+    // O(R) mean pass vanishes instead of being paid for nothing.
+    let cap = means.len().saturating_sub(1);
+    let mut meanx_buf: Vec<f32> = Vec::with_capacity(cap);
+    let mut meany_buf: Vec<f32> = Vec::with_capacity(cap);
+    let mut meanw_buf: Vec<f32> = Vec::with_capacity(cap);
     for e in means {
-        if e.cluster_id != b.cluster_id {
-            means_buf.push(e.mean[0]);
-            means_buf.push(e.mean[1]);
+        if e.cluster_id != b.cluster_id && e.weight != 0.0 {
+            meanx_buf.push(e.mean[0]);
+            meany_buf.push(e.mean[1]);
             meanw_buf.push(e.weight);
         }
     }
@@ -228,7 +246,8 @@ fn step_block<B: StepBackend + ?Sized>(
         b.nbr_w_exag = None;
     }
 
-    let inputs = StepInputs { means: &means_buf, mean_w: &meanw_buf, lr, threads };
+    let inputs =
+        StepInputs { mean_x: &meanx_buf, mean_y: &meany_buf, mean_w: &meanw_buf, lr, threads };
     let l = backend.step(b, &inputs, rng);
 
     if exaggerated {
@@ -245,24 +264,45 @@ fn step_block<B: StepBackend + ?Sized>(
 mod tests {
     use super::*;
     use crate::embed::native::NativeStepBackend;
+    use crate::embed::EdgeTranspose;
 
     /// A hand-built 4-row block (2 real points linked to each other).
     fn mini_block() -> ClusterBlock {
+        let nbr_idx = vec![1, 0, 2, 3];
+        let nbr_w = vec![1.0, 1.0, 0.0, 0.0];
+        let neg_idx = vec![0; 4];
+        let nbr_in = EdgeTranspose::build(&nbr_idx, 4, 1, |e| nbr_w[e] != 0.0);
+        let neg_in = EdgeTranspose::build(&neg_idx, 4, 1, |_| true);
         ClusterBlock {
             cluster_id: 0,
             global_ids: vec![0, 1],
             size: 4,
             n_real: 2,
             pos: vec![0.0, 0.0, 1.0, 0.5, 0.0, 0.0, 0.0, 0.0],
-            nbr_idx: vec![1, 0, 2, 3],
-            nbr_w: vec![1.0, 1.0, 0.0, 0.0],
+            nbr_idx,
+            nbr_w,
             nbr_w_exag: None,
-            neg_idx: vec![0; 4],
+            nbr_in,
+            neg_idx,
             neg_w: 0.5,
+            neg_in,
             valid: vec![1.0, 1.0, 0.0, 0.0],
             k: 1,
             negs: 1,
         }
+    }
+
+    #[test]
+    fn budget_splits_across_active_devices_only() {
+        // 8 workers, 2 non-empty shards: each active device gets 4 —
+        // dividing by a *spawned* count of 8 would have left them with 1
+        assert_eq!(intra_device_budget(8, 2), 4);
+        assert_eq!(intra_device_budget(8, 8), 1);
+        assert_eq!(intra_device_budget(8, 3), 2);
+        // degenerate inputs stay sane
+        assert_eq!(intra_device_budget(8, 0), 8);
+        assert_eq!(intra_device_budget(1, 5), 1);
+        assert_eq!(intra_device_budget(0, 2), 1);
     }
 
     fn remote_means() -> Vec<MeanEntry> {
@@ -326,6 +366,29 @@ mod tests {
     }
 
     #[test]
+    fn step_block_drops_zero_weight_means() {
+        // a zero-weight remote entry (ApproxMode::None publishes only
+        // those) must neither change the step nor be paid for in the
+        // O(R) mean pass — the view builder filters it out entirely
+        let backend = NativeStepBackend::default();
+        let with_zero = vec![
+            MeanEntry { cluster_id: 0, mean: [0.0, 0.0], weight: 1.0 },
+            MeanEntry { cluster_id: 1, mean: [3.0, -2.0], weight: 2.0 },
+            MeanEntry { cluster_id: 2, mean: [9.0, 9.0], weight: 0.0 },
+        ];
+        let without: Vec<MeanEntry> = with_zero[..2].to_vec();
+
+        let mut a = mini_block();
+        let mut rng1 = Rng::new(5);
+        let la = step_block(&backend, &mut a, 0.3, 1.0, &with_zero, &mut rng1, 1).0;
+        let mut b = mini_block();
+        let mut rng2 = Rng::new(5);
+        let lb = step_block(&backend, &mut b, 0.3, 1.0, &without, &mut rng2, 1).0;
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(la.to_bits(), lb.to_bits());
+    }
+
+    #[test]
     fn step_block_excludes_own_cluster_mean() {
         let backend = NativeStepBackend::default();
         let means = remote_means();
@@ -337,7 +400,8 @@ mod tests {
         let mut direct = mini_block();
         let mut rng2 = Rng::new(5);
         let inputs = StepInputs {
-            means: &[3.0, -2.0],
+            mean_x: &[3.0],
+            mean_y: &[-2.0],
             mean_w: &[2.0],
             lr: 0.3,
             threads: 1,

@@ -1,7 +1,68 @@
 //! [`ClusterBlock`]: one padded K-Means cluster, the shard unit of NOMAD.
+//!
+//! Besides the forward edge lists, a block carries the **CSR transposes**
+//! the gather force engine consumes (DESIGN.md §9): [`ClusterBlock::nbr_in`]
+//! (incoming positive edges, built once) and [`ClusterBlock::neg_in`]
+//! (incoming exact negatives, rebuilt by a counting sort every
+//! [`ClusterBlock::resample_negatives`]).
 
 use crate::ann::{graph::EdgeWeights, ClusterIndex, NO_NEIGHBOR};
 use crate::util::rng::Rng;
+
+/// CSR transpose of a `rows x fanout` local edge list: for each target row
+/// `t`, the flat edge ids `e = head * fanout + slot` with `idx[e] == t`,
+/// grouped contiguously and stored in ascending `e` order.  The fixed edge
+/// order is what makes the gather engine's per-row float summation — and
+/// therefore the whole step — bitwise independent of the worker count.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeTranspose {
+    /// row offsets into `edge`, length rows + 1
+    pub ptr: Vec<u32>,
+    /// flat edge ids (`head * fanout + slot`) grouped by target row
+    pub edge: Vec<u32>,
+}
+
+impl EdgeTranspose {
+    /// Counting-sort build, O(rows·fanout).  Edges with `keep(e) == false`
+    /// (e.g. zero-weight kNN slots, whose force coefficients are exactly 0)
+    /// are omitted so the gather pass never touches them.  `keep` is called
+    /// twice per edge (counting pass, then fill pass) and must answer
+    /// consistently — hence `Fn`, not `FnMut`.
+    pub fn build(
+        idx: &[i32],
+        rows: usize,
+        fanout: usize,
+        keep: impl Fn(usize) -> bool,
+    ) -> EdgeTranspose {
+        let n_edges = rows * fanout;
+        debug_assert_eq!(idx.len(), n_edges);
+        let mut ptr = vec![0u32; rows + 1];
+        for (e, &t) in idx.iter().enumerate() {
+            if keep(e) {
+                ptr[t as usize + 1] += 1;
+            }
+        }
+        for t in 0..rows {
+            ptr[t + 1] += ptr[t];
+        }
+        let mut edge = vec![0u32; ptr[rows] as usize];
+        let mut cursor: Vec<u32> = ptr[..rows].to_vec();
+        for (e, &t) in idx.iter().enumerate() {
+            if keep(e) {
+                let t = t as usize;
+                edge[cursor[t] as usize] = e as u32;
+                cursor[t] += 1;
+            }
+        }
+        EdgeTranspose { ptr, edge }
+    }
+
+    /// Flat edge ids whose target is row `t`, ascending.
+    #[inline]
+    pub fn incoming(&self, t: usize) -> &[u32] {
+        &self.edge[self.ptr[t] as usize..self.ptr[t + 1] as usize]
+    }
+}
 
 /// Shape buckets for block padding.  These must match the AOT artifact
 /// buckets (`python/compile/aot.py STEP_BUCKETS`); the runtime picks the
@@ -43,8 +104,17 @@ pub struct ClusterBlock {
     /// While a step is in flight the device swaps the scaled copy into
     /// `nbr_w` and parks the originals here under the same tag.
     pub nbr_w_exag: Option<(f32, Vec<f32>)>,
+    /// CSR transpose of the positive edges (incoming neighbors per row,
+    /// zero-weight slots omitted).  Built once — the edge topology and its
+    /// zero-weight set are fixed for the life of the block (exaggeration
+    /// only scales nonzero weights) — and consumed by the gather engine's
+    /// attraction-reaction pass.
+    pub nbr_in: EdgeTranspose,
     /// per-epoch exact-negative local indices, size x negs
     pub neg_idx: Vec<i32>,
+    /// counting-sort transpose of the current `neg_idx` draw (incoming
+    /// negatives per row); rebuilt by `resample_negatives` each epoch
+    pub neg_in: EdgeTranspose,
     /// scalar weight |M| * p(m in this cluster) / negs
     pub neg_w: f32,
     /// 1.0 for real rows
@@ -112,25 +182,34 @@ impl ClusterBlock {
         let p_cell = n_real as f64 / n_total.max(1) as f64;
         let neg_w = ((m_noise * p_cell) / negs.max(1) as f64) as f32;
 
+        // incoming-edge CSR for the gather engine; zero-weight slots carry
+        // zero force so they are dropped from the reaction lists up front
+        let nbr_in = EdgeTranspose::build(&nbr_idx, size, k, |e| nbr_w[e] != 0.0);
+        let neg_idx = vec![0i32; size * negs];
+        let neg_in = EdgeTranspose::build(&neg_idx, size, negs, |_| true);
+
         ClusterBlock {
             cluster_id: c as u32,
             global_ids: members.clone(),
             size,
             n_real,
             pos,
-            nbr_idx: nbr_idx.clone(),
+            nbr_idx,
             nbr_w,
             nbr_w_exag: None,
-            neg_idx: vec![0i32; size * negs],
+            nbr_in,
+            neg_idx,
             neg_w,
+            neg_in,
             valid,
             k,
             negs,
         }
     }
 
-    /// Resample the exact negatives uniformly from this cluster's real rows
-    /// (padding heads self-loop so they contribute nothing).
+    /// Resample the exact negatives uniformly from this cluster's **other**
+    /// real rows (padding heads self-loop so they contribute nothing), then
+    /// rebuild the counting-sort transpose the gather engine reads.
     pub fn resample_negatives(&mut self, rng: &mut Rng) {
         let negs = self.negs;
         if self.n_real <= 1 {
@@ -139,21 +218,25 @@ impl ClusterBlock {
                     self.neg_idx[l * negs + s] = l as i32;
                 }
             }
-            return;
-        }
-        for l in 0..self.size {
-            for s in 0..negs {
-                self.neg_idx[l * negs + s] = if l < self.n_real {
-                    let mut v = rng.below(self.n_real);
-                    if v == l {
-                        v = (v + 1) % self.n_real; // avoid self-negatives
-                    }
-                    v as i32
-                } else {
-                    l as i32
-                };
+        } else {
+            for l in 0..self.size {
+                for s in 0..negs {
+                    self.neg_idx[l * negs + s] = if l < self.n_real {
+                        // draw from the n_real-1 non-self rows and shift past
+                        // l — the old `(v + 1) % n_real` self-collision fixup
+                        // gave row l+1 double probability
+                        let mut v = rng.below(self.n_real - 1);
+                        if v >= l {
+                            v += 1;
+                        }
+                        v as i32
+                    } else {
+                        l as i32
+                    };
+                }
             }
         }
+        self.neg_in = EdgeTranspose::build(&self.neg_idx, self.size, negs, |_| true);
     }
 
     /// Mean of the real rows' positions (the cluster's embedding mean,
@@ -271,6 +354,107 @@ mod tests {
         want[1] /= b.n_real as f64;
         assert!((m[0] as f64 - want[0]).abs() < 1e-5);
         assert!((m[1] as f64 - want[1]).abs() < 1e-5);
+    }
+
+    /// Minimal block with hand-set edges, for sampling/transpose tests.
+    fn bare_block(n_real: usize, size: usize, negs: usize) -> ClusterBlock {
+        let nbr_idx = vec![0i32; size];
+        let nbr_w = vec![0.0f32; size];
+        let neg_idx = vec![0i32; size * negs];
+        let nbr_in = EdgeTranspose::build(&nbr_idx, size, 1, |e| nbr_w[e] != 0.0);
+        let neg_in = EdgeTranspose::build(&neg_idx, size, negs, |_| true);
+        ClusterBlock {
+            cluster_id: 0,
+            global_ids: (0..n_real as u32).collect(),
+            size,
+            n_real,
+            pos: vec![0.0; size * 2],
+            nbr_idx,
+            nbr_w,
+            nbr_w_exag: None,
+            nbr_in,
+            neg_idx,
+            neg_w: 1.0,
+            neg_in,
+            valid: (0..size).map(|l| if l < n_real { 1.0 } else { 0.0 }).collect(),
+            k: 1,
+            negs,
+        }
+    }
+
+    #[test]
+    fn resampled_negatives_are_uniform_over_non_self_rows() {
+        let (n_real, negs) = (7usize, 4usize);
+        let mut b = bare_block(n_real, 8, negs);
+        let mut rng = Rng::new(123);
+        let rounds = 4000;
+        let mut counts = vec![0u64; n_real * n_real];
+        for _ in 0..rounds {
+            b.resample_negatives(&mut rng);
+            for l in 0..n_real {
+                for s in 0..negs {
+                    counts[l * n_real + b.neg_idx[l * negs + s] as usize] += 1;
+                }
+            }
+        }
+        // per head: no self hits, and every other row within 10% of the
+        // uniform expectation (the old `(v+1) % n` fixup put 2x mass on
+        // row l+1, a 100% excess — far outside this band)
+        let expect = (rounds * negs) as f64 / (n_real - 1) as f64;
+        for l in 0..n_real {
+            assert_eq!(counts[l * n_real + l], 0, "head {l} drew itself");
+            for v in 0..n_real {
+                if v == l {
+                    continue;
+                }
+                let c = counts[l * n_real + v] as f64;
+                assert!(
+                    (c - expect).abs() < 0.10 * expect,
+                    "head {l} row {v}: {c} draws vs expected {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edge_transpose_inverts_the_edge_list() {
+        let mut rng = Rng::new(5);
+        let (rows, fanout) = (37usize, 5usize);
+        let idx: Vec<i32> = (0..rows * fanout).map(|_| rng.below(rows) as i32).collect();
+        let w: Vec<f32> =
+            (0..rows * fanout).map(|_| if rng.f32() < 0.3 { 0.0 } else { rng.f32() }).collect();
+        let t = EdgeTranspose::build(&idx, rows, fanout, |e| w[e] != 0.0);
+        assert_eq!(t.ptr.len(), rows + 1);
+        // every kept edge appears exactly once, under its target, ascending
+        let kept: usize = w.iter().filter(|x| **x != 0.0).count();
+        assert_eq!(t.edge.len(), kept);
+        let mut seen = std::collections::HashSet::new();
+        for target in 0..rows {
+            let inc = t.incoming(target);
+            for win in inc.windows(2) {
+                assert!(win[0] < win[1], "edge ids not ascending");
+            }
+            for &e in inc {
+                assert_eq!(idx[e as usize] as usize, target);
+                assert!(w[e as usize] != 0.0);
+                assert!(seen.insert(e));
+            }
+        }
+        assert_eq!(seen.len(), kept);
+    }
+
+    #[test]
+    fn resample_rebuilds_negative_transpose() {
+        let (idx, ew, init) = setup(300);
+        let mut b = ClusterBlock::build(&idx, &ew, 1, &init, 300, 5.0, 6);
+        let mut rng = Rng::new(11);
+        b.resample_negatives(&mut rng);
+        let expect = EdgeTranspose::build(&b.neg_idx, b.size, b.negs, |_| true);
+        assert_eq!(b.neg_in, expect);
+        assert_eq!(b.neg_in.edge.len(), b.size * b.negs);
+        // block-built kNN transpose matches a from-scratch rebuild too
+        let nbr_expect = EdgeTranspose::build(&b.nbr_idx, b.size, b.k, |e| b.nbr_w[e] != 0.0);
+        assert_eq!(b.nbr_in, nbr_expect);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //!
 //! The unit of computation is a [`ClusterBlock`]: one K-Means cluster,
 //! padded to a shape bucket, carrying its positive kNN edges (weights from
-//! the inverse-rank model), its per-epoch exact-negative samples, and a
-//! scalar negative weight.  Remote clusters appear only through their
-//! all-gathered means (paper Eq 3–5).  A device owns a set of blocks; an
-//! epoch applies one NOMAD gradient step per block.
+//! the inverse-rank model), its per-epoch exact-negative samples, the CSR
+//! transposes of both edge lists ([`EdgeTranspose`], consumed by the gather
+//! force engine — DESIGN.md §9), and a scalar negative weight.  Remote
+//! clusters appear only through their all-gathered means (paper Eq 3–5).
+//! A device owns a set of blocks; an epoch applies one NOMAD gradient step
+//! per block.
 //!
 //! The step itself runs through a [`StepBackend`]: the native Rust
 //! implementation ([`native`]) or the AOT-compiled XLA artifact
@@ -15,7 +17,7 @@ pub mod block;
 pub mod native;
 pub mod sgd;
 
-pub use block::ClusterBlock;
+pub use block::{ClusterBlock, EdgeTranspose};
 
 use crate::util::rng::Rng;
 
@@ -78,9 +80,16 @@ impl Default for NomadParams {
 }
 
 /// One cluster-step request: everything the backend needs besides the block.
+///
+/// The remote-means table is **SoA** (`mean_x`/`mean_y`/`mean_w`, one entry
+/// per remote cluster, zero-weight entries already dropped by the device
+/// worker) so the native engine's O(R) mean pass runs as an unrolled 4-lane
+/// microkernel; the XLA path re-interleaves into its r×2 artifact layout.
 pub struct StepInputs<'a> {
-    /// all-gathered means, row-major r x 2 (remote clusters only)
-    pub means: &'a [f32],
+    /// all-gathered remote-cluster mean x coordinates
+    pub mean_x: &'a [f32],
+    /// all-gathered remote-cluster mean y coordinates
+    pub mean_y: &'a [f32],
     /// per-mean weights |M| * p(m in r)
     pub mean_w: &'a [f32],
     /// learning rate for this epoch

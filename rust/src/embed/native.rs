@@ -6,32 +6,51 @@
 //! fallback when no AOT artifact matches a block's bucket, the oracle that
 //! the XLA path is cross-checked against, and the CPU performance baseline.
 //!
-//! # Parallel execution
+//! # Engines
 //!
-//! The head loop scatters into `grad[j]`/`grad[nloc]` (both endpoints of an
-//! edge move), so naive head parallelism races.  [`nomad_grad_threaded`]
-//! therefore splits the heads into **fixed-size chunks** ([`HEAD_CHUNK`]),
-//! gives every chunk a private gradient accumulator, and reduces the
-//! accumulators **in chunk order** — which makes the result bitwise
-//! independent of the worker-thread count (only the chunk partition, fixed
-//! by the block size, determines the float summation order).
-//! [`nomad_grad_serial`] keeps the original single-pass loop as the oracle;
-//! the two agree to f32 reassociation error (cross-checked in tests).
+//! Three implementations of the same gradient coexist:
+//!
+//! * [`nomad_grad_serial`] — the original single-pass scatter loop, kept
+//!   verbatim as the oracle every other path must match to f32
+//!   reassociation error (≤1e-5 relative, cross-checked in tests);
+//! * [`nomad_grad_scatter`] — the retired chunked parallel path: a private
+//!   **full-size** gradient accumulator per [`HEAD_CHUNK`]-head chunk plus a
+//!   chunk-ordered reduction.  Demoted to a second oracle and the bench
+//!   baseline; its gradient memory traffic is O(size × n_chunks);
+//! * [`nomad_grad_gather`] — the production **gather force engine**
+//!   (DESIGN.md §9).  Pass 1 walks heads owner-computes: each row writes its
+//!   own forces and the per-edge reaction coefficients (no scatter — a head
+//!   only ever writes its own row).  Pass 2 gathers the reactions through
+//!   CSR transposes of the edge lists ([`ClusterBlock::nbr_in`], built once;
+//!   [`ClusterBlock::neg_in`], a counting sort per resample).  Gradient
+//!   memory is O(size·(k+negs)) — independent of the chunk count — there is
+//!   no reduction pass, and because every row is summed by exactly one owner
+//!   in a fixed edge order, the result is bitwise independent of the
+//!   worker-thread count *by construction* rather than by careful chunking.
+//!   The remote-means table arrives SoA (xs/ys/ws) so the O(R) mean pass
+//!   runs as an unrolled 4-lane microkernel (same discipline as
+//!   `linalg::distance::dot4`).
 
+use super::block::EdgeTranspose;
 use super::{ClusterBlock, StepBackend, StepInputs, SyncStepBackend};
-use crate::util::parallel::{num_threads, par_map, par_rows_mut};
+use crate::util::parallel::{num_threads, par_for_chunks, par_map, par_rows_mut};
 use crate::util::rng::Rng;
 
-/// Heads per parallel chunk.  Fixed (not derived from the thread count) so
-/// that the chunk-ordered reduction yields identical results on any number
-/// of workers; small enough that even a 512-bucket block exposes 4-way
-/// parallelism.
+/// Heads per parallel chunk of the retired scatter path.  Fixed (not derived
+/// from the thread count) so that its chunk-ordered reduction yields
+/// identical results on any number of workers.
 pub const HEAD_CHUNK: usize = 128;
 
-/// Coordinate rows per task in the parallel gradient reduction.
+/// Coordinate rows per task in the scatter path's parallel reduction.
 const REDUCE_ROWS: usize = 512;
 
-/// Pure-Rust step executor.
+/// Rows per dynamically claimed task in the gather engine.  Purely a
+/// scheduling granule: rows are independent under owner-computes, so the
+/// results do not depend on this value (unlike the scatter path, whose
+/// chunking *is* its float summation order).
+const GATHER_ROWS: usize = 128;
+
+/// Pure-Rust step executor (gather engine).
 #[derive(Default)]
 pub struct NativeStepBackend {}
 
@@ -39,13 +58,16 @@ impl StepBackend for NativeStepBackend {
     fn step(&self, block: &mut ClusterBlock, inputs: &StepInputs, rng: &mut Rng) -> f64 {
         block.resample_negatives(rng);
         let threads = if inputs.threads == 0 { num_threads() } else { inputs.threads };
-        let (grad, loss) = nomad_grad_threaded(
+        let (grad, loss) = nomad_grad_gather(
             &block.pos,
             &block.nbr_idx,
             &block.nbr_w,
+            &block.nbr_in,
             &block.neg_idx,
+            &block.neg_in,
             block.neg_w,
-            inputs.means,
+            inputs.mean_x,
+            inputs.mean_y,
             inputs.mean_w,
             &block.valid,
             block.k,
@@ -79,9 +101,105 @@ fn q2(ax: f32, ay: f32, bx: f32, by: f32) -> (f32, f32, f32) {
     (1.0 / (1.0 + dx * dx + dy * dy), dx, dy)
 }
 
+/// SoA mean-field microkernel: Cauchy kernels of one head against every
+/// remote mean, 4 independent accumulator lanes combined as
+/// `((a0+a1)+(a2+a3))+tail` (the `dot4` association discipline).  Caches
+/// q and the deltas for the repulsion pass and returns Σ_r w_r q_r.
+#[inline]
+fn mean_field4(
+    px: f32,
+    py: f32,
+    xs: &[f32],
+    ys: &[f32],
+    ws: &[f32],
+    q: &mut [f32],
+    dx: &mut [f32],
+    dy: &mut [f32],
+) -> f32 {
+    let r = ws.len();
+    let chunks = r / 4 * 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut i = 0;
+    while i < chunks {
+        let d0x = px - xs[i];
+        let d0y = py - ys[i];
+        let q0 = 1.0 / (1.0 + d0x * d0x + d0y * d0y);
+        q[i] = q0;
+        dx[i] = d0x;
+        dy[i] = d0y;
+        a0 += ws[i] * q0;
+
+        let d1x = px - xs[i + 1];
+        let d1y = py - ys[i + 1];
+        let q1 = 1.0 / (1.0 + d1x * d1x + d1y * d1y);
+        q[i + 1] = q1;
+        dx[i + 1] = d1x;
+        dy[i + 1] = d1y;
+        a1 += ws[i + 1] * q1;
+
+        let d2x = px - xs[i + 2];
+        let d2y = py - ys[i + 2];
+        let qq2 = 1.0 / (1.0 + d2x * d2x + d2y * d2y);
+        q[i + 2] = qq2;
+        dx[i + 2] = d2x;
+        dy[i + 2] = d2y;
+        a2 += ws[i + 2] * qq2;
+
+        let d3x = px - xs[i + 3];
+        let d3y = py - ys[i + 3];
+        let q3 = 1.0 / (1.0 + d3x * d3x + d3y * d3y);
+        q[i + 3] = q3;
+        dx[i + 3] = d3x;
+        dy[i + 3] = d3y;
+        a3 += ws[i + 3] * q3;
+
+        i += 4;
+    }
+    let mut tail = 0.0f32;
+    while i < r {
+        let dix = px - xs[i];
+        let diy = py - ys[i];
+        let qi = 1.0 / (1.0 + dix * dix + diy * diy);
+        q[i] = qi;
+        dx[i] = dix;
+        dy[i] = diy;
+        tail += ws[i] * qi;
+        i += 1;
+    }
+    ((a0 + a1) + (a2 + a3)) + tail
+}
+
+/// Mean-repulsion microkernel over the cached q/delta buffers: returns
+/// `(Σ_r w_r q_r² dx_r, Σ_r w_r q_r² dy_r)` with the same 4-lane
+/// accumulator layout as [`mean_field4`].
+#[inline]
+fn mean_repulse4(ws: &[f32], q: &[f32], dx: &[f32], dy: &[f32]) -> (f32, f32) {
+    let r = ws.len();
+    let chunks = r / 4 * 4;
+    let mut gx = [0.0f32; 4];
+    let mut gy = [0.0f32; 4];
+    let mut i = 0;
+    while i < chunks {
+        for lane in 0..4 {
+            let c = ws[i + lane] * q[i + lane] * q[i + lane];
+            gx[lane] += c * dx[i + lane];
+            gy[lane] += c * dy[i + lane];
+        }
+        i += 4;
+    }
+    let (mut tx, mut ty) = (0.0f32, 0.0f32);
+    while i < r {
+        let c = ws[i] * q[i] * q[i];
+        tx += c * dx[i];
+        ty += c * dy[i];
+        i += 1;
+    }
+    (((gx[0] + gx[1]) + (gx[2] + gx[3])) + tx, ((gy[0] + gy[1]) + (gy[2] + gy[3])) + ty)
+}
+
 /// Accumulate the unnormalized gradient and loss contributions of heads
 /// `lo..hi` into `grad` (full block size).  Shared verbatim by the serial
-/// oracle and every parallel chunk, so the two paths cannot drift.
+/// oracle and every scatter-path chunk, so the two cannot drift.
 /// Returns `(loss_sum, nvalid)` for the processed range.
 fn accumulate_heads(
     lo: usize,
@@ -187,7 +305,7 @@ fn accumulate_heads(
     (loss_sum, nvalid)
 }
 
-/// Divide by the valid-head count — the mean-normalization both paths share.
+/// Divide by the valid-head count — the mean-normalization all paths share.
 fn finalize(mut grad: Vec<f32>, loss_sum: f64, nvalid: f64) -> (Vec<f32>, f64) {
     let inv = 1.0 / nvalid.max(1.0);
     for g in grad.iter_mut() {
@@ -223,11 +341,13 @@ pub fn nomad_grad_serial(
     finalize(grad, loss_sum, nvalid)
 }
 
-/// Parallel NOMAD gradient: fixed [`HEAD_CHUNK`]-head chunks with private
-/// accumulators, reduced in chunk order (see the module docs).  `threads`
-/// bounds the worker count; the *result* does not depend on it.  Falls back
-/// to [`nomad_grad_serial`] when the block is a single chunk.
-pub fn nomad_grad_threaded(
+/// The retired chunked **scatter** path: fixed [`HEAD_CHUNK`]-head chunks
+/// with private full-size accumulators, reduced in chunk order.  Kept as a
+/// second oracle and the scatter-vs-gather bench baseline — its gradient
+/// memory is O(size × n_chunks) where the gather engine's is O(size).
+/// `threads` bounds the worker count; the *result* does not depend on it.
+/// Falls back to [`nomad_grad_serial`] when the block is a single chunk.
+pub fn nomad_grad_scatter(
     pos: &[f32],
     nbr_idx: &[i32],
     nbr_w: &[f32],
@@ -243,7 +363,9 @@ pub fn nomad_grad_threaded(
     let size = valid.len();
     let n_chunks = size.div_ceil(HEAD_CHUNK);
     if n_chunks <= 1 {
-        return nomad_grad_serial(pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, k, negs);
+        return nomad_grad_serial(
+            pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid, k, negs,
+        );
     }
     let threads = threads.max(1).min(n_chunks);
 
@@ -279,8 +401,232 @@ pub fn nomad_grad_threaded(
     finalize(grad, loss_sum, nvalid)
 }
 
-/// Default-threaded NOMAD gradient (env/machine thread count).  This is the
-/// signature the rest of the crate and the property tests use.
+/// Gather-engine pass 1 (owner-computes heads `lo..hi`): writes each head's
+/// own forces into its row of `grad`, the per-edge attraction reaction
+/// coefficients into `c_att`, the per-negative repulsion coefficients into
+/// `c_neg`, and the per-head loss into `loss`.  All outputs are local
+/// (`lo`-based) zeroed slices — a head never touches another row, so there
+/// is no scatter and no race.
+fn gather_head_pass(
+    lo: usize,
+    hi: usize,
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    neg_w: f32,
+    mean_x: &[f32],
+    mean_y: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+    grad: &mut [f32],
+    c_att: &mut [f32],
+    c_neg: &mut [f32],
+    loss: &mut [f64],
+) {
+    let r = mean_w.len();
+    let mut q_ir = vec![0.0f32; r];
+    let mut dxr = vec![0.0f32; r];
+    let mut dyr = vec![0.0f32; r];
+    let mut q_in = vec![0.0f32; negs];
+
+    for i in lo..hi {
+        if valid[i] == 0.0 {
+            continue;
+        }
+        let li = i - lo;
+        let (pix, piy) = (pos[i * 2], pos[i * 2 + 1]);
+
+        // ---- negative mass A_i (SoA means microkernel + exact negatives) -
+        let mut a = mean_field4(pix, piy, mean_x, mean_y, mean_w, &mut q_ir, &mut dxr, &mut dyr);
+        for s in 0..negs {
+            let nloc = neg_idx[i * negs + s] as usize;
+            let (q, _, _) = q2(pix, piy, pos[nloc * 2], pos[nloc * 2 + 1]);
+            q_in[s] = q;
+            a += neg_w * q;
+        }
+
+        // ---- positive edges: loss + own attraction + s_i + coefficients --
+        let mut s_i = 0.0f32;
+        let mut loss_i = 0.0f64;
+        let (mut gx, mut gy) = (0.0f32, 0.0f32);
+        for s in 0..k {
+            let w = nbr_w[i * k + s];
+            if w == 0.0 {
+                continue;
+            }
+            let j = nbr_idx[i * k + s] as usize;
+            let (q, dx, dy) = q2(pix, piy, pos[j * 2], pos[j * 2 + 1]);
+            let z = q + a;
+            loss_i -= (w * (q.ln() - z.ln())) as f64;
+            s_i += w / z;
+            let c = 2.0 * w * q * (1.0 - q / z);
+            c_att[li * k + s] = c;
+            gx += c * dx;
+            gy += c * dy;
+        }
+        loss[li] = loss_i;
+
+        if s_i != 0.0 {
+            // ---- mean repulsion (means are stop-gradient, no reaction) ---
+            let (mx, my) = mean_repulse4(mean_w, &q_ir, &dxr, &dyr);
+            gx -= 2.0 * s_i * mx;
+            gy -= 2.0 * s_i * my;
+
+            // ---- exact-negative repulsion: own push + coefficient --------
+            if neg_w != 0.0 {
+                for s in 0..negs {
+                    let nloc = neg_idx[i * negs + s] as usize;
+                    let q = q_in[s];
+                    let dx = pix - pos[nloc * 2];
+                    let dy = piy - pos[nloc * 2 + 1];
+                    let c = 2.0 * s_i * neg_w * q * q;
+                    c_neg[li * negs + s] = c;
+                    gx -= c * dx;
+                    gy -= c * dy;
+                }
+            }
+        }
+        grad[li * 2] = gx;
+        grad[li * 2 + 1] = gy;
+    }
+}
+
+/// Gather-engine pass 2: rows `lo..hi` pull in the reactions of every edge
+/// that targets them — attraction reactions through the kNN CSR transpose,
+/// repulsion reactions through the negatives transpose — using the
+/// coefficients pass 1 published.  `d = pos_head − pos_target` reproduces
+/// the scatter path's per-term float values exactly; only the per-row
+/// summation order differs.
+fn gather_reaction_pass(
+    lo: usize,
+    hi: usize,
+    pos: &[f32],
+    nbr_in: &EdgeTranspose,
+    neg_in: &EdgeTranspose,
+    c_att: &[f32],
+    c_neg: &[f32],
+    k: usize,
+    negs: usize,
+    grad: &mut [f32],
+) {
+    for t in lo..hi {
+        let lt = t - lo;
+        let (ptx, pty) = (pos[t * 2], pos[t * 2 + 1]);
+        let (mut gx, mut gy) = (0.0f32, 0.0f32);
+        for &e in nbr_in.incoming(t) {
+            let e = e as usize;
+            let h = e / k;
+            let c = c_att[e];
+            gx -= c * (pos[h * 2] - ptx);
+            gy -= c * (pos[h * 2 + 1] - pty);
+        }
+        for &e in neg_in.incoming(t) {
+            let e = e as usize;
+            let h = e / negs;
+            let c = c_neg[e];
+            gx += c * (pos[h * 2] - ptx);
+            gy += c * (pos[h * 2 + 1] - pty);
+        }
+        grad[lt * 2] += gx;
+        grad[lt * 2 + 1] += gy;
+    }
+}
+
+/// The **gather force engine** (DESIGN.md §9): mean-normalized NOMAD
+/// gradient with no scatter and no reduction.  `nbr_in`/`neg_in` are the
+/// CSR transposes of `nbr_idx` (zero-weight slots omitted) and `neg_idx`
+/// (all slots) — [`ClusterBlock`] maintains both.  Means are SoA.
+///
+/// Gradient memory is `size·(2 + k + negs)` floats regardless of the
+/// thread count, and the result is bitwise identical for any `threads`
+/// because each row is summed by exactly one owner in fixed edge order.
+/// Matches [`nomad_grad_serial`] to f32 reassociation error.
+pub fn nomad_grad_gather(
+    pos: &[f32],
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    nbr_in: &EdgeTranspose,
+    neg_idx: &[i32],
+    neg_in: &EdgeTranspose,
+    neg_w: f32,
+    mean_x: &[f32],
+    mean_y: &[f32],
+    mean_w: &[f32],
+    valid: &[f32],
+    k: usize,
+    negs: usize,
+    threads: usize,
+) -> (Vec<f32>, f64) {
+    let size = valid.len();
+    debug_assert_eq!(mean_x.len(), mean_w.len());
+    debug_assert_eq!(mean_y.len(), mean_w.len());
+    debug_assert_eq!(nbr_in.ptr.len(), size + 1);
+    debug_assert_eq!(neg_in.ptr.len(), size + 1);
+    let threads = threads.max(1);
+
+    let mut grad = vec![0.0f32; size * 2];
+    let mut c_att = vec![0.0f32; size * k];
+    let mut c_neg = vec![0.0f32; size * negs];
+    let mut loss_buf = vec![0.0f64; size];
+
+    // ---- pass 1: owner-computes head pass (writes rows lo..hi only) ------
+    {
+        let grad_p = grad.as_mut_ptr() as usize;
+        let catt_p = c_att.as_mut_ptr() as usize;
+        let cneg_p = c_neg.as_mut_ptr() as usize;
+        let loss_p = loss_buf.as_mut_ptr() as usize;
+        par_for_chunks(size, GATHER_ROWS, threads, |lo, hi| {
+            let rows = hi - lo;
+            // SAFETY: [lo, hi) row ranges are disjoint across workers
+            // (claimed via par_for_chunks' atomic cursor), so the derived
+            // subslices never alias; all vectors outlive this call.
+            let (grad, c_att, c_neg, loss) = unsafe {
+                (
+                    std::slice::from_raw_parts_mut((grad_p as *mut f32).add(lo * 2), rows * 2),
+                    std::slice::from_raw_parts_mut((catt_p as *mut f32).add(lo * k), rows * k),
+                    std::slice::from_raw_parts_mut(
+                        (cneg_p as *mut f32).add(lo * negs),
+                        rows * negs,
+                    ),
+                    std::slice::from_raw_parts_mut((loss_p as *mut f64).add(lo), rows),
+                )
+            };
+            gather_head_pass(
+                lo, hi, pos, nbr_idx, nbr_w, neg_idx, neg_w, mean_x, mean_y, mean_w, valid, k,
+                negs, grad, c_att, c_neg, loss,
+            );
+        });
+    }
+
+    // ---- pass 2: gather the reactions through the transposes --------------
+    {
+        let grad_p = grad.as_mut_ptr() as usize;
+        let c_att_r: &[f32] = &c_att;
+        let c_neg_r: &[f32] = &c_neg;
+        par_for_chunks(size, GATHER_ROWS, threads, |lo, hi| {
+            let rows = hi - lo;
+            // SAFETY: as above — disjoint [lo, hi) row ranges.
+            let grad = unsafe {
+                std::slice::from_raw_parts_mut((grad_p as *mut f32).add(lo * 2), rows * 2)
+            };
+            gather_reaction_pass(lo, hi, pos, nbr_in, neg_in, c_att_r, c_neg_r, k, negs, grad);
+        });
+    }
+
+    // fixed-order (row-major) loss fold: thread-count invariant
+    let loss_sum: f64 = loss_buf.iter().sum();
+    let nvalid = valid.iter().filter(|v| **v != 0.0).count() as f64;
+    finalize(grad, loss_sum, nvalid)
+}
+
+/// Convenience entry point with the classic AoS signature (interleaved r×2
+/// means, no transposes): builds the transposes and the SoA views, then
+/// runs the gather engine on the machine's default thread budget.  This is
+/// the signature the property tests and ad-hoc callers use; the hot path
+/// ([`NativeStepBackend`]) uses the block's precomputed transposes instead.
 pub fn nomad_grad(
     pos: &[f32],
     nbr_idx: &[i32],
@@ -293,13 +639,26 @@ pub fn nomad_grad(
     k: usize,
     negs: usize,
 ) -> (Vec<f32>, f64) {
-    nomad_grad_threaded(
+    let size = valid.len();
+    let nbr_in = EdgeTranspose::build(nbr_idx, size, k, |e| nbr_w[e] != 0.0);
+    let neg_in = EdgeTranspose::build(neg_idx, size, negs, |_| true);
+    let r = mean_w.len();
+    let mut mean_x = vec![0.0f32; r];
+    let mut mean_y = vec![0.0f32; r];
+    for rr in 0..r {
+        mean_x[rr] = means[rr * 2];
+        mean_y[rr] = means[rr * 2 + 1];
+    }
+    nomad_grad_gather(
         pos,
         nbr_idx,
         nbr_w,
+        &nbr_in,
         neg_idx,
+        &neg_in,
         neg_w,
-        means,
+        &mean_x,
+        &mean_y,
         mean_w,
         valid,
         k,
@@ -398,6 +757,23 @@ mod tests {
         (pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid)
     }
 
+    /// Transposes + SoA means for feeding the gather engine directly.
+    fn gather_inputs(
+        nbr_idx: &[i32],
+        nbr_w: &[f32],
+        neg_idx: &[i32],
+        means: &[f32],
+        size: usize,
+        k: usize,
+        negs: usize,
+    ) -> (EdgeTranspose, EdgeTranspose, Vec<f32>, Vec<f32>) {
+        let nbr_in = EdgeTranspose::build(nbr_idx, size, k, |e| nbr_w[e] != 0.0);
+        let neg_in = EdgeTranspose::build(neg_idx, size, negs, |_| true);
+        let mean_x: Vec<f32> = means.iter().step_by(2).copied().collect();
+        let mean_y: Vec<f32> = means.iter().skip(1).step_by(2).copied().collect();
+        (nbr_in, neg_in, mean_x, mean_y)
+    }
+
     #[test]
     fn gradient_matches_finite_differences() {
         let mut rng = Rng::new(0);
@@ -432,7 +808,7 @@ mod tests {
     }
 
     #[test]
-    fn parallel_grad_matches_serial_oracle() {
+    fn scatter_grad_matches_serial_oracle() {
         let mut rng = Rng::new(11);
         for &(size, k, negs, r, n_real) in
             &[(512usize, 6usize, 4usize, 33usize, 480usize), (384, 5, 3, 17, 300)]
@@ -440,22 +816,21 @@ mod tests {
             let (pos, ni, nw, gi, gw, me, mw, va) =
                 random_problem(&mut rng, size, k, negs, r, n_real);
             let (gs, ls) = nomad_grad_serial(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs);
-            let (gp, lp) =
-                nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs, 4);
+            let (gp, lp) = nomad_grad_scatter(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs, 4);
             assert!(
                 (ls - lp).abs() < 1e-5 * (1.0 + ls.abs()),
-                "loss serial {ls} vs parallel {lp}"
+                "loss serial {ls} vs scatter {lp}"
             );
             for i in 0..size * 2 {
                 let d = (gs[i] - gp[i]).abs();
                 assert!(
                     d < 1e-5 * (1.0 + gs[i].abs()),
-                    "size {size} coord {i}: serial {} parallel {}",
+                    "size {size} coord {i}: serial {} scatter {}",
                     gs[i],
                     gp[i]
                 );
             }
-            // padding rows stay exactly zero on the parallel path too
+            // padding rows stay exactly zero on the scatter path too
             for l in n_real..size {
                 assert_eq!(gp[l * 2], 0.0);
                 assert_eq!(gp[l * 2 + 1], 0.0);
@@ -464,12 +839,66 @@ mod tests {
     }
 
     #[test]
-    fn threaded_grad_invariant_to_thread_count() {
+    fn gather_grad_matches_serial_oracle() {
+        let mut rng = Rng::new(21);
+        for &(size, k, negs, r, n_real) in &[
+            (512usize, 6usize, 4usize, 33usize, 480usize),
+            (384, 5, 3, 17, 300),
+            (130, 3, 2, 2, 127), // crosses one GATHER_ROWS boundary
+        ] {
+            let (pos, ni, nw, gi, gw, me, mw, va) =
+                random_problem(&mut rng, size, k, negs, r, n_real);
+            let (nbr_in, neg_in, mx, my) = gather_inputs(&ni, &nw, &gi, &me, size, k, negs);
+            let (gs, ls) = nomad_grad_serial(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs);
+            let (gg, lg) = nomad_grad_gather(
+                &pos, &ni, &nw, &nbr_in, &gi, &neg_in, gw, &mx, &my, &mw, &va, k, negs, 4,
+            );
+            assert!(
+                (ls - lg).abs() < 1e-5 * (1.0 + ls.abs()),
+                "loss serial {ls} vs gather {lg}"
+            );
+            for i in 0..size * 2 {
+                let d = (gs[i] - gg[i]).abs();
+                assert!(
+                    d < 1e-5 * (1.0 + gs[i].abs()),
+                    "size {size} coord {i}: serial {} gather {}",
+                    gs[i],
+                    gg[i]
+                );
+            }
+            for l in n_real..size {
+                assert_eq!(gg[l * 2], 0.0, "padding row {l} moved");
+                assert_eq!(gg[l * 2 + 1], 0.0, "padding row {l} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_grad_invariant_to_thread_count() {
         let mut rng = Rng::new(12);
         let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 512, 6, 4, 20, 500);
-        let (g1, l1) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 1);
-        let (g2, l2) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 2);
-        let (g8, l8) = nomad_grad_threaded(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 8);
+        let (g1, l1) = nomad_grad_scatter(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 1);
+        let (g2, l2) = nomad_grad_scatter(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 2);
+        let (g8, l8) = nomad_grad_scatter(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, 6, 4, 8);
+        assert_eq!(g1, g2, "1 vs 2 workers must be bitwise identical");
+        assert_eq!(g2, g8, "2 vs 8 workers must be bitwise identical");
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(l2.to_bits(), l8.to_bits());
+    }
+
+    #[test]
+    fn gather_grad_invariant_to_thread_count() {
+        let mut rng = Rng::new(13);
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, 512, 6, 4, 20, 500);
+        let (nbr_in, neg_in, mx, my) = gather_inputs(&ni, &nw, &gi, &me, 512, 6, 4);
+        let run = |threads| {
+            nomad_grad_gather(
+                &pos, &ni, &nw, &nbr_in, &gi, &neg_in, gw, &mx, &my, &mw, &va, 6, 4, threads,
+            )
+        };
+        let (g1, l1) = run(1);
+        let (g2, l2) = run(2);
+        let (g8, l8) = run(8);
         assert_eq!(g1, g2, "1 vs 2 workers must be bitwise identical");
         assert_eq!(g2, g8, "2 vs 8 workers must be bitwise identical");
         assert_eq!(l1.to_bits(), l2.to_bits());

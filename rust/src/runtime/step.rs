@@ -98,8 +98,13 @@ impl XlaStepBackend {
                 neg_idx[l * negs + t] = l as i32;
             }
         }
+        // the step inputs are SoA (gather-engine layout); the artifact
+        // signature wants the classic interleaved r x 2 means
         let mut means = vec![0.0f32; rp * 2];
-        means[..r_needed * 2].copy_from_slice(inputs.means);
+        for rr in 0..r_needed {
+            means[rr * 2] = inputs.mean_x[rr];
+            means[rr * 2 + 1] = inputs.mean_y[rr];
+        }
         let mut mean_w = vec![0.0f32; rp];
         mean_w[..r_needed].copy_from_slice(inputs.mean_w);
 
@@ -152,22 +157,27 @@ impl StepBackend for XlaStepBackend {
 
 impl XlaStepBackend {
     /// Native step reusing the already-resampled negatives (so the XLA and
-    /// native paths stay comparable within an epoch).  Honors the caller's
-    /// intra-step thread budget instead of grabbing the machine default —
-    /// the device worker already divided the cores across devices.
+    /// native paths stay comparable within an epoch) — the gather engine on
+    /// the block's precomputed transposes, same as [`native::NativeStepBackend`].
+    /// Honors the caller's intra-step thread budget instead of grabbing the
+    /// machine default — the device worker already divided the cores across
+    /// devices.
     fn native_step_no_resample(&self, block: &mut ClusterBlock, inputs: &StepInputs) -> f64 {
         let threads = if inputs.threads == 0 {
             crate::util::parallel::num_threads()
         } else {
             inputs.threads
         };
-        let (grad, loss) = native::nomad_grad_threaded(
+        let (grad, loss) = native::nomad_grad_gather(
             &block.pos,
             &block.nbr_idx,
             &block.nbr_w,
+            &block.nbr_in,
             &block.neg_idx,
+            &block.neg_in,
             block.neg_w,
-            inputs.means,
+            inputs.mean_x,
+            inputs.mean_y,
             inputs.mean_w,
             &block.valid,
             block.k,

@@ -1,0 +1,213 @@
+//! Property tests for the gather-based force engine (DESIGN.md §9).
+//!
+//! The gather path must (a) match the serial scatter oracle to f32
+//! reassociation error on random padded problems — duplicate/tied edges,
+//! self-negatives, and padding rows included; (b) agree with the retired
+//! chunked scatter path (the second oracle); (c) be bitwise identical for
+//! 1/2/8 worker threads — owner-computes with a fixed edge order makes
+//! this hold by construction; and (d) stay NaN-free with exactly-zero
+//! gradients on padding rows.
+
+use nomad::embed::native::{nomad_grad_gather, nomad_grad_scatter, nomad_grad_serial};
+use nomad::embed::EdgeTranspose;
+use nomad::util::rng::Rng;
+
+#[allow(clippy::type_complexity)]
+fn random_problem(
+    rng: &mut Rng,
+    size: usize,
+    k: usize,
+    negs: usize,
+    r: usize,
+    n_real: usize,
+) -> (Vec<f32>, Vec<i32>, Vec<f32>, Vec<i32>, f32, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let pos: Vec<f32> = (0..size * 2).map(|_| rng.normal() * 3.0).collect();
+    let mut nbr_idx = vec![0i32; size * k];
+    let mut nbr_w = vec![0.0f32; size * k];
+    let mut neg_idx = vec![0i32; size * negs];
+    for i in 0..size {
+        for s in 0..k {
+            // duplicates and self-edges happen by construction: they are
+            // the tie cases the gather reaction pass must reproduce
+            nbr_idx[i * k + s] = rng.below(n_real.max(1)) as i32;
+            nbr_w[i * k + s] = if i < n_real && rng.f32() > 0.2 { rng.f32() } else { 0.0 };
+        }
+        for s in 0..negs {
+            neg_idx[i * negs + s] =
+                if i < n_real { rng.below(n_real.max(1)) as i32 } else { i as i32 };
+        }
+    }
+    let neg_w = rng.f32() + 0.1;
+    let means: Vec<f32> = (0..r * 2).map(|_| rng.normal() * 3.0).collect();
+    let mean_w: Vec<f32> = (0..r).map(|_| rng.f32() * 4.0).collect();
+    let mut valid = vec![0.0f32; size];
+    for v in valid.iter_mut().take(n_real) {
+        *v = 1.0;
+    }
+    (pos, nbr_idx, nbr_w, neg_idx, neg_w, means, mean_w, valid)
+}
+
+fn soa(means: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    (
+        means.iter().step_by(2).copied().collect(),
+        means.iter().skip(1).step_by(2).copied().collect(),
+    )
+}
+
+fn transposes(
+    nbr_idx: &[i32],
+    nbr_w: &[f32],
+    neg_idx: &[i32],
+    size: usize,
+    k: usize,
+    negs: usize,
+) -> (EdgeTranspose, EdgeTranspose) {
+    (
+        EdgeTranspose::build(nbr_idx, size, k, |e| nbr_w[e] != 0.0),
+        EdgeTranspose::build(neg_idx, size, negs, |_| true),
+    )
+}
+
+#[test]
+fn prop_gather_matches_serial_oracle() {
+    for seed in 0..25u64 {
+        let mut rng = Rng::new(seed);
+        let size = 64 + rng.below(512);
+        let n_real = 1 + rng.below(size);
+        let k = 1 + rng.below(8);
+        let negs = 1 + rng.below(6);
+        let r = rng.below(70); // r = 0 covers the ApproxMode::None view
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, size, k, negs, r, n_real);
+        let (nbr_in, neg_in) = transposes(&ni, &nw, &gi, size, k, negs);
+        let (mx, my) = soa(&me);
+
+        let (gs, ls) = nomad_grad_serial(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs);
+        let (gg, lg) = nomad_grad_gather(
+            &pos, &ni, &nw, &nbr_in, &gi, &neg_in, gw, &mx, &my, &mw, &va, k, negs, 4,
+        );
+        assert!(
+            (ls - lg).abs() < 1e-5 * (1.0 + ls.abs()),
+            "seed {seed}: loss serial {ls} vs gather {lg}"
+        );
+        for i in 0..size * 2 {
+            assert!(gg[i].is_finite(), "seed {seed} coord {i}: gather NaN/inf");
+            let d = (gs[i] - gg[i]).abs();
+            assert!(
+                d < 1e-5 * (1.0 + gs[i].abs()),
+                "seed {seed} coord {i}: serial {} gather {}",
+                gs[i],
+                gg[i]
+            );
+        }
+        // padding rows: exactly zero, not merely small
+        for l in n_real..size {
+            assert_eq!(gg[l * 2], 0.0, "seed {seed}: padding row {l} moved");
+            assert_eq!(gg[l * 2 + 1], 0.0, "seed {seed}: padding row {l} moved");
+        }
+    }
+}
+
+#[test]
+fn prop_gather_matches_scatter_second_oracle() {
+    for seed in 100..112u64 {
+        let mut rng = Rng::new(seed);
+        let size = 256 + rng.below(512);
+        let n_real = size - rng.below(size / 4);
+        let (k, negs, r) = (1 + rng.below(8), 1 + rng.below(6), 1 + rng.below(40));
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, size, k, negs, r, n_real);
+        let (nbr_in, neg_in) = transposes(&ni, &nw, &gi, size, k, negs);
+        let (mx, my) = soa(&me);
+
+        let (gp, lp) = nomad_grad_scatter(&pos, &ni, &nw, &gi, gw, &me, &mw, &va, k, negs, 8);
+        let (gg, lg) = nomad_grad_gather(
+            &pos, &ni, &nw, &nbr_in, &gi, &neg_in, gw, &mx, &my, &mw, &va, k, negs, 8,
+        );
+        assert!((lp - lg).abs() < 2e-5 * (1.0 + lp.abs()), "seed {seed}: {lp} vs {lg}");
+        for i in 0..size * 2 {
+            let d = (gp[i] - gg[i]).abs();
+            assert!(
+                d < 2e-5 * (1.0 + gp[i].abs()),
+                "seed {seed} coord {i}: scatter {} gather {}",
+                gp[i],
+                gg[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_gather_bitwise_invariant_to_thread_count() {
+    for seed in 200..210u64 {
+        let mut rng = Rng::new(seed);
+        let size = 64 + rng.below(700);
+        let n_real = 1 + rng.below(size);
+        let (k, negs, r) = (1 + rng.below(8), 1 + rng.below(6), rng.below(40));
+        let (pos, ni, nw, gi, gw, me, mw, va) = random_problem(&mut rng, size, k, negs, r, n_real);
+        let (nbr_in, neg_in) = transposes(&ni, &nw, &gi, size, k, negs);
+        let (mx, my) = soa(&me);
+        let run = |threads: usize| {
+            nomad_grad_gather(
+                &pos, &ni, &nw, &nbr_in, &gi, &neg_in, gw, &mx, &my, &mw, &va, k, negs, threads,
+            )
+        };
+        let (g1, l1) = run(1);
+        let (g2, l2) = run(2);
+        let (g8, l8) = run(8);
+        assert_eq!(g1, g2, "seed {seed}: 1 vs 2 workers not bitwise identical");
+        assert_eq!(g2, g8, "seed {seed}: 2 vs 8 workers not bitwise identical");
+        assert_eq!(l1.to_bits(), l2.to_bits(), "seed {seed}: loss differs");
+        assert_eq!(l2.to_bits(), l8.to_bits(), "seed {seed}: loss differs");
+    }
+}
+
+#[test]
+fn gather_handles_self_negatives_and_duplicate_edges() {
+    // hand-built worst case: every head's negatives are itself, and the
+    // edge list repeats one (i, j) pair with tied weights both directions
+    let size = 4usize;
+    let (k, negs) = (3usize, 2usize);
+    let pos = vec![0.0f32, 0.0, 1.0, 0.5, -0.5, 2.0, 0.3, -0.7];
+    let nbr_idx = vec![1, 1, 2, 0, 0, 3, 1, 3, 0, 2, 1, 0];
+    let nbr_w = vec![0.25f32, 0.25, 0.5, 0.5, 0.5, 0.0, 0.3, 0.3, 0.4, 0.2, 0.2, 0.6];
+    let neg_idx = vec![0i32, 1, 1, 0, 2, 3, 3, 2];
+    let (neg_w, mw) = (0.7f32, vec![1.5f32]);
+    let me = vec![2.0f32, -1.0];
+    let va = vec![1.0f32; size];
+
+    let (nbr_in, neg_in) = transposes(&nbr_idx, &nbr_w, &neg_idx, size, k, negs);
+    let (mx, my) = soa(&me);
+    let (gs, ls) =
+        nomad_grad_serial(&pos, &nbr_idx, &nbr_w, &neg_idx, neg_w, &me, &mw, &va, k, negs);
+    let (gg, lg) = nomad_grad_gather(
+        &pos, &nbr_idx, &nbr_w, &nbr_in, &neg_idx, &neg_in, neg_w, &mx, &my, &mw, &va, k, negs, 2,
+    );
+    assert!((ls - lg).abs() < 1e-6 * (1.0 + ls.abs()), "loss {ls} vs {lg}");
+    for i in 0..size * 2 {
+        assert!(gg[i].is_finite());
+        assert!(
+            (gs[i] - gg[i]).abs() < 1e-5 * (1.0 + gs[i].abs()),
+            "coord {i}: serial {} gather {}",
+            gs[i],
+            gg[i]
+        );
+    }
+}
+
+#[test]
+fn gather_with_zero_negative_weight_skips_repulsion_reactions() {
+    // neg_w = 0 (mean-only negative mass): the repulsion coefficients are
+    // all zero and the gather result must still match the oracle exactly
+    let mut rng = Rng::new(77);
+    let (size, k, negs, r, n_real) = (96usize, 4usize, 3usize, 9usize, 80usize);
+    let (pos, ni, nw, gi, _, me, mw, va) = random_problem(&mut rng, size, k, negs, r, n_real);
+    let (nbr_in, neg_in) = transposes(&ni, &nw, &gi, size, k, negs);
+    let (mx, my) = soa(&me);
+    let (gs, ls) = nomad_grad_serial(&pos, &ni, &nw, &gi, 0.0, &me, &mw, &va, k, negs);
+    let (gg, lg) = nomad_grad_gather(
+        &pos, &ni, &nw, &nbr_in, &gi, &neg_in, 0.0, &mx, &my, &mw, &va, k, negs, 3,
+    );
+    assert!((ls - lg).abs() < 1e-6 * (1.0 + ls.abs()));
+    for i in 0..size * 2 {
+        assert!((gs[i] - gg[i]).abs() < 1e-5 * (1.0 + gs[i].abs()), "coord {i}");
+    }
+}

@@ -27,8 +27,8 @@ fn artifacts_available() -> bool {
     ok
 }
 
-/// Build one real block from a small dataset.
-fn make_block(seed: u64, n: usize) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
+/// Build one real block from a small dataset (means SoA, as StepInputs wants).
+fn make_block(seed: u64, n: usize) -> (ClusterBlock, Vec<f32>, Vec<f32>, Vec<f32>) {
     let mut rng = Rng::new(seed);
     let ds = gaussian_mixture(n, 16, 3, 8.0, 0.3, 0.5, &mut rng);
     let idx = ClusterIndex::build(
@@ -41,16 +41,17 @@ fn make_block(seed: u64, n: usize) -> (ClusterBlock, Vec<f32>, Vec<f32>) {
     let init: Vec<f32> = (0..n * 2).map(|_| rng.normal()).collect();
     let block = ClusterBlock::build(&idx, &ew, 0, &init, n, 5.0, 8);
     // means of the other clusters
-    let mut means = Vec::new();
+    let mut mean_x = Vec::new();
+    let mut mean_y = Vec::new();
     let mut mean_w = Vec::new();
     for c in 1..idx.n_clusters() {
         let b = ClusterBlock::build(&idx, &ew, c, &init, n, 5.0, 8);
         let m = b.mean();
-        means.push(m[0]);
-        means.push(m[1]);
+        mean_x.push(m[0]);
+        mean_y.push(m[1]);
         mean_w.push(b.mean_weight(n, 5.0));
     }
-    (block, means, mean_w)
+    (block, mean_x, mean_y, mean_w)
 }
 
 #[test]
@@ -58,8 +59,9 @@ fn xla_step_matches_native_step() {
     if !artifacts_available() {
         return;
     }
-    let (block0, means, mean_w) = make_block(0, 600);
-    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 2.0, threads: 1 };
+    let (block0, mean_x, mean_y, mean_w) = make_block(0, 600);
+    let inputs =
+        StepInputs { mean_x: &mean_x, mean_y: &mean_y, mean_w: &mean_w, lr: 2.0, threads: 1 };
 
     let xla = XlaStepBackend::from_env().expect("xla backend");
     let native = NativeStepBackend::default();
@@ -89,8 +91,9 @@ fn xla_step_multiple_epochs_stays_close() {
     if !artifacts_available() {
         return;
     }
-    let (block0, means, mean_w) = make_block(1, 400);
-    let inputs = StepInputs { means: &means, mean_w: &mean_w, lr: 1.0, threads: 1 };
+    let (block0, mean_x, mean_y, mean_w) = make_block(1, 400);
+    let inputs =
+        StepInputs { mean_x: &mean_x, mean_y: &mean_y, mean_w: &mean_w, lr: 1.0, threads: 1 };
     let xla = XlaStepBackend::from_env().unwrap();
     let native = NativeStepBackend::default();
     let mut b_native = block0.clone();
