@@ -1,0 +1,270 @@
+//! Closed-loop load generator for the map serving subsystem (ISSUE 4's
+//! acceptance gauge): start `serve::http` on loopback, drive a zoom/pan
+//! request mix (tiles / kNN queries / stats) from N concurrent clients,
+//! and report client-observed p50/p99 latency and tiles/sec — with the
+//! tile cache enabled vs disabled.
+//!
+//!   cargo bench --bench serve_load                  # full 100k-point run
+//!   cargo bench --bench serve_load -- --smoke       # CI-sized
+//!   cargo bench --bench serve_load -- --n 500000 --requests 20000
+//!
+//! Emits `bench_results/BENCH_serve_load.json`.  In `--smoke` mode the
+//! run is also a gate: it exits nonzero unless tiles were served, every
+//! tile body carried valid PNG magic, and no request failed.
+
+use nomad::bench::jsonx::{num, obj, s, Json};
+use nomad::bench::save_bench_json;
+use nomad::cli::Args;
+use nomad::data::gaussian_mixture;
+use nomad::serve::artifact::{MapArtifact, Provenance};
+use nomad::serve::http::{self, http_get};
+use nomad::serve::{ServeConfig, TileConfig};
+use nomad::util::rng::Rng;
+use nomad::util::stats::Summary;
+use std::time::Instant;
+
+const PNG_MAGIC: [u8; 8] = [0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n'];
+
+struct LoadResult {
+    lat: Summary,
+    tiles: u64,
+    queries: u64,
+    stats_reqs: u64,
+    bad_png: u64,
+    failures: u64,
+    wall_secs: f64,
+    cache_hits: i64,
+    cache_misses: i64,
+    cache_evictions: i64,
+}
+
+fn run_load(
+    art: MapArtifact,
+    cfg: &ServeConfig,
+    requests: usize,
+    clients: usize,
+    zmax: u32,
+) -> LoadResult {
+    let handle = http::start(art, cfg).expect("server starts");
+    let addr = handle.addr.to_string();
+    let per_client = requests.div_ceil(clients.max(1));
+
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..clients.max(1) {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let (mut z, mut x, mut y) = (0u32, 0u32, 0u32);
+            let mut lats = Vec::with_capacity(per_client);
+            let (mut tiles, mut queries, mut stats_reqs) = (0u64, 0u64, 0u64);
+            let (mut bad_png, mut failures) = (0u64, 0u64);
+            for _ in 0..per_client {
+                let roll = rng.f32();
+                let path = if roll < 0.7 {
+                    format!("/tiles/{z}/{x}/{y}.png")
+                } else if roll < 0.9 {
+                    format!(
+                        "/query?x={:.3}&y={:.3}&k={}",
+                        rng.normal() * 12.0,
+                        rng.normal() * 12.0,
+                        1 + rng.below(20)
+                    )
+                } else {
+                    "/stats".to_string()
+                };
+                let t = Instant::now();
+                match http_get(&addr, &path) {
+                    Ok((200, body)) => {
+                        lats.push(t.elapsed().as_secs_f64());
+                        if roll < 0.7 {
+                            tiles += 1;
+                            if body.len() < 8 || body[..8] != PNG_MAGIC {
+                                bad_png += 1;
+                            }
+                        } else if roll < 0.9 {
+                            queries += 1;
+                        } else {
+                            stats_reqs += 1;
+                        }
+                    }
+                    Ok((_, _)) | Err(_) => failures += 1,
+                }
+                if roll < 0.7 {
+                    // zoom/pan walk over the pyramid
+                    match rng.below(4) {
+                        0 if z < zmax => {
+                            z += 1;
+                            x = x * 2 + rng.below(2) as u32;
+                            y = y * 2 + rng.below(2) as u32;
+                        }
+                        1 if z > 0 => {
+                            z -= 1;
+                            x /= 2;
+                            y /= 2;
+                        }
+                        _ => {
+                            let side = 1u32 << z;
+                            let step = |v: u32, r: &mut Rng| {
+                                (v + side + if r.below(2) == 0 { 1 } else { side - 1 }) % side
+                            };
+                            x = step(x, &mut rng);
+                            y = step(y, &mut rng);
+                        }
+                    }
+                }
+            }
+            (lats, tiles, queries, stats_reqs, bad_png, failures)
+        }));
+    }
+
+    let mut lats = Vec::new();
+    let (mut tiles, mut queries, mut stats_reqs) = (0u64, 0u64, 0u64);
+    let (mut bad_png, mut failures) = (0u64, 0u64);
+    for j in joins {
+        let (l, t, q, st, b, f) = j.join().expect("client thread");
+        lats.extend(l);
+        tiles += t;
+        queries += q;
+        stats_reqs += st;
+        bad_png += b;
+        failures += f;
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    // server-side cache counters
+    let (mut hits, mut misses, mut evictions) = (-1i64, -1i64, -1i64);
+    if let Ok((200, body)) = http_get(&addr, "/stats") {
+        if let Ok(v) = Json::parse(std::str::from_utf8(&body).unwrap_or("")) {
+            hits = v.get("cache").get("hits").as_i64().unwrap_or(-1);
+            misses = v.get("cache").get("misses").as_i64().unwrap_or(-1);
+            evictions = v.get("cache").get("evictions").as_i64().unwrap_or(-1);
+        }
+    }
+    handle.stop();
+
+    LoadResult {
+        lat: Summary::of(&lats),
+        tiles,
+        queries,
+        stats_reqs,
+        bad_png,
+        failures,
+        wall_secs,
+        cache_hits: hits,
+        cache_misses: misses,
+        cache_evictions: evictions,
+    }
+}
+
+fn result_json(r: &LoadResult) -> Json {
+    obj(vec![
+        ("p50_ms", num(r.lat.p50 * 1e3)),
+        ("p99_ms", num(r.lat.p99 * 1e3)),
+        ("mean_ms", num(r.lat.mean * 1e3)),
+        ("tiles", num(r.tiles as f64)),
+        ("queries", num(r.queries as f64)),
+        ("stats_requests", num(r.stats_reqs as f64)),
+        ("tiles_per_sec", num(r.tiles as f64 / r.wall_secs.max(1e-9))),
+        ("requests_per_sec", num(r.lat.n as f64 / r.wall_secs.max(1e-9))),
+        ("failures", num(r.failures as f64)),
+        ("bad_png", num(r.bad_png as f64)),
+        ("wall_secs", num(r.wall_secs)),
+        ("cache_hits", num(r.cache_hits as f64)),
+        ("cache_misses", num(r.cache_misses as f64)),
+        ("cache_evictions", num(r.cache_evictions as f64)),
+    ])
+}
+
+fn print_result(tag: &str, r: &LoadResult) {
+    println!(
+        "{tag:>10}: p50 {:.2}ms p99 {:.2}ms | {:.0} tiles/s ({} tiles, {} queries, {} stats) | \
+         cache {}h/{}m | {} failures, {} bad png",
+        r.lat.p50 * 1e3,
+        r.lat.p99 * 1e3,
+        r.tiles as f64 / r.wall_secs.max(1e-9),
+        r.tiles,
+        r.queries,
+        r.stats_reqs,
+        r.cache_hits,
+        r.cache_misses,
+        r.failures,
+        r.bad_png,
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    args.apply_thread_flag();
+    let smoke = args.bool("smoke");
+    let n = args.usize("n", if smoke { 5_000 } else { 100_000 });
+    let requests = args.usize("requests", if smoke { 300 } else { 4_000 });
+    let clients = args.usize("clients", if smoke { 4 } else { 8 });
+    let workers = args.usize("workers", 8);
+    let zmax = args.usize("zmax", 5) as u32;
+    let tile_px = args.usize("tile-px", if smoke { 64 } else { 256 });
+
+    // Synthetic finished map: a 2-D gaussian mixture *is* an embedding, so
+    // the read path is benched without paying for a training run.
+    let mut rng = Rng::new(7);
+    let ds = gaussian_mixture(n, 2, 24, 12.0, 0.2, 0.5, &mut rng);
+    let labels = ds.fine_labels().to_vec();
+    let art = MapArtifact::from_run(
+        ds.x.clone(),
+        Some(labels),
+        Provenance { dataset: "serve_load synthetic".into(), seed: 7, epochs: 0, final_loss: 0.0 },
+    )
+    .expect("artifact");
+
+    let tile = TileConfig { tile_px, max_points: 20_000, ..Default::default() };
+    let base = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers,
+        backlog: 128,
+        cache_entries: 4096,
+        tile,
+    };
+    println!(
+        "serve_load: {n} points, {requests} requests, {clients} clients, {workers} workers, \
+         zmax {zmax}, {tile_px}px tiles"
+    );
+
+    let on = run_load(art.clone(), &base, requests, clients, zmax);
+    print_result("cache on", &on);
+    let off_cfg = ServeConfig { cache_entries: 0, ..base };
+    let off = run_load(art, &off_cfg, requests, clients, zmax);
+    print_result("cache off", &off);
+
+    save_bench_json(
+        "serve_load",
+        obj(vec![
+            ("bench", s("serve_load")),
+            ("n", num(n as f64)),
+            ("requests", num(requests as f64)),
+            ("clients", num(clients as f64)),
+            ("workers", num(workers as f64)),
+            ("tile_px", num(tile_px as f64)),
+            ("zmax", num(zmax as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("cache_on", result_json(&on)),
+            ("cache_off", result_json(&off)),
+        ]),
+    );
+
+    if smoke {
+        let ok = on.tiles > 0
+            && off.tiles > 0
+            && on.bad_png == 0
+            && off.bad_png == 0
+            && on.failures == 0
+            && off.failures == 0;
+        if !ok {
+            eprintln!(
+                "FAIL: smoke gate (tiles on/off {}/{}, bad_png {}/{}, failures {}/{})",
+                on.tiles, off.tiles, on.bad_png, off.bad_png, on.failures, off.failures
+            );
+            std::process::exit(1);
+        }
+        println!("smoke gate OK: tiles served with valid PNG magic, zero failures");
+    }
+}

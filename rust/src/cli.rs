@@ -2,8 +2,16 @@
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments; used by the `nomad` binary and the examples.
+//!
+//! Malformed values are **errors**: `--threads abc` used to silently fall
+//! back to the default (running single-threaded with no warning); now the
+//! typed accessors exit with a message.  The fallible `try_*` variants
+//! expose the same checks as `Result` for tests and library callers.
 
+use crate::util::error::Result;
 use std::collections::HashMap;
+use std::fmt::Display;
+use std::str::FromStr;
 
 /// Parsed arguments.
 #[derive(Clone, Debug, Default)]
@@ -47,20 +55,63 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// Parse `--key`'s value as `T`; `Ok(None)` when the flag is absent,
+    /// `Err` when present but unparsable.
+    pub fn try_parse<T: FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => Err(crate::util::error::Error::msg(format!(
+                    "--{key}: invalid value '{v}' ({e})"
+                ))),
+            },
+        }
+    }
+
+    /// Parse a boolean flag: absent -> false; bare `--flag` (stored as
+    /// "true") or true/1/yes -> true; false/0/no -> false; anything else
+    /// is an error.
+    pub fn try_bool(&self, key: &str) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(false),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(crate::util::error::Error::msg(format!(
+                "--{key}: invalid boolean '{v}' (true/false/1/0/yes/no)"
+            ))),
+        }
+    }
+
+    /// Unwrap a typed-accessor result, exiting with the parse message on a
+    /// malformed value — the CLI-facing behavior of `usize`/`f64`/`u64`.
+    fn require<T>(r: Result<T>) -> T {
+        match r {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
     pub fn usize(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        Self::require(self.try_parse::<usize>(key)).unwrap_or(default)
     }
 
     pub fn f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        Self::require(self.try_parse::<f64>(key)).unwrap_or(default)
     }
 
     pub fn u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        Self::require(self.try_parse::<u64>(key)).unwrap_or(default)
     }
 
     pub fn bool(&self, key: &str) -> bool {
-        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+        Self::require(self.try_bool(key))
     }
 
     pub fn str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
@@ -70,10 +121,11 @@ impl Args {
     /// Bridge a `--threads N` flag to the `NOMAD_THREADS` env var that
     /// [`crate::util::parallel::num_threads`] reads.  Every binary that
     /// accepts the flag (the `nomad` CLI, the examples) calls this once,
-    /// right after parsing.
+    /// right after parsing.  A malformed count (`--threads abc`) is an
+    /// error, not a silent fall-through to single-threaded execution.
     pub fn apply_thread_flag(&self) {
-        if let Some(t) = self.get("threads") {
-            std::env::set_var("NOMAD_THREADS", t);
+        if let Some(t) = Self::require(self.try_parse::<usize>("threads")) {
+            std::env::set_var("NOMAD_THREADS", t.to_string());
         }
     }
 }
@@ -102,5 +154,42 @@ mod tests {
         let a = Args::parse(sv(&["--verbose", "--n", "5"]));
         assert!(a.bool("verbose"));
         assert_eq!(a.usize("n", 0), 5);
+    }
+
+    #[test]
+    fn malformed_values_are_errors_not_defaults() {
+        let a = Args::parse(sv(&["--threads", "abc", "--lr", "fast", "--seed", "-3"]));
+        assert!(a.try_parse::<usize>("threads").is_err());
+        assert!(a.try_parse::<f64>("lr").is_err());
+        assert!(a.try_parse::<u64>("seed").is_err(), "negative u64 must not parse");
+        // absent flags stay Ok(None) -> default
+        assert_eq!(a.try_parse::<usize>("missing").unwrap(), None);
+        let e = a.try_parse::<usize>("threads").unwrap_err().to_string();
+        assert!(e.contains("--threads") && e.contains("abc"), "{e}");
+    }
+
+    #[test]
+    fn eq_form_parses_and_errors_like_space_form() {
+        let a = Args::parse(sv(&["--workers=8", "--port=http", "--cache=0"]));
+        assert_eq!(a.try_parse::<usize>("workers").unwrap(), Some(8));
+        assert_eq!(a.try_parse::<usize>("cache").unwrap(), Some(0));
+        assert!(a.try_parse::<u16>("port").is_err());
+    }
+
+    #[test]
+    fn boolean_forms() {
+        let a = Args::parse(sv(&[
+            "--bare",
+            "--yes=yes",
+            "--off=false",
+            "--zero=0",
+            "--bad=maybe",
+        ]));
+        assert!(a.try_bool("bare").unwrap());
+        assert!(a.try_bool("yes").unwrap());
+        assert!(!a.try_bool("off").unwrap());
+        assert!(!a.try_bool("zero").unwrap());
+        assert!(!a.try_bool("absent").unwrap());
+        assert!(a.try_bool("bad").is_err());
     }
 }

@@ -10,9 +10,10 @@
 //!   sharding, simulated multi-device runtime with all-gathered cluster
 //!   means, SGD schedule, metrics, benches.
 //! * **Layer 2 (python/compile)** — JAX shard-step graph, AOT-lowered to
-//!   HLO text artifacts loaded at runtime via PJRT (`runtime`, behind the
-//!   off-by-default `xla` cargo feature — the default build is pure std and
-//!   works fully offline).
+//!   HLO text artifacts loaded at runtime via PJRT (`runtime` — manifest
+//!   parsing is always built; the PJRT executor sits behind the
+//!   off-by-default `xla` cargo feature, so the default build is pure std
+//!   and works fully offline).
 //! * **Layer 1 (python/compile/kernels)** — Pallas force/assignment/kNN
 //!   kernels, interpret-mode for CPU execution.
 pub mod bench;
@@ -28,5 +29,5 @@ pub mod viz;
 pub mod coordinator;
 pub mod distributed;
 pub mod embed;
-#[cfg(feature = "xla")]
+pub mod serve;
 pub mod runtime;

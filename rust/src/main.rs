@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   embed    embed a dataset (synthetic generator or .npy file) and write
-//!            positions (.npy) + an optional density map (.png)
+//!            positions (.npy) + an optional density map (.png) + a map
+//!            artifact directory for the serving layer
+//!   serve    serve a map artifact over HTTP: LOD tiles, kNN point
+//!            queries, and cache/latency stats (DESIGN.md §10)
 //!   index    build and report on the K-Means ANN index only
 //!   metrics  score an embedding (.npy) against its source data (.npy)
 //!   info     print artifact-manifest and environment diagnostics
@@ -11,6 +14,7 @@
 //!   nomad embed --data wikipedia --n 20000 --devices 8 --out out/wiki
 //!   nomad embed --npy vectors.npy --epochs 200 --xla --out out/run1
 //!   nomad embed --data pubmed --n 50000 --threads 8 --out out/pm
+//!   nomad serve --artifact out/wiki_artifact --addr 127.0.0.1:8080
 //!   nomad metrics --npy vectors.npy --embedding out/run1_positions.npy
 //!   nomad info
 //!
@@ -26,6 +30,7 @@ use nomad::data::{self, Dataset};
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
 use nomad::linalg::Matrix;
+use nomad::serve::{self, MapArtifact, Provenance, ServeConfig, TileConfig};
 use nomad::util::error::{Context, Result};
 use nomad::util::npy::NpyF32;
 use nomad::util::rng::Rng;
@@ -38,11 +43,14 @@ fn main() -> Result<()> {
     args.apply_thread_flag();
     match args.positional.first().map(|s| s.as_str()) {
         Some("embed") => cmd_embed(&args),
+        Some("serve") => cmd_serve(&args),
         Some("index") => cmd_index(&args),
         Some("metrics") => cmd_metrics(&args),
         Some("info") => cmd_info(),
         _ => {
-            eprintln!("usage: nomad <embed|index|metrics|info> [flags]  (see --help in source)");
+            eprintln!(
+                "usage: nomad <embed|serve|index|metrics|info> [flags]  (see --help in source)"
+            );
             Ok(())
         }
     }
@@ -120,18 +128,70 @@ fn cmd_embed(args: &Args) -> Result<()> {
     NpyF32::new(vec![ds.n(), 2], run.positions.data.clone()).save(Path::new(&pos_path))?;
     println!("positions: {pos_path}");
 
+    let labels: Option<Vec<u32>> = if ds.labels[0].iter().any(|&l| l != 0) {
+        Some(ds.fine_labels().to_vec())
+    } else {
+        None
+    };
     if !args.bool("no-png") {
         let view = View::fit(&run.positions);
-        let labels = if ds.labels[0].iter().any(|&l| l != 0) { Some(ds.fine_labels()) } else { None };
-        let r = density_map(&run.positions, labels, &view, 900, 900);
+        let r = density_map(&run.positions, labels.as_deref(), &view, 900, 900);
         let png_path = format!("{out}_map.png");
         png::write_rgb(Path::new(&png_path), r.width, r.height, &r.pixels)?;
         println!("map: {png_path}");
+    }
+    // persist the serving-layer artifact (positions + labels + bounds +
+    // provenance) so `nomad serve` can pick the run up standalone
+    if !args.bool("no-artifact") {
+        let art = MapArtifact::from_run(
+            run.positions.clone(),
+            labels.clone(),
+            Provenance {
+                dataset: ds.name.clone(),
+                seed: coord.params.seed,
+                epochs: coord.params.epochs,
+                final_loss: *run.loss_history.last().unwrap_or(&f64::NAN),
+            },
+        )?;
+        let art_dir = format!("{out}_artifact");
+        art.save(Path::new(&art_dir))?;
+        println!("artifact: {art_dir}/ (serve: nomad serve --artifact {art_dir})");
     }
     if !args.bool("no-metrics") {
         let (np, rta) = evaluate(&ds, &run.positions, &EvalCfg::default());
         println!("NP@10 = {:.1}%  RTA = {:.1}%", np * 100.0, rta * 100.0);
     }
+    Ok(())
+}
+
+/// `nomad serve --artifact <dir>` — the map serving subsystem's CLI face.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifact")
+        .context("--artifact <dir> required (written by `nomad embed`)")?;
+    let art = MapArtifact::load(Path::new(dir))?;
+    let n = art.positions.rows;
+    let cfg = ServeConfig {
+        addr: args.str("addr", "127.0.0.1:8080").to_string(),
+        workers: args.usize("workers", 8),
+        backlog: args.usize("backlog", 64),
+        cache_entries: args.usize("cache", 2048),
+        tile: TileConfig {
+            tile_px: args.usize("tile-px", 256),
+            max_points: args.usize("max-tile-points", 50_000),
+            seed: args.u64("tile-seed", 0),
+            max_zoom: args.usize("max-zoom", 20) as u32,
+        },
+    };
+    let handle = serve::http::start(art, &cfg)?;
+    println!(
+        "serving {} points ({}) on http://{}",
+        n,
+        args.str("artifact", "?"),
+        handle.addr
+    );
+    println!("  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats");
+    handle.wait();
     Ok(())
 }
 

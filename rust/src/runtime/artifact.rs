@@ -67,40 +67,49 @@ impl Manifest {
 
     /// Smallest `nomad_step` artifact with bucket `s` >= `size` and exactly
     /// matching k / negs, and mean capacity `r` >= `r_needed`.
+    ///
+    /// Manifest entries missing the size key are skipped, never unwrapped:
+    /// a hand-edited or partially written manifest must degrade to the
+    /// native fallback, not panic the runtime.
     pub fn step_for(&self, size: usize, k: usize, negs: usize, r_needed: usize) -> Option<&Artifact> {
         self.for_fn("nomad_step")
             .into_iter()
-            .filter(|a| {
-                a.param("s").is_some_and(|s| s >= size)
+            .filter_map(|a| {
+                let s = a.param("s")?;
+                (s >= size
                     && a.param("k") == Some(k)
                     && a.param("neg") == Some(negs)
-                    && a.param("r").is_some_and(|r| r >= r_needed)
+                    && a.param("r").is_some_and(|r| r >= r_needed))
+                .then_some((s, a))
             })
-            .min_by_key(|a| a.param("s").unwrap())
+            .min_by_key(|&(s, _)| s)
+            .map(|(_, a)| a)
     }
 
     /// Smallest `kmeans_em_step` artifact fitting (n, d, c).
     pub fn kmeans_for(&self, n: usize, d: usize, c: usize) -> Option<&Artifact> {
         self.for_fn("kmeans_em_step")
             .into_iter()
-            .filter(|a| {
-                a.param("n").is_some_and(|an| an >= n)
-                    && a.param("d") == Some(d)
-                    && a.param("c").is_some_and(|ac| ac >= c)
+            .filter_map(|a| {
+                let an = a.param("n")?;
+                (an >= n && a.param("d") == Some(d) && a.param("c").is_some_and(|ac| ac >= c))
+                    .then_some((an, a))
             })
-            .min_by_key(|a| a.param("n").unwrap())
+            .min_by_key(|&(an, _)| an)
+            .map(|(_, a)| a)
     }
 
     /// Smallest `knn_build` artifact fitting (n, d) with k >= `k`.
     pub fn knn_for(&self, n: usize, d: usize, k: usize) -> Option<&Artifact> {
         self.for_fn("knn_build")
             .into_iter()
-            .filter(|a| {
-                a.param("n").is_some_and(|an| an >= n)
-                    && a.param("d") == Some(d)
-                    && a.param("k").is_some_and(|ak| ak >= k)
+            .filter_map(|a| {
+                let an = a.param("n")?;
+                (an >= n && a.param("d") == Some(d) && a.param("k").is_some_and(|ak| ak >= k))
+                    .then_some((an, a))
             })
-            .min_by_key(|a| a.param("n").unwrap())
+            .min_by_key(|&(an, _)| an)
+            .map(|(_, a)| a)
     }
 }
 
@@ -124,6 +133,42 @@ mod tests {
         assert!(m.step_for(10_000_000, 15, 8, 50).is_none());
         // mismatched k -> None
         assert!(m.step_for(100, 3, 8, 50).is_none());
+    }
+
+    /// Regression: a manifest entry missing a bucket key (or carrying a
+    /// non-integer value) must be skipped by the selectors, not panic.
+    #[test]
+    fn malformed_manifest_entries_are_skipped() {
+        let dir = std::env::temp_dir().join("nomad_manifest_malformed");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // the loader checks each artifact file exists
+        std::fs::write(dir.join("a.hlo"), "HloModule dummy").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [
+                {"name": "no_params", "file": "a.hlo", "fn": "nomad_step"},
+                {"name": "missing_s", "file": "a.hlo", "fn": "nomad_step",
+                 "params": {"k": 15, "neg": 8, "r": 64}},
+                {"name": "bad_type", "file": "a.hlo", "fn": "nomad_step",
+                 "params": {"s": "big", "k": 15, "neg": 8, "r": 64}},
+                {"name": "good", "file": "a.hlo", "fn": "nomad_step",
+                 "params": {"s": 512, "k": 15, "neg": 8, "r": 64}},
+                {"name": "kmeans_no_n", "file": "a.hlo", "fn": "kmeans_em_step",
+                 "params": {"d": 32, "c": 64}},
+                {"name": "knn_no_n", "file": "a.hlo", "fn": "knn_build",
+                 "params": {"d": 32, "k": 15}}
+            ]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 6);
+        // only the well-formed bucket is selectable; the rest are skipped
+        let step = m.step_for(100, 15, 8, 50).expect("good bucket selected");
+        assert_eq!(step.name, "good");
+        // selectors over functions with only-malformed entries return None
+        assert!(m.kmeans_for(10, 32, 8).is_none());
+        assert!(m.knn_for(10, 32, 8).is_none());
     }
 
     #[test]

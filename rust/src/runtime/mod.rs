@@ -11,14 +11,22 @@
 //! Every artifact-backed function has a bit-equivalent native fallback, so
 //! the system degrades gracefully when a shape has no artifact.
 
+// The manifest parser and bucket selection are pure std and always built
+// (the default-feature tests cover their malformed-manifest behavior); only
+// the PJRT-backed executor modules need the `xla` crate.
+#[cfg(feature = "xla")]
 pub mod ann;
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod step;
 
+#[cfg(feature = "xla")]
 pub use ann::XlaAnnBackend;
 pub use artifact::{Artifact, Manifest};
+#[cfg(feature = "xla")]
 pub use step::XlaStepBackend;
 
+#[cfg(feature = "xla")]
 use crate::util::error::Result;
 
 /// Resolve the artifacts directory: `$NOMAD_ARTIFACTS` or `./artifacts`,
@@ -42,6 +50,7 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 
 /// Load + compile one HLO text file on a fresh CPU PJRT client (smoke/test
 /// helper; production paths use the cached executables in the backends).
+#[cfg(feature = "xla")]
 pub fn compile_hlo_text(
     client: &xla::PjRtClient,
     path: &std::path::Path,

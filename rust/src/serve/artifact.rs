@@ -1,0 +1,322 @@
+//! Persisted map artifact — the contract between a finished run and the
+//! serving layer (DESIGN.md §10).
+//!
+//! A `MapArtifact` is a directory: `positions.npy` (n x 2 f32), an
+//! optional `labels.npy` (n f32, integral values), and `manifest.json`
+//! carrying the point count, the fitted bounds, and build provenance.
+//! `nomad embed` writes one at the end of every run; `nomad serve` (and
+//! the load bench) load it standalone — no dataset, index, or training
+//! state required on the read path.
+
+use crate::ensure;
+use crate::linalg::Matrix;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::npy::NpyF32;
+use crate::viz::View;
+use std::path::Path;
+
+/// Where the artifact came from (recorded verbatim in the manifest).
+#[derive(Clone, Debug, Default)]
+pub struct Provenance {
+    pub dataset: String,
+    pub seed: u64,
+    pub epochs: usize,
+    pub final_loss: f64,
+}
+
+/// A finished map, loadable standalone by the serving layer.
+#[derive(Clone, Debug)]
+pub struct MapArtifact {
+    /// n x 2 embedding positions
+    pub positions: Matrix,
+    /// optional per-point labels (same length as rows)
+    pub labels: Option<Vec<u32>>,
+    /// fitted square bounds of the finite points (the tile-pyramid root)
+    pub bounds: View,
+    pub provenance: Provenance,
+}
+
+const FORMAT: &str = "nomad-map-artifact";
+const VERSION: i64 = 1;
+
+impl MapArtifact {
+    /// Assemble from a finished run; bounds are fitted here.
+    pub fn from_run(
+        positions: Matrix,
+        labels: Option<Vec<u32>>,
+        provenance: Provenance,
+    ) -> Result<MapArtifact> {
+        ensure!(positions.cols == 2, "positions must be n x 2, got n x {}", positions.cols);
+        if let Some(ls) = &labels {
+            ensure!(
+                ls.len() == positions.rows,
+                "labels length {} != {} points",
+                ls.len(),
+                positions.rows
+            );
+        }
+        let bounds = View::fit(&positions);
+        Ok(MapArtifact { positions, labels, bounds, provenance })
+    }
+
+    /// Write `positions.npy` (+ `labels.npy`) + `manifest.json` to `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create artifact dir {}", dir.display()))?;
+        NpyF32::new(vec![self.positions.rows, 2], self.positions.data.clone())
+            .save(&dir.join("positions.npy"))?;
+        if let Some(ls) = &self.labels {
+            let data: Vec<f32> = ls.iter().map(|&l| l as f32).collect();
+            NpyF32::new(vec![ls.len()], data).save(&dir.join("labels.npy"))?;
+        }
+        let manifest = json::obj(vec![
+            ("format", json::s(FORMAT)),
+            ("version", json::num(VERSION as f64)),
+            ("n_points", json::num(self.positions.rows as f64)),
+            ("positions", json::s("positions.npy")),
+            (
+                "labels",
+                if self.labels.is_some() { json::s("labels.npy") } else { Json::Null },
+            ),
+            (
+                "bounds",
+                json::obj(vec![
+                    ("cx", json::num(self.bounds.cx as f64)),
+                    ("cy", json::num(self.bounds.cy as f64)),
+                    ("half_w", json::num(self.bounds.half_w as f64)),
+                    ("half_h", json::num(self.bounds.half_h as f64)),
+                ]),
+            ),
+            (
+                "provenance",
+                json::obj(vec![
+                    ("dataset", json::s(&self.provenance.dataset)),
+                    ("seed", json::num(self.provenance.seed as f64)),
+                    ("epochs", json::num(self.provenance.epochs as f64)),
+                    // a NaN/inf loss (diverged or zero-epoch run) must not
+                    // serialize as a bare `NaN` token, which no JSON parser
+                    // (ours included) can read back
+                    (
+                        "final_loss",
+                        if self.provenance.final_loss.is_finite() {
+                            json::num(self.provenance.final_loss)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ]),
+            ),
+        ]);
+        std::fs::write(dir.join("manifest.json"), manifest.pretty())
+            .with_context(|| format!("write {}/manifest.json", dir.display()))?;
+        Ok(())
+    }
+
+    /// Load an artifact directory written by [`MapArtifact::save`].
+    pub fn load(dir: &Path) -> Result<MapArtifact> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let v = Json::parse(&text).context("parse artifact manifest")?;
+        ensure!(
+            v.get("format").as_str() == Some(FORMAT),
+            "not a map artifact manifest: {}",
+            mpath.display()
+        );
+        ensure!(
+            v.get("version").as_i64() == Some(VERSION),
+            "unsupported artifact version {:?}",
+            v.get("version").as_i64()
+        );
+        let n = v.get("n_points").as_usize().context("manifest n_points")?;
+
+        let pos_file = v.get("positions").as_str().context("manifest positions")?;
+        let t = NpyF32::load(&dir.join(pos_file))?;
+        ensure!(
+            t.shape == vec![n, 2],
+            "positions shape {:?} != [{n}, 2]",
+            t.shape
+        );
+        let positions = Matrix::from_vec(n, 2, t.data);
+
+        let labels = match v.get("labels").as_str() {
+            Some(lf) => {
+                let lt = NpyF32::load(&dir.join(lf))?;
+                ensure!(lt.shape == vec![n], "labels shape {:?} != [{n}]", lt.shape);
+                Some(lt.data.iter().map(|&f| f as u32).collect())
+            }
+            None => None,
+        };
+
+        let b = v.get("bounds");
+        let bounds = {
+            let cx = b.get("cx").as_f64().context("bounds cx")? as f32;
+            let cy = b.get("cy").as_f64().context("bounds cy")? as f32;
+            let half_w = b.get("half_w").as_f64().context("bounds half_w")? as f32;
+            let half_h = b.get("half_h").as_f64().context("bounds half_h")? as f32;
+            let v = View { cx, cy, half_w, half_h };
+            // a corrupt manifest must not poison the tile pyramid's root:
+            // halves must be finite positives (`1e999` parses to +inf)
+            if cx.is_finite()
+                && cy.is_finite()
+                && half_w.is_finite()
+                && half_w > 0.0
+                && half_h.is_finite()
+                && half_h > 0.0
+            {
+                v
+            } else {
+                View::fit(&positions)
+            }
+        };
+
+        let p = v.get("provenance");
+        let provenance = Provenance {
+            dataset: p.get("dataset").as_str().unwrap_or("").to_string(),
+            seed: p.get("seed").as_i64().unwrap_or(0) as u64,
+            epochs: p.get("epochs").as_usize().unwrap_or(0),
+            final_loss: p.get("final_loss").as_f64().unwrap_or(f64::NAN),
+        };
+
+        Ok(MapArtifact { positions, labels, bounds, provenance })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("nomad_serve_artifact").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn demo_artifact(n: usize) -> MapArtifact {
+        let mut data = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            data.push(i as f32);
+            data.push((i % 7) as f32);
+        }
+        MapArtifact::from_run(
+            Matrix::from_vec(n, 2, data),
+            Some((0..n as u32).map(|i| i % 5).collect()),
+            Provenance { dataset: "demo".into(), seed: 42, epochs: 10, final_loss: 1.25 },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_with_labels() {
+        let dir = tmp("roundtrip");
+        let art = demo_artifact(100);
+        art.save(&dir).unwrap();
+        let back = MapArtifact::load(&dir).unwrap();
+        assert_eq!(back.positions, art.positions);
+        assert_eq!(back.labels, art.labels);
+        assert_eq!(back.provenance.dataset, "demo");
+        assert_eq!(back.provenance.seed, 42);
+        assert_eq!(back.provenance.epochs, 10);
+        assert!((back.provenance.final_loss - 1.25).abs() < 1e-12);
+        assert!((back.bounds.cx - art.bounds.cx).abs() < 1e-6);
+        assert!((back.bounds.half_w - art.bounds.half_w).abs() < 1e-6);
+    }
+
+    #[test]
+    fn roundtrip_without_labels() {
+        let dir = tmp("nolabels");
+        let art = MapArtifact::from_run(
+            Matrix::from_vec(3, 2, vec![0.0, 0.0, 1.0, 1.0, 2.0, 2.0]),
+            None,
+            Provenance::default(),
+        )
+        .unwrap();
+        art.save(&dir).unwrap();
+        let back = MapArtifact::load(&dir).unwrap();
+        assert!(back.labels.is_none());
+        assert_eq!(back.positions.rows, 3);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_manifests() {
+        // labels length mismatch at assembly
+        assert!(MapArtifact::from_run(
+            Matrix::zeros(4, 2),
+            Some(vec![1, 2]),
+            Provenance::default()
+        )
+        .is_err());
+        // 3-column positions
+        assert!(
+            MapArtifact::from_run(Matrix::zeros(4, 3), None, Provenance::default()).is_err()
+        );
+
+        // missing manifest
+        let dir = tmp("missing");
+        assert!(MapArtifact::load(&dir).is_err());
+
+        // wrong format marker
+        let dir = tmp("badformat");
+        std::fs::write(dir.join("manifest.json"), r#"{"format": "other"}"#).unwrap();
+        assert!(MapArtifact::load(&dir).is_err());
+
+        // n_points disagreeing with the npy shape
+        let dir = tmp("badcount");
+        demo_artifact(10).save(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        std::fs::write(dir.join("manifest.json"), text.replace("\"n_points\": 10", "\"n_points\": 9"))
+            .unwrap();
+        assert!(MapArtifact::load(&dir).is_err());
+    }
+
+    #[test]
+    fn non_finite_loss_roundtrips_as_null() {
+        // a diverged (or zero-epoch) run must still produce a loadable
+        // artifact: NaN serializes as JSON null, loads back as NaN
+        let dir = tmp("nanloss");
+        let art = MapArtifact::from_run(
+            Matrix::from_vec(2, 2, vec![0.0, 0.0, 1.0, 1.0]),
+            None,
+            Provenance { final_loss: f64::NAN, ..Default::default() },
+        )
+        .unwrap();
+        art.save(&dir).unwrap();
+        let back = MapArtifact::load(&dir).unwrap();
+        assert!(back.provenance.final_loss.is_nan());
+    }
+
+    #[test]
+    fn infinite_bounds_are_refit() {
+        // `1e999` parses to +inf, which must fail the bounds guard
+        let dir = tmp("infbounds");
+        demo_artifact(10).save(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let text = {
+            let at = text.find("\"half_w\":").unwrap();
+            let end = at + text[at..].find('\n').unwrap();
+            format!("{}\"half_w\": 1e999{}", &text[..at], &text[end..])
+        };
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let back = MapArtifact::load(&dir).unwrap();
+        assert!(back.bounds.half_w.is_finite() && back.bounds.half_w > 0.0);
+    }
+
+    #[test]
+    fn corrupt_bounds_are_refit() {
+        let dir = tmp("badbounds");
+        demo_artifact(10).save(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        // zero out half_w: loader must refit instead of serving a
+        // degenerate root view
+        let text = {
+            let at = text.find("\"half_w\":").unwrap();
+            let end = at + text[at..].find('\n').unwrap();
+            format!("{}\"half_w\": 0{}", &text[..at], &text[end..])
+        };
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let back = MapArtifact::load(&dir).unwrap();
+        assert!(back.bounds.half_w > 0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Sharded LRU cache over encoded tiles (DESIGN.md §10).
+//!
+//! Keys are packed `z/x/y` tile coordinates ([`crate::serve::tiles::tile_key`]);
+//! values are `Arc`-shared encoded PNG bytes, so a hit hands back a
+//! refcount bump, never a copy.  The key space is split across
+//! independently locked shards (contention scales with worker count, not
+//! request count); inside a shard, recency is a monotone per-shard tick:
+//! a `HashMap` holds `key -> (tick, value)` and a `BTreeMap` mirrors
+//! `tick -> key`, so get/put/evict are all O(log n).  Hit, miss, and
+//! eviction counters feed `/stats`.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+const N_SHARDS: usize = 16;
+
+#[derive(Default)]
+struct Shard {
+    /// key -> (recency tick, value)
+    map: HashMap<u64, (u64, Arc<Vec<u8>>)>,
+    /// recency tick -> key (oldest first)
+    by_tick: BTreeMap<u64, u64>,
+    tick: u64,
+}
+
+/// Cache counters snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+/// A sharded LRU over encoded tiles.  `capacity` is the total entry
+/// budget across shards; 0 disables caching entirely (every get is a
+/// miss, every put a no-op) — the load bench uses that for its
+/// cache-off baseline.
+pub struct TileCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_cap: usize,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl TileCache {
+    pub fn new(capacity: usize) -> TileCache {
+        TileCache {
+            shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            per_shard_cap: capacity.div_ceil(N_SHARDS),
+            capacity,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<Shard> {
+        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        &self.shards[(h >> 56) as usize % N_SHARDS]
+    }
+
+    /// Look up a tile, refreshing its recency on a hit.
+    pub fn get(&self, key: u64) -> Option<Arc<Vec<u8>>> {
+        if self.capacity == 0 {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let mut guard = self.shard(key).lock().unwrap();
+        let s = &mut *guard;
+        s.tick += 1;
+        let fresh = s.tick;
+        match s.map.get_mut(&key) {
+            Some(entry) => {
+                let old = entry.0;
+                entry.0 = fresh;
+                let value = Arc::clone(&entry.1);
+                s.by_tick.remove(&old);
+                s.by_tick.insert(fresh, key);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(value)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a tile, evicting the least-recently-used entry
+    /// of the shard when over budget.
+    pub fn put(&self, key: u64, value: Arc<Vec<u8>>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let mut guard = self.shard(key).lock().unwrap();
+        let s = &mut *guard;
+        s.tick += 1;
+        let fresh = s.tick;
+        if let Some((old, _)) = s.map.insert(key, (fresh, value)) {
+            s.by_tick.remove(&old);
+        }
+        s.by_tick.insert(fresh, key);
+        while s.map.len() > self.per_shard_cap {
+            // oldest tick first; the maps are kept in lockstep
+            let (_, victim) = s.by_tick.pop_first().expect("by_tick mirrors map");
+            s.map.remove(&victim);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether caching is active (capacity > 0).  The server skips its
+    /// single-flight render locks when disabled — with nothing to share
+    /// through, serializing identical renders would only add contention.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn val(b: u8) -> Arc<Vec<u8>> {
+        Arc::new(vec![b; 4])
+    }
+
+    #[test]
+    fn hit_miss_and_value_identity() {
+        let c = TileCache::new(64);
+        assert!(c.get(1).is_none());
+        c.put(1, val(7));
+        let v = c.get(1).expect("hit");
+        assert_eq!(*v, vec![7; 4]);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        // capacity 16 across 16 shards -> 1 entry per shard; craft keys
+        // that land in one shard by brute force
+        let c = TileCache::new(16);
+        let shard_of = |k: u64| (k.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize % N_SHARDS;
+        let target = shard_of(0);
+        let mut same: Vec<u64> = (0..5_000u64).filter(|&k| shard_of(k) == target).collect();
+        assert!(same.len() >= 3, "need 3 colliding keys");
+        same.truncate(3);
+        let (a, b, d) = (same[0], same[1], same[2]);
+        c.put(a, val(1));
+        c.put(b, val(2)); // evicts a (per-shard cap 1)
+        assert!(c.get(a).is_none());
+        assert_eq!(*c.get(b).unwrap(), vec![2; 4]);
+        c.put(d, val(3)); // evicts b
+        assert!(c.get(b).is_none());
+        assert_eq!(*c.get(d).unwrap(), vec![3; 4]);
+        assert_eq!(c.stats().evictions, 2);
+    }
+
+    #[test]
+    fn get_refreshes_recency() {
+        let c = TileCache::new(2 * N_SHARDS);
+        // find three keys in one shard (per-shard cap = 2)
+        let shard_of = |k: u64| (k.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize % N_SHARDS;
+        let target = shard_of(0);
+        let keys: Vec<u64> = (0..10_000u64).filter(|&k| shard_of(k) == target).take(3).collect();
+        assert_eq!(keys.len(), 3);
+        c.put(keys[0], val(1));
+        c.put(keys[1], val(2));
+        assert!(c.get(keys[0]).is_some()); // refresh keys[0]; keys[1] is now LRU
+        c.put(keys[2], val(3)); // evicts keys[1]
+        assert!(c.get(keys[0]).is_some());
+        assert!(c.get(keys[1]).is_none());
+        assert!(c.get(keys[2]).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = TileCache::new(0);
+        c.put(1, val(9));
+        assert!(c.get(1).is_none());
+        let s = c.stats();
+        assert_eq!(s.entries, 0);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let c = Arc::new(TileCache::new(128));
+        std::thread::scope(|sc| {
+            for t in 0..8u64 {
+                let c = Arc::clone(&c);
+                sc.spawn(move || {
+                    for i in 0..500u64 {
+                        let k = (t * 131 + i) % 200;
+                        if c.get(k).is_none() {
+                            c.put(k, Arc::new(vec![(k % 251) as u8; 8]));
+                        }
+                    }
+                });
+            }
+        });
+        let s = c.stats();
+        assert!(s.hits + s.misses == 4_000);
+        assert!(s.entries <= 128 + N_SHARDS);
+    }
+}

@@ -1,0 +1,657 @@
+//! Zero-dependency threaded HTTP/1.1 map server (DESIGN.md §10).
+//!
+//! `std::net::TcpListener` + a fixed worker pool: one accept thread
+//! pushes connections into a **bounded** queue (`sync_channel`); workers
+//! pull from the shared receiver and serve one request per connection
+//! (`Connection: close` — the load profile is many short loopback/edge
+//! requests, and closing keeps worker state trivial).  Overflowing the
+//! queue answers `503` immediately instead of building unbounded backlog.
+//!
+//! Routes:
+//! * `GET /tiles/{z}/{x}/{y}.png` — LOD tile (cache -> render -> encode);
+//! * `GET /query?x=&y=&k=`        — embedding-space k-nearest points, JSON;
+//! * `GET /stats`                  — cache/latency/request counters, JSON;
+//! * `GET /`                       — plain-text endpoint listing.
+//!
+//! Tiles are bitwise-deterministic (see `serve::tiles`), so the cache can
+//! never serve a stale-but-different byte stream, and concurrent clients
+//! always observe identical tiles.
+
+use crate::serve::artifact::MapArtifact;
+use crate::serve::cache::TileCache;
+use crate::serve::tiles::{tile_key, TileConfig, TileRenderer};
+use crate::util::error::{Context, Result};
+use crate::util::json::{arr, num, obj, Json};
+use crate::util::stats::Summary;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// bind address, e.g. `127.0.0.1:8080` (port 0 picks a free port)
+    pub addr: String,
+    /// worker thread count
+    pub workers: usize,
+    /// bounded accept-queue depth; overflow answers 503
+    pub backlog: usize,
+    /// total tile-cache entries (0 disables the cache)
+    pub cache_entries: usize,
+    /// tile rendering knobs
+    pub tile: TileConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            workers: 8,
+            backlog: 64,
+            cache_entries: 2048,
+            tile: TileConfig::default(),
+        }
+    }
+}
+
+/// Last-N service latencies (seconds), lock-protected ring.
+struct LatencyRing {
+    samples: Vec<f64>,
+    next: usize,
+    count: u64,
+}
+
+const LATENCY_RING: usize = 4096;
+
+impl LatencyRing {
+    fn new() -> LatencyRing {
+        LatencyRing { samples: Vec::with_capacity(LATENCY_RING), next: 0, count: 0 }
+    }
+
+    fn push(&mut self, secs: f64) {
+        if self.samples.len() < LATENCY_RING {
+            self.samples.push(secs);
+        } else {
+            self.samples[self.next] = secs;
+        }
+        self.next = (self.next + 1) % LATENCY_RING;
+        self.count += 1;
+    }
+
+    fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+}
+
+/// Stripes for the single-flight render locks: enough that unrelated
+/// cold tiles rarely serialize, few enough to cost nothing.
+const RENDER_STRIPES: usize = 64;
+
+/// Shared server state: renderer, cache, counters.
+pub struct ServerState {
+    renderer: TileRenderer,
+    cache: TileCache,
+    /// per-key-stripe single-flight locks for cold-tile renders
+    render_locks: Vec<Mutex<()>>,
+    requests: AtomicU64,
+    tiles_served: AtomicU64,
+    queries_served: AtomicU64,
+    errors: AtomicU64,
+    latency: Mutex<LatencyRing>,
+}
+
+impl ServerState {
+    /// Counters + latency snapshot as the `/stats` JSON payload.
+    pub fn stats_json(&self) -> Json {
+        let c = self.cache.stats();
+        let lat = self.latency.lock().unwrap();
+        let sum = lat.summary();
+        obj(vec![
+            ("requests", num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("tiles_served", num(self.tiles_served.load(Ordering::Relaxed) as f64)),
+            ("queries_served", num(self.queries_served.load(Ordering::Relaxed) as f64)),
+            ("errors", num(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "cache",
+                obj(vec![
+                    ("hits", num(c.hits as f64)),
+                    ("misses", num(c.misses as f64)),
+                    ("evictions", num(c.evictions as f64)),
+                    ("entries", num(c.entries as f64)),
+                    ("capacity", num(c.capacity as f64)),
+                ]),
+            ),
+            (
+                "latency",
+                obj(vec![
+                    ("count", num(lat.count as f64)),
+                    ("p50_ms", num(sum.p50 * 1e3)),
+                    ("p99_ms", num(sum.p99 * 1e3)),
+                    ("max_ms", num(sum.max * 1e3)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// A running map server; `stop()` for a clean shutdown, `wait()` to block
+/// until one happens (the CLI's serve loop).
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    state: Arc<ServerState>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn state(&self) -> &ServerState {
+        &self.state
+    }
+
+    /// Signal shutdown, wake the acceptor, join every thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the accept thread exits (i.e. forever, absent a stop
+    /// signal from another thread or a fatal listener error).
+    pub fn wait(mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Build the read path for `artifact` and start serving.
+pub fn start(artifact: MapArtifact, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let state = Arc::new(ServerState {
+        renderer: TileRenderer::new(artifact, cfg.tile),
+        cache: TileCache::new(cfg.cache_entries),
+        render_locks: (0..RENDER_STRIPES).map(|_| Mutex::new(())).collect(),
+        requests: AtomicU64::new(0),
+        tiles_served: AtomicU64::new(0),
+        queries_served: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+        latency: Mutex::new(LatencyRing::new()),
+    });
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("bind {}", cfg.addr))?;
+    let addr = listener.local_addr().context("local_addr")?;
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let (tx, rx) = sync_channel::<TcpStream>(cfg.backlog.max(1));
+    let rx = Arc::new(Mutex::new(rx));
+    let mut workers = Vec::with_capacity(cfg.workers.max(1));
+    for _ in 0..cfg.workers.max(1) {
+        let rx = Arc::clone(&rx);
+        let state = Arc::clone(&state);
+        workers.push(std::thread::spawn(move || worker_loop(&rx, &state)));
+    }
+
+    let stop2 = Arc::clone(&stop);
+    let accept = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(_) => continue,
+            };
+            match tx.try_send(stream) {
+                Ok(()) => {}
+                Err(TrySendError::Full(mut stream)) => {
+                    // bounded queue: shed load instead of queueing unboundedly
+                    let _ = respond(&mut stream, 503, "Service Unavailable", "text/plain", b"busy\n");
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
+        }
+        // dropping tx disconnects the workers' receiver
+    });
+
+    Ok(ServerHandle { addr, state, stop, accept: Some(accept), workers })
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, state: &Arc<ServerState>) {
+    loop {
+        let stream = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match stream {
+            Ok(s) => handle_conn(s, state),
+            Err(_) => break, // acceptor gone
+        }
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, state: &ServerState) {
+    // bound both directions so a slow (or stalled) client can never wedge a
+    // worker: reads are additionally capped by read_request's deadline, and
+    // the write timeout unblocks write_all when the peer stops draining
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_nodelay(true);
+    let req = match read_request(&mut stream) {
+        Some(r) => r,
+        None => return, // unreadable/empty request: nothing to answer
+    };
+    let t0 = Instant::now();
+    state.requests.fetch_add(1, Ordering::Relaxed);
+
+    let (method, target) = match parse_request_line(&req) {
+        Some(mt) => mt,
+        None => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(&mut stream, 400, "Bad Request", "text/plain", b"bad request\n");
+            return;
+        }
+    };
+    if method != "GET" {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+        let _ = respond(
+            &mut stream,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            b"GET only\n",
+        );
+        return;
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+
+    let ok = if let Some(rest) = path.strip_prefix("/tiles/") {
+        serve_tile(&mut stream, state, rest)
+    } else if path == "/query" {
+        serve_query(&mut stream, state, query)
+    } else if path == "/stats" {
+        let body = state.stats_json().pretty().into_bytes();
+        respond(&mut stream, 200, "OK", "application/json", &body).is_ok()
+    } else if path == "/" {
+        let body = b"nomad map server\n\
+                     GET /tiles/{z}/{x}/{y}.png\n\
+                     GET /query?x=&y=&k=\n\
+                     GET /stats\n";
+        respond(&mut stream, 200, "OK", "text/plain", body).is_ok()
+    } else {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+        respond(&mut stream, 404, "Not Found", "text/plain", b"not found\n").is_ok()
+    };
+    let _ = ok;
+
+    state.latency.lock().unwrap().push(t0.elapsed().as_secs_f64());
+}
+
+/// `GET /tiles/{z}/{x}/{y}.png`
+fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
+    let coords = parse_tile_path(rest);
+    let (z, x, y) = match coords {
+        Some(c) => c,
+        None => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            return respond(stream, 404, "Not Found", "text/plain", b"bad tile path\n").is_ok();
+        }
+    };
+    // validate against the pyramid before touching the cache: tile_key's
+    // packing is only injective for in-pyramid coordinates
+    if state.renderer.tile_view(z, x, y).is_none() {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+        return respond(stream, 404, "Not Found", "text/plain", b"tile out of range\n").is_ok();
+    }
+    let key = tile_key(z, x, y);
+    let bytes = match state.cache.get(key) {
+        Some(b) => b,
+        None => {
+            // single-flight: a thundering herd on one cold tile renders it
+            // once and shares the Arc, instead of N redundant render+encode
+            // passes (tiles are deterministic, so this is purely a cost
+            // optimization — correctness never depended on it).  Skipped
+            // when the cache is disabled: there is nothing to share through.
+            let enabled = state.cache.enabled();
+            let _flight = enabled.then(|| {
+                let stripe =
+                    (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize % RENDER_STRIPES;
+                state.render_locks[stripe].lock().unwrap()
+            });
+            let refilled = if enabled { state.cache.get(key) } else { None };
+            match refilled {
+                Some(b) => b, // filled by a concurrent request while we waited
+                None => match state.renderer.render_png(z, x, y) {
+                    None => {
+                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        return respond(
+                            stream,
+                            404,
+                            "Not Found",
+                            "text/plain",
+                            b"tile out of range\n",
+                        )
+                        .is_ok();
+                    }
+                    Some(Err(e)) => {
+                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        let msg = format!("encode error: {e}\n");
+                        return respond(
+                            stream,
+                            500,
+                            "Internal Server Error",
+                            "text/plain",
+                            msg.as_bytes(),
+                        )
+                        .is_ok();
+                    }
+                    Some(Ok(b)) => {
+                        let b = Arc::new(b);
+                        state.cache.put(key, Arc::clone(&b));
+                        b
+                    }
+                },
+            }
+        }
+    };
+    state.tiles_served.fetch_add(1, Ordering::Relaxed);
+    respond(stream, 200, "OK", "image/png", &bytes).is_ok()
+}
+
+/// `GET /query?x=&y=&k=`
+fn serve_query(stream: &mut TcpStream, state: &ServerState, query: &str) -> bool {
+    let qx = query_param(query, "x").and_then(|v| v.parse::<f32>().ok());
+    let qy = query_param(query, "y").and_then(|v| v.parse::<f32>().ok());
+    let k = match query_param(query, "k") {
+        None => Some(10usize),
+        Some(v) => v.parse::<usize>().ok(),
+    };
+    let (qx, qy, k) = match (qx, qy, k) {
+        // non-finite coordinates are rejected too: Rust's float parser
+        // accepts "NaN"/"inf", but echoing them through json::num would
+        // emit a bare `NaN` token — a 200 with an unparsable body
+        (Some(a), Some(b), Some(c)) if a.is_finite() && b.is_finite() => (a, b, c.min(1000)),
+        _ => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+            let body = br#"{"error": "need finite numeric x=, y= and optional k="}"#;
+            return respond(stream, 400, "Bad Request", "application/json", body).is_ok();
+        }
+    };
+    let art = state.renderer.artifact();
+    let hits = state.renderer.quadtree().knn(qx, qy, k);
+    let results: Vec<Json> = hits
+        .iter()
+        .map(|&(id, d2)| {
+            let row = art.positions.row(id as usize);
+            let mut fields = vec![
+                ("id", num(id as f64)),
+                ("x", num(row[0] as f64)),
+                ("y", num(row[1] as f64)),
+                ("d2", num(d2 as f64)),
+            ];
+            if let Some(ls) = &art.labels {
+                fields.push(("label", num(ls[id as usize] as f64)));
+            }
+            obj(fields)
+        })
+        .collect();
+    let body = obj(vec![
+        ("x", num(qx as f64)),
+        ("y", num(qy as f64)),
+        ("k", num(k as f64)),
+        ("results", arr(results)),
+    ])
+    .to_string()
+    .into_bytes();
+    state.queries_served.fetch_add(1, Ordering::Relaxed);
+    respond(stream, 200, "OK", "application/json", &body).is_ok()
+}
+
+/// Parse `{z}/{x}/{y}.png`.
+fn parse_tile_path(rest: &str) -> Option<(u32, u32, u32)> {
+    let mut parts = rest.split('/');
+    let z = parts.next()?.parse::<u32>().ok()?;
+    let x = parts.next()?.parse::<u32>().ok()?;
+    let last = parts.next()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    let y = last.strip_suffix(".png")?.parse::<u32>().ok()?;
+    Some((z, x, y))
+}
+
+/// First value of `name` in an `a=1&b=2` query string (no %-decoding:
+/// every parameter this server takes is numeric).
+fn query_param<'a>(query: &'a str, name: &str) -> Option<&'a str> {
+    query.split('&').find_map(|pair| {
+        let (k, v) = pair.split_once('=')?;
+        (k == name).then_some(v)
+    })
+}
+
+/// Read until the header terminator (or 16 KiB, or EOF/timeout, or an
+/// overall deadline — a drip-feeding client that stays under the per-read
+/// timeout must still release the worker).
+fn read_request(stream: &mut TcpStream) -> Option<Vec<u8>> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    loop {
+        if Instant::now() >= deadline {
+            break;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.len() > 16 * 1024 {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    if buf.is_empty() {
+        None
+    } else {
+        Some(buf)
+    }
+}
+
+/// `GET /path HTTP/1.1` -> `("GET", "/path")`.
+fn parse_request_line(req: &[u8]) -> Option<(&str, &str)> {
+    let line_end = req.windows(2).position(|w| w == b"\r\n")?;
+    let line = std::str::from_utf8(&req[..line_end]).ok()?;
+    let mut it = line.split_whitespace();
+    let method = it.next()?;
+    let target = it.next()?;
+    Some((method, target))
+}
+
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    reason: &str,
+    ctype: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Minimal blocking HTTP GET over a fresh connection — the in-tree client
+/// the integration tests and the `serve_load` bench share.  Returns
+/// `(status, body)`.
+pub fn http_get(addr: &str, path: &str) -> Result<(u16, Vec<u8>)> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    let _ = stream.set_nodelay(true);
+    stream
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: nomad\r\nConnection: close\r\n\r\n").as_bytes())
+        .context("write request")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("read response")?;
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .context("no header terminator in response")?;
+    let head = std::str::from_utf8(&raw[..split]).context("response head utf8")?;
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .context("no status code")?
+        .parse()
+        .context("status code parse")?;
+    Ok((status, raw[split + 4..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::serve::artifact::Provenance;
+    use crate::serve::quadtree;
+    use crate::util::rng::Rng;
+
+    fn demo_artifact(n: usize) -> MapArtifact {
+        let mut rng = Rng::new(17);
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            data.push(rng.normal() * 4.0);
+            data.push(rng.normal() * 4.0);
+        }
+        MapArtifact::from_run(
+            Matrix::from_vec(n, 2, data),
+            Some((0..n as u32).map(|i| i % 6).collect()),
+            Provenance { dataset: "http-test".into(), ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    fn test_server(n: usize, cache_entries: usize) -> ServerHandle {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 4,
+            backlog: 32,
+            cache_entries,
+            tile: TileConfig { tile_px: 32, ..Default::default() },
+        };
+        start(demo_artifact(n), &cfg).expect("server starts")
+    }
+
+    const PNG_MAGIC: &[u8] = &[0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n'];
+
+    #[test]
+    fn serves_tiles_queries_and_stats() {
+        let h = test_server(400, 256);
+        let addr = h.addr.to_string();
+
+        let (st, body) = http_get(&addr, "/tiles/0/0/0.png").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(&body[..8], PNG_MAGIC);
+
+        let (st, body) = http_get(&addr, "/query?x=0&y=0&k=5").unwrap();
+        assert_eq!(st, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        let results = v.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 5);
+        // d2 ascending, and the ids match the quadtree oracle exactly
+        let art = demo_artifact(400);
+        let want = quadtree::knn_naive(&art.positions, 0.0, 0.0, 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.get("id").as_usize().unwrap() as u32, want[i].0);
+            assert!(r.get("label").as_f64().is_some());
+        }
+
+        let (st, body) = http_get(&addr, "/stats").unwrap();
+        assert_eq!(st, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(v.get("tiles_served").as_i64(), Some(1));
+        assert_eq!(v.get("queries_served").as_i64(), Some(1));
+
+        let (st, _) = http_get(&addr, "/nope").unwrap();
+        assert_eq!(st, 404);
+        let (st, _) = http_get(&addr, "/tiles/abc/0/0.png").unwrap();
+        assert_eq!(st, 404);
+        let (st, _) = http_get(&addr, "/tiles/0/9/9.png").unwrap();
+        assert_eq!(st, 404);
+        let (st, _) = http_get(&addr, "/query?x=abc&y=0").unwrap();
+        assert_eq!(st, 400);
+
+        h.stop();
+    }
+
+    #[test]
+    fn concurrent_clients_get_bitwise_identical_tiles() {
+        let h = test_server(800, 64);
+        let addr = h.addr.to_string();
+        let reference = http_get(&addr, "/tiles/1/0/1.png").unwrap().1;
+        assert_eq!(&reference[..8], PNG_MAGIC);
+
+        std::thread::scope(|sc| {
+            for _ in 0..6 {
+                let addr = addr.clone();
+                let reference = reference.clone();
+                sc.spawn(move || {
+                    for _ in 0..8 {
+                        let (st, body) = http_get(&addr, "/tiles/1/0/1.png").unwrap();
+                        assert_eq!(st, 200);
+                        assert_eq!(body, reference, "tile bytes must be identical");
+                        let (st, _) = http_get(&addr, "/query?x=1&y=-1&k=3").unwrap();
+                        assert_eq!(st, 200);
+                    }
+                });
+            }
+        });
+
+        // cache must have produced hits for the repeated tile
+        let v = h.state().stats_json();
+        assert!(v.get("cache").get("hits").as_i64().unwrap() > 0);
+        assert!(v.get("tiles_served").as_i64().unwrap() >= 49);
+        h.stop();
+    }
+
+    #[test]
+    fn cache_disabled_still_serves_identical_tiles() {
+        let h = test_server(300, 0);
+        let addr = h.addr.to_string();
+        let a = http_get(&addr, "/tiles/2/1/1.png").unwrap();
+        let b = http_get(&addr, "/tiles/2/1/1.png").unwrap();
+        assert_eq!(a.0, 200);
+        assert_eq!(a.1, b.1);
+        let v = h.state().stats_json();
+        assert_eq!(v.get("cache").get("hits").as_i64(), Some(0));
+        h.stop();
+    }
+
+    #[test]
+    fn parse_helpers() {
+        assert_eq!(parse_tile_path("3/1/2.png"), Some((3, 1, 2)));
+        assert_eq!(parse_tile_path("3/1/2"), None);
+        assert_eq!(parse_tile_path("3/1/2.png/x"), None);
+        assert_eq!(parse_tile_path("a/1/2.png"), None);
+        assert_eq!(query_param("x=1&y=2", "y"), Some("2"));
+        assert_eq!(query_param("x=1&y=2", "z"), None);
+        assert_eq!(parse_request_line(b"GET /a HTTP/1.1\r\n\r\n"), Some(("GET", "/a")));
+        assert_eq!(parse_request_line(b"garbage"), None);
+    }
+}

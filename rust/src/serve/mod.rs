@@ -1,0 +1,33 @@
+//! The map serving subsystem — the production read path from a finished
+//! run to concurrent viewers (DESIGN.md §10).
+//!
+//! The paper's headline artifact is the *map*, and maps are consumed
+//! interactively: viewport pans, zooms, and point lookups from many
+//! simultaneous clients.  This module turns a [`artifact::MapArtifact`]
+//! (positions + labels + bounds + provenance, persisted by `nomad embed`)
+//! into a served surface, entirely pure-std:
+//!
+//! * [`quadtree`] — static packed quadtree (Morton leaf layout) for
+//!   viewport range queries and embedding-space k-nearest lookups;
+//! * [`tiles`] — slippy-style `z/x/y` LOD tile pyramid with
+//!   deterministic, seed-addressed thinning (tiles are bitwise
+//!   reproducible);
+//! * [`cache`] — sharded LRU over encoded tiles with hit/miss/eviction
+//!   counters;
+//! * [`http`] — threaded HTTP/1.1 server (fixed worker pool, bounded
+//!   accept queue) answering tile, query, and stats requests.
+//!
+//! `benches/serve_load.rs` drives a zoom/pan mix over loopback and emits
+//! p50/p99 latency and tiles/sec to `BENCH_serve_load.json`.
+
+pub mod artifact;
+pub mod cache;
+pub mod http;
+pub mod quadtree;
+pub mod tiles;
+
+pub use artifact::{MapArtifact, Provenance};
+pub use cache::TileCache;
+pub use http::{ServeConfig, ServerHandle};
+pub use quadtree::Quadtree;
+pub use tiles::{TileConfig, TileRenderer};

@@ -1,0 +1,461 @@
+//! Static packed quadtree over a 2-D embedding (DESIGN.md §10).
+//!
+//! Built once in O(n log n) from a finished map's positions: points are
+//! quantized to a 16-bit grid, sorted by Morton (z-order) code with the
+//! point index as tie-breaker, and a flat node array is grown over the
+//! sorted order.  Each internal node stores only the index of its first
+//! child — the four children are contiguous, in quadrant order, so the
+//! structure is a packed implicit tree over one contiguous point layout.
+//!
+//! Two read operations back the serving layer:
+//! * [`Quadtree::range`] — all point ids inside an axis-aligned viewport
+//!   rectangle (inclusive bounds), ascending id order;
+//! * [`Quadtree::knn`] — the k nearest points to a query position under
+//!   the same lexicographic `(d², index)` total order as the distance
+//!   engine (DESIGN.md §8), so ties resolve identically everywhere.
+//!
+//! Non-finite points are excluded at build time; both operations match
+//! the brute-force oracles ([`range_naive`], [`knn_naive`]) exactly,
+//! ties included (`rust/tests/serve_quadtree.rs`).
+
+use crate::linalg::Matrix;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Max points in a leaf before subdivision (unless the depth cap hits).
+const LEAF_CAP: u32 = 64;
+/// 16 bits per axis -> at most 16 subdivision levels.
+const MAX_DEPTH: usize = 16;
+
+#[derive(Clone, Debug)]
+struct Node {
+    /// range into the Morton-sorted point arrays
+    start: u32,
+    end: u32,
+    /// tight bounding box of the points in the range
+    min_x: f32,
+    min_y: f32,
+    max_x: f32,
+    max_y: f32,
+    /// index of the first of four contiguous children; `u32::MAX` = leaf
+    first_child: u32,
+}
+
+const NO_CHILD: u32 = u32::MAX;
+
+/// A static packed quadtree over the finite rows of an `n x 2` matrix.
+#[derive(Clone, Debug)]
+pub struct Quadtree {
+    /// original row ids, Morton-sorted (ties by id)
+    order: Vec<u32>,
+    /// coordinates in sorted order (struct-of-arrays for leaf scans)
+    xs: Vec<f32>,
+    ys: Vec<f32>,
+    nodes: Vec<Node>,
+}
+
+impl Quadtree {
+    /// Build from an `n x 2` position matrix.  Rows with a non-finite
+    /// coordinate are excluded from the index.
+    pub fn build(positions: &Matrix) -> Quadtree {
+        assert_eq!(positions.cols, 2, "quadtree expects n x 2 positions");
+        let mut ids: Vec<u32> = Vec::with_capacity(positions.rows);
+        for i in 0..positions.rows {
+            let r = positions.row(i);
+            if r[0].is_finite() && r[1].is_finite() {
+                ids.push(i as u32);
+            }
+        }
+        if ids.is_empty() {
+            return Quadtree { order: vec![], xs: vec![], ys: vec![], nodes: vec![] };
+        }
+
+        // bounds for quantization
+        let mut min = [f32::INFINITY; 2];
+        let mut max = [f32::NEG_INFINITY; 2];
+        for &id in &ids {
+            let r = positions.row(id as usize);
+            for d in 0..2 {
+                min[d] = min[d].min(r[d]);
+                max[d] = max[d].max(r[d]);
+            }
+        }
+        let ext = [(max[0] - min[0]).max(1e-30), (max[1] - min[1]).max(1e-30)];
+
+        // Morton codes on a 16-bit grid; sort by (code, id)
+        let mut keyed: Vec<(u32, u32)> = ids
+            .iter()
+            .map(|&id| {
+                let r = positions.row(id as usize);
+                let qx = quantize(r[0], min[0], ext[0]);
+                let qy = quantize(r[1], min[1], ext[1]);
+                (spread_bits(qx) | (spread_bits(qy) << 1), id)
+            })
+            .collect();
+        keyed.sort_unstable();
+
+        let n = keyed.len();
+        let mut order = Vec::with_capacity(n);
+        let mut codes = Vec::with_capacity(n);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for &(code, id) in &keyed {
+            codes.push(code);
+            order.push(id);
+            let r = positions.row(id as usize);
+            xs.push(r[0]);
+            ys.push(r[1]);
+        }
+
+        let mut nodes = Vec::with_capacity(2 * (n as usize / LEAF_CAP as usize + 1));
+        nodes.push(make_node(0, n as u32, &xs, &ys));
+        subdivide(&mut nodes, &codes, &xs, &ys, 0, 0);
+        Quadtree { order, xs, ys, nodes }
+    }
+
+    /// Number of indexed (finite) points.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// All point ids with `min_x <= x <= max_x && min_y <= y <= max_y`,
+    /// ascending id order.  An empty/inverted/non-finite rectangle yields
+    /// an empty result.
+    pub fn range(&self, min_x: f32, min_y: f32, max_x: f32, max_y: f32) -> Vec<u32> {
+        let mut out = Vec::new();
+        if self.nodes.is_empty() || !(min_x <= max_x) || !(min_y <= max_y) {
+            return out;
+        }
+        let mut stack = vec![0u32];
+        while let Some(ni) = stack.pop() {
+            let node = &self.nodes[ni as usize];
+            if node.start == node.end
+                || node.max_x < min_x
+                || node.min_x > max_x
+                || node.max_y < min_y
+                || node.min_y > max_y
+            {
+                continue;
+            }
+            if min_x <= node.min_x
+                && node.max_x <= max_x
+                && min_y <= node.min_y
+                && node.max_y <= max_y
+            {
+                out.extend_from_slice(&self.order[node.start as usize..node.end as usize]);
+            } else if node.first_child == NO_CHILD {
+                for p in node.start as usize..node.end as usize {
+                    let (x, y) = (self.xs[p], self.ys[p]);
+                    if x >= min_x && x <= max_x && y >= min_y && y <= max_y {
+                        out.push(self.order[p]);
+                    }
+                }
+            } else {
+                for c in 0..4 {
+                    stack.push(node.first_child + c);
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// The `k` nearest indexed points to `(qx, qy)` in embedding space,
+    /// ascending under the lexicographic `(d², id)` order (ties included).
+    /// Returns fewer than `k` entries only when fewer points exist; a
+    /// non-finite query yields an empty result.
+    pub fn knn(&self, qx: f32, qy: f32, k: usize) -> Vec<(u32, f32)> {
+        if k == 0 || self.nodes.is_empty() || !qx.is_finite() || !qy.is_finite() {
+            return Vec::new();
+        }
+        // bounded worst-first candidate set: peek() is the current worst
+        let mut best: BinaryHeap<Cand> = BinaryHeap::with_capacity(k + 1);
+        // best-first node frontier by min distance to the node's bbox
+        let mut frontier: BinaryHeap<NodeEntry> = BinaryHeap::new();
+        frontier.push(NodeEntry { d2: self.node_d2(0, qx, qy), node: 0 });
+        while let Some(NodeEntry { d2, node }) = frontier.pop() {
+            if best.len() == k {
+                let worst = best.peek().unwrap();
+                if d2.total_cmp(&worst.d2) == Ordering::Greater {
+                    break; // best-first: everything later is farther still
+                }
+            }
+            let nd = &self.nodes[node as usize];
+            if nd.start == nd.end {
+                continue;
+            }
+            if nd.first_child == NO_CHILD {
+                for p in nd.start as usize..nd.end as usize {
+                    let c = Cand { d2: point_d2(self.xs[p], self.ys[p], qx, qy), id: self.order[p] };
+                    if best.len() < k {
+                        best.push(c);
+                    } else if c.cmp(best.peek().unwrap()) == Ordering::Less {
+                        best.pop();
+                        best.push(c);
+                    }
+                }
+            } else {
+                for c in 0..4 {
+                    let child = nd.first_child + c;
+                    if self.nodes[child as usize].start != self.nodes[child as usize].end {
+                        frontier.push(NodeEntry { d2: self.node_d2(child, qx, qy), node: child });
+                    }
+                }
+            }
+        }
+        let mut out: Vec<(u32, f32)> = best.into_iter().map(|c| (c.id, c.d2)).collect();
+        out.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Squared distance from the query to a node's bounding box (0 inside).
+    fn node_d2(&self, node: u32, qx: f32, qy: f32) -> f32 {
+        let n = &self.nodes[node as usize];
+        let dx = (n.min_x - qx).max(0.0).max(qx - n.max_x);
+        let dy = (n.min_y - qy).max(0.0).max(qy - n.max_y);
+        dx * dx + dy * dy
+    }
+}
+
+/// Squared point distance — the shared expression both the tree and the
+/// oracle evaluate, so results are bitwise comparable.
+#[inline]
+pub fn point_d2(x: f32, y: f32, qx: f32, qy: f32) -> f32 {
+    let dx = x - qx;
+    let dy = y - qy;
+    dx * dx + dy * dy
+}
+
+/// Brute-force range oracle: same inclusion rule, ascending id order.
+pub fn range_naive(positions: &Matrix, min_x: f32, min_y: f32, max_x: f32, max_y: f32) -> Vec<u32> {
+    let mut out = Vec::new();
+    for i in 0..positions.rows {
+        let r = positions.row(i);
+        if !r[0].is_finite() || !r[1].is_finite() {
+            continue;
+        }
+        if r[0] >= min_x && r[0] <= max_x && r[1] >= min_y && r[1] <= max_y {
+            out.push(i as u32);
+        }
+    }
+    out
+}
+
+/// Brute-force kNN oracle: full sort under `(d², id)`, first `k` kept.
+pub fn knn_naive(positions: &Matrix, qx: f32, qy: f32, k: usize) -> Vec<(u32, f32)> {
+    if k == 0 || !qx.is_finite() || !qy.is_finite() {
+        return Vec::new();
+    }
+    let mut all: Vec<(u32, f32)> = (0..positions.rows)
+        .filter(|&i| {
+            let r = positions.row(i);
+            r[0].is_finite() && r[1].is_finite()
+        })
+        .map(|i| {
+            let r = positions.row(i);
+            (i as u32, point_d2(r[0], r[1], qx, qy))
+        })
+        .collect();
+    all.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    all.truncate(k);
+    all
+}
+
+/// Quantize a coordinate to the 16-bit Morton grid.
+fn quantize(v: f32, min: f32, ext: f32) -> u32 {
+    (((v - min) / ext * 65535.0).clamp(0.0, 65535.0)) as u32
+}
+
+/// Spread the low 16 bits of `v` to the even bit positions of a u32.
+fn spread_bits(mut v: u32) -> u32 {
+    v &= 0xFFFF;
+    v = (v | (v << 8)) & 0x00FF_00FF;
+    v = (v | (v << 4)) & 0x0F0F_0F0F;
+    v = (v | (v << 2)) & 0x3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555;
+    v
+}
+
+fn make_node(start: u32, end: u32, xs: &[f32], ys: &[f32]) -> Node {
+    let mut n = Node {
+        start,
+        end,
+        min_x: f32::INFINITY,
+        min_y: f32::INFINITY,
+        max_x: f32::NEG_INFINITY,
+        max_y: f32::NEG_INFINITY,
+        first_child: NO_CHILD,
+    };
+    for p in start as usize..end as usize {
+        n.min_x = n.min_x.min(xs[p]);
+        n.max_x = n.max_x.max(xs[p]);
+        n.min_y = n.min_y.min(ys[p]);
+        n.max_y = n.max_y.max(ys[p]);
+    }
+    n
+}
+
+/// Split `node` (a range of Morton-sorted points) into its four quadrant
+/// children, pushed contiguously, then recurse.  The quadrant of a point
+/// at `depth` is the 2-bit field `(code >> (2*(15-depth))) & 3`, which is
+/// non-decreasing inside a sorted range sharing the coarser prefix — so
+/// each child is a contiguous subrange found by binary search.
+fn subdivide(
+    nodes: &mut Vec<Node>,
+    codes: &[u32],
+    xs: &[f32],
+    ys: &[f32],
+    node: usize,
+    depth: usize,
+) {
+    let (start, end) = (nodes[node].start, nodes[node].end);
+    if end - start <= LEAF_CAP || depth >= MAX_DEPTH {
+        return;
+    }
+    let shift = 2 * (MAX_DEPTH - 1 - depth) as u32;
+    let mut cut = [start, end, end, end, end];
+    for q in 0..3u32 {
+        let lo = cut[q as usize] as usize;
+        let off = codes[lo..end as usize].partition_point(|&c| (c >> shift) & 3 <= q);
+        cut[q as usize + 1] = lo as u32 + off as u32;
+    }
+    let first = nodes.len() as u32;
+    nodes[node].first_child = first;
+    for q in 0..4 {
+        nodes.push(make_node(cut[q], cut[q + 1], xs, ys));
+    }
+    for q in 0..4 {
+        subdivide(nodes, codes, xs, ys, (first + q) as usize, depth + 1);
+    }
+}
+
+/// A candidate point ordered lexicographically by `(d², id)`.
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    d2: f32,
+    id: u32,
+}
+
+impl PartialEq for Cand {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for Cand {}
+impl PartialOrd for Cand {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for Cand {
+    fn cmp(&self, o: &Self) -> Ordering {
+        self.d2.total_cmp(&o.d2).then(self.id.cmp(&o.id))
+    }
+}
+
+/// A frontier node ordered so the *nearest* node pops first.
+#[derive(Clone, Copy, Debug)]
+struct NodeEntry {
+    d2: f32,
+    node: u32,
+}
+
+impl PartialEq for NodeEntry {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == Ordering::Equal
+    }
+}
+impl Eq for NodeEntry {}
+impl PartialOrd for NodeEntry {
+    fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+        Some(self.cmp(o))
+    }
+}
+impl Ord for NodeEntry {
+    fn cmp(&self, o: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want min-d2 first
+        o.d2.total_cmp(&self.d2).then(o.node.cmp(&self.node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn int_points(rng: &mut Rng, n: usize, hi: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, 2);
+        for v in m.data.iter_mut() {
+            *v = rng.below(hi) as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn empty_and_degenerate_inputs() {
+        let t = Quadtree::build(&Matrix::zeros(0, 2));
+        assert!(t.is_empty());
+        assert!(t.range(-1.0, -1.0, 1.0, 1.0).is_empty());
+        assert!(t.knn(0.0, 0.0, 5).is_empty());
+
+        // all points identical: subdivision cannot separate them
+        let m = Matrix::from_vec(10, 2, vec![3.0; 20]);
+        let t = Quadtree::build(&m);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.range(3.0, 3.0, 3.0, 3.0).len(), 10);
+        let nn = t.knn(3.0, 3.0, 4);
+        assert_eq!(nn.len(), 4);
+        assert_eq!(nn.iter().map(|&(id, _)| id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn nan_rows_are_excluded() {
+        let m = Matrix::from_vec(
+            4,
+            2,
+            vec![0.0, 0.0, f32::NAN, 1.0, 2.0, f32::INFINITY, 5.0, 5.0],
+        );
+        let t = Quadtree::build(&m);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.range(-10.0, -10.0, 10.0, 10.0), vec![0, 3]);
+        assert_eq!(range_naive(&m, -10.0, -10.0, 10.0, 10.0), vec![0, 3]);
+        let nn = t.knn(0.0, 0.0, 4);
+        assert_eq!(nn.len(), 2);
+        assert_eq!(nn[0].0, 0);
+    }
+
+    #[test]
+    fn inverted_or_nan_rect_is_empty() {
+        let mut rng = Rng::new(5);
+        let m = int_points(&mut rng, 50, 8);
+        let t = Quadtree::build(&m);
+        assert!(t.range(5.0, 0.0, 1.0, 8.0).is_empty());
+        assert!(t.range(f32::NAN, 0.0, 1.0, 8.0).is_empty());
+    }
+
+    #[test]
+    fn knn_matches_oracle_small() {
+        let mut rng = Rng::new(1);
+        let m = int_points(&mut rng, 200, 6); // heavy ties on purpose
+        let t = Quadtree::build(&m);
+        for k in [1, 3, 17, 200, 300] {
+            let got = t.knn(2.0, 3.0, k);
+            let want = knn_naive(&m, 2.0, 3.0, k);
+            assert_eq!(got, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn range_matches_oracle_small() {
+        let mut rng = Rng::new(2);
+        let m = int_points(&mut rng, 300, 10);
+        let t = Quadtree::build(&m);
+        assert_eq!(t.range(2.0, 3.0, 6.0, 7.0), range_naive(&m, 2.0, 3.0, 6.0, 7.0));
+        // full-cover rectangle returns every point
+        assert_eq!(t.range(0.0, 0.0, 10.0, 10.0).len(), 300);
+    }
+}

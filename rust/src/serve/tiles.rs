@@ -1,0 +1,282 @@
+//! Slippy-style `z/x/y` LOD tile pyramid over a map artifact
+//! (DESIGN.md §10).
+//!
+//! The root tile (0/0/0) is the artifact's fitted square bounds; zoom
+//! level `z` splits it into `2^z x 2^z` tiles, `x` increasing along +x
+//! and `y` along +y of the embedding.  Each tile rasterizes **only** the
+//! points the quadtree returns for its extent, so deep-zoom tiles touch
+//! a vanishing fraction of the map.  At low zoom, where a tile would
+//! cover more than `max_points` points, a density-preserving uniform
+//! subsample is drawn from an RNG seeded purely by `(seed, z, x, y)` —
+//! the same tile is bitwise identical across requests, threads, and
+//! processes (the determinism contract the cache and the tests rely on).
+
+use crate::linalg::Matrix;
+use crate::serve::artifact::MapArtifact;
+use crate::serve::quadtree::Quadtree;
+use crate::util::rng::{splitmix64, Rng};
+use crate::viz::{density_map, png, Raster, View};
+use crate::util::error::Result;
+
+/// Tile rendering knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct TileConfig {
+    /// tile edge in pixels
+    pub tile_px: usize,
+    /// thinning threshold: tiles covering more points subsample to this
+    pub max_points: usize,
+    /// base seed mixed into every tile's thinning stream
+    pub seed: u64,
+    /// deepest zoom level served; clamped to [`MAX_ZOOM_CAP`] at renderer
+    /// construction so tile coordinates always fit [`tile_key`]'s packing
+    pub max_zoom: u32,
+}
+
+/// Hard ceiling on zoom.  Two constraints: coordinates must fit
+/// [`tile_key`]'s 29-bit fields, and — the binding one — tile centers
+/// `(x + 0.5) · side/2^z` must stay exactly distinguishable after the
+/// f32 cast in [`TileRenderer::tile_view`], which needs `z + 1` offset
+/// bits inside f32's 24-bit significand: z ≤ 22 keeps adjacent tiles'
+/// geometry distinct with a bit to spare (2^22 tiles/axis ≈ 1.7e13
+/// tiles total — far beyond any practical map).
+pub const MAX_ZOOM_CAP: u32 = 22;
+
+impl Default for TileConfig {
+    fn default() -> Self {
+        TileConfig { tile_px: 256, max_points: 50_000, seed: 0, max_zoom: 20 }
+    }
+}
+
+/// Renders map tiles from an artifact through its quadtree.
+pub struct TileRenderer {
+    art: MapArtifact,
+    tree: Quadtree,
+    /// square root extent: (min_x, min_y, side)
+    root: (f32, f32, f32),
+    cfg: TileConfig,
+}
+
+impl TileRenderer {
+    pub fn new(art: MapArtifact, cfg: TileConfig) -> TileRenderer {
+        let cfg = TileConfig { max_zoom: cfg.max_zoom.min(MAX_ZOOM_CAP), ..cfg };
+        let tree = Quadtree::build(&art.positions);
+        let b = &art.bounds;
+        let half = b.half_w.max(b.half_h).max(1e-6);
+        let root = (b.cx - half, b.cy - half, 2.0 * half);
+        TileRenderer { art, tree, root, cfg }
+    }
+
+    pub fn artifact(&self) -> &MapArtifact {
+        &self.art
+    }
+
+    pub fn quadtree(&self) -> &Quadtree {
+        &self.tree
+    }
+
+    pub fn config(&self) -> &TileConfig {
+        &self.cfg
+    }
+
+    /// The embedding-space viewport of tile `z/x/y`, or `None` when the
+    /// coordinates fall outside the pyramid.
+    pub fn tile_view(&self, z: u32, x: u32, y: u32) -> Option<View> {
+        if z > self.cfg.max_zoom {
+            return None;
+        }
+        let side_tiles = 1u64 << z; // z <= MAX_ZOOM_CAP, shift-safe
+        if (x as u64) >= side_tiles || (y as u64) >= side_tiles {
+            return None;
+        }
+        // center math in f64: `x as f32` alone would collapse adjacent
+        // tiles once x exceeds f32's 24-bit significand
+        let ts = self.root.2 as f64 / side_tiles as f64;
+        Some(View {
+            cx: (self.root.0 as f64 + (x as f64 + 0.5) * ts) as f32,
+            cy: (self.root.1 as f64 + (y as f64 + 0.5) * ts) as f32,
+            half_w: (ts / 2.0) as f32,
+            half_h: (ts / 2.0) as f32,
+        })
+    }
+
+    /// Rasterize tile `z/x/y`.  `None` for out-of-pyramid coordinates.
+    pub fn render(&self, z: u32, x: u32, y: u32) -> Option<Raster> {
+        let view = self.tile_view(z, x, y)?;
+        let ids = self.tree.range(
+            view.cx - view.half_w,
+            view.cy - view.half_h,
+            view.cx + view.half_w,
+            view.cy + view.half_h,
+        );
+        let ids = self.thin(&ids, z, x, y);
+        let sub = self.art.positions.gather(&ids);
+        let sub_labels: Option<Vec<u32>> = self
+            .art
+            .labels
+            .as_ref()
+            .map(|ls| ids.iter().map(|&i| ls[i]).collect());
+        Some(density_map(
+            &sub,
+            sub_labels.as_deref(),
+            &view,
+            self.cfg.tile_px,
+            self.cfg.tile_px,
+        ))
+    }
+
+    /// Rasterize and PNG-encode tile `z/x/y`.
+    pub fn render_png(&self, z: u32, x: u32, y: u32) -> Option<Result<Vec<u8>>> {
+        let r = self.render(z, x, y)?;
+        Some(png::encode_rgb(r.width, r.height, &r.pixels))
+    }
+
+    /// Deterministic density-preserving thinning: when the candidate set
+    /// exceeds `max_points`, draw a uniform subsample from an RNG seeded
+    /// by `(seed, z, x, y)` only.  Input ids are ascending (quadtree
+    /// contract); output ids are ascending too, as `usize` for `gather`.
+    fn thin(&self, ids: &[u32], z: u32, x: u32, y: u32) -> Vec<usize> {
+        if ids.len() <= self.cfg.max_points {
+            return ids.iter().map(|&i| i as usize).collect();
+        }
+        let mut rng = Rng::new(tile_seed(self.cfg.seed, z, x, y));
+        let mut pick = rng.sample_distinct(ids.len(), self.cfg.max_points);
+        pick.sort_unstable();
+        pick.into_iter().map(|p| ids[p] as usize).collect()
+    }
+}
+
+/// Mix `(base, z, x, y)` into one well-spread seed.
+pub fn tile_seed(base: u64, z: u32, x: u32, y: u32) -> u64 {
+    let mut s = base
+        ^ ((z as u64) << 58)
+        ^ ((x as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+        ^ ((y as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F));
+    splitmix64(&mut s)
+}
+
+/// Pack tile coordinates into one cache key.  Injective because served
+/// coordinates satisfy `z <= MAX_ZOOM_CAP` and `x, y < 2^z <= 2^29`
+/// (enforced by the renderer's zoom clamp + `tile_view` bounds check).
+pub fn tile_key(z: u32, x: u32, y: u32) -> u64 {
+    debug_assert!(z <= MAX_ZOOM_CAP && (x as u64) < (1 << 29) && (y as u64) < (1 << 29));
+    ((z as u64) << 58) | ((x as u64) << 29) | y as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::artifact::Provenance;
+    use crate::util::rng::Rng;
+
+    fn renderer(n: usize, max_points: usize) -> TileRenderer {
+        let mut rng = Rng::new(3);
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            data.push(rng.normal() * 3.0);
+            data.push(rng.normal() * 3.0);
+        }
+        let art = MapArtifact::from_run(
+            Matrix::from_vec(n, 2, data),
+            Some((0..n as u32).map(|i| i % 4).collect()),
+            Provenance::default(),
+        )
+        .unwrap();
+        TileRenderer::new(
+            art,
+            TileConfig { tile_px: 64, max_points, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn root_tile_covers_all_points() {
+        let r = renderer(500, 50_000);
+        let raster = r.render(0, 0, 0).unwrap();
+        assert_eq!((raster.width, raster.height), (64, 64));
+        let lit: u32 = raster.pixels.iter().map(|&b| b as u32).sum();
+        assert!(lit > 0, "root tile should not be black");
+    }
+
+    #[test]
+    fn out_of_pyramid_coordinates_rejected() {
+        let r = renderer(50, 50_000);
+        assert!(r.render(0, 1, 0).is_none());
+        assert!(r.render(2, 4, 0).is_none());
+        assert!(r.render(2, 0, 4).is_none());
+        assert!(r.render(99, 0, 0).is_none());
+        assert!(r.render(1, 1, 1).is_some());
+    }
+
+    #[test]
+    fn tiles_are_bitwise_reproducible() {
+        // force thinning so the seeded path is what we reproduce
+        let r = renderer(2_000, 200);
+        for (z, x, y) in [(0, 0, 0), (1, 1, 0), (2, 1, 2)] {
+            let a = r.render_png(z, x, y).unwrap().unwrap();
+            let b = r.render_png(z, x, y).unwrap().unwrap();
+            assert_eq!(a, b, "tile {z}/{x}/{y} not reproducible");
+            // and from a freshly built renderer (new quadtree, new RNG use)
+            let r2 = renderer(2_000, 200);
+            let c = r2.render_png(z, x, y).unwrap().unwrap();
+            assert_eq!(a, c, "tile {z}/{x}/{y} differs across renderer instances");
+        }
+    }
+
+    #[test]
+    fn children_partition_the_parent_extent() {
+        let r = renderer(100, 50_000);
+        let parent = r.tile_view(1, 0, 1).unwrap();
+        let c00 = r.tile_view(2, 0, 2).unwrap();
+        let c11 = r.tile_view(2, 1, 3).unwrap();
+        assert!((c00.half_w * 2.0 - parent.half_w).abs() < 1e-5);
+        // child centers sit inside the parent
+        assert!((c00.cx - parent.cx).abs() <= parent.half_w);
+        assert!((c11.cy - parent.cy).abs() <= parent.half_h);
+    }
+
+    #[test]
+    fn thinning_caps_points_and_preserves_determinism() {
+        let r = renderer(3_000, 100);
+        let view = r.tile_view(0, 0, 0).unwrap();
+        let ids = r.quadtree().range(
+            view.cx - view.half_w,
+            view.cy - view.half_h,
+            view.cx + view.half_w,
+            view.cy + view.half_h,
+        );
+        assert!(ids.len() > 100);
+        let a = r.thin(&ids, 0, 0, 0);
+        assert_eq!(a.len(), 100);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "thinned ids stay ascending");
+        assert_eq!(a, r.thin(&ids, 0, 0, 0), "same tile, same sample");
+        assert_ne!(a, r.thin(&ids, 1, 0, 0), "different tile, different sample");
+    }
+
+    #[test]
+    fn extreme_max_zoom_is_clamped_to_key_space() {
+        let art = MapArtifact::from_run(
+            Matrix::from_vec(1, 2, vec![0.0, 0.0]),
+            None,
+            Provenance::default(),
+        )
+        .unwrap();
+        let r = TileRenderer::new(art, TileConfig { max_zoom: u32::MAX, ..Default::default() });
+        assert_eq!(r.config().max_zoom, MAX_ZOOM_CAP);
+        // beyond the cap: rejected (would otherwise alias tile_key bits
+        // or overflow the shift); at the cap: served
+        assert!(r.tile_view(MAX_ZOOM_CAP + 1, 0, 0).is_none());
+        assert!(r.tile_view(64, 0, 0).is_none());
+        assert!(r.tile_view(MAX_ZOOM_CAP, 0, 0).is_some());
+    }
+
+    #[test]
+    fn tile_key_is_injective_on_the_pyramid() {
+        let mut seen = std::collections::HashSet::new();
+        for z in 0..5 {
+            for x in 0..(1 << z) {
+                for y in 0..(1 << z) {
+                    assert!(seen.insert(tile_key(z, x, y)), "collision at {z}/{x}/{y}");
+                }
+            }
+        }
+    }
+}

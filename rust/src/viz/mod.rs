@@ -28,15 +28,26 @@ pub struct View {
 }
 
 impl View {
-    /// Bounding view of all points with 5% margin.
+    /// Bounding view of the finite points with 5% margin.  Rows with a
+    /// non-finite coordinate are ignored; an empty (or all-non-finite)
+    /// matrix yields the unit view centered on the origin rather than an
+    /// infinite/NaN viewport — the tile pyramid derives its root extent
+    /// from this, so it must always be a usable rectangle.
     pub fn fit(y: &Matrix) -> View {
         let mut min = [f32::INFINITY; 2];
         let mut max = [f32::NEG_INFINITY; 2];
         for i in 0..y.rows {
-            for d in 0..2 {
-                min[d] = min[d].min(y.row(i)[d]);
-                max[d] = max[d].max(y.row(i)[d]);
+            let r = y.row(i);
+            if !r[0].is_finite() || !r[1].is_finite() {
+                continue;
             }
+            for d in 0..2 {
+                min[d] = min[d].min(r[d]);
+                max[d] = max[d].max(r[d]);
+            }
+        }
+        if min[0] > max[0] || min[1] > max[1] {
+            return View { cx: 0.0, cy: 0.0, half_w: 1.0, half_h: 1.0 };
         }
         let cx = (min[0] + max[0]) / 2.0;
         let cy = (min[1] + max[1]) / 2.0;
@@ -183,6 +194,29 @@ mod tests {
             .max()
             .unwrap();
         assert!(max_px > 300, "hot pixel {max_px}");
+    }
+
+    #[test]
+    fn fit_guards_empty_and_non_finite_input() {
+        // empty matrix: unit view, not an infinite viewport
+        let v = View::fit(&Matrix::zeros(0, 2));
+        assert_eq!((v.cx, v.cy, v.half_w, v.half_h), (0.0, 0.0, 1.0, 1.0));
+
+        // all-NaN matrix: same guard
+        let y = Matrix::from_vec(2, 2, vec![f32::NAN; 4]);
+        let v = View::fit(&y);
+        assert_eq!((v.cx, v.cy, v.half_w, v.half_h), (0.0, 0.0, 1.0, 1.0));
+
+        // mixed: non-finite rows are ignored, finite rows fit as usual
+        let y = Matrix::from_vec(
+            3,
+            2,
+            vec![f32::NAN, 0.0, -1.0, -1.0, 1.0, f32::INFINITY],
+        );
+        let v = View::fit(&y);
+        assert!(v.cx.is_finite() && v.cy.is_finite());
+        assert_eq!((v.cx, v.cy), (-1.0, -1.0));
+        assert!(v.half_w > 0.0 && v.half_w.is_finite());
     }
 
     #[test]

@@ -1,18 +1,22 @@
 //! Minimal PNG encoder (8-bit RGB, one IDAT), written entirely from
-//! scratch for the offline environment: the zlib stream uses *stored*
-//! (uncompressed) deflate blocks with an Adler-32 trailer, and chunk CRCs
-//! come from a bitwise CRC-32 — no `flate2`/`crc32fast`/image crates.
-//! Stored blocks trade file size for zero dependencies; every PNG reader
-//! accepts them (BTYPE=00 is mandatory in the deflate spec).
+//! scratch for the offline environment — no `flate2`/`crc32fast`/image
+//! crates.  The zlib stream uses **fixed-Huffman** deflate blocks with a
+//! greedy hash-chain LZ77 (RFC 1951 §3.2.6) so tiles served over the wire
+//! are actually compressed; the original *stored*-block path is kept as
+//! the test oracle (both paths must inflate to identical bytes), and the
+//! test-only inflater decodes both block types.  Chunk CRCs come from a
+//! bitwise CRC-32, the zlib trailer from Adler-32.
 
 use crate::ensure;
 use crate::util::error::Result;
 use std::path::Path;
 
-/// Write an RGB8 buffer (row-major, 3 bytes/pixel) as a PNG file.
-pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
+/// Encode an RGB8 buffer (row-major, 3 bytes/pixel) as PNG file bytes.
+/// Deterministic: equal input produces bitwise-equal output (the serving
+/// layer's tile-reproducibility contract depends on this).
+pub fn encode_rgb(width: usize, height: usize, pixels: &[u8]) -> Result<Vec<u8>> {
     ensure!(pixels.len() == width * height * 3, "pixel buffer size");
-    let mut out: Vec<u8> = Vec::with_capacity(pixels.len() + pixels.len() / 64 + 1024);
+    let mut out: Vec<u8> = Vec::with_capacity(pixels.len() / 4 + 1024);
     out.extend_from_slice(&[0x89, b'P', b'N', b'G', b'\r', b'\n', 0x1a, b'\n']);
 
     // IHDR
@@ -28,10 +32,16 @@ pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Res
         raw.push(0u8);
         raw.extend_from_slice(&pixels[row * width * 3..(row + 1) * width * 3]);
     }
-    chunk(&mut out, b"IDAT", &zlib_stored(&raw));
+    chunk(&mut out, b"IDAT", &zlib_fixed(&raw));
 
     chunk(&mut out, b"IEND", &[]);
-    std::fs::write(path, out)?;
+    Ok(out)
+}
+
+/// Write an RGB8 buffer (row-major, 3 bytes/pixel) as a PNG file.
+pub fn write_rgb(path: &Path, width: usize, height: usize, pixels: &[u8]) -> Result<()> {
+    let bytes = encode_rgb(width, height, pixels)?;
+    std::fs::write(path, bytes)?;
     Ok(())
 }
 
@@ -44,7 +54,195 @@ fn chunk(out: &mut Vec<u8>, tag: &[u8; 4], data: &[u8]) {
     out.extend_from_slice(&crc.to_be_bytes());
 }
 
+// ---- deflate tables (RFC 1951 §3.2.5), shared by the encoder and the
+// test-only inflater ------------------------------------------------------
+
+/// Length-symbol base lengths for symbols 257..=285.
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+/// Extra bits per length symbol.
+const LEN_EXTRA: [u8; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+/// Distance-symbol base distances for symbols 0..=29.
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+/// Extra bits per distance symbol.
+const DIST_EXTRA: [u8; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+// ---- fixed-Huffman deflate ----------------------------------------------
+
+/// LSB-first bit accumulator (deflate's bit order).  Huffman codes go in
+/// MSB-first via [`BitWriter::huff`]; everything else LSB-first.
+struct BitWriter {
+    out: Vec<u8>,
+    buf: u32,
+    count: u32,
+}
+
+impl BitWriter {
+    fn new(capacity: usize) -> BitWriter {
+        BitWriter { out: Vec::with_capacity(capacity), buf: 0, count: 0 }
+    }
+
+    fn bits(&mut self, value: u32, n: u32) {
+        debug_assert!(n <= 16 && value < (1 << n));
+        self.buf |= value << self.count;
+        self.count += n;
+        while self.count >= 8 {
+            self.out.push(self.buf as u8);
+            self.buf >>= 8;
+            self.count -= 8;
+        }
+    }
+
+    /// Emit a Huffman code: the code's MSB enters the stream first.
+    fn huff(&mut self, code: u32, len: u32) {
+        let mut rev = 0u32;
+        for i in 0..len {
+            rev |= ((code >> i) & 1) << (len - 1 - i);
+        }
+        self.bits(rev, len);
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.count > 0 {
+            self.out.push(self.buf as u8);
+        }
+        self.out
+    }
+}
+
+/// Fixed-Huffman code for a literal/length symbol (RFC 1951 §3.2.6).
+fn fixed_lit_code(sym: u32) -> (u32, u32) {
+    match sym {
+        0..=143 => (0x30 + sym, 8),
+        144..=255 => (0x190 + (sym - 144), 9),
+        256..=279 => (sym - 256, 7),
+        _ => (0xC0 + (sym - 280), 8),
+    }
+}
+
+const MIN_MATCH: usize = 3;
+const MAX_MATCH: usize = 258;
+const WINDOW: usize = 32 * 1024;
+const HASH_BITS: u32 = 15;
+const MAX_CHAIN: usize = 32;
+const NO_POS: u32 = u32::MAX;
+
+#[inline]
+fn hash3(b: &[u8]) -> usize {
+    let v = ((b[0] as u32) << 16) ^ ((b[1] as u32) << 8) ^ (b[2] as u32);
+    (v.wrapping_mul(2_654_435_761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Deflate `raw` as one final fixed-Huffman block with a greedy
+/// hash-chain LZ77 parse.  Pure function of the input — bitwise
+/// deterministic.
+fn deflate_fixed(raw: &[u8]) -> Vec<u8> {
+    let mut bw = BitWriter::new(raw.len() / 3 + 64);
+    bw.bits(1, 1); // BFINAL
+    bw.bits(0b01, 2); // BTYPE = fixed Huffman
+
+    let mut head = vec![NO_POS; 1 << HASH_BITS];
+    let mut prev = vec![NO_POS; raw.len()];
+    let insert = |head: &mut [u32], prev: &mut [u32], at: usize| {
+        if at + MIN_MATCH <= raw.len() {
+            let h = hash3(&raw[at..]);
+            prev[at] = head[h];
+            head[h] = at as u32;
+        }
+    };
+
+    let mut i = 0usize;
+    while i < raw.len() {
+        let (mlen, mdist) = best_match(raw, i, &head, &prev);
+        if mlen >= MIN_MATCH {
+            // length symbol: largest base <= mlen
+            let ls = LEN_BASE.iter().rposition(|&b| (b as usize) <= mlen).unwrap();
+            let (code, bits) = fixed_lit_code(257 + ls as u32);
+            bw.huff(code, bits);
+            bw.bits((mlen - LEN_BASE[ls] as usize) as u32, LEN_EXTRA[ls] as u32);
+            let ds = DIST_BASE.iter().rposition(|&b| (b as usize) <= mdist).unwrap();
+            bw.huff(ds as u32, 5);
+            bw.bits((mdist - DIST_BASE[ds] as usize) as u32, DIST_EXTRA[ds] as u32);
+            for p in i..i + mlen {
+                insert(&mut head, &mut prev, p);
+            }
+            i += mlen;
+        } else {
+            let (code, bits) = fixed_lit_code(raw[i] as u32);
+            bw.huff(code, bits);
+            insert(&mut head, &mut prev, i);
+            i += 1;
+        }
+    }
+    let (code, bits) = fixed_lit_code(256); // end of block
+    bw.huff(code, bits);
+    bw.finish()
+}
+
+/// Longest match for position `i` over the hash chain (greedy; ties keep
+/// the nearest, i.e. first-found, candidate).
+fn best_match(raw: &[u8], i: usize, head: &[u32], prev: &[u32]) -> (usize, usize) {
+    if i + MIN_MATCH > raw.len() {
+        return (0, 0);
+    }
+    let max_len = MAX_MATCH.min(raw.len() - i);
+    let mut best_len = 0usize;
+    let mut best_dist = 0usize;
+    let mut cand = head[hash3(&raw[i..])];
+    let mut depth = 0;
+    while cand != NO_POS && depth < MAX_CHAIN {
+        let c = cand as usize;
+        let dist = i - c;
+        if dist > WINDOW {
+            break; // chain only gets older
+        }
+        let mut l = 0usize;
+        while l < max_len && raw[c + l] == raw[i + l] {
+            l += 1;
+        }
+        if l > best_len {
+            best_len = l;
+            best_dist = dist;
+            if l == max_len {
+                break;
+            }
+        }
+        cand = prev[c];
+        depth += 1;
+    }
+    if best_len >= MIN_MATCH {
+        (best_len, best_dist)
+    } else {
+        (0, 0)
+    }
+}
+
+/// Wrap `raw` in a zlib stream of one fixed-Huffman deflate block
+/// (RFC 1950/1951).
+fn zlib_fixed(raw: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(raw.len() / 3 + 16);
+    // CMF/FLG: deflate, 32K window, FCHECK chosen so 0x7801 % 31 == 0.
+    out.push(0x78);
+    out.push(0x01);
+    out.extend_from_slice(&deflate_fixed(raw));
+    out.extend_from_slice(&adler32(raw).to_be_bytes());
+    out
+}
+
 /// Wrap `raw` in a zlib stream of stored deflate blocks (RFC 1950/1951).
+/// Kept as the oracle path: `inflate(zlib_stored(x)) ==
+/// inflate(zlib_fixed(x)) == x` is the encoder's correctness gauge.
+#[cfg_attr(not(test), allow(dead_code))]
 fn zlib_stored(raw: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(raw.len() + raw.len() / 65535 * 5 + 16);
     // CMF/FLG: deflate, 32K window, FCHECK chosen so 0x7801 % 31 == 0.
@@ -102,26 +300,123 @@ pub(crate) fn crc32(data: &[u8]) -> u32 {
 mod tests {
     use super::*;
 
-    /// Inflate a stream of stored deflate blocks (test-only decoder).
-    fn inflate_stored(zlib: &[u8]) -> Vec<u8> {
+    /// LSB-first bit reader; Huffman codes read MSB-first via `huff_bits`.
+    struct BitReader<'a> {
+        b: &'a [u8],
+        byte: usize,
+        bit: u32,
+    }
+
+    impl<'a> BitReader<'a> {
+        fn new(b: &'a [u8]) -> BitReader<'a> {
+            BitReader { b, byte: 0, bit: 0 }
+        }
+
+        fn bit(&mut self) -> u32 {
+            let v = (self.b[self.byte] >> self.bit) & 1;
+            self.bit += 1;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.byte += 1;
+            }
+            v as u32
+        }
+
+        fn bits(&mut self, n: u32) -> u32 {
+            let mut v = 0;
+            for i in 0..n {
+                v |= self.bit() << i;
+            }
+            v
+        }
+
+        fn huff_bits(&mut self, n: u32) -> u32 {
+            let mut v = 0;
+            for _ in 0..n {
+                v = (v << 1) | self.bit();
+            }
+            v
+        }
+
+        fn align(&mut self) {
+            if self.bit != 0 {
+                self.bit = 0;
+                self.byte += 1;
+            }
+        }
+    }
+
+    /// Decode one fixed-Huffman literal/length symbol (inverse of
+    /// `fixed_lit_code`).
+    fn decode_fixed_lit(r: &mut BitReader) -> u32 {
+        let mut code = r.huff_bits(7);
+        if code <= 0x17 {
+            return 256 + code; // 7-bit codes: 256..=279
+        }
+        code = (code << 1) | r.bit(); // 8 bits
+        if (0x30..=0xBF).contains(&code) {
+            return code - 0x30; // literals 0..=143
+        }
+        if (0xC0..=0xC7).contains(&code) {
+            return 280 + (code - 0xC0); // 280..=287
+        }
+        code = (code << 1) | r.bit(); // 9 bits
+        assert!((0x190..=0x1FF).contains(&code), "invalid fixed code {code:#x}");
+        144 + (code - 0x190) // literals 144..=255
+    }
+
+    /// Inflate a zlib stream of stored and/or fixed-Huffman blocks — the
+    /// test-only decoder that closes the loop on the from-scratch encoder.
+    fn inflate(zlib: &[u8]) -> Vec<u8> {
         assert!(zlib.len() >= 6, "zlib too short");
         assert_eq!(zlib[0], 0x78);
         assert_eq!((((zlib[0] as u32) << 8) | zlib[1] as u32) % 31, 0, "FCHECK");
-        let mut i = 2;
+        let mut r = BitReader::new(&zlib[2..zlib.len() - 4]);
         let mut out = Vec::new();
         loop {
-            let hdr = zlib[i];
-            assert_eq!(hdr & 0b110, 0, "stored blocks only");
-            let len = u16::from_le_bytes([zlib[i + 1], zlib[i + 2]]) as usize;
-            let nlen = u16::from_le_bytes([zlib[i + 3], zlib[i + 4]]);
-            assert_eq!(!(len as u16), nlen, "LEN/NLEN mismatch");
-            out.extend_from_slice(&zlib[i + 5..i + 5 + len]);
-            i += 5 + len;
-            if hdr & 1 == 1 {
+            let bfinal = r.bit();
+            let btype = r.bits(2);
+            match btype {
+                0 => {
+                    r.align();
+                    let len = (r.b[r.byte] as usize) | ((r.b[r.byte + 1] as usize) << 8);
+                    let nlen = (r.b[r.byte + 2] as u16) | ((r.b[r.byte + 3] as u16) << 8);
+                    assert_eq!(!(len as u16), nlen, "LEN/NLEN mismatch");
+                    r.byte += 4;
+                    out.extend_from_slice(&r.b[r.byte..r.byte + len]);
+                    r.byte += len;
+                }
+                1 => loop {
+                    let sym = decode_fixed_lit(&mut r);
+                    match sym {
+                        0..=255 => out.push(sym as u8),
+                        256 => break,
+                        257..=285 => {
+                            let ls = (sym - 257) as usize;
+                            let len =
+                                LEN_BASE[ls] as usize + r.bits(LEN_EXTRA[ls] as u32) as usize;
+                            let ds = r.huff_bits(5) as usize;
+                            assert!(ds < 30, "bad distance symbol {ds}");
+                            let dist =
+                                DIST_BASE[ds] as usize + r.bits(DIST_EXTRA[ds] as u32) as usize;
+                            assert!(dist <= out.len(), "distance before stream start");
+                            let from = out.len() - dist;
+                            for k in 0..len {
+                                let byte = out[from + k];
+                                out.push(byte); // overlap-safe byte copy
+                            }
+                        }
+                        _ => panic!("invalid symbol {sym}"),
+                    }
+                },
+                _ => panic!("unsupported BTYPE {btype}"),
+            }
+            if bfinal == 1 {
                 break;
             }
         }
-        let adler = u32::from_be_bytes([zlib[i], zlib[i + 1], zlib[i + 2], zlib[i + 3]]);
+        let at = zlib.len() - 4;
+        let adler = u32::from_be_bytes([zlib[at], zlib[at + 1], zlib[at + 2], zlib[at + 3]]);
         assert_eq!(adler, adler32(&out), "adler32 trailer");
         out
     }
@@ -141,11 +436,68 @@ mod tests {
     }
 
     #[test]
+    fn fixed_deflate_known_vector() {
+        // `zlib.compress(b"abc")` emits exactly this fixed-Huffman block
+        // body: header bits, three 8-bit literal codes, 7-bit end-of-block.
+        assert_eq!(deflate_fixed(b"abc"), vec![0x4B, 0x4C, 0x4A, 0x06, 0x00]);
+    }
+
+    #[test]
     fn zlib_stored_roundtrips() {
         for n in [0usize, 1, 100, 65535, 65536, 200_000] {
             let data: Vec<u8> = (0..n).map(|i| (i * 31 % 251) as u8).collect();
-            assert_eq!(inflate_stored(&zlib_stored(&data)), data, "n={n}");
+            assert_eq!(inflate(&zlib_stored(&data)), data, "n={n}");
         }
+    }
+
+    #[test]
+    fn zlib_fixed_roundtrips_and_matches_stored_oracle() {
+        let mut cases: Vec<Vec<u8>> = vec![
+            vec![],
+            b"a".to_vec(),
+            b"abc".to_vec(),
+            vec![0u8; 100_000],                          // long match chains
+            (0..66_000).map(|i| (i % 256) as u8).collect(), // period > window hash variety
+        ];
+        // pseudo-random incompressible-ish data
+        let mut x = 12345u64;
+        cases.push(
+            (0..50_000)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    (x >> 33) as u8
+                })
+                .collect(),
+        );
+        // repeated text: matches at many distances
+        cases.push(b"the quick brown fox ".repeat(4_000));
+        for (i, data) in cases.iter().enumerate() {
+            let fixed = zlib_fixed(data);
+            let stored = zlib_stored(data);
+            assert_eq!(inflate(&fixed), *data, "case {i}: fixed roundtrip");
+            assert_eq!(inflate(&fixed), inflate(&stored), "case {i}: oracle agreement");
+        }
+    }
+
+    #[test]
+    fn fixed_compresses_redundant_data() {
+        let data = vec![7u8; 64 * 1024];
+        let fixed = zlib_fixed(&data);
+        let stored = zlib_stored(&data);
+        assert!(
+            fixed.len() * 10 < stored.len(),
+            "fixed {} vs stored {}",
+            fixed.len(),
+            stored.len()
+        );
+    }
+
+    #[test]
+    fn encode_is_deterministic() {
+        let pixels: Vec<u8> = (0..32 * 32 * 3).map(|i| (i % 251) as u8).collect();
+        let a = encode_rgb(32, 32, &pixels).unwrap();
+        let b = encode_rgb(32, 32, &pixels).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]
@@ -181,7 +533,7 @@ mod tests {
         let bytes = std::fs::read(&p).unwrap();
         let idat_at = bytes.windows(4).position(|win| win == b"IDAT").unwrap();
         let len = u32::from_be_bytes(bytes[idat_at - 4..idat_at].try_into().unwrap()) as usize;
-        let raw = inflate_stored(&bytes[idat_at + 4..idat_at + 4 + len]);
+        let raw = inflate(&bytes[idat_at + 4..idat_at + 4 + len]);
         assert_eq!(raw.len(), h * (1 + w * 3));
         for row in 0..h {
             let at = row * (1 + w * 3);
@@ -195,5 +547,6 @@ mod tests {
         let dir = std::env::temp_dir().join("nomad_png_test");
         std::fs::create_dir_all(&dir).unwrap();
         assert!(write_rgb(&dir.join("bad.png"), 4, 4, &[0u8; 5]).is_err());
+        assert!(encode_rgb(4, 4, &[0u8; 5]).is_err());
     }
 }

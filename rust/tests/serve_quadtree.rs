@@ -1,0 +1,125 @@
+//! Property tests for the serving layer's quadtree (DESIGN.md §10): the
+//! tree's range and kNN answers must match the brute-force oracles
+//! **exactly** — ties included.
+//!
+//! Exactness strategy (same as `tests/distance_engine.rs`): most cases
+//! use small-integer coordinates, where every squared distance is an
+//! exact f32 integer and low-cardinality data is riddled with duplicate
+//! points and genuinely tied distances — so the `(d², id)` tie contract
+//! is exercised for real rather than by luck.  Point counts straddle the
+//! leaf capacity (64) so both leaf scans and deep subdivision run.
+
+use nomad::linalg::Matrix;
+use nomad::serve::quadtree::{knn_naive, range_naive, Quadtree};
+use nomad::util::rng::Rng;
+
+const CASES: usize = 25;
+
+fn int_points(rng: &mut Rng, n: usize, hi: usize) -> Matrix {
+    let mut m = Matrix::zeros(n, 2);
+    for v in m.data.iter_mut() {
+        *v = rng.below(hi) as f32;
+    }
+    m
+}
+
+fn gauss_points(rng: &mut Rng, n: usize) -> Matrix {
+    let mut m = Matrix::zeros(n, 2);
+    for v in m.data.iter_mut() {
+        *v = rng.normal() * 5.0;
+    }
+    m
+}
+
+#[test]
+fn prop_range_matches_naive_exactly() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(300); // straddles LEAF_CAP = 64
+        let hi = 2 + rng.below(12); // low cardinality -> many duplicates
+        let m = int_points(&mut rng, n, hi);
+        let t = Quadtree::build(&m);
+        for _ in 0..8 {
+            let a = rng.below(hi) as f32 - 1.0;
+            let b = rng.below(hi) as f32 - 1.0;
+            let w = rng.below(hi) as f32;
+            let h = rng.below(hi) as f32;
+            let got = t.range(a, b, a + w, b + h);
+            let want = range_naive(&m, a, b, a + w, b + h);
+            assert_eq!(got, want, "seed {seed} n {n} rect ({a},{b})+({w},{h})");
+        }
+        // degenerate rectangles: single line / single point
+        let got = t.range(1.0, 0.0, 1.0, hi as f32);
+        assert_eq!(got, range_naive(&m, 1.0, 0.0, 1.0, hi as f32), "seed {seed} line");
+    }
+}
+
+#[test]
+fn prop_knn_matches_naive_exactly_with_ties() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(100 + seed);
+        let n = 1 + rng.below(300);
+        let hi = 2 + rng.below(8); // dense ties
+        let m = int_points(&mut rng, n, hi);
+        let t = Quadtree::build(&m);
+        for _ in 0..6 {
+            let qx = rng.below(2 * hi) as f32 - hi as f32;
+            let qy = rng.below(2 * hi) as f32 - hi as f32;
+            let k = 1 + rng.below(n + 20); // sometimes k > n
+            let got = t.knn(qx, qy, k);
+            let want = knn_naive(&m, qx, qy, k);
+            assert_eq!(got, want, "seed {seed} n {n} q ({qx},{qy}) k {k}");
+        }
+    }
+}
+
+#[test]
+fn prop_knn_matches_on_continuous_data() {
+    // gaussian coordinates: no engineered ties, but identical f32
+    // arithmetic on both sides must still agree bitwise
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(200 + seed);
+        let n = 1 + rng.below(500);
+        let m = gauss_points(&mut rng, n);
+        let t = Quadtree::build(&m);
+        let (qx, qy) = (rng.normal() * 5.0, rng.normal() * 5.0);
+        let k = 1 + rng.below(40);
+        assert_eq!(t.knn(qx, qy, k), knn_naive(&m, qx, qy, k), "seed {seed} n {n} k {k}");
+    }
+}
+
+#[test]
+fn prop_range_matches_on_continuous_data() {
+    for seed in 0..CASES as u64 {
+        let mut rng = Rng::new(300 + seed);
+        let n = 1 + rng.below(500);
+        let m = gauss_points(&mut rng, n);
+        let t = Quadtree::build(&m);
+        for _ in 0..6 {
+            let (cx, cy) = (rng.normal() * 3.0, rng.normal() * 3.0);
+            let (w, h) = (rng.f32() * 8.0, rng.f32() * 8.0);
+            let got = t.range(cx - w, cy - h, cx + w, cy + h);
+            assert_eq!(got, range_naive(&m, cx - w, cy - h, cx + w, cy + h), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_nan_rows_never_surface() {
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(400 + seed);
+        let n = 20 + rng.below(200);
+        let mut m = int_points(&mut rng, n, 6);
+        // poison a third of the rows
+        for i in 0..n / 3 {
+            let r = rng.below(n);
+            m.row_mut(r)[rng.below(2)] = if rng.f32() < 0.5 { f32::NAN } else { f32::INFINITY };
+        }
+        let t = Quadtree::build(&m);
+        let all = t.range(f32::MIN, f32::MIN, f32::MAX, f32::MAX);
+        assert_eq!(all, range_naive(&m, f32::MIN, f32::MIN, f32::MAX, f32::MAX), "seed {seed}");
+        let nn = t.knn(0.0, 0.0, n);
+        assert_eq!(nn, knn_naive(&m, 0.0, 0.0, n), "seed {seed}");
+        assert!(nn.iter().all(|&(_, d2)| d2.is_finite()));
+    }
+}
