@@ -55,7 +55,7 @@ fn main() {
     let mut open_secs = Vec::new();
     for seed in 0..seeds {
         let r = run_method(&ds, &Method::OpenTsneLike, epochs * 2, 0, &index, &eval_cfg, seed);
-        open_np.push(r.checkpoints[0].np_at_10);
+        open_np.push(r.quality[0].np_at_10);
         open_secs.push(r.total_secs);
     }
     let open_np_s = Summary::of(&open_np);
@@ -83,7 +83,7 @@ fn main() {
             &eval_cfg,
             seed,
         );
-        nomad_np.push(r.checkpoints[0].np_at_10);
+        nomad_np.push(r.quality[0].np_at_10);
         nomad_secs.push(r.total_secs);
         nomad_modeled.push(r.modeled_secs);
     }
@@ -115,7 +115,7 @@ fn main() {
             ]);
         } else {
             let r = run_method(&ds, &method, epochs, 0, &index, &eval_cfg, 0);
-            let cp = &r.checkpoints[0];
+            let cp = &r.quality[0];
             table.row(vec![
                 name.into(),
                 "1 sim-GPU".into(),

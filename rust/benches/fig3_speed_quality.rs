@@ -45,7 +45,7 @@ fn main() {
         );
         for m in &methods {
             let run = run_method(ds, m, epochs, ckpt, &index, &eval_cfg, 11);
-            for cp in &run.checkpoints {
+            for cp in &run.quality {
                 table.row(vec![
                     run.method.clone().into(),
                     format!("{}", cp.epoch).into(),

@@ -49,7 +49,7 @@ fn main() {
         for seed in 0..reps {
             let e = if matches!(method, Method::OpenTsneLike) { epochs * 2 } else { epochs };
             let r = run_method(&ds, method, e, 0, &index, &eval_cfg, seed);
-            nps.push(r.checkpoints[0].np_at_10);
+            nps.push(r.quality[0].np_at_10);
             walls.push(r.total_secs);
             modeled.push(r.modeled_secs);
         }

@@ -1,0 +1,372 @@
+//! Checkpoint/resume run store (DESIGN.md §11).
+//!
+//! A long training run is made durable by a **run store**: a versioned
+//! on-disk directory holding a run-level manifest (`run.json` — the
+//! parameters needed to rebuild the run plus the list of live
+//! checkpoints) and one subdirectory per checkpoint with crc32-guarded
+//! `.npy` state files (positions, the all-gathered means table, the f64
+//! loss history) written atomically (tmp dir + rename) every
+//! `--checkpoint-every` epochs under a retention policy.
+//!
+//! # Why resume is bitwise identical
+//!
+//! Every stochastic stream in training is forked from the run seed by
+//! `(device, epoch, block)` — no RNG state survives across epochs — and
+//! the index build / PCA init replay deterministically from the same seed
+//! and dataset.  The leader's epoch `e+1` therefore depends only on
+//! `(positions, means table, loss history, e)` — exactly what a
+//! checkpoint stores, exactly (f32/f64 round-trip bitwise through
+//! `.npy`).  Resuming from a checkpoint at `epochs_done = e` and running
+//! to completion yields final positions and loss history bitwise equal
+//! to the uninterrupted run; `tests/checkpoint_resume.rs` proves this
+//! property for every checkpoint epoch at 1/2/8 worker threads.
+//!
+//! A params **fingerprint** (crc32 of a canonical parameter encoding) is
+//! recorded in the manifest and every checkpoint; resuming under any
+//! different parameterization is an error, not a silent divergence.
+
+pub mod store;
+
+pub use store::{RunStore, SaveOpts};
+
+use crate::ann::graph::WeightModel;
+use crate::ann::IndexParams;
+use crate::bail;
+use crate::distributed::MeanEntry;
+use crate::embed::{ApproxMode, NomadParams};
+use crate::linalg::Matrix;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::viz::png::crc32;
+
+/// Everything the coordinator needs to restart training at a given epoch.
+///
+/// `epochs_done = e` means epochs `0..e` have completed: `positions` and
+/// `means` are the state *after* epoch `e - 1`'s step and all-gather, and
+/// `loss_history` holds `e` entries.  Training resumes at epoch index `e`.
+#[derive(Clone, Debug)]
+pub struct CheckpointState {
+    pub epochs_done: usize,
+    /// n x 2 global positions (collected from the devices)
+    pub positions: Matrix,
+    /// the all-gathered means table, sorted by cluster id (= 0..R)
+    pub means: Vec<MeanEntry>,
+    /// per-epoch weight-normalized losses, one per completed epoch
+    pub loss_history: Vec<f64>,
+    /// params fingerprint of the run that wrote this state
+    pub fingerprint: u32,
+}
+
+/// How the run's dataset was obtained, recorded in `run.json` so
+/// `nomad resume` can rebuild it without the original command line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DatasetSpec {
+    /// `"synthetic"` (in-tree generator) or `"npy"` (file on disk)
+    pub kind: String,
+    /// generator name (`arxiv`/`pubmed`/...) or the `.npy` path
+    pub source: String,
+    /// point count (generator size; validated against an `.npy` reload)
+    pub n: usize,
+    /// generator seed (unused for `.npy`)
+    pub seed: u64,
+}
+
+fn weight_model_str(w: WeightModel) -> &'static str {
+    match w {
+        WeightModel::InverseRankPaper => "inverse-rank-paper",
+        WeightModel::InverseRankForward => "inverse-rank-forward",
+        WeightModel::Uniform => "uniform",
+    }
+}
+
+fn weight_model_parse(s: &str) -> Result<WeightModel> {
+    Ok(match s {
+        "inverse-rank-paper" => WeightModel::InverseRankPaper,
+        "inverse-rank-forward" => WeightModel::InverseRankForward,
+        "uniform" => WeightModel::Uniform,
+        other => bail!("unknown weight model '{other}'"),
+    })
+}
+
+fn approx_str(a: ApproxMode) -> &'static str {
+    match a {
+        ApproxMode::AllNonSelf => "all-non-self",
+        ApproxMode::None => "none",
+    }
+}
+
+fn approx_parse(s: &str) -> Result<ApproxMode> {
+    Ok(match s {
+        "all-non-self" => ApproxMode::AllNonSelf,
+        "none" => ApproxMode::None,
+        other => bail!("unknown approx mode '{other}'"),
+    })
+}
+
+/// crc32 of a canonical encoding of every parameter that shapes the
+/// numerics of a run.  Two runs with equal fingerprints over the same
+/// dataset replay bitwise identically; resuming across a mismatch is
+/// refused by [`crate::coordinator::NomadCoordinator::resume_from`].
+///
+/// Deliberately excluded: `n_devices` and thread counts (results are
+/// bitwise invariant to both — see `tests/determinism.rs` and
+/// `tests/gather_engine.rs`), backend kind (native and XLA must agree
+/// numerically by contract), and anything snapshot/IO related.
+pub fn params_fingerprint(n: usize, p: &NomadParams, idx: &IndexParams) -> u32 {
+    let canon = format!(
+        "nomad-fp-v1|n={n}|k={}|negs={}|m_noise={}|epochs={}|lr={:?}|wm={}|approx={}\
+         |exag={}|exag_epochs={}|pca={}|init_std={}|seed={}\
+         |idx.clusters={}|idx.k={}|idx.iters={}|idx.tol={}|idx.maxc={}",
+        p.k,
+        p.negs,
+        p.m_noise,
+        p.epochs,
+        p.lr_initial,
+        weight_model_str(p.weight_model),
+        approx_str(p.approx),
+        p.exaggeration,
+        p.exaggeration_epochs,
+        p.pca_init,
+        p.init_std,
+        p.seed,
+        idx.n_clusters,
+        idx.k,
+        idx.max_iters,
+        idx.tol_frac,
+        idx.max_cluster_size,
+    );
+    crc32(canon.as_bytes())
+}
+
+/// Serialize the full run description (params + index + device count +
+/// dataset spec) into the `"run"` field of `run.json`.
+pub fn run_info_json(
+    n: usize,
+    n_devices: usize,
+    p: &NomadParams,
+    idx: &IndexParams,
+    ds: &DatasetSpec,
+) -> Json {
+    json::obj(vec![
+        ("n", json::num(n as f64)),
+        ("n_devices", json::num(n_devices as f64)),
+        (
+            "params",
+            json::obj(vec![
+                ("k", json::num(p.k as f64)),
+                ("negs", json::num(p.negs as f64)),
+                ("m_noise", json::num(p.m_noise)),
+                ("epochs", json::num(p.epochs as f64)),
+                (
+                    "lr_initial",
+                    match p.lr_initial {
+                        Some(lr) => json::num(lr),
+                        None => Json::Null,
+                    },
+                ),
+                ("weight_model", json::s(weight_model_str(p.weight_model))),
+                ("approx", json::s(approx_str(p.approx))),
+                ("exaggeration", json::num(p.exaggeration as f64)),
+                ("exaggeration_epochs", json::num(p.exaggeration_epochs as f64)),
+                ("pca_init", Json::Bool(p.pca_init)),
+                ("init_std", json::num(p.init_std as f64)),
+                // seeds are the full u64 range; JSON numbers are f64 and
+                // would silently round past 2^53 — store as strings
+                ("seed", json::s(&p.seed.to_string())),
+            ]),
+        ),
+        (
+            "index",
+            json::obj(vec![
+                ("n_clusters", json::num(idx.n_clusters as f64)),
+                ("k", json::num(idx.k as f64)),
+                ("max_iters", json::num(idx.max_iters as f64)),
+                ("tol_frac", json::num(idx.tol_frac)),
+                ("max_cluster_size", json::num(idx.max_cluster_size as f64)),
+            ]),
+        ),
+        (
+            "dataset",
+            json::obj(vec![
+                ("kind", json::s(&ds.kind)),
+                ("source", json::s(&ds.source)),
+                ("n", json::num(ds.n as f64)),
+                ("seed", json::s(&ds.seed.to_string())),
+            ]),
+        ),
+    ])
+}
+
+/// Parse [`run_info_json`]'s output back into run configuration —
+/// the `nomad resume` subcommand's way of rebuilding a run from its
+/// store alone.  Missing or ill-typed keys are errors (never panics).
+pub fn parse_run_info(v: &Json) -> Result<(usize, usize, NomadParams, IndexParams, DatasetSpec)> {
+    let n = v.get("n").as_usize().context("run info: n")?;
+    let n_devices = v.get("n_devices").as_usize().context("run info: n_devices")?;
+
+    let p = v.get("params");
+    let params = NomadParams {
+        k: p.get("k").as_usize().context("run info: params.k")?,
+        negs: p.get("negs").as_usize().context("run info: params.negs")?,
+        m_noise: p.get("m_noise").as_f64().context("run info: params.m_noise")?,
+        epochs: p.get("epochs").as_usize().context("run info: params.epochs")?,
+        lr_initial: match p.get("lr_initial") {
+            Json::Null => None,
+            other => Some(other.as_f64().context("run info: params.lr_initial")?),
+        },
+        weight_model: weight_model_parse(
+            p.get("weight_model").as_str().context("run info: params.weight_model")?,
+        )?,
+        approx: approx_parse(p.get("approx").as_str().context("run info: params.approx")?)?,
+        exaggeration: p.get("exaggeration").as_f64().context("run info: params.exaggeration")?
+            as f32,
+        exaggeration_epochs: p
+            .get("exaggeration_epochs")
+            .as_usize()
+            .context("run info: params.exaggeration_epochs")?,
+        pca_init: p.get("pca_init").as_bool().context("run info: params.pca_init")?,
+        init_std: p.get("init_std").as_f64().context("run info: params.init_std")? as f32,
+        seed: p
+            .get("seed")
+            .as_str()
+            .context("run info: params.seed")?
+            .parse::<u64>()
+            .context("run info: params.seed u64")?,
+    };
+
+    let i = v.get("index");
+    let index = IndexParams {
+        n_clusters: i.get("n_clusters").as_usize().context("run info: index.n_clusters")?,
+        k: i.get("k").as_usize().context("run info: index.k")?,
+        max_iters: i.get("max_iters").as_usize().context("run info: index.max_iters")?,
+        tol_frac: i.get("tol_frac").as_f64().context("run info: index.tol_frac")?,
+        max_cluster_size: i
+            .get("max_cluster_size")
+            .as_usize()
+            .context("run info: index.max_cluster_size")?,
+    };
+
+    let d = v.get("dataset");
+    let dataset = DatasetSpec {
+        kind: d.get("kind").as_str().context("run info: dataset.kind")?.to_string(),
+        source: d.get("source").as_str().context("run info: dataset.source")?.to_string(),
+        n: d.get("n").as_usize().context("run info: dataset.n")?,
+        seed: d
+            .get("seed")
+            .as_str()
+            .context("run info: dataset.seed")?
+            .parse::<u64>()
+            .context("run info: dataset.seed u64")?,
+    };
+
+    Ok((n, n_devices, params, index, dataset))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_params() -> NomadParams {
+        NomadParams {
+            epochs: 12,
+            k: 7,
+            negs: 5,
+            lr_initial: Some(3.5),
+            seed: 99,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn run_info_roundtrips() {
+        let p = demo_params();
+        let idx = IndexParams { n_clusters: 6, k: 7, ..Default::default() };
+        let ds = DatasetSpec {
+            kind: "synthetic".into(),
+            source: "arxiv".into(),
+            n: 500,
+            seed: 0,
+        };
+        let doc = run_info_json(500, 3, &p, &idx, &ds);
+        // through a serialize/parse cycle, like run.json on disk
+        let v = Json::parse(&doc.pretty()).unwrap();
+        let (n, dev, p2, idx2, ds2) = parse_run_info(&v).unwrap();
+        assert_eq!((n, dev), (500, 3));
+        assert_eq!(ds2, ds);
+        assert_eq!(
+            params_fingerprint(n, &p2, &idx2),
+            params_fingerprint(500, &p, &idx),
+            "fingerprint must survive the round trip"
+        );
+        assert_eq!(p2.lr_initial, Some(3.5));
+        assert_eq!(p2.weight_model, p.weight_model);
+        assert_eq!(p2.approx, p.approx);
+    }
+
+    #[test]
+    fn full_range_u64_seeds_roundtrip_exactly() {
+        // seeds ride through JSON as strings: f64 numbers would round past
+        // 2^53 and make a legitimate store unresumable
+        for seed in [u64::MAX, (1u64 << 53) + 1, 9007199254740993] {
+            let p = NomadParams { seed, ..demo_params() };
+            let idx = IndexParams::default();
+            let ds = DatasetSpec {
+                kind: "synthetic".into(),
+                source: "arxiv".into(),
+                n: 10,
+                seed,
+            };
+            let v = Json::parse(&run_info_json(10, 1, &p, &idx, &ds).pretty()).unwrap();
+            let (_, _, p2, idx2, ds2) = parse_run_info(&v).unwrap();
+            assert_eq!(p2.seed, seed, "params seed must be exact");
+            assert_eq!(ds2.seed, seed, "dataset seed must be exact");
+            assert_eq!(params_fingerprint(10, &p2, &idx2), params_fingerprint(10, &p, &idx));
+        }
+    }
+
+    #[test]
+    fn missing_run_info_keys_are_errors() {
+        let p = demo_params();
+        let idx = IndexParams::default();
+        let ds = DatasetSpec { kind: "npy".into(), source: "x.npy".into(), n: 10, seed: 0 };
+        let doc = run_info_json(10, 1, &p, &idx, &ds);
+        // drop each top-level section in turn
+        for key in ["n", "n_devices", "params", "index", "dataset"] {
+            let mut obj = doc.as_obj().unwrap().clone();
+            obj.remove(key);
+            assert!(
+                parse_run_info(&Json::Obj(obj)).is_err(),
+                "missing '{key}' must be an error"
+            );
+        }
+        // and a params sub-key
+        let mut obj = doc.as_obj().unwrap().clone();
+        let mut params = obj.get("params").unwrap().as_obj().unwrap().clone();
+        params.remove("seed");
+        obj.insert("params".into(), Json::Obj(params));
+        assert!(parse_run_info(&Json::Obj(obj)).is_err());
+    }
+
+    #[test]
+    fn fingerprint_is_sensitive_to_every_numeric_knob() {
+        let base = demo_params();
+        let idx = IndexParams::default();
+        let fp = params_fingerprint(100, &base, &idx);
+        let mut cases: Vec<NomadParams> = Vec::new();
+        cases.push(NomadParams { k: base.k + 1, ..base.clone() });
+        cases.push(NomadParams { negs: base.negs + 1, ..base.clone() });
+        cases.push(NomadParams { epochs: base.epochs + 1, ..base.clone() });
+        cases.push(NomadParams { seed: base.seed + 1, ..base.clone() });
+        cases.push(NomadParams { lr_initial: None, ..base.clone() });
+        cases.push(NomadParams { approx: ApproxMode::None, ..base.clone() });
+        cases.push(NomadParams { pca_init: !base.pca_init, ..base.clone() });
+        for (i, c) in cases.iter().enumerate() {
+            assert_ne!(fp, params_fingerprint(100, c, &idx), "case {i} must change fp");
+        }
+        assert_ne!(fp, params_fingerprint(101, &base, &idx), "n must change fp");
+        let idx2 = IndexParams { n_clusters: idx.n_clusters + 1, ..idx.clone() };
+        assert_ne!(fp, params_fingerprint(100, &base, &idx2));
+        // and stability: same inputs, same fingerprint
+        assert_eq!(fp, params_fingerprint(100, &demo_params(), &IndexParams::default()));
+    }
+}

@@ -1,0 +1,567 @@
+//! On-disk run store: atomic, crc-guarded, versioned checkpoints
+//! (DESIGN.md §11).
+//!
+//! Layout of a run directory:
+//!
+//! ```text
+//! run_dir/
+//!   run.json            manifest: format/version, params fingerprint,
+//!                       full run description, live checkpoint list
+//!   ckpt-000004/        state after 4 completed epochs
+//!     ckpt.json         epoch counter, fingerprint, per-file crc32s
+//!     positions.npy     n x 2 f32 global positions
+//!     means.npy         R x 3 f32 (mean_x, mean_y, weight); ids are 0..R
+//!     loss.npy          [epochs_done] f64 loss history (bitwise exact)
+//!     artifact/         optional MapArtifact for `nomad serve --watch`
+//!   ckpt-000006/ ...
+//! ```
+//!
+//! **Atomicity**: every checkpoint is assembled in a hidden `.tmp-*`
+//! sibling and `rename`d into place (atomic on POSIX), then `run.json`
+//! is rewritten the same way — a reader (the serve watcher, a resuming
+//! coordinator) never observes a half-written checkpoint.  **Integrity**:
+//! `ckpt.json` records the crc32 of each state file; the loader verifies
+//! them before parsing, so truncation and bit-flips surface as `Err`,
+//! never as silently different training state.  **Retention**: after a
+//! successful write, only the newest `retain` checkpoints are kept
+//! (0 = keep everything).
+
+use super::CheckpointState;
+use crate::distributed::MeanEntry;
+use crate::ensure;
+use crate::linalg::Matrix;
+use crate::serve::artifact::{MapArtifact, Provenance};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::npy::{NpyF32, NpyF64};
+use crate::viz::png::crc32;
+use std::path::{Path, PathBuf};
+
+const RUN_FORMAT: &str = "nomad-run-store";
+const RUN_VERSION: i64 = 1;
+const CKPT_FORMAT: &str = "nomad-checkpoint";
+const CKPT_VERSION: i64 = 1;
+
+/// The state files inside a checkpoint directory, in crc-check order.
+const STATE_FILES: [&str; 3] = ["positions.npy", "means.npy", "loss.npy"];
+
+/// Per-save options (owned by the caller — CLI flags or test config).
+#[derive(Clone, Copy, Debug)]
+pub struct SaveOpts<'a> {
+    /// keep only the newest `retain` checkpoints; 0 keeps all
+    pub retain: usize,
+    /// also materialize a `MapArtifact` under `artifact/` so
+    /// `nomad serve --watch` can preview the run live
+    pub artifact: bool,
+    /// labels for the artifact (ignored unless `artifact`)
+    pub labels: Option<&'a [u32]>,
+    /// artifact provenance: dataset name and run seed
+    pub dataset: &'a str,
+    pub seed: u64,
+}
+
+impl Default for SaveOpts<'_> {
+    fn default() -> Self {
+        SaveOpts { retain: 0, artifact: false, labels: None, dataset: "", seed: 0 }
+    }
+}
+
+/// Handle on a run directory; create once per run, reopen to resume.
+pub struct RunStore {
+    dir: PathBuf,
+    fingerprint: u32,
+    run_info: Json,
+    /// live checkpoint epochs, ascending
+    checkpoints: Vec<usize>,
+}
+
+fn ckpt_dirname(epochs_done: usize) -> String {
+    format!("ckpt-{epochs_done:06}")
+}
+
+impl RunStore {
+    /// Initialize a fresh run directory.  Refuses to clobber an existing
+    /// store — reopen with [`RunStore::open`] to resume instead.
+    pub fn create(dir: &Path, fingerprint: u32, run_info: Json) -> Result<RunStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create run dir {}", dir.display()))?;
+        let manifest = dir.join("run.json");
+        if manifest.exists() {
+            crate::bail!(
+                "run store already exists at {} (resume it, or pick a fresh directory)",
+                dir.display()
+            );
+        }
+        let store = RunStore {
+            dir: dir.to_path_buf(),
+            fingerprint,
+            run_info,
+            checkpoints: Vec::new(),
+        };
+        store.write_manifest()?;
+        Ok(store)
+    }
+
+    /// Open an existing run directory written by [`RunStore::create`].
+    pub fn open(dir: &Path) -> Result<RunStore> {
+        let mpath = dir.join("run.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let v = Json::parse(&text).context("parse run.json")?;
+        ensure!(
+            v.get("format").as_str() == Some(RUN_FORMAT),
+            "not a run store manifest: {}",
+            mpath.display()
+        );
+        ensure!(
+            v.get("version").as_i64() == Some(RUN_VERSION),
+            "unsupported run store version {:?}",
+            v.get("version").as_i64()
+        );
+        let fingerprint = v
+            .get("fingerprint")
+            .as_i64()
+            .and_then(|f| u32::try_from(f).ok())
+            .context("run.json: fingerprint missing or out of range")?;
+        let mut checkpoints = v
+            .get("checkpoints")
+            .as_arr()
+            .context("run.json: checkpoints missing")?
+            .iter()
+            .map(|e| e.as_usize().context("run.json: checkpoint epoch"))
+            .collect::<Result<Vec<usize>>>()?;
+        checkpoints.sort_unstable();
+        checkpoints.dedup();
+        Ok(RunStore {
+            dir: dir.to_path_buf(),
+            fingerprint,
+            run_info: v.get("run").clone(),
+            checkpoints,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn fingerprint(&self) -> u32 {
+        self.fingerprint
+    }
+
+    /// The `"run"` section of `run.json` (see
+    /// [`super::run_info_json`]/[`super::parse_run_info`]).
+    pub fn run_info(&self) -> &Json {
+        &self.run_info
+    }
+
+    /// Live checkpoint epochs, ascending.
+    pub fn checkpoints(&self) -> &[usize] {
+        &self.checkpoints
+    }
+
+    /// Newest checkpoint epoch, if any.
+    pub fn latest(&self) -> Option<usize> {
+        self.checkpoints.last().copied()
+    }
+
+    /// Directory of the checkpoint at `epochs_done`.
+    pub fn ckpt_dir(&self, epochs_done: usize) -> PathBuf {
+        self.dir.join(ckpt_dirname(epochs_done))
+    }
+
+    /// The `MapArtifact` directory inside a checkpoint (present when the
+    /// run saves with `SaveOpts::artifact`).
+    pub fn artifact_dir(&self, epochs_done: usize) -> PathBuf {
+        self.ckpt_dir(epochs_done).join("artifact")
+    }
+
+    fn write_manifest(&self) -> Result<()> {
+        let doc = json::obj(vec![
+            ("format", json::s(RUN_FORMAT)),
+            ("version", json::num(RUN_VERSION as f64)),
+            ("fingerprint", json::num(self.fingerprint as f64)),
+            (
+                "latest",
+                match self.latest() {
+                    Some(e) => json::num(e as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "checkpoints",
+                json::arr(self.checkpoints.iter().map(|&e| json::num(e as f64)).collect()),
+            ),
+            ("run", self.run_info.clone()),
+        ]);
+        let tmp = self.dir.join("run.json.tmp");
+        std::fs::write(&tmp, doc.pretty())
+            .with_context(|| format!("write {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.dir.join("run.json"))
+            .with_context(|| format!("publish {}/run.json", self.dir.display()))?;
+        Ok(())
+    }
+
+    /// Persist a checkpoint atomically, update the manifest, apply
+    /// retention.  The means table must carry contiguous ids `0..R`
+    /// (the coordinator's sorted all-gather invariant) — they are stored
+    /// implicitly and reconstructed on load.
+    pub fn save(&mut self, st: &CheckpointState, opts: &SaveOpts) -> Result<()> {
+        ensure!(st.positions.cols == 2, "positions must be n x 2");
+        ensure!(
+            st.loss_history.len() == st.epochs_done,
+            "loss history has {} entries for {} completed epochs",
+            st.loss_history.len(),
+            st.epochs_done
+        );
+        ensure!(
+            st.fingerprint == self.fingerprint,
+            "checkpoint fingerprint {:08x} != run store fingerprint {:08x}",
+            st.fingerprint,
+            self.fingerprint
+        );
+
+        let name = ckpt_dirname(st.epochs_done);
+        let tmp = self.dir.join(format!(".tmp-{name}"));
+        let _ = std::fs::remove_dir_all(&tmp);
+        std::fs::create_dir_all(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+
+        NpyF32::new(vec![st.positions.rows, 2], st.positions.data.clone())
+            .save(&tmp.join("positions.npy"))?;
+        let mut mdata: Vec<f32> = Vec::with_capacity(st.means.len() * 3);
+        for (i, e) in st.means.iter().enumerate() {
+            ensure!(
+                e.cluster_id as usize == i,
+                "means table ids must be contiguous 0..R (found {} at slot {i})",
+                e.cluster_id
+            );
+            mdata.extend_from_slice(&[e.mean[0], e.mean[1], e.weight]);
+        }
+        NpyF32::new(vec![st.means.len(), 3], mdata).save(&tmp.join("means.npy"))?;
+        NpyF64::new(vec![st.loss_history.len()], st.loss_history.clone())
+            .save(&tmp.join("loss.npy"))?;
+
+        let mut crcs: Vec<(&str, Json)> = Vec::new();
+        for f in STATE_FILES {
+            let bytes = std::fs::read(tmp.join(f))?;
+            crcs.push((f, json::num(crc32(&bytes) as f64)));
+        }
+        let doc = json::obj(vec![
+            ("format", json::s(CKPT_FORMAT)),
+            ("version", json::num(CKPT_VERSION as f64)),
+            ("epochs_done", json::num(st.epochs_done as f64)),
+            ("fingerprint", json::num(st.fingerprint as f64)),
+            ("n", json::num(st.positions.rows as f64)),
+            ("n_clusters", json::num(st.means.len() as f64)),
+            ("crc", json::obj(crcs)),
+        ]);
+        std::fs::write(tmp.join("ckpt.json"), doc.pretty())
+            .with_context(|| format!("write {}/ckpt.json", tmp.display()))?;
+
+        if opts.artifact {
+            let art = MapArtifact::from_run(
+                st.positions.clone(),
+                opts.labels.map(|l| l.to_vec()),
+                Provenance {
+                    dataset: opts.dataset.to_string(),
+                    seed: opts.seed,
+                    epochs: st.epochs_done,
+                    final_loss: *st.loss_history.last().unwrap_or(&f64::NAN),
+                },
+            )?;
+            art.save(&tmp.join("artifact"))?;
+        }
+
+        // publish: rename into place (replacing a same-epoch leftover from
+        // a previous attempt), then the manifest, then prune
+        let final_dir = self.ckpt_dir(st.epochs_done);
+        if final_dir.exists() {
+            std::fs::remove_dir_all(&final_dir)
+                .with_context(|| format!("replace {}", final_dir.display()))?;
+        }
+        std::fs::rename(&tmp, &final_dir)
+            .with_context(|| format!("publish {}", final_dir.display()))?;
+        if !self.checkpoints.contains(&st.epochs_done) {
+            self.checkpoints.push(st.epochs_done);
+            self.checkpoints.sort_unstable();
+        }
+        let mut pruned: Vec<usize> = Vec::new();
+        if opts.retain > 0 && self.checkpoints.len() > opts.retain {
+            let cut = self.checkpoints.len() - opts.retain;
+            pruned = self.checkpoints.drain(..cut).collect();
+        }
+        self.write_manifest()?;
+        for e in pruned {
+            // best effort: a failed prune leaves an orphan dir, not a bad run
+            let _ = std::fs::remove_dir_all(self.ckpt_dir(e));
+        }
+        Ok(())
+    }
+
+    /// Load and verify the checkpoint at `epochs_done`.  Any corruption —
+    /// bad crc, truncated payload, missing manifest keys, shape drift —
+    /// is an `Err`, never a panic.
+    pub fn load(&self, epochs_done: usize) -> Result<CheckpointState> {
+        let dir = self.ckpt_dir(epochs_done);
+        let mpath = dir.join("ckpt.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read {}", mpath.display()))?;
+        let v = Json::parse(&text).context("parse ckpt.json")?;
+        ensure!(
+            v.get("format").as_str() == Some(CKPT_FORMAT),
+            "not a checkpoint manifest: {}",
+            mpath.display()
+        );
+        ensure!(
+            v.get("version").as_i64() == Some(CKPT_VERSION),
+            "unsupported checkpoint version {:?}",
+            v.get("version").as_i64()
+        );
+        let e = v.get("epochs_done").as_usize().context("ckpt.json: epochs_done")?;
+        ensure!(
+            e == epochs_done,
+            "checkpoint {} claims epochs_done {e}",
+            dir.display()
+        );
+        let fingerprint = v
+            .get("fingerprint")
+            .as_i64()
+            .and_then(|f| u32::try_from(f).ok())
+            .context("ckpt.json: fingerprint missing or out of range")?;
+        let n = v.get("n").as_usize().context("ckpt.json: n")?;
+        let r = v.get("n_clusters").as_usize().context("ckpt.json: n_clusters")?;
+
+        for f in STATE_FILES {
+            let want = v
+                .get("crc")
+                .get(f)
+                .as_i64()
+                .and_then(|c| u32::try_from(c).ok())
+                .with_context(|| format!("ckpt.json: crc for {f} missing"))?;
+            let bytes = std::fs::read(dir.join(f))
+                .with_context(|| format!("read {}/{f}", dir.display()))?;
+            let got = crc32(&bytes);
+            ensure!(
+                got == want,
+                "{f} crc mismatch ({got:08x} != {want:08x}) — corrupt checkpoint at {}",
+                dir.display()
+            );
+        }
+
+        let pos = NpyF32::load(&dir.join("positions.npy"))?;
+        ensure!(pos.shape == vec![n, 2], "positions shape {:?} != [{n}, 2]", pos.shape);
+        let mt = NpyF32::load(&dir.join("means.npy"))?;
+        ensure!(mt.shape == vec![r, 3], "means shape {:?} != [{r}, 3]", mt.shape);
+        let loss = NpyF64::load(&dir.join("loss.npy"))?;
+        ensure!(
+            loss.shape == vec![epochs_done],
+            "loss shape {:?} != [{epochs_done}]",
+            loss.shape
+        );
+
+        let means: Vec<MeanEntry> = mt
+            .data
+            .chunks_exact(3)
+            .enumerate()
+            .map(|(i, c)| MeanEntry { cluster_id: i as u32, mean: [c[0], c[1]], weight: c[2] })
+            .collect();
+        Ok(CheckpointState {
+            epochs_done,
+            positions: Matrix::from_vec(n, 2, pos.data),
+            means,
+            loss_history: loss.data,
+            fingerprint,
+        })
+    }
+
+    /// Load the newest checkpoint.
+    pub fn load_latest(&self) -> Result<CheckpointState> {
+        let e = self.latest().context("run store has no checkpoints yet")?;
+        self.load(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("nomad_run_store").join(name);
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn demo_state(epochs_done: usize, n: usize, r: usize) -> CheckpointState {
+        let mut pos = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            pos.push(i as f32 * 0.5);
+            pos.push(-(i as f32) * 0.25 + epochs_done as f32);
+        }
+        CheckpointState {
+            epochs_done,
+            positions: Matrix::from_vec(n, 2, pos),
+            means: (0..r)
+                .map(|c| MeanEntry {
+                    cluster_id: c as u32,
+                    mean: [c as f32, -(c as f32)],
+                    weight: 0.5 + c as f32,
+                })
+                .collect(),
+            loss_history: (0..epochs_done).map(|e| 1.0 / (e as f64 + 1.5)).collect(),
+            fingerprint: 0xDEAD_BEEF,
+        }
+    }
+
+    fn demo_store(name: &str) -> RunStore {
+        RunStore::create(&tmp(name), 0xDEAD_BEEF, json::obj(vec![("note", json::s("t"))]))
+            .unwrap()
+    }
+
+    #[test]
+    fn save_load_roundtrip_is_exact() {
+        let mut store = demo_store("roundtrip");
+        let st = demo_state(4, 30, 3);
+        store.save(&st, &SaveOpts::default()).unwrap();
+        assert_eq!(store.checkpoints(), &[4]);
+        let back = store.load(4).unwrap();
+        assert_eq!(back.epochs_done, 4);
+        assert_eq!(back.positions.data, st.positions.data, "positions bitwise");
+        assert_eq!(back.means, st.means, "means bitwise");
+        for (a, b) in back.loss_history.iter().zip(&st.loss_history) {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss history bitwise");
+        }
+        assert_eq!(back.fingerprint, 0xDEAD_BEEF);
+
+        // reopen from disk: manifest carries the list
+        let reopened = RunStore::open(store.dir()).unwrap();
+        assert_eq!(reopened.latest(), Some(4));
+        assert_eq!(reopened.fingerprint(), 0xDEAD_BEEF);
+        assert_eq!(reopened.run_info().get("note").as_str(), Some("t"));
+        assert!(reopened.load_latest().is_ok());
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let mut store = demo_store("retention");
+        let opts = SaveOpts { retain: 2, ..Default::default() };
+        for e in [2usize, 4, 6, 8] {
+            store.save(&demo_state(e, 10, 2), &opts).unwrap();
+        }
+        assert_eq!(store.checkpoints(), &[6, 8]);
+        assert!(!store.ckpt_dir(2).exists(), "pruned dir must be gone");
+        assert!(!store.ckpt_dir(4).exists());
+        assert!(store.ckpt_dir(6).exists());
+        // the manifest agrees after reopen
+        let re = RunStore::open(store.dir()).unwrap();
+        assert_eq!(re.checkpoints(), &[6, 8]);
+        assert!(re.load(2).is_err(), "pruned checkpoint must not load");
+    }
+
+    #[test]
+    fn artifact_materializes_for_the_watcher() {
+        let mut store = demo_store("artifact");
+        let labels: Vec<u32> = (0..20).map(|i| i % 4).collect();
+        let opts = SaveOpts {
+            artifact: true,
+            labels: Some(&labels),
+            dataset: "demo",
+            seed: 7,
+            ..Default::default()
+        };
+        store.save(&demo_state(2, 20, 2), &opts).unwrap();
+        let art = MapArtifact::load(&store.artifact_dir(2)).unwrap();
+        assert_eq!(art.positions.rows, 20);
+        assert_eq!(art.labels.as_deref(), Some(&labels[..]));
+        assert_eq!(art.provenance.dataset, "demo");
+        assert_eq!(art.provenance.epochs, 2);
+    }
+
+    #[test]
+    fn bit_flip_in_state_is_detected() {
+        let mut store = demo_store("bitflip");
+        store.save(&demo_state(3, 16, 2), &SaveOpts::default()).unwrap();
+        for f in STATE_FILES {
+            let p = store.ckpt_dir(3).join(f);
+            let orig = std::fs::read(&p).unwrap();
+            let mut bad = orig.clone();
+            let last = bad.len() - 1;
+            bad[last] ^= 0x01; // flip one payload bit
+            std::fs::write(&p, &bad).unwrap();
+            let e = store.load(3);
+            assert!(e.is_err(), "bit flip in {f} must fail the crc check");
+            assert!(
+                e.unwrap_err().to_string().contains("crc"),
+                "error should name the crc check"
+            );
+            std::fs::write(&p, &orig).unwrap(); // restore for the next file
+        }
+        assert!(store.load(3).is_ok(), "restored state loads again");
+    }
+
+    #[test]
+    fn truncation_and_missing_files_are_errors() {
+        let mut store = demo_store("truncate");
+        store.save(&demo_state(3, 16, 2), &SaveOpts::default()).unwrap();
+        let p = store.ckpt_dir(3).join("positions.npy");
+        let orig = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &orig[..orig.len() - 5]).unwrap();
+        assert!(store.load(3).is_err(), "truncated npy must fail");
+        std::fs::remove_file(&p).unwrap();
+        assert!(store.load(3).is_err(), "missing state file must fail");
+        assert!(store.load(99).is_err(), "unknown epoch must fail");
+    }
+
+    #[test]
+    fn missing_manifest_keys_are_errors_not_panics() {
+        let mut store = demo_store("badkeys");
+        store.save(&demo_state(2, 8, 2), &SaveOpts::default()).unwrap();
+        let mpath = store.ckpt_dir(2).join("ckpt.json");
+        let orig = std::fs::read_to_string(&mpath).unwrap();
+        for key in ["\"epochs_done\"", "\"fingerprint\"", "\"n\"", "\"crc\"", "\"n_clusters\""] {
+            let stripped = {
+                let v = Json::parse(&orig).unwrap();
+                let mut o = v.as_obj().unwrap().clone();
+                o.remove(key.trim_matches('"'));
+                Json::Obj(o).pretty()
+            };
+            std::fs::write(&mpath, &stripped).unwrap();
+            assert!(store.load(2).is_err(), "missing {key} must be an error");
+        }
+        // garbage JSON
+        std::fs::write(&mpath, "{not json").unwrap();
+        assert!(store.load(2).is_err());
+        std::fs::write(&mpath, &orig).unwrap();
+        assert!(store.load(2).is_ok());
+    }
+
+    #[test]
+    fn create_refuses_to_clobber_and_open_rejects_garbage() {
+        let dir = tmp("clobber");
+        let _ = RunStore::create(&dir, 1, Json::Null).unwrap();
+        assert!(RunStore::create(&dir, 1, Json::Null).is_err(), "no silent clobber");
+        // wrong format marker
+        let dir2 = tmp("badformat");
+        std::fs::create_dir_all(&dir2).unwrap();
+        std::fs::write(dir2.join("run.json"), r#"{"format": "other", "version": 1}"#).unwrap();
+        assert!(RunStore::open(&dir2).is_err());
+        // missing entirely
+        assert!(RunStore::open(&tmp("missing")).is_err());
+    }
+
+    #[test]
+    fn save_rejects_inconsistent_state() {
+        let mut store = demo_store("inconsistent");
+        // loss length != epochs_done
+        let mut st = demo_state(4, 8, 2);
+        st.loss_history.pop();
+        assert!(store.save(&st, &SaveOpts::default()).is_err());
+        // non-contiguous means ids
+        let mut st = demo_state(4, 8, 2);
+        st.means[1].cluster_id = 7;
+        assert!(store.save(&st, &SaveOpts::default()).is_err());
+        // fingerprint mismatch with the store
+        let mut st = demo_state(4, 8, 2);
+        st.fingerprint = 1;
+        assert!(store.save(&st, &SaveOpts::default()).is_err());
+    }
+}

@@ -15,6 +15,7 @@
 use crate::ann::backend::AnnBackend;
 use crate::ann::graph::{edge_weights, EdgeWeights};
 use crate::ann::{ClusterIndex, IndexParams};
+use crate::checkpoint::{params_fingerprint, CheckpointState, RunStore, SaveOpts};
 use crate::data::Dataset;
 use crate::distributed::comm_model::{self, CommStats, EpochWork, HwProfile};
 use crate::distributed::device::{spawn_device, DeviceCmd, DeviceReply};
@@ -22,7 +23,9 @@ use crate::distributed::sharder::shard_clusters;
 use crate::distributed::{MeanEntry, MEAN_ENTRY_BYTES};
 use crate::embed::sgd::{Exaggeration, LrSchedule};
 use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
+use crate::ensure;
 use crate::linalg::{pca::pca_init, Matrix};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -59,6 +62,38 @@ impl Default for RunConfig {
             snapshot_every: None,
             index: IndexParams::default(),
             verbose: false,
+        }
+    }
+}
+
+/// Checkpointing policy for a resumable run (DESIGN.md §11).  Owned by
+/// the launcher (CLI flags) and handed to
+/// [`NomadCoordinator::fit_resumable`]/[`resume_from`](NomadCoordinator::resume_from)
+/// together with the [`RunStore`] to write into.
+#[derive(Clone, Debug)]
+pub struct CheckpointCfg {
+    /// write a checkpoint every `every` epochs (the final epoch is always
+    /// checkpointed too); 0 disables periodic writes entirely
+    pub every: usize,
+    /// keep only the newest `retain` checkpoints; 0 keeps all
+    pub retain: usize,
+    /// materialize a `MapArtifact` per checkpoint so
+    /// `nomad serve --watch` can preview the run live
+    pub artifact: bool,
+    /// labels for the artifact preview
+    pub labels: Option<Vec<u32>>,
+    /// dataset name recorded in artifact provenance
+    pub dataset: String,
+}
+
+impl Default for CheckpointCfg {
+    fn default() -> Self {
+        CheckpointCfg {
+            every: 25,
+            retain: 3,
+            artifact: true,
+            labels: None,
+            dataset: String::new(),
         }
     }
 }
@@ -131,6 +166,55 @@ impl NomadCoordinator {
 
     /// Train from a prebuilt index/init (steps 4–6).
     pub fn fit_prepared(&self, n: usize, prep: &Prepared) -> NomadRun {
+        self.run_epochs(n, prep, None, None)
+            .expect("fit without a checkpoint sink has no fallible IO")
+    }
+
+    /// Train like [`fit_prepared`](NomadCoordinator::fit_prepared), writing
+    /// a checkpoint into `sink`'s [`RunStore`] every
+    /// [`CheckpointCfg::every`] epochs (and at the final epoch), so the run
+    /// can be killed and resumed at any time (DESIGN.md §11).
+    pub fn fit_resumable(
+        &self,
+        n: usize,
+        prep: &Prepared,
+        sink: Option<(&mut RunStore, &CheckpointCfg)>,
+    ) -> Result<NomadRun> {
+        self.run_epochs(n, prep, None, sink)
+    }
+
+    /// Resume training from a checkpoint.  Requires the *same* dataset,
+    /// params, and index config as the original run (enforced via the
+    /// params fingerprint) and a `prep` rebuilt from them; produces final
+    /// positions and loss history **bitwise identical** to the
+    /// uninterrupted run, because every RNG stream is forked from
+    /// `(device, epoch, block)` and the checkpoint restores exactly the
+    /// leader state epoch `epochs_done` starts from.
+    pub fn resume_from(
+        &self,
+        n: usize,
+        prep: &Prepared,
+        state: CheckpointState,
+        sink: Option<(&mut RunStore, &CheckpointCfg)>,
+    ) -> Result<NomadRun> {
+        let fp = params_fingerprint(n, &self.params, &self.run.index);
+        ensure!(
+            state.fingerprint == fp,
+            "checkpoint fingerprint {:08x} does not match this run's params ({fp:08x}) — \
+             resuming under different parameters would silently diverge",
+            state.fingerprint
+        );
+        self.run_epochs(n, prep, Some(state), sink)
+    }
+
+    /// The epoch engine behind `fit_prepared`/`fit_resumable`/`resume_from`.
+    fn run_epochs(
+        &self,
+        n: usize,
+        prep: &Prepared,
+        resume: Option<CheckpointState>,
+        mut sink: Option<(&mut RunStore, &CheckpointCfg)>,
+    ) -> Result<NomadRun> {
         let p = &self.params;
         let index = &prep.index;
         let n_clusters = index.n_clusters();
@@ -147,19 +231,54 @@ impl NomadCoordinator {
         // n_devices > n_clusters the empty shards must not hold a share
         let n_active = shards.iter().filter(|s| !s.is_empty()).count().max(1);
 
-        // initial means table
-        let mut means_table: Vec<MeanEntry> = blocks
-            .iter()
-            .map(|b| MeanEntry {
-                cluster_id: b.cluster_id,
-                mean: b.mean(),
-                weight: match p.approx {
-                    ApproxMode::AllNonSelf => b.mean_weight(n, p.m_noise),
-                    ApproxMode::None => 0.0,
-                },
-            })
-            .collect();
-        means_table.sort_by_key(|e| e.cluster_id);
+        // fingerprint + resume-state validation (DESIGN.md §11)
+        let fp = params_fingerprint(n, p, &self.run.index);
+        if let Some(st) = &resume {
+            ensure!(st.fingerprint == fp, "checkpoint fingerprint mismatch");
+            ensure!(
+                st.positions.rows == n && st.positions.cols == 2,
+                "checkpoint positions are {}x{}, run has {n} points",
+                st.positions.rows,
+                st.positions.cols
+            );
+            ensure!(
+                st.means.len() == n_clusters,
+                "checkpoint means table has {} clusters, index has {n_clusters}",
+                st.means.len()
+            );
+            ensure!(
+                st.epochs_done <= p.epochs,
+                "checkpoint is at epoch {} but the run only has {} epochs",
+                st.epochs_done,
+                p.epochs
+            );
+            ensure!(
+                st.loss_history.len() == st.epochs_done,
+                "checkpoint loss history is inconsistent"
+            );
+        }
+
+        // initial means table: restored verbatim on resume (it is the
+        // all-gathered table epoch `epochs_done` consumed in the original
+        // run), computed from the fresh blocks otherwise
+        let mut means_table: Vec<MeanEntry> = match &resume {
+            Some(st) => st.means.clone(),
+            None => {
+                let mut t: Vec<MeanEntry> = blocks
+                    .iter()
+                    .map(|b| MeanEntry {
+                        cluster_id: b.cluster_id,
+                        mean: b.mean(),
+                        weight: match p.approx {
+                            ApproxMode::AllNonSelf => b.mean_weight(n, p.m_noise),
+                            ApproxMode::None => 0.0,
+                        },
+                    })
+                    .collect();
+                t.sort_by_key(|e| e.cluster_id);
+                t
+            }
+        };
 
         // ---- spawn devices ----------------------------------------------
         let (reply_tx, reply_rx) = std::sync::mpsc::channel::<DeviceReply>();
@@ -190,22 +309,45 @@ impl NomadCoordinator {
             ));
         }
 
+        // ---- resume: ingest checkpoint positions into the devices -------
+        let start_epoch = match &resume {
+            Some(st) => {
+                let table = Arc::new(st.positions.data.clone());
+                for h in &handles {
+                    let _ = h.cmd.send(DeviceCmd::Ingest { positions: Arc::clone(&table) });
+                }
+                for _ in 0..handles.len() {
+                    match reply_rx.recv().expect("device alive") {
+                        DeviceReply::Ingested { .. } => {}
+                        _ => unreachable!("no other reply pending during ingest"),
+                    }
+                }
+                st.epochs_done
+            }
+            None => 0,
+        };
+
         // ---- epoch loop ---------------------------------------------------
         let lr_sched = LrSchedule::nomad_default(n, p.epochs, p.lr_initial);
         let exag = Exaggeration { factor: p.exaggeration, epochs: p.exaggeration_epochs };
-        let mut loss_history = Vec::with_capacity(p.epochs);
+        let mut loss_history = match resume {
+            Some(st) => st.loss_history,
+            None => Vec::with_capacity(p.epochs),
+        };
         let mut snapshots = Vec::new();
         let mut comm = CommStats::default();
         let mut modeled_total = 0.0f64;
         let mut device_step_secs = vec![0.0f64; handles.len()];
         let mut last_work = EpochWork::default();
+        let mut last_saved: Option<usize> = None;
         let t_train = Instant::now();
 
-        for epoch in 0..p.epochs {
+        for epoch in start_epoch..p.epochs {
             let lr = lr_sched.at(epoch) as f32;
             let table = Arc::new(means_table.clone());
             for h in &handles {
                 let _ = h.cmd.send(DeviceCmd::Epoch {
+                    epoch,
                     lr,
                     exaggeration: exag.factor_at(epoch),
                     means: Arc::clone(&table),
@@ -221,7 +363,9 @@ impl NomadCoordinator {
                     DeviceReply::EpochDone { device, means, loss_sum: ls, loss_weight: lw, step_secs, flops } => {
                         done.push((device, means, ls, lw, step_secs, flops));
                     }
-                    DeviceReply::Collected { .. } => unreachable!("no collect pending"),
+                    DeviceReply::Exported { .. } | DeviceReply::Ingested { .. } => {
+                        unreachable!("no export/ingest pending")
+                    }
                 }
             }
             done.sort_by_key(|d| d.0);
@@ -272,6 +416,39 @@ impl NomadCoordinator {
                     });
                 }
             }
+            // periodic checkpoint: collected positions + the freshly
+            // all-gathered means table + the loss history — exactly the
+            // leader state epoch `epoch + 1` starts from
+            if let Some((store, cfg)) = sink.as_mut() {
+                if cfg.every > 0 && (epoch + 1) % cfg.every == 0 {
+                    let positions = collect_positions(&handles, &reply_rx, n);
+                    let st = CheckpointState {
+                        epochs_done: epoch + 1,
+                        positions,
+                        means: means_table.clone(),
+                        loss_history: loss_history.clone(),
+                        fingerprint: fp,
+                    };
+                    store.save(
+                        &st,
+                        &SaveOpts {
+                            retain: cfg.retain,
+                            artifact: cfg.artifact,
+                            labels: cfg.labels.as_deref(),
+                            dataset: &cfg.dataset,
+                            seed: p.seed,
+                        },
+                    )?;
+                    last_saved = Some(epoch + 1);
+                    if self.run.verbose {
+                        eprintln!(
+                            "[nomad] checkpoint @ epoch {} -> {}",
+                            epoch + 1,
+                            store.dir().display()
+                        );
+                    }
+                }
+            }
             if self.run.verbose && (epoch % 25 == 0 || epoch + 1 == p.epochs) {
                 eprintln!(
                     "[nomad] epoch {epoch:4} lr {lr:9.2} loss {:.5}",
@@ -281,6 +458,31 @@ impl NomadCoordinator {
         }
 
         let positions = collect_positions(&handles, &reply_rx, n);
+
+        // final checkpoint, unless the loop already wrote (or the store
+        // already holds) one for the last epoch
+        if let Some((store, cfg)) = sink.as_mut() {
+            if last_saved != Some(p.epochs) && !store.checkpoints().contains(&p.epochs) {
+                let st = CheckpointState {
+                    epochs_done: p.epochs,
+                    positions: positions.clone(),
+                    means: means_table.clone(),
+                    loss_history: loss_history.clone(),
+                    fingerprint: fp,
+                };
+                store.save(
+                    &st,
+                    &SaveOpts {
+                        retain: cfg.retain,
+                        artifact: cfg.artifact,
+                        labels: cfg.labels.as_deref(),
+                        dataset: &cfg.dataset,
+                        seed: p.seed,
+                    },
+                )?;
+            }
+        }
+
         for h in &handles {
             let _ = h.cmd.send(DeviceCmd::Stop);
         }
@@ -289,11 +491,11 @@ impl NomadCoordinator {
         }
 
         let train_secs = t_train.elapsed().as_secs_f64();
-        comm.epochs = p.epochs;
+        comm.epochs = p.epochs - start_epoch;
         comm.modeled_secs_total = modeled_total;
         comm.measured_secs_total = train_secs;
 
-        NomadRun {
+        Ok(NomadRun {
             positions,
             loss_history,
             final_means: means_table,
@@ -305,7 +507,7 @@ impl NomadCoordinator {
             n_clusters,
             device_step_secs,
             last_epoch_work: last_work,
-        }
+        })
     }
 }
 
@@ -358,19 +560,19 @@ fn collect_positions(
     n: usize,
 ) -> Matrix {
     for h in handles {
-        let _ = h.cmd.send(DeviceCmd::Collect);
+        let _ = h.cmd.send(DeviceCmd::Export);
     }
     let mut m = Matrix::zeros(n, 2);
     for _ in 0..handles.len() {
         match reply_rx.recv().expect("device alive") {
-            DeviceReply::Collected { positions, .. } => {
+            DeviceReply::Exported { positions, .. } => {
                 for (g, p) in positions {
                     let g = g as usize;
                     m.data[g * 2] = p[0];
                     m.data[g * 2 + 1] = p[1];
                 }
             }
-            DeviceReply::EpochDone { .. } => unreachable!("no epoch pending"),
+            _ => unreachable!("no epoch/ingest pending"),
         }
     }
     m

@@ -35,14 +35,24 @@ use std::time::Instant;
 pub enum DeviceCmd {
     /// Run one epoch over all local blocks.
     Epoch {
+        /// absolute epoch index — the block RNG forks from
+        /// `(device, epoch, block)`, so a resumed run that starts at
+        /// epoch `e` draws exactly the streams the uninterrupted run
+        /// would have drawn (DESIGN.md §11)
+        epoch: usize,
         lr: f32,
         /// attractive-weight multiplier (early exaggeration; 1.0 = off)
         exaggeration: f32,
         /// full means table (every cluster in the run)
         means: Arc<Vec<MeanEntry>>,
     },
-    /// Send back (global_id, position) for every real point.
-    Collect,
+    /// Export (global_id, position) for every real point — snapshots,
+    /// checkpoints, and the final collection.  Read-only.
+    Export,
+    /// Overwrite local block positions from a full n x 2 table indexed by
+    /// global id (checkpoint resume).  Replies [`DeviceReply::Ingested`]
+    /// so the leader can barrier before the first epoch.
+    Ingest { positions: Arc<Vec<f32>> },
     /// Shut down.
     Stop,
 }
@@ -61,9 +71,12 @@ pub enum DeviceReply {
         /// force-kernel FLOPs executed this epoch (for the cost model)
         flops: f64,
     },
-    Collected {
+    Exported {
         device: usize,
         positions: Vec<(u32, [f32; 2])>,
+    },
+    Ingested {
+        device: usize,
     },
 }
 
@@ -106,26 +119,35 @@ pub fn spawn_device(
         .spawn(move || {
             let backend = make_backend();
             // root of this device's RNG tree; never advanced, only forked
-            // per (epoch, block) so stepping order cannot change results
+            // per (epoch, block) so neither stepping order nor the epoch a
+            // run (re)starts at can change results
             let rng_root = Rng::new(seed).fork(device as u64 + 1);
-            let mut epoch_no: u64 = 0;
 
             while let Ok(cmd) = cmd_rx.recv() {
                 match cmd {
                     DeviceCmd::Stop => break,
-                    DeviceCmd::Collect => {
+                    DeviceCmd::Export => {
                         let mut positions = Vec::new();
                         for b in &blocks {
                             for (l, &g) in b.global_ids.iter().enumerate() {
                                 positions.push((g, [b.pos[l * 2], b.pos[l * 2 + 1]]));
                             }
                         }
-                        let _ = reply.send(DeviceReply::Collected { device, positions });
+                        let _ = reply.send(DeviceReply::Exported { device, positions });
                     }
-                    DeviceCmd::Epoch { lr, exaggeration, means } => {
+                    DeviceCmd::Ingest { positions } => {
+                        for b in blocks.iter_mut() {
+                            for (l, &g) in b.global_ids.iter().enumerate() {
+                                let g = g as usize;
+                                b.pos[l * 2] = positions[g * 2];
+                                b.pos[l * 2 + 1] = positions[g * 2 + 1];
+                            }
+                        }
+                        let _ = reply.send(DeviceReply::Ingested { device });
+                    }
+                    DeviceCmd::Epoch { epoch, lr, exaggeration, means } => {
                         let budget = intra_device_budget(num_threads(), n_active_devices);
-                        let eroot = rng_root.fork(epoch_no);
-                        epoch_no += 1;
+                        let eroot = rng_root.fork(epoch as u64);
                         let t0 = Instant::now();
 
                         // (weighted loss, weight, flops) per block, in order

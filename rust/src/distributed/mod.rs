@@ -7,11 +7,17 @@
 //! drives epoch-synchronous training:
 //!
 //! ```text
-//! per epoch:   leader ──Epoch{lr, means}──▶ every device      (bcast)
+//! per epoch:   leader ──Epoch{epoch, lr, means}──▶ every device  (bcast)
 //!              device: one NOMAD step per local block
 //!              device ──EpochDone{means, loss}──▶ leader       (gather)
 //!              leader: rebuild the global means table          (all-gather)
 //! ```
+//!
+//! Devices also answer `Export` (positions out — snapshots, checkpoints,
+//! final collection) and `Ingest` (positions in — checkpoint resume); the
+//! epoch index travels in the broadcast so block RNG streams fork from
+//! `(device, epoch, block)` regardless of which epoch a run starts at
+//! (DESIGN.md §11).
 //!
 //! Only the R x 3 floats of cluster means+weights cross device boundaries —
 //! exactly the communication pattern that lets NOMAD scale; [`comm_model`]

@@ -1,7 +1,9 @@
 //! Experiment harness: one entry point that runs any *method* (NOMAD
-//! variants or baselines) on a dataset with timed quality checkpoints.
-//! Shared by the examples, the paper-table benches, and the CLI so every
-//! number in EXPERIMENTS.md comes from the same code path.
+//! variants or baselines) on a dataset with timed quality samples
+//! ([`QualityPoint`]s — not to be confused with the run store's restart
+//! checkpoints, `crate::checkpoint`).  Shared by the examples, the
+//! paper-table benches, and the CLI so every number in EXPERIMENTS.md
+//! comes from the same code path.
 
 use crate::ann::backend::NativeBackend;
 use crate::ann::graph::WeightModel;
@@ -46,9 +48,12 @@ impl Method {
     }
 }
 
-/// One quality checkpoint along a run.
+/// One **quality snapshot** along a run (NP@k / RTA at a wall-clock
+/// point).  Named `QualityPoint` to keep it distinct from the restartable
+/// training checkpoints of the run store (`crate::checkpoint`,
+/// DESIGN.md §11) — this is an evaluation sample, not a restart point.
 #[derive(Clone, Debug)]
-pub struct Checkpoint {
+pub struct QualityPoint {
     pub epoch: usize,
     pub wall_secs: f64,
     /// modeled GPU-node seconds (NOMAD only; copies wall time otherwise)
@@ -61,7 +66,7 @@ pub struct Checkpoint {
 pub struct MethodRun {
     pub method: String,
     pub positions: Matrix,
-    pub checkpoints: Vec<Checkpoint>,
+    pub quality: Vec<QualityPoint>,
     pub total_secs: f64,
     pub modeled_secs: f64,
     pub index_secs: f64,
@@ -90,13 +95,13 @@ pub fn evaluate(ds: &Dataset, y: &Matrix, cfg: &EvalCfg) -> (f64, f64) {
     (np, rta)
 }
 
-/// Run a method for `epochs` with quality checkpoints every
-/// `checkpoint_every` epochs (0 = final only).
+/// Run a method for `epochs`, sampling a [`QualityPoint`] every
+/// `quality_every` epochs (0 = final only).
 pub fn run_method(
     ds: &Dataset,
     method: &Method,
     epochs: usize,
-    checkpoint_every: usize,
+    quality_every: usize,
     index: &IndexParams,
     eval_cfg: &EvalCfg,
     seed: u64,
@@ -108,7 +113,7 @@ pub fn run_method(
             *backend,
             ApproxMode::AllNonSelf,
             epochs,
-            checkpoint_every,
+            quality_every,
             index,
             eval_cfg,
             seed,
@@ -119,14 +124,14 @@ pub fn run_method(
             BackendKind::Native,
             ApproxMode::None,
             epochs,
-            checkpoint_every,
+            quality_every,
             index,
             eval_cfg,
             seed,
         ),
-        Method::TsneCudaLike => run_bh(ds, false, epochs, checkpoint_every, index, eval_cfg, seed),
-        Method::OpenTsneLike => run_bh(ds, true, epochs, checkpoint_every, index, eval_cfg, seed),
-        Method::UmapLike => run_umap(ds, epochs, checkpoint_every, index, eval_cfg, seed),
+        Method::TsneCudaLike => run_bh(ds, false, epochs, quality_every, index, eval_cfg, seed),
+        Method::OpenTsneLike => run_bh(ds, true, epochs, quality_every, index, eval_cfg, seed),
+        Method::UmapLike => run_umap(ds, epochs, quality_every, index, eval_cfg, seed),
     }
 }
 
@@ -137,7 +142,7 @@ fn run_nomad(
     backend: BackendKind,
     approx: ApproxMode,
     epochs: usize,
-    checkpoint_every: usize,
+    quality_every: usize,
     index: &IndexParams,
     eval_cfg: &EvalCfg,
     seed: u64,
@@ -153,7 +158,7 @@ fn run_nomad(
     let run_cfg = RunConfig {
         n_devices: devices,
         backend,
-        snapshot_every: if checkpoint_every > 0 { Some(checkpoint_every) } else { None },
+        snapshot_every: if quality_every > 0 { Some(quality_every) } else { None },
         index: index.clone(),
         ..Default::default()
     };
@@ -161,10 +166,10 @@ fn run_nomad(
     let coord = NomadCoordinator::new(params, run_cfg);
     let run = coord.fit(ds, &NativeBackend::default());
 
-    let mut checkpoints = Vec::new();
+    let mut quality = Vec::new();
     for s in &run.snapshots {
         let (np, rta) = evaluate(ds, &s.positions, eval_cfg);
-        checkpoints.push(Checkpoint {
+        quality.push(QualityPoint {
             epoch: s.epoch,
             wall_secs: s.wall_secs,
             modeled_secs: s.modeled_secs,
@@ -173,7 +178,7 @@ fn run_nomad(
         });
     }
     let (np, rta) = evaluate(ds, &run.positions, eval_cfg);
-    checkpoints.push(Checkpoint {
+    quality.push(QualityPoint {
         epoch: epochs,
         wall_secs: run.train_secs,
         modeled_secs: run.modeled_train_secs,
@@ -183,7 +188,7 @@ fn run_nomad(
     MethodRun {
         method: if approx == ApproxMode::None { "InfoNC-t-SNE".into() } else { method_name },
         positions: run.positions,
-        checkpoints,
+        quality,
         total_secs: run.train_secs,
         modeled_secs: run.modeled_train_secs,
         index_secs: run.index_secs,
@@ -205,7 +210,7 @@ fn run_bh(
     ds: &Dataset,
     global_structure: bool,
     epochs: usize,
-    checkpoint_every: usize,
+    quality_every: usize,
     index: &IndexParams,
     eval_cfg: &EvalCfg,
     seed: u64,
@@ -226,9 +231,9 @@ fn run_bh(
     let sp = bh_tsne::calibrate_affinities(&idx.nbr_idx, &idx.nbr_d2, ds.n(), index.k, perplexity);
 
     let mut pos = init;
-    let mut checkpoints = Vec::new();
+    let mut quality = Vec::new();
     let t0 = Instant::now();
-    let step = if checkpoint_every > 0 { checkpoint_every } else { epochs };
+    let step = if quality_every > 0 { quality_every } else { epochs };
     let mut done = 0;
     while done < epochs {
         let chunk = step.min(epochs - done);
@@ -248,7 +253,7 @@ fn run_bh(
         done += chunk;
         let wall = t0.elapsed().as_secs_f64();
         let (np, rta) = evaluate(ds, &pos, eval_cfg);
-        checkpoints.push(Checkpoint {
+        quality.push(QualityPoint {
             epoch: done,
             wall_secs: wall,
             modeled_secs: wall,
@@ -260,7 +265,7 @@ fn run_bh(
     MethodRun {
         method: if global_structure { "OpenTSNE-like".into() } else { "tSNE-CUDA-like".into() },
         positions: pos,
-        checkpoints,
+        quality,
         total_secs: total,
         modeled_secs: total,
         index_secs,
@@ -270,7 +275,7 @@ fn run_bh(
 fn run_umap(
     ds: &Dataset,
     epochs: usize,
-    checkpoint_every: usize,
+    quality_every: usize,
     index: &IndexParams,
     eval_cfg: &EvalCfg,
     seed: u64,
@@ -281,9 +286,9 @@ fn run_umap(
     for v in pos.data.iter_mut() {
         *v = rng.normal() * 10.0;
     }
-    let mut checkpoints = Vec::new();
+    let mut quality = Vec::new();
     let t0 = Instant::now();
-    let step = if checkpoint_every > 0 { checkpoint_every } else { epochs };
+    let step = if quality_every > 0 { quality_every } else { epochs };
     let mut done = 0;
     while done < epochs {
         let chunk = step.min(epochs - done);
@@ -292,7 +297,7 @@ fn run_umap(
         done += chunk;
         let wall = t0.elapsed().as_secs_f64();
         let (np, rta) = evaluate(ds, &pos, eval_cfg);
-        checkpoints.push(Checkpoint {
+        quality.push(QualityPoint {
             epoch: done,
             wall_secs: wall,
             modeled_secs: wall,
@@ -304,7 +309,7 @@ fn run_umap(
     MethodRun {
         method: "RapidsUMAP-like".into(),
         positions: pos,
-        checkpoints,
+        quality,
         total_secs: total,
         modeled_secs: total,
         index_secs,
@@ -330,8 +335,8 @@ mod tests {
             Method::UmapLike,
         ] {
             let run = run_method(&ds, &method, 30, 0, &index, &eval_cfg, 1);
-            assert_eq!(run.checkpoints.len(), 1, "{}", run.method);
-            let cp = &run.checkpoints[0];
+            assert_eq!(run.quality.len(), 1, "{}", run.method);
+            let cp = &run.quality[0];
             assert!(cp.np_at_10.is_finite() && cp.rta.is_finite());
             assert!(
                 cp.rta > 0.5,

@@ -26,6 +26,7 @@ pub mod ann;
 pub mod baselines;
 pub mod metrics;
 pub mod viz;
+pub mod checkpoint;
 pub mod coordinator;
 pub mod distributed;
 pub mod embed;

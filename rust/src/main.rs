@@ -3,9 +3,14 @@
 //! Subcommands:
 //!   embed    embed a dataset (synthetic generator or .npy file) and write
 //!            positions (.npy) + an optional density map (.png) + a map
-//!            artifact directory for the serving layer
+//!            artifact directory for the serving layer; with
+//!            --checkpoint-dir the run is durable and resumable
+//!   resume   continue a killed/finished run from its run store
+//!            (bitwise identical to the uninterrupted run — DESIGN.md §11)
 //!   serve    serve a map artifact over HTTP: LOD tiles, kNN point
-//!            queries, and cache/latency stats (DESIGN.md §10)
+//!            queries, and cache/latency stats (DESIGN.md §10); with
+//!            --watch <run_dir> it follows a training run live,
+//!            hot-swapping to each new checkpoint
 //!   index    build and report on the K-Means ANN index only
 //!   metrics  score an embedding (.npy) against its source data (.npy)
 //!   info     print artifact-manifest and environment diagnostics
@@ -13,8 +18,11 @@
 //! Examples:
 //!   nomad embed --data wikipedia --n 20000 --devices 8 --out out/wiki
 //!   nomad embed --npy vectors.npy --epochs 200 --xla --out out/run1
-//!   nomad embed --data pubmed --n 50000 --threads 8 --out out/pm
+//!   nomad embed --data pubmed --n 50000 --epochs 200 \
+//!       --checkpoint-dir out/pm_run --checkpoint-every 20 --out out/pm
+//!   nomad resume --run out/pm_run --out out/pm
 //!   nomad serve --artifact out/wiki_artifact --addr 127.0.0.1:8080
+//!   nomad serve --watch out/pm_run --addr 127.0.0.1:8080
 //!   nomad metrics --npy vectors.npy --embedding out/run1_positions.npy
 //!   nomad info
 //!
@@ -24,8 +32,10 @@
 use nomad::ann::backend::NativeBackend;
 use nomad::ann::graph::mutuality;
 use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::bail;
+use nomad::checkpoint::{self, params_fingerprint, DatasetSpec, RunStore};
 use nomad::cli::Args;
-use nomad::coordinator::{BackendKind, NomadCoordinator, RunConfig};
+use nomad::coordinator::{BackendKind, CheckpointCfg, NomadCoordinator, NomadRun, RunConfig};
 use nomad::data::{self, Dataset};
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
@@ -35,21 +45,23 @@ use nomad::util::error::{Context, Result};
 use nomad::util::npy::NpyF32;
 use nomad::util::rng::Rng;
 use nomad::viz::{density_map, png, View};
-use nomad::bail;
 use std::path::Path;
+use std::time::Duration;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
     args.apply_thread_flag();
     match args.positional.first().map(|s| s.as_str()) {
         Some("embed") => cmd_embed(&args),
+        Some("resume") => cmd_resume(&args),
         Some("serve") => cmd_serve(&args),
         Some("index") => cmd_index(&args),
         Some("metrics") => cmd_metrics(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: nomad <embed|serve|index|metrics|info> [flags]  (see --help in source)"
+                "usage: nomad <embed|resume|serve|index|metrics|info> [flags]  \
+                 (see --help in source)"
             );
             Ok(())
         }
@@ -58,27 +70,60 @@ fn main() -> Result<()> {
 
 fn load_dataset(args: &Args) -> Result<Dataset> {
     if let Some(path) = args.get("npy") {
-        let t = NpyF32::load(Path::new(path))?;
-        if t.shape.len() != 2 {
-            bail!("expected 2-d array, got shape {:?}", t.shape);
-        }
-        let (n, d) = (t.shape[0], t.shape[1]);
-        Ok(Dataset {
-            x: Matrix::from_vec(n, d, t.data),
-            labels: vec![vec![0; n]],
-            name: path.to_string(),
-        })
+        load_npy_dataset(path)
     } else {
-        let n = args.usize("n", 10_000);
-        let mut rng = Rng::new(args.u64("seed", 0));
-        let name = args.str("data", "arxiv");
-        Ok(match name {
-            "arxiv" => data::text_corpus_like(n, &mut rng),
-            "imagenet" => data::image_corpus_like(n, &mut rng),
-            "pubmed" => data::pubmed_like(n, &mut rng),
-            "wikipedia" => data::wikipedia_like(n, &mut rng),
-            other => bail!("unknown --data '{other}' (arxiv|imagenet|pubmed|wikipedia)"),
-        })
+        let spec = DatasetSpec {
+            kind: "synthetic".to_string(),
+            source: args.str("data", "arxiv").to_string(),
+            n: args.usize("n", 10_000),
+            seed: args.u64("seed", 0),
+        };
+        dataset_from_spec(&spec)
+    }
+}
+
+fn load_npy_dataset(path: &str) -> Result<Dataset> {
+    let t = NpyF32::load(Path::new(path))?;
+    if t.shape.len() != 2 {
+        bail!("expected 2-d array, got shape {:?}", t.shape);
+    }
+    let (n, d) = (t.shape[0], t.shape[1]);
+    Ok(Dataset {
+        x: Matrix::from_vec(n, d, t.data),
+        labels: vec![vec![0; n]],
+        name: path.to_string(),
+    })
+}
+
+/// Rebuild the dataset a run store recorded (`nomad resume`'s input path).
+fn dataset_from_spec(spec: &DatasetSpec) -> Result<Dataset> {
+    if spec.kind == "npy" {
+        return load_npy_dataset(&spec.source);
+    }
+    let mut rng = Rng::new(spec.seed);
+    let n = spec.n;
+    Ok(match spec.source.as_str() {
+        "arxiv" => data::text_corpus_like(n, &mut rng),
+        "imagenet" => data::image_corpus_like(n, &mut rng),
+        "pubmed" => data::pubmed_like(n, &mut rng),
+        "wikipedia" => data::wikipedia_like(n, &mut rng),
+        other => bail!("unknown --data '{other}' (arxiv|imagenet|pubmed|wikipedia)"),
+    })
+}
+
+/// The [`DatasetSpec`] describing how `args` obtained `ds` — recorded in
+/// `run.json` so `nomad resume` can rebuild the run without the original
+/// command line.
+fn dataset_spec(args: &Args, ds: &Dataset) -> DatasetSpec {
+    if let Some(path) = args.get("npy") {
+        DatasetSpec { kind: "npy".to_string(), source: path.to_string(), n: ds.n(), seed: 0 }
+    } else {
+        DatasetSpec {
+            kind: "synthetic".to_string(),
+            source: args.str("data", "arxiv").to_string(),
+            n: ds.n(),
+            seed: args.u64("seed", 0),
+        }
     }
 }
 
@@ -88,6 +133,27 @@ fn index_params(args: &Args) -> IndexParams {
         k: args.usize("k", 15),
         max_cluster_size: args.usize("max-cluster", 8192),
         ..Default::default()
+    }
+}
+
+fn dataset_labels(ds: &Dataset) -> Option<Vec<u32>> {
+    if ds.labels[0].iter().any(|&l| l != 0) {
+        Some(ds.fine_labels().to_vec())
+    } else {
+        None
+    }
+}
+
+fn checkpoint_cfg(args: &Args, ds: &Dataset) -> CheckpointCfg {
+    // --no-artifact also skips per-checkpoint artifact materialization
+    // (it exists for `serve --watch`; a run that suppresses artifacts
+    // should not pay quadtree+npy writes on the training path)
+    CheckpointCfg {
+        every: args.usize("checkpoint-every", 25),
+        retain: args.usize("checkpoint-retain", 3),
+        artifact: !args.bool("no-artifact"),
+        labels: dataset_labels(ds),
+        dataset: ds.name.clone(),
     }
 }
 
@@ -110,7 +176,125 @@ fn cmd_embed(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let coord = NomadCoordinator::new(params, run_cfg);
-    let run = coord.fit(&ds, &NativeBackend::default());
+
+    let run = match args.get("checkpoint-dir") {
+        None => {
+            if args.bool("resume") {
+                bail!("--resume requires --checkpoint-dir (or use `nomad resume --run <dir>`)");
+            }
+            coord.fit(&ds, &NativeBackend::default())
+        }
+        Some(dir) => {
+            let dir = Path::new(dir);
+            let fp = params_fingerprint(ds.n(), &coord.params, &coord.run.index);
+            let cfg = checkpoint_cfg(args, &ds);
+            let spec = dataset_spec(args, &ds);
+            // open/validate (or create) the store *before* the expensive
+            // index build, so a bad --checkpoint-dir fails instantly
+            if args.bool("resume") {
+                let mut store = RunStore::open(dir)?;
+                if store.fingerprint() != fp {
+                    bail!(
+                        "run store at {} was written under different params \
+                         (fingerprint {:08x} != {fp:08x})",
+                        dir.display(),
+                        store.fingerprint()
+                    );
+                }
+                // the fingerprint covers params, not data: also refuse a
+                // dataset spec that differs from the one the store recorded
+                let (_, _, _, _, stored_spec) = checkpoint::parse_run_info(store.run_info())?;
+                if spec != stored_spec {
+                    bail!(
+                        "run store at {} was trained on {:?}, not {:?} — resuming \
+                         on different data would silently diverge",
+                        dir.display(),
+                        stored_spec,
+                        spec
+                    );
+                }
+                let state = store.load_latest()?;
+                println!(
+                    "resuming from checkpoint @ epoch {} / {}",
+                    state.epochs_done, coord.params.epochs
+                );
+                let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                coord.resume_from(ds.n(), &prep, state, Some((&mut store, &cfg)))?
+            } else {
+                let info = checkpoint::run_info_json(
+                    ds.n(),
+                    coord.run.n_devices,
+                    &coord.params,
+                    &coord.run.index,
+                    &spec,
+                );
+                let mut store = RunStore::create(dir, fp, info)?;
+                println!(
+                    "run store: {} (checkpoint every {} epochs, retain {})",
+                    dir.display(),
+                    cfg.every,
+                    cfg.retain
+                );
+                let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                coord.fit_resumable(ds.n(), &prep, Some((&mut store, &cfg)))?
+            }
+        }
+    };
+    write_outputs(args, &ds, &coord, &run)
+}
+
+/// `nomad resume --run <dir>` — rebuild a run from its store alone and
+/// continue from a checkpoint (latest, or `--from-epoch E`).
+fn cmd_resume(args: &Args) -> Result<()> {
+    let dir_s = args
+        .get("run")
+        .context("--run <run_dir> required (written by `nomad embed --checkpoint-dir`)")?;
+    let dir = Path::new(dir_s);
+    let mut store = RunStore::open(dir)?;
+    let (n, n_devices, params, index, spec) = checkpoint::parse_run_info(store.run_info())
+        .context("run.json is missing the run description")?;
+    let ds = dataset_from_spec(&spec)?;
+    if ds.n() != n {
+        bail!("dataset rebuilt from the run spec has {} points, the run recorded {n}", ds.n());
+    }
+    println!("run store: {} | dataset {} ({} x {})", dir.display(), ds.name, ds.n(), ds.dim());
+
+    let run_cfg = RunConfig {
+        n_devices,
+        backend: BackendKind::Native,
+        index,
+        verbose: !args.bool("quiet"),
+        ..Default::default()
+    };
+    let coord = NomadCoordinator::new(params, run_cfg);
+    let fp = params_fingerprint(ds.n(), &coord.params, &coord.run.index);
+    if fp != store.fingerprint() {
+        bail!(
+            "run.json run description does not match its own fingerprint \
+             ({fp:08x} != {:08x}) — store is corrupt or hand-edited",
+            store.fingerprint()
+        );
+    }
+    let state = match args.try_parse::<usize>("from-epoch")? {
+        Some(e) => store.load(e)?,
+        None => store.load_latest()?,
+    };
+    println!("resuming from checkpoint @ epoch {} / {}", state.epochs_done, coord.params.epochs);
+
+    let cfg = checkpoint_cfg(args, &ds);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let run = coord.resume_from(ds.n(), &prep, state, Some((&mut store, &cfg)))?;
+    write_outputs(args, &ds, &coord, &run)
+}
+
+/// Shared output path of `embed` and `resume`: positions `.npy`, density
+/// map `.png`, serving artifact, quality metrics.
+fn write_outputs(
+    args: &Args,
+    ds: &Dataset,
+    coord: &NomadCoordinator,
+    run: &NomadRun,
+) -> Result<()> {
     println!(
         "done: {} clusters | index {:.2}s | train {:.2}s ({:.3}s modeled) | final loss {:.5}",
         run.n_clusters,
@@ -128,11 +312,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     NpyF32::new(vec![ds.n(), 2], run.positions.data.clone()).save(Path::new(&pos_path))?;
     println!("positions: {pos_path}");
 
-    let labels: Option<Vec<u32>> = if ds.labels[0].iter().any(|&l| l != 0) {
-        Some(ds.fine_labels().to_vec())
-    } else {
-        None
-    };
+    let labels = dataset_labels(ds);
     if !args.bool("no-png") {
         let view = View::fit(&run.positions);
         let r = density_map(&run.positions, labels.as_deref(), &view, 900, 900);
@@ -145,7 +325,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     if !args.bool("no-artifact") {
         let art = MapArtifact::from_run(
             run.positions.clone(),
-            labels.clone(),
+            labels,
             Provenance {
                 dataset: ds.name.clone(),
                 seed: coord.params.seed,
@@ -158,19 +338,16 @@ fn cmd_embed(args: &Args) -> Result<()> {
         println!("artifact: {art_dir}/ (serve: nomad serve --artifact {art_dir})");
     }
     if !args.bool("no-metrics") {
-        let (np, rta) = evaluate(&ds, &run.positions, &EvalCfg::default());
+        let (np, rta) = evaluate(ds, &run.positions, &EvalCfg::default());
         println!("NP@10 = {:.1}%  RTA = {:.1}%", np * 100.0, rta * 100.0);
     }
     Ok(())
 }
 
-/// `nomad serve --artifact <dir>` — the map serving subsystem's CLI face.
+/// `nomad serve` — the map serving subsystem's CLI face.  Either a static
+/// `--artifact <dir>`, or `--watch <run_dir>` to follow a training run's
+/// checkpoints live.
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = args
-        .get("artifact")
-        .context("--artifact <dir> required (written by `nomad embed`)")?;
-    let art = MapArtifact::load(Path::new(dir))?;
-    let n = art.positions.rows;
     let cfg = ServeConfig {
         addr: args.str("addr", "127.0.0.1:8080").to_string(),
         workers: args.usize("workers", 8),
@@ -183,13 +360,47 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_zoom: args.usize("max-zoom", 20) as u32,
         },
     };
+
+    if let Some(run_dir) = args.get("watch") {
+        let dir = Path::new(run_dir);
+        let poll = Duration::from_millis(args.u64("watch-poll-ms", 500).max(1));
+        // the store exists from the first epoch of `nomad embed
+        // --checkpoint-dir`; wait (with a notice) for its first artifact
+        let mut waiting = false;
+        loop {
+            let store = RunStore::open(dir)?; // not a run store -> hard error
+            let ready = store
+                .checkpoints()
+                .iter()
+                .any(|&e| store.artifact_dir(e).join("manifest.json").exists());
+            if ready {
+                break;
+            }
+            if !waiting {
+                println!("waiting for the first checkpoint artifact in {}...", dir.display());
+                waiting = true;
+            }
+            std::thread::sleep(poll);
+        }
+        let handle = serve::http::start_watching(dir, &cfg, poll)?;
+        println!(
+            "watching {} on http://{} (generation = checkpoint epoch, poll {:?})",
+            dir.display(),
+            handle.addr,
+            poll
+        );
+        println!("  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats");
+        handle.wait();
+        return Ok(());
+    }
+
+    let dir = args
+        .get("artifact")
+        .context("--artifact <dir> (written by `nomad embed`) or --watch <run_dir> required")?;
+    let art = MapArtifact::load(Path::new(dir))?;
+    let n = art.positions.rows;
     let handle = serve::http::start(art, &cfg)?;
-    println!(
-        "serving {} points ({}) on http://{}",
-        n,
-        args.str("artifact", "?"),
-        handle.addr
-    );
+    println!("serving {} points ({}) on http://{}", n, dir, handle.addr);
     println!("  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats");
     handle.wait();
     Ok(())

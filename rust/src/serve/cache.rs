@@ -1,26 +1,34 @@
-//! Sharded LRU cache over encoded tiles (DESIGN.md §10).
+//! Sharded LRU cache over encoded tiles (DESIGN.md §10/§11).
 //!
-//! Keys are packed `z/x/y` tile coordinates ([`crate::serve::tiles::tile_key`]);
-//! values are `Arc`-shared encoded PNG bytes, so a hit hands back a
-//! refcount bump, never a copy.  The key space is split across
-//! independently locked shards (contention scales with worker count, not
-//! request count); inside a shard, recency is a monotone per-shard tick:
-//! a `HashMap` holds `key -> (tick, value)` and a `BTreeMap` mirrors
-//! `tick -> key`, so get/put/evict are all O(log n).  Hit, miss, and
-//! eviction counters feed `/stats`.
+//! Keys are `(generation, packed z/x/y)` pairs: the packed tile
+//! coordinate comes from [`crate::serve::tiles::tile_key`], and the
+//! generation is the serving artifact's version (the checkpoint epoch
+//! under `nomad serve --watch`, 0 for a static artifact).  Keying by
+//! generation means a hot-swap never serves stale tiles — entries from
+//! an old generation simply stop being requested and age out through
+//! normal LRU eviction.  Values are `Arc`-shared encoded PNG bytes, so a
+//! hit hands back a refcount bump, never a copy.  The key space is split
+//! across independently locked shards (contention scales with worker
+//! count, not request count); inside a shard, recency is a monotone
+//! per-shard tick: a `HashMap` holds `key -> (tick, value)` and a
+//! `BTreeMap` mirrors `tick -> key`, so get/put/evict are all O(log n).
+//! Hit, miss, and eviction counters feed `/stats`.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// `(artifact generation, packed z/x/y tile coordinate)`.
+pub type CacheKey = (u64, u64);
 
 const N_SHARDS: usize = 16;
 
 #[derive(Default)]
 struct Shard {
     /// key -> (recency tick, value)
-    map: HashMap<u64, (u64, Arc<Vec<u8>>)>,
+    map: HashMap<CacheKey, (u64, Arc<Vec<u8>>)>,
     /// recency tick -> key (oldest first)
-    by_tick: BTreeMap<u64, u64>,
+    by_tick: BTreeMap<u64, CacheKey>,
     tick: u64,
 }
 
@@ -59,13 +67,16 @@ impl TileCache {
         }
     }
 
-    fn shard(&self, key: u64) -> &Mutex<Shard> {
-        let h = key.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    fn shard(&self, key: CacheKey) -> &Mutex<Shard> {
+        let h = key
+            .1
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(key.0.wrapping_mul(0xA24B_AED4_963E_E407));
         &self.shards[(h >> 56) as usize % N_SHARDS]
     }
 
     /// Look up a tile, refreshing its recency on a hit.
-    pub fn get(&self, key: u64) -> Option<Arc<Vec<u8>>> {
+    pub fn get(&self, key: CacheKey) -> Option<Arc<Vec<u8>>> {
         if self.capacity == 0 {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return None;
@@ -93,7 +104,7 @@ impl TileCache {
 
     /// Insert (or refresh) a tile, evicting the least-recently-used entry
     /// of the shard when over budget.
-    pub fn put(&self, key: u64, value: Arc<Vec<u8>>) {
+    pub fn put(&self, key: CacheKey, value: Arc<Vec<u8>>) {
         if self.capacity == 0 {
             return;
         }
@@ -139,15 +150,35 @@ mod tests {
         Arc::new(vec![b; 4])
     }
 
+    /// Shard index of a key, mirroring `TileCache::shard`.
+    fn shard_of(k: CacheKey) -> usize {
+        let h = k
+            .1
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(k.0.wrapping_mul(0xA24B_AED4_963E_E407));
+        (h >> 56) as usize % N_SHARDS
+    }
+
     #[test]
     fn hit_miss_and_value_identity() {
         let c = TileCache::new(64);
-        assert!(c.get(1).is_none());
-        c.put(1, val(7));
-        let v = c.get(1).expect("hit");
+        assert!(c.get((0, 1)).is_none());
+        c.put((0, 1), val(7));
+        let v = c.get((0, 1)).expect("hit");
         assert_eq!(*v, vec![7; 4]);
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn generations_are_distinct_keys() {
+        // the same tile under a new artifact generation is a different
+        // entry — the hot-swap correctness contract
+        let c = TileCache::new(64);
+        c.put((1, 42), val(1));
+        c.put((2, 42), val(2));
+        assert_eq!(*c.get((1, 42)).unwrap(), vec![1; 4]);
+        assert_eq!(*c.get((2, 42)).unwrap(), vec![2; 4]);
     }
 
     #[test]
@@ -155,9 +186,9 @@ mod tests {
         // capacity 16 across 16 shards -> 1 entry per shard; craft keys
         // that land in one shard by brute force
         let c = TileCache::new(16);
-        let shard_of = |k: u64| (k.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize % N_SHARDS;
-        let target = shard_of(0);
-        let mut same: Vec<u64> = (0..5_000u64).filter(|&k| shard_of(k) == target).collect();
+        let target = shard_of((0, 0));
+        let mut same: Vec<CacheKey> =
+            (0..5_000u64).map(|k| (0u64, k)).filter(|&k| shard_of(k) == target).collect();
         assert!(same.len() >= 3, "need 3 colliding keys");
         same.truncate(3);
         let (a, b, d) = (same[0], same[1], same[2]);
@@ -175,9 +206,12 @@ mod tests {
     fn get_refreshes_recency() {
         let c = TileCache::new(2 * N_SHARDS);
         // find three keys in one shard (per-shard cap = 2)
-        let shard_of = |k: u64| (k.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 56) as usize % N_SHARDS;
-        let target = shard_of(0);
-        let keys: Vec<u64> = (0..10_000u64).filter(|&k| shard_of(k) == target).take(3).collect();
+        let target = shard_of((0, 0));
+        let keys: Vec<CacheKey> = (0..10_000u64)
+            .map(|k| (0u64, k))
+            .filter(|&k| shard_of(k) == target)
+            .take(3)
+            .collect();
         assert_eq!(keys.len(), 3);
         c.put(keys[0], val(1));
         c.put(keys[1], val(2));
@@ -191,8 +225,8 @@ mod tests {
     #[test]
     fn zero_capacity_disables() {
         let c = TileCache::new(0);
-        c.put(1, val(9));
-        assert!(c.get(1).is_none());
+        c.put((0, 1), val(9));
+        assert!(c.get((0, 1)).is_none());
         let s = c.stats();
         assert_eq!(s.entries, 0);
         assert_eq!(s.misses, 1);
@@ -207,8 +241,8 @@ mod tests {
                 sc.spawn(move || {
                     for i in 0..500u64 {
                         let k = (t * 131 + i) % 200;
-                        if c.get(k).is_none() {
-                            c.put(k, Arc::new(vec![(k % 251) as u8; 8]));
+                        if c.get((0, k)).is_none() {
+                            c.put((0, k), Arc::new(vec![(k % 251) as u8; 8]));
                         }
                     }
                 });

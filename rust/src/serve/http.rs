@@ -17,17 +17,19 @@
 //! never serve a stale-but-different byte stream, and concurrent clients
 //! always observe identical tiles.
 
+use crate::checkpoint::RunStore;
 use crate::serve::artifact::MapArtifact;
-use crate::serve::cache::TileCache;
+use crate::serve::cache::{CacheKey, TileCache};
 use crate::serve::tiles::{tile_key, TileConfig, TileRenderer};
 use crate::util::error::{Context, Result};
 use crate::util::json::{arr, num, obj, Json};
 use crate::util::stats::Summary;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -91,9 +93,16 @@ impl LatencyRing {
 /// cold tiles rarely serialize, few enough to cost nothing.
 const RENDER_STRIPES: usize = 64;
 
-/// Shared server state: renderer, cache, counters.
+/// Shared server state: the current `(generation, renderer)` pair behind
+/// an `RwLock` so `nomad serve --watch` can hot-swap to a newer checkpoint
+/// artifact without restarting (DESIGN.md §11), the generation-keyed tile
+/// cache, and counters.
 pub struct ServerState {
-    renderer: TileRenderer,
+    /// `(artifact generation, renderer)` — swapped atomically as a pair so
+    /// a request never mixes one generation's tiles with another's cache
+    /// slots; the generation is the checkpoint epoch under `--watch`, 0
+    /// for a static artifact
+    renderer: RwLock<(u64, Arc<TileRenderer>)>,
     cache: TileCache,
     /// per-key-stripe single-flight locks for cold-tile renders
     render_locks: Vec<Mutex<()>>,
@@ -101,16 +110,40 @@ pub struct ServerState {
     tiles_served: AtomicU64,
     queries_served: AtomicU64,
     errors: AtomicU64,
+    /// completed hot swaps (0 unless watching)
+    swaps: AtomicU64,
     latency: Mutex<LatencyRing>,
 }
 
 impl ServerState {
+    /// Snapshot the current generation + renderer (cheap: one Arc bump).
+    fn current(&self) -> (u64, Arc<TileRenderer>) {
+        let g = self.renderer.read().unwrap();
+        (g.0, Arc::clone(&g.1))
+    }
+
+    /// The generation currently being served.
+    pub fn generation(&self) -> u64 {
+        self.renderer.read().unwrap().0
+    }
+
+    /// Replace the serving artifact.  Requests already holding the old
+    /// renderer finish against it; new requests see the new generation.
+    pub fn swap(&self, generation: u64, renderer: TileRenderer) {
+        let mut g = self.renderer.write().unwrap();
+        *g = (generation, Arc::new(renderer));
+        drop(g);
+        self.swaps.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Counters + latency snapshot as the `/stats` JSON payload.
     pub fn stats_json(&self) -> Json {
         let c = self.cache.stats();
         let lat = self.latency.lock().unwrap();
         let sum = lat.summary();
         obj(vec![
+            ("generation", num(self.generation() as f64)),
+            ("swaps", num(self.swaps.load(Ordering::Relaxed) as f64)),
             ("requests", num(self.requests.load(Ordering::Relaxed) as f64)),
             ("tiles_served", num(self.tiles_served.load(Ordering::Relaxed) as f64)),
             ("queries_served", num(self.queries_served.load(Ordering::Relaxed) as f64)),
@@ -146,6 +179,8 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    /// run-store poller for `--watch` mode (absent for a static artifact)
+    watcher: Option<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -164,6 +199,9 @@ impl ServerHandle {
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
+        if let Some(h) = self.watcher.take() {
+            let _ = h.join();
+        }
     }
 
     /// Block until the accept thread exits (i.e. forever, absent a stop
@@ -178,16 +216,57 @@ impl ServerHandle {
     }
 }
 
-/// Build the read path for `artifact` and start serving.
+/// Build the read path for a static `artifact` and start serving
+/// (generation 0, no watcher).
 pub fn start(artifact: MapArtifact, cfg: &ServeConfig) -> Result<ServerHandle> {
+    let renderer = TileRenderer::new(artifact, cfg.tile);
+    start_with(renderer, 0, cfg, None)
+}
+
+/// Serve a training run's **newest checkpoint artifact**, hot-swapping to
+/// newer checkpoints as the run writes them (DESIGN.md §11): a watcher
+/// thread polls the run store's manifest every `poll`; when a newer
+/// checkpoint with a materialized artifact appears, it loads + indexes the
+/// artifact off-lock and swaps it in.  The tile cache is keyed by
+/// `(generation, tile)`, so viewers always see tiles of exactly one epoch.
+///
+/// Errors if `run_dir` is not a run store or holds no checkpoint artifact
+/// yet — the CLI waits for the first checkpoint before calling this.
+pub fn start_watching(run_dir: &Path, cfg: &ServeConfig, poll: Duration) -> Result<ServerHandle> {
+    let store = RunStore::open(run_dir)?;
+    let epoch = newest_artifact_epoch(&store)
+        .context("run store has no checkpoint with a map artifact yet")?;
+    let art = MapArtifact::load(&store.artifact_dir(epoch))?;
+    let renderer = TileRenderer::new(art, cfg.tile);
+    start_with(renderer, epoch as u64, cfg, Some((run_dir.to_path_buf(), poll)))
+}
+
+/// Newest checkpoint epoch whose `artifact/` directory exists.
+fn newest_artifact_epoch(store: &RunStore) -> Option<usize> {
+    store
+        .checkpoints()
+        .iter()
+        .rev()
+        .copied()
+        .find(|&e| store.artifact_dir(e).join("manifest.json").exists())
+}
+
+/// Shared startup path for [`start`] and [`start_watching`].
+fn start_with(
+    renderer: TileRenderer,
+    generation: u64,
+    cfg: &ServeConfig,
+    watch: Option<(PathBuf, Duration)>,
+) -> Result<ServerHandle> {
     let state = Arc::new(ServerState {
-        renderer: TileRenderer::new(artifact, cfg.tile),
+        renderer: RwLock::new((generation, Arc::new(renderer))),
         cache: TileCache::new(cfg.cache_entries),
         render_locks: (0..RENDER_STRIPES).map(|_| Mutex::new(())).collect(),
         requests: AtomicU64::new(0),
         tiles_served: AtomicU64::new(0),
         queries_served: AtomicU64::new(0),
         errors: AtomicU64::new(0),
+        swaps: AtomicU64::new(0),
         latency: Mutex::new(LatencyRing::new()),
     });
     let listener = TcpListener::bind(&cfg.addr)
@@ -226,7 +305,51 @@ pub fn start(artifact: MapArtifact, cfg: &ServeConfig) -> Result<ServerHandle> {
         // dropping tx disconnects the workers' receiver
     });
 
-    Ok(ServerHandle { addr, state, stop, accept: Some(accept), workers })
+    let watcher = watch.map(|(run_dir, poll)| {
+        let state = Arc::clone(&state);
+        let stop = Arc::clone(&stop);
+        let tile_cfg = cfg.tile;
+        std::thread::Builder::new()
+            .name("nomad-watch".to_string())
+            .spawn(move || watch_loop(&run_dir, poll, &state, &stop, tile_cfg))
+            .expect("spawn watcher thread")
+    });
+
+    Ok(ServerHandle { addr, state, stop, accept: Some(accept), workers, watcher })
+}
+
+/// Poll the run store for newer checkpoint artifacts and swap them in.
+/// Load/build happens outside the renderer lock; a partially pruned or
+/// unreadable checkpoint is skipped and retried on the next tick (the
+/// store publishes checkpoints atomically, so this is defensive only).
+fn watch_loop(
+    run_dir: &Path,
+    poll: Duration,
+    state: &ServerState,
+    stop: &AtomicBool,
+    tile_cfg: TileConfig,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(poll);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let store = match RunStore::open(run_dir) {
+            Ok(s) => s,
+            Err(_) => continue, // manifest mid-rewrite or store gone
+        };
+        let newest = match newest_artifact_epoch(&store) {
+            Some(e) => e,
+            None => continue,
+        };
+        if (newest as u64) <= state.generation() {
+            continue;
+        }
+        match MapArtifact::load(&store.artifact_dir(newest)) {
+            Ok(art) => state.swap(newest as u64, TileRenderer::new(art, tile_cfg)),
+            Err(_) => continue,
+        }
+    }
 }
 
 fn worker_loop(rx: &Arc<Mutex<Receiver<TcpStream>>>, state: &Arc<ServerState>) {
@@ -312,13 +435,17 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
             return respond(stream, 404, "Not Found", "text/plain", b"bad tile path\n").is_ok();
         }
     };
+    // pin one (generation, renderer) pair for the whole request: a
+    // concurrent hot-swap must never mix generations between the pyramid
+    // check, the cache key, and the render
+    let (generation, renderer) = state.current();
     // validate against the pyramid before touching the cache: tile_key's
     // packing is only injective for in-pyramid coordinates
-    if state.renderer.tile_view(z, x, y).is_none() {
+    if renderer.tile_view(z, x, y).is_none() {
         state.errors.fetch_add(1, Ordering::Relaxed);
         return respond(stream, 404, "Not Found", "text/plain", b"tile out of range\n").is_ok();
     }
-    let key = tile_key(z, x, y);
+    let key: CacheKey = (generation, tile_key(z, x, y));
     let bytes = match state.cache.get(key) {
         Some(b) => b,
         None => {
@@ -329,14 +456,17 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
             // when the cache is disabled: there is nothing to share through.
             let enabled = state.cache.enabled();
             let _flight = enabled.then(|| {
-                let stripe =
-                    (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize % RENDER_STRIPES;
+                let mixed = key
+                    .1
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add(key.0.wrapping_mul(0xA24B_AED4_963E_E407));
+                let stripe = (mixed >> 58) as usize % RENDER_STRIPES;
                 state.render_locks[stripe].lock().unwrap()
             });
             let refilled = if enabled { state.cache.get(key) } else { None };
             match refilled {
                 Some(b) => b, // filled by a concurrent request while we waited
-                None => match state.renderer.render_png(z, x, y) {
+                None => match renderer.render_png(z, x, y) {
                     None => {
                         state.errors.fetch_add(1, Ordering::Relaxed);
                         return respond(
@@ -392,8 +522,9 @@ fn serve_query(stream: &mut TcpStream, state: &ServerState, query: &str) -> bool
             return respond(stream, 400, "Bad Request", "application/json", body).is_ok();
         }
     };
-    let art = state.renderer.artifact();
-    let hits = state.renderer.quadtree().knn(qx, qy, k);
+    let (_generation, renderer) = state.current();
+    let art = renderer.artifact();
+    let hits = renderer.quadtree().knn(qx, qy, k);
     let results: Vec<Json> = hits
         .iter()
         .map(|&(id, d2)| {
@@ -640,6 +771,77 @@ mod tests {
         assert_eq!(a.1, b.1);
         let v = h.state().stats_json();
         assert_eq!(v.get("cache").get("hits").as_i64(), Some(0));
+        h.stop();
+    }
+
+    #[test]
+    fn watch_hot_swaps_to_newest_checkpoint() {
+        use crate::checkpoint::{CheckpointState, RunStore, SaveOpts};
+        use crate::distributed::MeanEntry;
+        use crate::util::json::Json as J;
+
+        let dir = std::env::temp_dir().join("nomad_watch_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut store = RunStore::create(&dir, 7, J::Null).unwrap();
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: 2,
+            backlog: 16,
+            cache_entries: 64,
+            tile: TileConfig { tile_px: 32, ..Default::default() },
+        };
+
+        // no checkpoint with an artifact yet: watching must refuse cleanly
+        assert!(start_watching(&dir, &cfg, Duration::from_millis(25)).is_err());
+
+        // two checkpoint states with visibly different point layouts (a
+        // uniform scale would refit to the same view and identical tiles)
+        let state_at = |epochs_done: usize, rows_wide: bool| {
+            let n = 60usize;
+            let mut pos = Vec::with_capacity(n * 2);
+            for i in 0..n {
+                if rows_wide {
+                    pos.push(i as f32);
+                    pos.push((i % 7) as f32);
+                } else {
+                    pos.push((i % 5) as f32);
+                    pos.push(i as f32);
+                }
+            }
+            CheckpointState {
+                epochs_done,
+                positions: Matrix::from_vec(n, 2, pos),
+                means: vec![MeanEntry { cluster_id: 0, mean: [0.0, 0.0], weight: 1.0 }],
+                loss_history: vec![0.5; epochs_done],
+                fingerprint: 7,
+            }
+        };
+        let opts =
+            SaveOpts { artifact: true, dataset: "watch-test", seed: 1, ..Default::default() };
+        store.save(&state_at(2, true), &opts).unwrap();
+
+        let h = start_watching(&dir, &cfg, Duration::from_millis(20)).unwrap();
+        let addr = h.addr.to_string();
+        assert_eq!(h.state().generation(), 2);
+        let (st, tile_a) = http_get(&addr, "/tiles/0/0/0.png").unwrap();
+        assert_eq!(st, 200);
+        assert_eq!(&tile_a[..8], PNG_MAGIC);
+
+        // the run writes a newer checkpoint; the watcher must swap to it
+        store.save(&state_at(4, false), &opts).unwrap();
+        for _ in 0..500 {
+            if h.state().generation() >= 4 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(h.state().generation(), 4, "watcher must hot-swap without restart");
+        let (st, tile_b) = http_get(&addr, "/tiles/0/0/0.png").unwrap();
+        assert_eq!(st, 200);
+        assert_ne!(tile_a, tile_b, "tile must be rendered from the new artifact");
+        let v = h.state().stats_json();
+        assert_eq!(v.get("generation").as_i64(), Some(4));
+        assert!(v.get("swaps").as_i64().unwrap() >= 1);
         h.stop();
     }
 

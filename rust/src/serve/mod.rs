@@ -12,10 +12,13 @@
 //! * [`tiles`] — slippy-style `z/x/y` LOD tile pyramid with
 //!   deterministic, seed-addressed thinning (tiles are bitwise
 //!   reproducible);
-//! * [`cache`] — sharded LRU over encoded tiles with hit/miss/eviction
-//!   counters;
+//! * [`cache`] — sharded LRU over encoded tiles, keyed by
+//!   `(artifact generation, tile)`, with hit/miss/eviction counters;
 //! * [`http`] — threaded HTTP/1.1 server (fixed worker pool, bounded
-//!   accept queue) answering tile, query, and stats requests.
+//!   accept queue) answering tile, query, and stats requests.  In
+//!   `--watch` mode ([`http::start_watching`]) a poller hot-swaps the
+//!   served artifact to a training run's newest checkpoint (DESIGN.md
+//!   §11), turning the server into a live training monitor.
 //!
 //! `benches/serve_load.rs` drives a zoom/pan mix over loopback and emits
 //! p50/p99 latency and tiles/sec to `BENCH_serve_load.json`.

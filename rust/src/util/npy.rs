@@ -1,13 +1,21 @@
-//! Minimal NumPy `.npy` reader/writer (v1.0), f32/i32 little-endian.
+//! Minimal NumPy `.npy` reader/writer (v1.0), f32/f64 little-endian.
 //!
 //! Used for tensor interchange between the python compile path and the rust
 //! runtime (e.g. exporting embeddings for external inspection, importing
-//! real vector datasets).  Only C-contiguous little-endian arrays are
+//! real vector datasets) and for the checkpoint run store's state files
+//! (DESIGN.md §11).  Only C-contiguous little-endian arrays are
 //! supported — exactly what `numpy.save` emits by default.
+//!
+//! The reader is hardened against corrupt input: a claimed shape whose
+//! element count (or byte size) overflows, or whose payload does not match
+//! the file's remaining length **exactly**, is an `Err` — never a panic and
+//! never a pathological allocation.  (Truncated files fail the length
+//! check; bit-flips inside a structurally valid payload are the checkpoint
+//! layer's job, which crc32-guards every state file.)
 
 use crate::bail;
 use crate::util::error::{Context, Result};
-use std::io::{Read, Write};
+use std::io::{Read, Seek, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 6] = b"\x93NUMPY";
@@ -41,15 +49,81 @@ impl NpyF32 {
         if descr != "<f4" {
             bail!("expected <f4 dtype, got {descr}");
         }
-        let count: usize = shape.iter().product();
-        let mut buf = vec![0u8; count * 4];
-        f.read_exact(&mut buf)?;
+        let buf = read_payload(&mut f, &shape, 4)
+            .with_context(|| format!("read {}", path.display()))?;
         let data = buf
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect();
         Ok(NpyF32 { shape, data })
     }
+}
+
+/// A dense f64 tensor with shape metadata (loss histories and other state
+/// whose bitwise round-trip matters; `numpy.save` of a float64 array).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NpyF64 {
+    pub shape: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl NpyF64 {
+    pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        NpyF64 { shape, data }
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        write_header(&mut f, "<f8", &self.shape)?;
+        let bytes: Vec<u8> = self.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let (descr, shape) = read_header(&mut f)?;
+        if descr != "<f8" {
+            bail!("expected <f8 dtype, got {descr}");
+        }
+        let buf = read_payload(&mut f, &shape, 8)
+            .with_context(|| format!("read {}", path.display()))?;
+        let data = buf
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect();
+        Ok(NpyF64 { shape, data })
+    }
+}
+
+/// Element count of a claimed shape, refusing overflow (a corrupt header
+/// can claim `(usize::MAX,)` — that must be an error, not a wrap or a
+/// pathological allocation).
+fn checked_count(shape: &[usize]) -> Result<usize> {
+    let mut count: usize = 1;
+    for &d in shape {
+        count = count.checked_mul(d).context("npy shape element count overflows")?;
+    }
+    Ok(count)
+}
+
+/// Read the payload after the header, validating that the file's remaining
+/// bytes match the claimed `shape` **exactly** before allocating.
+fn read_payload(f: &mut std::fs::File, shape: &[usize], esize: usize) -> Result<Vec<u8>> {
+    let count = checked_count(shape)?;
+    let need = count.checked_mul(esize).context("npy payload byte size overflows")?;
+    let pos = f.stream_position()?;
+    let len = f.metadata()?.len();
+    let avail = len.saturating_sub(pos);
+    if avail != need as u64 {
+        bail!("npy payload is {avail} bytes, expected {need} (truncated or trailing data)");
+    }
+    let mut buf = vec![0u8; need];
+    f.read_exact(&mut buf)?;
+    Ok(buf)
 }
 
 fn write_header(w: &mut impl Write, descr: &str, shape: &[usize]) -> Result<()> {
@@ -123,12 +197,16 @@ fn extract<'a>(header: &'a str, key: &str) -> Option<&'a str> {
 mod tests {
     use super::*;
 
+    fn tmp_dir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nomad_npy_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn roundtrip_2d() {
         let t = NpyF32::new(vec![3, 2], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.5]);
-        let dir = std::env::temp_dir().join("nomad_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("a.npy");
+        let p = tmp_dir().join("a.npy");
         t.save(&p).unwrap();
         let t2 = NpyF32::load(&p).unwrap();
         assert_eq!(t, t2);
@@ -137,19 +215,98 @@ mod tests {
     #[test]
     fn roundtrip_1d() {
         let t = NpyF32::new(vec![4], vec![-1.0, 0.0, 1.0, 2.0]);
-        let dir = std::env::temp_dir().join("nomad_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("b.npy");
+        let p = tmp_dir().join("b.npy");
         t.save(&p).unwrap();
         assert_eq!(NpyF32::load(&p).unwrap(), t);
     }
 
     #[test]
+    fn roundtrip_f64_bitwise() {
+        // loss histories must round-trip with full f64 precision, including
+        // values that would be lossy through f32
+        let vals = vec![
+            0.1f64,
+            -1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            1.0 + f64::EPSILON,
+            -0.0,
+            12345.678901234567,
+        ];
+        let t = NpyF64::new(vec![vals.len()], vals.clone());
+        let p = tmp_dir().join("c.npy");
+        t.save(&p).unwrap();
+        let back = NpyF64::load(&p).unwrap();
+        assert_eq!(back.shape, vec![vals.len()]);
+        for (a, b) in back.data.iter().zip(&vals) {
+            assert_eq!(a.to_bits(), b.to_bits(), "f64 must round-trip bitwise");
+        }
+    }
+
+    #[test]
     fn rejects_non_npy() {
-        let dir = std::env::temp_dir().join("nomad_npy_test");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("c.npy");
+        let p = tmp_dir().join("d.npy");
         std::fs::write(&p, b"not an npy").unwrap();
         assert!(NpyF32::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let t = NpyF32::new(vec![8, 2], vec![1.0; 16]);
+        let p = tmp_dir().join("trunc.npy");
+        t.save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        // cut the payload short by one element
+        std::fs::write(&p, &bytes[..bytes.len() - 4]).unwrap();
+        let e = NpyF32::load(&p);
+        assert!(e.is_err(), "truncated payload must be an error");
+        // and mid-header truncation too
+        std::fs::write(&p, &bytes[..6]).unwrap();
+        assert!(NpyF32::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let t = NpyF32::new(vec![2], vec![1.0, 2.0]);
+        let p = tmp_dir().join("trail.npy");
+        t.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.extend_from_slice(b"junk");
+        std::fs::write(&p, &bytes).unwrap();
+        assert!(NpyF32::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_claimed_shapes_without_allocating() {
+        // hand-craft headers whose claimed shapes overflow the element
+        // count or the byte size; the loader must Err before allocating
+        for shape_s in [
+            "(18446744073709551615,)",         // usize::MAX elements
+            "(4611686018427387904,)",          // 2^62: count ok, bytes overflow
+            "(4294967296, 4294967296)",        // product overflows
+            "(1000000,)",                      // plausible but way past EOF
+        ] {
+            let header = format!(
+                "{{'descr': '<f4', 'fortran_order': False, 'shape': {shape_s}, }}\n"
+            );
+            let mut v = Vec::new();
+            v.extend_from_slice(MAGIC);
+            v.extend_from_slice(&[1, 0]);
+            v.extend_from_slice(&(header.len() as u16).to_le_bytes());
+            v.extend_from_slice(header.as_bytes());
+            v.extend_from_slice(&[0u8; 8]); // token payload, far too short
+            let p = tmp_dir().join("absurd.npy");
+            std::fs::write(&p, &v).unwrap();
+            let r = NpyF32::load(&p);
+            assert!(r.is_err(), "shape {shape_s} must be rejected");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_dtype_cross_loads() {
+        let p = tmp_dir().join("dtype.npy");
+        NpyF64::new(vec![2], vec![1.0, 2.0]).save(&p).unwrap();
+        assert!(NpyF32::load(&p).is_err(), "f32 loader must reject <f8");
+        NpyF32::new(vec![2], vec![1.0, 2.0]).save(&p).unwrap();
+        assert!(NpyF64::load(&p).is_err(), "f64 loader must reject <f4");
     }
 }

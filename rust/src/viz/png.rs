@@ -284,7 +284,9 @@ fn adler32(data: &[u8]) -> u32 {
 }
 
 /// Bitwise CRC-32 (IEEE, reflected, poly 0xEDB88320), as PNG requires.
-pub(crate) fn crc32(data: &[u8]) -> u32 {
+/// Public: the checkpoint run store (DESIGN.md §11) and the golden-run
+/// regression test reuse it to guard persisted state files.
+pub fn crc32(data: &[u8]) -> u32 {
     let mut crc = 0xFFFF_FFFFu32;
     for &b in data {
         crc ^= b as u32;

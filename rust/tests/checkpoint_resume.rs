@@ -1,0 +1,245 @@
+//! Kill-and-resume property test (DESIGN.md §11): for **every**
+//! checkpoint epoch of a small run, drop the coordinator (simulated by a
+//! fresh coordinator + fresh `prepare` — nothing survives but the run
+//! store on disk), `resume_from` that checkpoint, and assert the final
+//! positions, loss history, and means table are **bitwise equal** to the
+//! uninterrupted run — at 1, 2, and 8 worker threads.
+//!
+//! (The thread-count env juggling is safe alongside the other tests in
+//! this binary because results are bitwise thread-invariant by contract;
+//! the variable only shifts scheduling.)
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::checkpoint::{params_fingerprint, run_info_json, DatasetSpec, RunStore};
+use nomad::coordinator::{CheckpointCfg, NomadCoordinator, RunConfig};
+use nomad::data::{gaussian_mixture, Dataset};
+use nomad::embed::NomadParams;
+use nomad::util::json::Json;
+use nomad::util::rng::Rng;
+use std::path::PathBuf;
+
+const EPOCHS: usize = 8;
+
+fn corpus() -> Dataset {
+    let mut rng = Rng::new(11);
+    gaussian_mixture(300, 10, 3, 9.0, 0.1, 0.4, &mut rng)
+}
+
+fn params() -> NomadParams {
+    NomadParams { epochs: EPOCHS, k: 4, negs: 3, seed: 77, ..Default::default() }
+}
+
+fn run_config(n_devices: usize) -> RunConfig {
+    RunConfig {
+        n_devices,
+        index: IndexParams { n_clusters: 3, k: 4, ..Default::default() },
+        ..Default::default()
+    }
+}
+
+fn coordinator() -> NomadCoordinator {
+    NomadCoordinator::new(params(), run_config(2))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join("nomad_ckpt_resume").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn make_store(dir: &PathBuf, ds: &Dataset, coord: &NomadCoordinator) -> RunStore {
+    let fp = params_fingerprint(ds.n(), &coord.params, &coord.run.index);
+    let spec = DatasetSpec { kind: "synthetic".into(), source: "test".into(), n: ds.n(), seed: 11 };
+    let info = run_info_json(ds.n(), coord.run.n_devices, &coord.params, &coord.run.index, &spec);
+    RunStore::create(dir, fp, info).unwrap()
+}
+
+fn ckpt_cfg(every: usize) -> CheckpointCfg {
+    CheckpointCfg { every, retain: 0, artifact: false, labels: None, dataset: "test".into() }
+}
+
+#[test]
+fn resume_from_every_checkpoint_is_bitwise_identical() {
+    let ds = corpus();
+    for threads in [1usize, 2, 8] {
+        std::env::set_var("NOMAD_THREADS", threads.to_string());
+        let dir = tmp(&format!("prop-{threads}t"));
+
+        // the uninterrupted run, checkpointing every 2 epochs
+        let coord = coordinator();
+        let mut store = make_store(&dir, &ds, &coord);
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        let full =
+            coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(2)))).unwrap();
+        assert_eq!(full.loss_history.len(), EPOCHS);
+
+        // every even epoch plus the final epoch was checkpointed
+        let reopened = RunStore::open(&dir).unwrap();
+        assert_eq!(reopened.checkpoints(), &[2, 4, 6, 8], "@{threads}t");
+
+        for &e in reopened.checkpoints() {
+            // "kill": everything in memory is gone; only the store remains
+            let coord2 = coordinator();
+            let prep2 = coord2.prepare(&ds.x, &NativeBackend::default());
+            let state = reopened.load(e).unwrap();
+            assert_eq!(state.epochs_done, e);
+            // the stored loss prefix matches the full run's exactly
+            for (a, b) in state.loss_history.iter().zip(&full.loss_history) {
+                assert_eq!(a.to_bits(), b.to_bits(), "loss prefix @{threads}t epoch {e}");
+            }
+            let resumed = coord2.resume_from(ds.n(), &prep2, state, None).unwrap();
+            assert_eq!(
+                resumed.positions.data, full.positions.data,
+                "positions must be bitwise equal resuming from epoch {e} @{threads}t"
+            );
+            assert_eq!(
+                resumed.loss_history, full.loss_history,
+                "loss history must be bitwise equal resuming from epoch {e} @{threads}t"
+            );
+            assert_eq!(
+                resumed.final_means, full.final_means,
+                "means table must be bitwise equal resuming from epoch {e} @{threads}t"
+            );
+        }
+    }
+    std::env::remove_var("NOMAD_THREADS");
+}
+
+#[test]
+fn resume_under_different_params_is_refused() {
+    let ds = corpus();
+    let dir = tmp("fingerprint");
+    let coord = coordinator();
+    let mut store = make_store(&dir, &ds, &coord);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(4)))).unwrap();
+    let state = store.load_latest().unwrap();
+
+    // different seed -> different fingerprint -> refuse
+    let other = NomadCoordinator::new(NomadParams { seed: 78, ..params() }, run_config(2));
+    let prep2 = other.prepare(&ds.x, &NativeBackend::default());
+    let e = other.resume_from(ds.n(), &prep2, state.clone(), None);
+    assert!(e.is_err(), "seed change must refuse to resume");
+    assert!(e.unwrap_err().to_string().contains("fingerprint"));
+
+    // different index config -> refuse
+    let other = NomadCoordinator::new(params(), run_config(2));
+    let mut rc = other.run.clone();
+    rc.index.n_clusters = 4;
+    let other = NomadCoordinator::new(params(), rc);
+    let prep3 = other.prepare(&ds.x, &NativeBackend::default());
+    assert!(other.resume_from(ds.n(), &prep3, state, None).is_err());
+}
+
+#[test]
+fn resume_from_the_final_checkpoint_returns_the_final_state() {
+    let ds = corpus();
+    let dir = tmp("final");
+    let coord = coordinator();
+    let mut store = make_store(&dir, &ds, &coord);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let full = coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(3)))).unwrap();
+    // every=3 over 8 epochs -> 3, 6, and the always-written final 8
+    assert_eq!(store.checkpoints(), &[3, 6, 8]);
+
+    let state = store.load(EPOCHS).unwrap();
+    let coord2 = coordinator();
+    let prep2 = coord2.prepare(&ds.x, &NativeBackend::default());
+    let resumed = coord2.resume_from(ds.n(), &prep2, state, None).unwrap();
+    assert_eq!(resumed.positions.data, full.positions.data);
+    assert_eq!(resumed.loss_history, full.loss_history);
+}
+
+#[test]
+fn retention_keeps_resumability_from_recent_checkpoints() {
+    let ds = corpus();
+    let dir = tmp("retention");
+    let coord = coordinator();
+    let mut store = make_store(&dir, &ds, &coord);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let cfg = CheckpointCfg { every: 2, retain: 2, ..ckpt_cfg(2) };
+    let full = coord.fit_resumable(ds.n(), &prep, Some((&mut store, &cfg))).unwrap();
+    assert_eq!(store.checkpoints(), &[6, 8], "only the newest 2 survive");
+    assert!(store.load(2).is_err(), "pruned checkpoints are gone");
+    let resumed = coord
+        .resume_from(ds.n(), &prep, store.load(6).unwrap(), None)
+        .unwrap();
+    assert_eq!(resumed.positions.data, full.positions.data);
+}
+
+#[test]
+fn run_info_in_the_store_rebuilds_the_run() {
+    // what `nomad resume` does: everything needed comes from run.json
+    let ds = corpus();
+    let dir = tmp("runinfo");
+    let coord = coordinator();
+    let mut store = make_store(&dir, &ds, &coord);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let full = coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(4)))).unwrap();
+
+    let reopened = RunStore::open(&dir).unwrap();
+    let (n, n_devices, p2, idx2, spec) =
+        nomad::checkpoint::parse_run_info(reopened.run_info()).unwrap();
+    assert_eq!((n, n_devices), (ds.n(), 2));
+    assert_eq!(spec.source, "test");
+    assert_eq!(
+        params_fingerprint(n, &p2, &idx2),
+        reopened.fingerprint(),
+        "round-tripped params must reproduce the stored fingerprint"
+    );
+    // and the rebuilt coordinator resumes bitwise-identically
+    let coord2 = NomadCoordinator::new(
+        p2,
+        RunConfig { n_devices, index: idx2, ..Default::default() },
+    );
+    let prep2 = coord2.prepare(&ds.x, &NativeBackend::default());
+    let resumed = coord2
+        .resume_from(ds.n(), &prep2, reopened.load(4).unwrap(), None)
+        .unwrap();
+    assert_eq!(resumed.positions.data, full.positions.data);
+    assert_eq!(resumed.loss_history, full.loss_history);
+}
+
+#[test]
+fn corrupt_or_missing_store_surfaces_as_errors_everywhere() {
+    let ds = corpus();
+    let dir = tmp("corrupt");
+    let coord = coordinator();
+    let mut store = make_store(&dir, &ds, &coord);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(4)))).unwrap();
+
+    // truncate run.json mid-byte: open must Err, not panic
+    let manifest = dir.join("run.json");
+    let orig = std::fs::read_to_string(&manifest).unwrap();
+    std::fs::write(&manifest, &orig[..orig.len() / 2]).unwrap();
+    assert!(RunStore::open(&dir).is_err());
+    std::fs::write(&manifest, &orig).unwrap();
+
+    // checkpoint listed in the manifest but deleted on disk
+    let reopened = RunStore::open(&dir).unwrap();
+    std::fs::remove_dir_all(reopened.ckpt_dir(4)).unwrap();
+    assert!(reopened.load(4).is_err());
+    assert!(reopened.load_latest().is_err(), "latest points at the deleted epoch");
+}
+
+#[test]
+fn store_checkpoints_can_coexist_with_a_plain_fit() {
+    // fit_prepared (no sink) must behave exactly as before the refactor
+    let ds = corpus();
+    let coord = coordinator();
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let a = coord.fit_prepared(ds.n(), &prep);
+    let dir = tmp("coexist");
+    let mut store = make_store(&dir, &ds, &coord);
+    let b = coord.fit_resumable(ds.n(), &prep, Some((&mut store, &ckpt_cfg(2)))).unwrap();
+    assert_eq!(a.positions.data, b.positions.data, "checkpointing must not change results");
+    assert_eq!(a.loss_history, b.loss_history);
+
+    // and a Json sanity check on what landed on disk
+    let text = std::fs::read_to_string(dir.join("run.json")).unwrap();
+    let v = Json::parse(&text).unwrap();
+    assert_eq!(v.get("format").as_str(), Some("nomad-run-store"));
+    assert_eq!(v.get("latest").as_usize(), Some(EPOCHS));
+}

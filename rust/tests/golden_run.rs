@@ -1,0 +1,100 @@
+//! Golden-run regression fixture: a tiny seeded run's final state digest
+//! (crc32 of the canonical little-endian byte encoding of positions +
+//! loss history), computed at 1 and 4 worker threads.
+//!
+//! Two layers of protection against silent numeric drift:
+//!
+//! 1. **thread invariance** (always enforced): the digest must be
+//!    identical at 1 and 4 threads — the gather engine / device runtime
+//!    bitwise-determinism contract (DESIGN.md §7/§9);
+//! 2. **cross-version pin**: the digest is compared against
+//!    `tests/golden/run_digest.txt`.  The first run on a machine writes
+//!    the fixture (bless mode); once the file is **committed**, any
+//!    future engine change that shifts a single bit of the final
+//!    positions or loss history fails this test loudly.  To re-bless
+//!    after an *intentional* numeric change, delete the fixture and
+//!    re-run.  NOTE: until the fixture is committed, a fresh checkout
+//!    only enforces layer 1 — run the test once and commit the
+//!    generated file to arm the cross-version pin.
+//!
+//! NOTE: this file must stay a single `#[test]` — it mutates the
+//! process-wide `NOMAD_THREADS` env var, and tests within one binary run
+//! concurrently.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::coordinator::{NomadCoordinator, NomadRun, RunConfig};
+use nomad::data::gaussian_mixture;
+use nomad::embed::NomadParams;
+use nomad::util::rng::Rng;
+use nomad::viz::png::crc32;
+use std::path::PathBuf;
+
+/// Canonical byte encoding: positions (f32 LE, row-major) then the loss
+/// history (f64 LE).  Any bit of drift in either changes the crc.
+fn digest(run: &NomadRun) -> u32 {
+    let mut bytes =
+        Vec::with_capacity(run.positions.data.len() * 4 + run.loss_history.len() * 8);
+    for v in &run.positions.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for l in &run.loss_history {
+        bytes.extend_from_slice(&l.to_le_bytes());
+    }
+    crc32(&bytes)
+}
+
+fn golden_fit() -> NomadRun {
+    let mut rng = Rng::new(5);
+    let ds = gaussian_mixture(360, 12, 3, 9.0, 0.15, 0.4, &mut rng);
+    let coord = NomadCoordinator::new(
+        NomadParams { epochs: 12, k: 5, negs: 4, seed: 1234, ..Default::default() },
+        RunConfig {
+            n_devices: 2,
+            index: IndexParams { n_clusters: 3, k: 5, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    coord.fit(&ds, &NativeBackend::default())
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/run_digest.txt")
+}
+
+#[test]
+fn golden_run_digest_is_thread_invariant_and_pinned() {
+    let mut digests = Vec::new();
+    for threads in [1usize, 4] {
+        std::env::set_var("NOMAD_THREADS", threads.to_string());
+        digests.push((threads, digest(&golden_fit())));
+    }
+    std::env::remove_var("NOMAD_THREADS");
+    assert_eq!(
+        digests[0].1, digests[1].1,
+        "golden digest differs across thread counts ({:08x} @1t vs {:08x} @4t) — \
+         the bitwise thread-invariance contract is broken",
+        digests[0].1, digests[1].1
+    );
+
+    let got = format!("{:08x}", digests[0].1);
+    let path = fixture_path();
+    match std::fs::read_to_string(&path) {
+        Ok(pinned) => {
+            assert_eq!(
+                pinned.trim(),
+                got,
+                "golden run digest drifted from the pinned fixture {} — an engine \
+                 change moved the final positions/loss bits; if intentional, delete \
+                 the fixture and re-run to re-bless",
+                path.display()
+            );
+        }
+        Err(_) => {
+            // bless mode: first run pins the digest; commit the file
+            std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+            std::fs::write(&path, format!("{got}\n")).unwrap();
+            eprintln!("[golden_run] pinned new fixture {} = {got}", path.display());
+        }
+    }
+}
