@@ -1,0 +1,223 @@
+//! Distributed-placement bench: in-process device threads vs real
+//! TCP-loopback `nomad worker` sessions over the same shard set.
+//!
+//! Reports, per configuration: wall time, **measured** wire bytes
+//! (per-epoch mean/max from `CommStats::wire_epoch_bytes`), the modeled
+//! all-gather volume, and the cost model's per-epoch time — so the modeled
+//! communication story (DESIGN.md §3) can be checked against bytes that
+//! actually crossed a socket.  Exits nonzero unless the remote run's final
+//! positions are **bitwise identical** to the in-process run with the same
+//! seeds (the tentpole invariant of DESIGN.md §12).
+//!
+//!   cargo bench --bench distributed  [-- --n 6000 --epochs 30 | --smoke]
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::edge_weights;
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::bench::{fmt_secs, jsonx, save_bench_json, Table};
+use nomad::checkpoint::DatasetSpec;
+use nomad::cli::Args;
+use nomad::coordinator::{NomadCoordinator, NomadRun, Placement, RunConfig};
+use nomad::data::shard::{write_shards, ShardSet};
+use nomad::data::text_corpus_like;
+use nomad::distributed::comm_model;
+use nomad::distributed::transport::Endpoint;
+use nomad::distributed::worker::{serve_session, WorkerListener};
+use nomad::embed::NomadParams;
+use nomad::util::rng::Rng;
+use std::path::PathBuf;
+
+const SEED: u64 = 42;
+const CLUSTERS: usize = 16;
+
+fn coordinator(n_epochs: usize, placement: Placement, n_devices: usize) -> NomadCoordinator {
+    NomadCoordinator::new(
+        NomadParams { epochs: n_epochs, seed: SEED, ..Default::default() },
+        RunConfig {
+            n_devices,
+            index: IndexParams { n_clusters: CLUSTERS, ..Default::default() },
+            placement,
+            ..Default::default()
+        },
+    )
+}
+
+/// Host `n_workers` worker sessions on loopback TCP threads (real sockets,
+/// real frames — the only thing CI's worker-smoke job adds is a process
+/// boundary) and return their endpoints plus join handles.
+fn spawn_workers(
+    shard_dir: &PathBuf,
+    n_workers: usize,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<()>>) {
+    let mut endpoints = Vec::new();
+    let mut joins = Vec::new();
+    for _ in 0..n_workers {
+        let shards = ShardSet::open(shard_dir).expect("open shard set");
+        let listener =
+            WorkerListener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).expect("bind worker");
+        endpoints.push(listener.local_addr_string());
+        joins.push(std::thread::spawn(move || {
+            let mut t = listener.accept_transport().expect("accept coordinator");
+            serve_session(&mut *t, &shards, false).expect("worker session");
+        }));
+    }
+    (endpoints, joins)
+}
+
+fn row_stats(run: &NomadRun) -> (u64, u64, f64) {
+    let epochs = run.comm.wire_epoch_bytes.len().max(1) as u64;
+    let mean = run.comm.wire_bytes_total / epochs;
+    let max = run.comm.wire_epoch_bytes.iter().copied().max().unwrap_or(0);
+    let hw = comm_model::HwProfile::h100();
+    let modeled_epoch = comm_model::epoch_time(&hw, &run.last_epoch_work);
+    (mean, max, modeled_epoch)
+}
+
+fn main() {
+    let args = Args::from_env();
+    args.apply_thread_flag();
+    let smoke = args.bool("smoke");
+    let n = args.usize("n", if smoke { 2000 } else { 6000 });
+    let epochs = args.usize("epochs", if smoke { 6 } else { 30 });
+
+    let mut rng = Rng::new(0);
+    let ds = text_corpus_like(n, &mut rng);
+
+    // shard set (what `nomad shard` writes), in a scratch dir
+    let shard_dir = std::env::temp_dir().join(format!("nomad_bench_shards_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&shard_dir);
+    {
+        let params = NomadParams { seed: SEED, ..Default::default() };
+        let idxp = IndexParams { n_clusters: CLUSTERS, ..Default::default() };
+        let mut irng = Rng::new(SEED);
+        let index = ClusterIndex::build(&ds.x, &idxp, &NativeBackend::default(), &mut irng);
+        let weights = edge_weights(&index, params.weight_model);
+        let spec =
+            DatasetSpec { kind: "synthetic".into(), source: "arxiv".into(), n, seed: 0 };
+        write_shards(
+            &shard_dir,
+            &index,
+            &weights,
+            ds.dim(),
+            SEED,
+            params.weight_model,
+            &idxp,
+            &spec,
+        )
+        .expect("write shard set");
+    }
+
+    let mut table = Table::new(
+        &format!("Distributed placements — {} (n={n}, {epochs} epochs)", ds.name),
+        &[
+            "Placement",
+            "Devices",
+            "Wall",
+            "Wire bytes (total)",
+            "Wire/epoch (mean)",
+            "Wire/epoch (max)",
+            "All-gather bytes",
+            "Modeled epoch",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut reference: Option<Vec<f32>> = None;
+
+    for devices in [1usize, 2, 4] {
+        let coord = coordinator(epochs, Placement::InProcess, devices);
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        let run = coord.fit_resumable(n, &prep, None).expect("in-process run");
+        let (mean, max, modeled) = row_stats(&run);
+        table.row(vec![
+            "in-process".into(),
+            format!("{devices}").into(),
+            fmt_secs(run.train_secs).into(),
+            format!("{}", run.comm.wire_bytes_total).into(),
+            format!("{mean}").into(),
+            format!("{max}").into(),
+            format!("{}", run.comm.allgather_bytes_total).into(),
+            fmt_secs(modeled).into(),
+        ]);
+        rows.push(jsonx::obj(vec![
+            ("placement", jsonx::s("in-process")),
+            ("devices", jsonx::num(devices as f64)),
+            ("train_secs", jsonx::num(run.train_secs)),
+            ("wire_bytes_total", jsonx::num(run.comm.wire_bytes_total as f64)),
+            ("wire_epoch_mean", jsonx::num(mean as f64)),
+            ("wire_epoch_max", jsonx::num(max as f64)),
+            ("allgather_bytes", jsonx::num(run.comm.allgather_bytes_total as f64)),
+            ("modeled_epoch_secs", jsonx::num(modeled)),
+        ]));
+        if devices == 2 {
+            reference = Some(run.positions.data.clone());
+        }
+    }
+
+    // the same 2-device run, but over real loopback TCP worker sessions
+    let (endpoints, joins) = spawn_workers(&shard_dir, 2);
+    let coord = coordinator(
+        epochs,
+        Placement::Remote { endpoints, shards: shard_dir.clone() },
+        2,
+    );
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let run = coord.fit_resumable(n, &prep, None).expect("tcp-workers run");
+    for j in joins {
+        j.join().expect("worker thread");
+    }
+    let (mean, max, modeled) = row_stats(&run);
+    table.row(vec![
+        "tcp-workers".into(),
+        "2".into(),
+        fmt_secs(run.train_secs).into(),
+        format!("{}", run.comm.wire_bytes_total).into(),
+        format!("{mean}").into(),
+        format!("{max}").into(),
+        format!("{}", run.comm.allgather_bytes_total).into(),
+        fmt_secs(modeled).into(),
+    ]);
+    rows.push(jsonx::obj(vec![
+        ("placement", jsonx::s("tcp-workers")),
+        ("devices", jsonx::num(2.0)),
+        ("train_secs", jsonx::num(run.train_secs)),
+        ("wire_bytes_total", jsonx::num(run.comm.wire_bytes_total as f64)),
+        ("wire_epoch_mean", jsonx::num(mean as f64)),
+        ("wire_epoch_max", jsonx::num(max as f64)),
+        ("allgather_bytes", jsonx::num(run.comm.allgather_bytes_total as f64)),
+        ("modeled_epoch_secs", jsonx::num(modeled)),
+    ]));
+
+    let identical = match &reference {
+        Some(r) => {
+            r.len() == run.positions.data.len()
+                && r.iter()
+                    .zip(&run.positions.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        }
+        None => false,
+    };
+
+    table.print();
+    table.save_json("distributed");
+    save_bench_json(
+        "distributed",
+        jsonx::obj(vec![
+            ("bench", jsonx::s("distributed")),
+            ("n", jsonx::num(n as f64)),
+            ("epochs", jsonx::num(epochs as f64)),
+            ("clusters", jsonx::num(CLUSTERS as f64)),
+            ("rows", jsonx::arr(rows)),
+            ("remote_bitwise_equal", jsonx::Json::Bool(identical)),
+        ]),
+    );
+    let _ = std::fs::remove_dir_all(&shard_dir);
+
+    println!(
+        "\n2-device TCP-worker run vs in-process: positions bitwise {}",
+        if identical { "IDENTICAL" } else { "DIFFERENT" }
+    );
+    if !identical {
+        eprintln!("FAIL: remote placement diverged from in-process placement");
+        std::process::exit(1);
+    }
+}

@@ -71,7 +71,9 @@ pub struct DatasetSpec {
     pub seed: u64,
 }
 
-fn weight_model_str(w: WeightModel) -> &'static str {
+/// Canonical string form of a [`WeightModel`] (run manifests, shard
+/// manifests, the params fingerprint).
+pub fn weight_model_str(w: WeightModel) -> &'static str {
     match w {
         WeightModel::InverseRankPaper => "inverse-rank-paper",
         WeightModel::InverseRankForward => "inverse-rank-forward",
@@ -79,7 +81,8 @@ fn weight_model_str(w: WeightModel) -> &'static str {
     }
 }
 
-fn weight_model_parse(s: &str) -> Result<WeightModel> {
+/// Inverse of [`weight_model_str`].
+pub fn weight_model_parse(s: &str) -> Result<WeightModel> {
     Ok(match s {
         "inverse-rank-paper" => WeightModel::InverseRankPaper,
         "inverse-rank-forward" => WeightModel::InverseRankForward,

@@ -7,19 +7,29 @@
 //! 2. compute the inverse-rank edge distribution p(j|i) — Eq 6;
 //! 3. PCA-initialize the 2-d positions — §3.4;
 //! 4. cut clusters into padded [`ClusterBlock`]s and shard them across
-//!    simulated devices (Fig 2);
+//!    devices (Fig 2) — in-process threads, or `nomad worker` processes
+//!    dialed over TCP/Unix sockets ([`Placement`]);
 //! 5. epoch-synchronous SGD with lr = n/10 linearly annealed to 0, where
 //!    each epoch all-gathers only the cluster-mean table — §3.3/§3.4;
 //! 6. collect positions, loss curve, snapshots, and communication stats.
+//!
+//! The epoch loop is placement-blind: it speaks [`DeviceCmd`]/
+//! [`DeviceReply`] over a [`DeviceLink`] whichever transport backs it, and
+//! every RNG stream is forked from `(device seed, epoch, block)` — so a
+//! multi-process run is **bitwise identical** to the in-process run with
+//! the same seeds (`tests/multiprocess.rs`, CI worker-smoke).
 
 use crate::ann::backend::AnnBackend;
 use crate::ann::graph::{edge_weights, EdgeWeights};
 use crate::ann::{ClusterIndex, IndexParams};
 use crate::checkpoint::{params_fingerprint, CheckpointState, RunStore, SaveOpts};
+use crate::data::shard::ShardManifest;
 use crate::data::Dataset;
 use crate::distributed::comm_model::{self, CommStats, EpochWork, HwProfile};
-use crate::distributed::device::{spawn_device, DeviceCmd, DeviceReply};
-use crate::distributed::sharder::shard_clusters;
+use crate::distributed::device::{spawn_device, DeviceCmd, DeviceLink, DeviceReply};
+use crate::distributed::proto::{Assignment, WireMsg};
+use crate::distributed::sharder::{active_shards, shard_clusters};
+use crate::distributed::transport::{connect, coordinator_handshake, Endpoint};
 use crate::distributed::{MeanEntry, MEAN_ENTRY_BYTES};
 use crate::embed::sgd::{Exaggeration, LrSchedule};
 use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
@@ -27,8 +37,9 @@ use crate::ensure;
 use crate::linalg::{pca::pca_init, Matrix};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
+use std::path::PathBuf;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Which step/ANN execution engine devices use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,6 +49,21 @@ pub enum BackendKind {
     /// AOT XLA artifacts via PJRT; falls back to native per-block when no
     /// artifact bucket matches
     Xla,
+}
+
+/// Where the simulated devices live.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Placement {
+    /// one thread per device inside this process (the default; `n_devices`
+    /// from [`RunConfig`] decides how many)
+    #[default]
+    InProcess,
+    /// one `nomad worker` OS process per device: `endpoints` are dialed in
+    /// device order (`host:port` or `unix:/path`), and workers page their
+    /// assigned clusters from the shard set at `shards` (written by
+    /// `nomad shard`); `RunConfig::n_devices` is ignored — the endpoint
+    /// count is the device count
+    Remote { endpoints: Vec<String>, shards: PathBuf },
 }
 
 /// Run-level configuration (owned by the launcher/CLI, not the paper).
@@ -50,6 +76,8 @@ pub struct RunConfig {
     pub snapshot_every: Option<usize>,
     /// index build parameters
     pub index: IndexParams,
+    /// thread devices or worker processes
+    pub placement: Placement,
     /// print progress lines
     pub verbose: bool,
 }
@@ -61,6 +89,7 @@ impl Default for RunConfig {
             backend: BackendKind::Native,
             snapshot_every: None,
             index: IndexParams::default(),
+            placement: Placement::InProcess,
             verbose: false,
         }
     }
@@ -164,10 +193,13 @@ impl NomadCoordinator {
         self.fit_prepared(ds.n(), &prep)
     }
 
-    /// Train from a prebuilt index/init (steps 4–6).
+    /// Train from a prebuilt index/init (steps 4–6).  Panics on transport
+    /// failure under [`Placement::Remote`] — fallible callers (and every
+    /// remote driver) should prefer
+    /// [`fit_resumable`](NomadCoordinator::fit_resumable) with `sink: None`.
     pub fn fit_prepared(&self, n: usize, prep: &Prepared) -> NomadRun {
         self.run_epochs(n, prep, None, None)
-            .expect("fit without a checkpoint sink has no fallible IO")
+            .expect("in-process fit without a checkpoint sink has no fallible IO")
     }
 
     /// Train like [`fit_prepared`](NomadCoordinator::fit_prepared), writing
@@ -219,17 +251,16 @@ impl NomadCoordinator {
         let index = &prep.index;
         let n_clusters = index.n_clusters();
 
-        // ---- blocks + sharding (Fig 2) ----------------------------------
-        let blocks: Vec<ClusterBlock> = (0..n_clusters)
-            .map(|c| {
-                ClusterBlock::build(index, &prep.weights, c, &prep.init.data, n, p.m_noise, p.negs)
-            })
-            .collect();
+        // ---- sharding (Fig 2) -------------------------------------------
         let sizes: Vec<usize> = index.clusters.iter().map(|c| c.len()).collect();
-        let shards = shard_clusters(&sizes, self.run.n_devices);
+        let n_devices = match &self.run.placement {
+            Placement::InProcess => self.run.n_devices,
+            Placement::Remote { endpoints, .. } => endpoints.len(),
+        };
+        let shards = shard_clusters(&sizes, n_devices);
         // thread budgets divide across the shards that own blocks: when
         // n_devices > n_clusters the empty shards must not hold a share
-        let n_active = shards.iter().filter(|s| !s.is_empty()).count().max(1);
+        let n_active = active_shards(&shards).max(1);
 
         // fingerprint + resume-state validation (DESIGN.md §11)
         let fp = params_fingerprint(n, p, &self.run.index);
@@ -260,70 +291,84 @@ impl NomadCoordinator {
 
         // initial means table: restored verbatim on resume (it is the
         // all-gathered table epoch `epochs_done` consumed in the original
-        // run), computed from the fresh blocks otherwise
+        // run), computed from the index + init positions otherwise —
+        // deliberately *not* from the blocks, so the remote placement
+        // (whose blocks live in worker processes) uses the exact same f64
+        // accumulation as [`ClusterBlock::mean`] and stays bitwise equal
         let mut means_table: Vec<MeanEntry> = match &resume {
             Some(st) => st.means.clone(),
-            None => {
-                let mut t: Vec<MeanEntry> = blocks
-                    .iter()
-                    .map(|b| MeanEntry {
-                        cluster_id: b.cluster_id,
-                        mean: b.mean(),
-                        weight: match p.approx {
-                            ApproxMode::AllNonSelf => b.mean_weight(n, p.m_noise),
-                            ApproxMode::None => 0.0,
-                        },
+            None => initial_means_table(index, &prep.init.data, n, p),
+        };
+
+        // ---- devices: spawn threads, or dial worker processes -----------
+        let mut links: Vec<DeviceLink> = match &self.run.placement {
+            Placement::InProcess => {
+                let blocks: Vec<ClusterBlock> = (0..n_clusters)
+                    .map(|c| {
+                        ClusterBlock::build(
+                            index,
+                            &prep.weights,
+                            c,
+                            &prep.init.data,
+                            n,
+                            p.m_noise,
+                            p.negs,
+                        )
                     })
                     .collect();
-                t.sort_by_key(|e| e.cluster_id);
-                t
+                let mut block_by_id: Vec<Option<ClusterBlock>> =
+                    blocks.into_iter().map(Some).collect();
+                let backend_kind = self.run.backend;
+                let mut links = Vec::with_capacity(shards.len());
+                for (d, shard) in shards.iter().enumerate() {
+                    let my_blocks: Vec<ClusterBlock> = shard
+                        .iter()
+                        .map(|&c| block_by_id[c].take().expect("cluster sharded once"))
+                        .collect();
+                    let make: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> =
+                        match backend_kind {
+                            BackendKind::Native => Box::new(|| {
+                                Box::new(crate::embed::native::NativeStepBackend::default())
+                                    as Box<dyn StepBackend>
+                            }),
+                            BackendKind::Xla => xla_step_factory(),
+                        };
+                    links.push(spawn_device(d, my_blocks, n, p.m_noise, p.seed, n_active, make));
+                }
+                links
+            }
+            Placement::Remote { endpoints, shards: shard_dir } => {
+                let manifest = ShardManifest::load(shard_dir)?;
+                validate_manifest(&manifest, &sizes, n, p, &self.run.index)?;
+                connect_remote(endpoints, &shards, n_active, n, p, self.run.verbose)?
             }
         };
 
-        // ---- spawn devices ----------------------------------------------
-        let (reply_tx, reply_rx) = std::sync::mpsc::channel::<DeviceReply>();
-        let mut block_by_id: Vec<Option<ClusterBlock>> = blocks.into_iter().map(Some).collect();
-        let backend_kind = self.run.backend;
-        let mut handles = Vec::new();
-        for (d, shard) in shards.iter().enumerate() {
-            let my_blocks: Vec<ClusterBlock> = shard
-                .iter()
-                .map(|&c| block_by_id[c].take().expect("cluster sharded once"))
-                .collect();
-            let make: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> = match backend_kind {
-                BackendKind::Native => Box::new(|| {
-                    Box::new(crate::embed::native::NativeStepBackend::default())
-                        as Box<dyn StepBackend>
-                }),
-                BackendKind::Xla => xla_step_factory(),
-            };
-            handles.push(spawn_device(
-                d,
-                my_blocks,
-                n,
-                p.m_noise,
-                p.seed,
-                n_active,
-                make,
-                reply_tx.clone(),
-            ));
-        }
-
-        // ---- resume: ingest checkpoint positions into the devices -------
-        let start_epoch = match &resume {
-            Some(st) => {
-                let table = Arc::new(st.positions.data.clone());
-                for h in &handles {
-                    let _ = h.cmd.send(DeviceCmd::Ingest { positions: Arc::clone(&table) });
-                }
-                for _ in 0..handles.len() {
-                    match reply_rx.recv().expect("device alive") {
-                        DeviceReply::Ingested { .. } => {}
-                        _ => unreachable!("no other reply pending during ingest"),
-                    }
-                }
-                st.epochs_done
+        // ---- ingest barrier ---------------------------------------------
+        // resumed runs load the checkpoint positions; fresh *remote* runs
+        // load the init positions (worker blocks start zeroed — positions
+        // always travel over the wire, never through the shard files);
+        // fresh in-process runs built their blocks from init already
+        let ingest: Option<Arc<Vec<f32>>> = match &resume {
+            Some(st) => Some(Arc::new(st.positions.data.clone())),
+            None => match &self.run.placement {
+                Placement::Remote { .. } => Some(Arc::new(prep.init.data.clone())),
+                Placement::InProcess => None,
+            },
+        };
+        if let Some(table) = ingest {
+            for link in links.iter_mut() {
+                link.send_cmd(DeviceCmd::Ingest { positions: Arc::clone(&table) })?;
             }
+            for link in links.iter_mut() {
+                match link.recv_reply()? {
+                    DeviceReply::Ingested { .. } => {}
+                    other => crate::bail!("expected Ingested during barrier, got {other:?}"),
+                }
+            }
+        }
+        let start_epoch = match &resume {
+            Some(st) => st.epochs_done,
             None => 0,
         };
 
@@ -337,35 +382,42 @@ impl NomadCoordinator {
         let mut snapshots = Vec::new();
         let mut comm = CommStats::default();
         let mut modeled_total = 0.0f64;
-        let mut device_step_secs = vec![0.0f64; handles.len()];
+        let mut device_step_secs = vec![0.0f64; links.len()];
         let mut last_work = EpochWork::default();
         let mut last_saved: Option<usize> = None;
+        let mut wire_before: u64 = links.iter().map(|l| l.wire_bytes()).sum();
         let t_train = Instant::now();
 
         for epoch in start_epoch..p.epochs {
             let lr = lr_sched.at(epoch) as f32;
             let table = Arc::new(means_table.clone());
-            for h in &handles {
-                let _ = h.cmd.send(DeviceCmd::Epoch {
+            for link in links.iter_mut() {
+                link.send_cmd(DeviceCmd::Epoch {
                     epoch,
                     lr,
                     exaggeration: exag.factor_at(epoch),
                     means: Arc::clone(&table),
-                });
+                })?;
             }
-            // gather all replies first, then fold in device order so the
-            // f64 accumulation (and thus the loss history) is independent
-            // of reply arrival order
+            // every device computes concurrently; replies are drained in
+            // link order and folded in device order, so the f64
+            // accumulation (and thus the loss history) is independent of
+            // completion order
             let mut done: Vec<(usize, Vec<MeanEntry>, f64, f64, f64, f64)> =
-                Vec::with_capacity(handles.len());
-            for _ in 0..handles.len() {
-                match reply_rx.recv().expect("device alive") {
-                    DeviceReply::EpochDone { device, means, loss_sum: ls, loss_weight: lw, step_secs, flops } => {
+                Vec::with_capacity(links.len());
+            for link in links.iter_mut() {
+                match link.recv_reply()? {
+                    DeviceReply::EpochDone {
+                        device,
+                        means,
+                        loss_sum: ls,
+                        loss_weight: lw,
+                        step_secs,
+                        flops,
+                    } => {
                         done.push((device, means, ls, lw, step_secs, flops));
                     }
-                    DeviceReply::Exported { .. } | DeviceReply::Ingested { .. } => {
-                        unreachable!("no export/ingest pending")
-                    }
+                    other => crate::bail!("expected EpochDone, got {other:?}"),
                 }
             }
             done.sort_by_key(|d| d.0);
@@ -392,14 +444,14 @@ impl NomadCoordinator {
                 }
             }
             means_table = fresh;
-            let bytes = means_table.len() as u64 * MEAN_ENTRY_BYTES * handles.len() as u64;
+            let bytes = means_table.len() as u64 * MEAN_ENTRY_BYTES * links.len() as u64;
             comm.allgather_bytes_total += bytes;
             let work = EpochWork {
                 max_dev_flops,
                 total_flops,
                 max_dev_secs,
                 allgather_bytes: bytes,
-                n_devices: handles.len(),
+                n_devices: links.len(),
             };
             last_work = work;
             modeled_total += comm_model::epoch_time(&self.hw, &work);
@@ -407,7 +459,7 @@ impl NomadCoordinator {
 
             if let Some(every) = self.run.snapshot_every {
                 if (epoch + 1) % every == 0 && epoch + 1 < p.epochs {
-                    let positions = collect_positions(&handles, &reply_rx, n);
+                    let positions = collect_positions(&mut links, n)?;
                     snapshots.push(Snapshot {
                         epoch: epoch + 1,
                         wall_secs: t_train.elapsed().as_secs_f64(),
@@ -421,7 +473,7 @@ impl NomadCoordinator {
             // leader state epoch `epoch + 1` starts from
             if let Some((store, cfg)) = sink.as_mut() {
                 if cfg.every > 0 && (epoch + 1) % cfg.every == 0 {
-                    let positions = collect_positions(&handles, &reply_rx, n);
+                    let positions = collect_positions(&mut links, n)?;
                     let st = CheckpointState {
                         epochs_done: epoch + 1,
                         positions,
@@ -449,6 +501,12 @@ impl NomadCoordinator {
                     }
                 }
             }
+            // measured wire traffic this epoch, all links, both directions
+            // (snapshot/checkpoint exports land in the epoch they follow)
+            let wire_now: u64 = links.iter().map(|l| l.wire_bytes()).sum();
+            comm.wire_epoch_bytes.push(wire_now - wire_before);
+            wire_before = wire_now;
+
             if self.run.verbose && (epoch % 25 == 0 || epoch + 1 == p.epochs) {
                 eprintln!(
                     "[nomad] epoch {epoch:4} lr {lr:9.2} loss {:.5}",
@@ -457,7 +515,7 @@ impl NomadCoordinator {
             }
         }
 
-        let positions = collect_positions(&handles, &reply_rx, n);
+        let positions = collect_positions(&mut links, n)?;
 
         // final checkpoint, unless the loop already wrote (or the store
         // already holds) one for the last epoch
@@ -483,12 +541,10 @@ impl NomadCoordinator {
             }
         }
 
-        for h in &handles {
-            let _ = h.cmd.send(DeviceCmd::Stop);
+        for link in links.iter_mut() {
+            link.stop();
         }
-        for h in handles {
-            let _ = h.join.join();
-        }
+        comm.wire_bytes_total = links.iter().map(|l| l.wire_bytes()).sum();
 
         let train_secs = t_train.elapsed().as_secs_f64();
         comm.epochs = p.epochs - start_epoch;
@@ -554,17 +610,128 @@ pub struct Prepared {
     pub index_secs: f64,
 }
 
-fn collect_positions(
-    handles: &[crate::distributed::device::DeviceHandle],
-    reply_rx: &std::sync::mpsc::Receiver<DeviceReply>,
+/// The pre-epoch-0 means table, computed from the index + init positions
+/// with exactly [`ClusterBlock::mean`]'s f64 accumulation (member order =
+/// local row order) and [`ClusterBlock::mean_weight`]'s expression — so
+/// the coordinator never needs the blocks themselves, which under
+/// [`Placement::Remote`] live in worker processes.
+fn initial_means_table(
+    index: &ClusterIndex,
+    init: &[f32],
     n: usize,
-) -> Matrix {
-    for h in handles {
-        let _ = h.cmd.send(DeviceCmd::Export);
+    p: &NomadParams,
+) -> Vec<MeanEntry> {
+    index
+        .clusters
+        .iter()
+        .enumerate()
+        .map(|(c, members)| {
+            let mut m = [0.0f64; 2];
+            for &g in members {
+                let g = g as usize;
+                m[0] += init[g * 2] as f64;
+                m[1] += init[g * 2 + 1] as f64;
+            }
+            let inv = 1.0 / members.len().max(1) as f64;
+            MeanEntry {
+                cluster_id: c as u32,
+                mean: [(m[0] * inv) as f32, (m[1] * inv) as f32],
+                weight: match p.approx {
+                    ApproxMode::AllNonSelf => {
+                        (p.m_noise * members.len() as f64 / n.max(1) as f64) as f32
+                    }
+                    ApproxMode::None => 0.0,
+                },
+            }
+        })
+        .collect()
+}
+
+/// Refuse a shard set that was cut from a different run than the one this
+/// coordinator is about to drive — a mismatched worker would train a
+/// silently-wrong embedding.
+fn validate_manifest(
+    m: &ShardManifest,
+    sizes: &[usize],
+    n: usize,
+    p: &NomadParams,
+    idx: &IndexParams,
+) -> Result<()> {
+    ensure!(m.n == n, "shard set holds {} points, this run has {n}", m.n);
+    ensure!(m.seed == p.seed, "shard set seed {} != run seed {}", m.seed, p.seed);
+    ensure!(
+        m.weight_model == p.weight_model,
+        "shard set weight model {:?} != run's {:?}",
+        m.weight_model,
+        p.weight_model
+    );
+    let same_index = m.index.n_clusters == idx.n_clusters
+        && m.index.k == idx.k
+        && m.index.max_iters == idx.max_iters
+        && m.index.tol_frac == idx.tol_frac
+        && m.index.max_cluster_size == idx.max_cluster_size;
+    ensure!(same_index, "shard set index params {:?} != run's {:?}", m.index, idx);
+    ensure!(
+        m.sizes() == sizes,
+        "shard set cluster sizes differ from this run's index (stale shard dir?)"
+    );
+    Ok(())
+}
+
+/// Dial each worker endpoint in device order, handshake, and send its
+/// cluster assignment; returns the links once every worker acknowledged.
+fn connect_remote(
+    endpoints: &[String],
+    shards: &[Vec<usize>],
+    n_active: usize,
+    n: usize,
+    p: &NomadParams,
+    verbose: bool,
+) -> Result<Vec<DeviceLink>> {
+    ensure!(!endpoints.is_empty(), "remote placement needs at least one worker endpoint");
+    let mut links = Vec::with_capacity(endpoints.len());
+    for (d, spec) in endpoints.iter().enumerate() {
+        let ep = Endpoint::parse(spec)?;
+        let mut transport = connect(&ep, Duration::from_secs(10))?;
+        coordinator_handshake(&mut *transport)?;
+        transport.send(WireMsg::Assign(Assignment {
+            device: d,
+            n_active,
+            n_total: n,
+            negs: p.negs,
+            seed: p.seed,
+            m_noise: p.m_noise,
+            clusters: shards[d].iter().map(|&c| c as u32).collect(),
+        }))?;
+        match transport.recv()? {
+            WireMsg::Assigned { device, n_blocks, n_points } => {
+                ensure!(device == d, "worker at {ep} answered as device {device}, expected {d}");
+                ensure!(
+                    n_blocks == shards[d].len(),
+                    "worker at {ep} loaded {n_blocks} blocks, assigned {}",
+                    shards[d].len()
+                );
+                if verbose {
+                    eprintln!(
+                        "[nomad] worker {ep}: device {device}, {n_blocks} blocks, \
+                         {n_points} points"
+                    );
+                }
+            }
+            other => crate::bail!("worker at {ep}: expected Assigned, got {other:?}"),
+        }
+        links.push(DeviceLink { device: d, transport, join: None });
+    }
+    Ok(links)
+}
+
+fn collect_positions(links: &mut [DeviceLink], n: usize) -> Result<Matrix> {
+    for link in links.iter_mut() {
+        link.send_cmd(DeviceCmd::Export)?;
     }
     let mut m = Matrix::zeros(n, 2);
-    for _ in 0..handles.len() {
-        match reply_rx.recv().expect("device alive") {
+    for link in links.iter_mut() {
+        match link.recv_reply()? {
             DeviceReply::Exported { positions, .. } => {
                 for (g, p) in positions {
                     let g = g as usize;
@@ -572,10 +739,10 @@ fn collect_positions(
                     m.data[g * 2 + 1] = p[1];
                 }
             }
-            _ => unreachable!("no epoch/ingest pending"),
+            other => crate::bail!("expected Exported, got {other:?}"),
         }
     }
-    m
+    Ok(m)
 }
 
 #[cfg(test)]
@@ -686,6 +853,52 @@ mod tests {
             .filter(|&i| run.positions.row(i).iter().any(|v| *v != 0.0))
             .count();
         assert!(moved > 230, "{moved} rows written");
+    }
+
+    #[test]
+    fn initial_means_table_matches_block_means_bitwise() {
+        // the coordinator computes the pre-epoch-0 table from index + init
+        // (remote workers hold the blocks); it must equal the block-derived
+        // table bit for bit, or remote runs would diverge at epoch 0
+        let mut rng = Rng::new(4);
+        let ds = gaussian_mixture(300, 8, 3, 9.0, 0.1, 0.4, &mut rng);
+        let params = tiny_params(1);
+        let coord = NomadCoordinator::new(
+            params.clone(),
+            RunConfig {
+                index: IndexParams { n_clusters: 3, k: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        let n = ds.n();
+        let from_index = initial_means_table(&prep.index, &prep.init.data, n, &params);
+        let mut from_blocks: Vec<MeanEntry> = (0..prep.index.n_clusters())
+            .map(|c| {
+                let b = ClusterBlock::build(
+                    &prep.index,
+                    &prep.weights,
+                    c,
+                    &prep.init.data,
+                    n,
+                    params.m_noise,
+                    params.negs,
+                );
+                MeanEntry {
+                    cluster_id: b.cluster_id,
+                    mean: b.mean(),
+                    weight: b.mean_weight(n, params.m_noise),
+                }
+            })
+            .collect();
+        from_blocks.sort_by_key(|e| e.cluster_id);
+        assert_eq!(from_index.len(), from_blocks.len());
+        for (a, b) in from_index.iter().zip(&from_blocks) {
+            assert_eq!(a.cluster_id, b.cluster_id);
+            assert_eq!(a.mean[0].to_bits(), b.mean[0].to_bits());
+            assert_eq!(a.mean[1].to_bits(), b.mean[1].to_bits());
+            assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+        }
     }
 
     #[test]

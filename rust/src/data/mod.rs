@@ -11,6 +11,8 @@
 //! Every generator returns a [`Dataset`] with ground-truth labels at one or
 //! more hierarchy levels, which the metrics and the map renderer consume.
 
+pub mod shard;
+
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
 

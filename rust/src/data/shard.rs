@@ -1,0 +1,487 @@
+//! Mmap-backed per-cluster shard files (DESIGN.md §12).
+//!
+//! `nomad shard` cuts a built index into one record per cluster — the
+//! cluster's [`BlockParts`] training topology, *not* the high-dimensional
+//! corpus — and writes them back-to-back into `shards.bin` with a JSON
+//! manifest (`shards.json`) of per-cluster offsets and crc32s.  A `nomad
+//! worker` process opens the set with [`ShardSet::open`] (one `mmap`) and
+//! pages in **only the clusters it was assigned**: record slices are
+//! touched lazily by [`ShardSet::load_parts`], so a worker's resident set
+//! is proportional to its shard, never to the corpus.
+//!
+//! Determinism: a record stores exactly what
+//! [`ClusterBlock::from_parts`](crate::embed::ClusterBlock::from_parts)
+//! consumes, with every f32 serialized via `to_le_bytes`.  A block built
+//! from a shard record is **identical** to one built in-process from the
+//! live index — the bitwise equality of multi-process runs depends on it.
+//!
+//! ```text
+//! shards.json   manifest: format/version, run-shaping params (n, seed,
+//!               weight model, index params, dataset spec), and per
+//!               cluster {id, n, offset, len, crc}
+//! shards.bin    records, each:
+//!               magic u32 | cluster_id u32 | n u32 | k u32
+//!               | global_ids u32 x n | nbr_idx i32 x n*k | nbr_w f32 x n*k
+//! ```
+
+use crate::ann::graph::{EdgeWeights, WeightModel};
+use crate::ann::{ClusterIndex, IndexParams};
+use crate::checkpoint::{weight_model_parse, weight_model_str, DatasetSpec};
+use crate::embed::{BlockParts, ClusterBlock};
+use crate::ensure;
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use crate::util::mmap::Mmap;
+use crate::viz::png::crc32;
+use std::io::Write;
+use std::path::Path;
+
+/// Manifest `format` field.
+pub const SHARD_FORMAT: &str = "nomad-shards";
+/// Manifest (and record) format version.
+pub const SHARD_VERSION: usize = 1;
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "shards.json";
+/// Data file name inside a shard directory.
+pub const DATA_FILE: &str = "shards.bin";
+/// Per-record magic ("NSRD" little-endian).
+const RECORD_MAGIC: u32 = u32::from_le_bytes(*b"NSRD");
+/// Fixed record header: magic + cluster_id + n + k.
+const RECORD_HEADER: usize = 16;
+
+/// One cluster's location inside `shards.bin`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterEntry {
+    pub id: usize,
+    /// real point count
+    pub n: usize,
+    pub offset: u64,
+    pub len: u64,
+    pub crc: u32,
+}
+
+/// The parsed `shards.json`.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    /// full dataset size
+    pub n: usize,
+    /// corpus dimensionality (provenance only)
+    pub dim: usize,
+    /// kNN fanout of the records
+    pub k: usize,
+    /// run seed the index was built from
+    pub seed: u64,
+    pub weight_model: WeightModel,
+    pub index: IndexParams,
+    pub dataset: DatasetSpec,
+    /// entries in cluster-id order, one per cluster
+    pub clusters: Vec<ClusterEntry>,
+}
+
+impl ShardManifest {
+    /// Per-cluster real point counts, in cluster-id order (what
+    /// [`shard_clusters`](crate::distributed::sharder::shard_clusters)
+    /// consumes when the coordinator plans a remote run).
+    pub fn sizes(&self) -> Vec<usize> {
+        self.clusters.iter().map(|c| c.n).collect()
+    }
+
+    fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("format", json::s(SHARD_FORMAT)),
+            ("version", json::num(SHARD_VERSION as f64)),
+            ("n", json::num(self.n as f64)),
+            ("dim", json::num(self.dim as f64)),
+            ("k", json::num(self.k as f64)),
+            // u64 seeds ride as strings (JSON numbers are f64 and would
+            // round past 2^53), same as the checkpoint store's run.json
+            ("seed", json::s(&self.seed.to_string())),
+            ("weight_model", json::s(weight_model_str(self.weight_model))),
+            (
+                "index",
+                json::obj(vec![
+                    ("n_clusters", json::num(self.index.n_clusters as f64)),
+                    ("k", json::num(self.index.k as f64)),
+                    ("max_iters", json::num(self.index.max_iters as f64)),
+                    ("tol_frac", json::num(self.index.tol_frac)),
+                    ("max_cluster_size", json::num(self.index.max_cluster_size as f64)),
+                ]),
+            ),
+            (
+                "dataset",
+                json::obj(vec![
+                    ("kind", json::s(&self.dataset.kind)),
+                    ("source", json::s(&self.dataset.source)),
+                    ("n", json::num(self.dataset.n as f64)),
+                    ("seed", json::s(&self.dataset.seed.to_string())),
+                ]),
+            ),
+            ("data_file", json::s(DATA_FILE)),
+            (
+                "clusters",
+                json::arr(
+                    self.clusters
+                        .iter()
+                        .map(|c| {
+                            json::obj(vec![
+                                ("id", json::num(c.id as f64)),
+                                ("n", json::num(c.n as f64)),
+                                ("offset", json::num(c.offset as f64)),
+                                ("len", json::num(c.len as f64)),
+                                ("crc", json::num(c.crc as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<ShardManifest> {
+        let format = v.get("format").as_str().context("shard manifest: format")?;
+        ensure!(format == SHARD_FORMAT, "not a shard manifest (format '{format}')");
+        let version = v.get("version").as_usize().context("shard manifest: version")?;
+        ensure!(
+            version == SHARD_VERSION,
+            "shard manifest version {version}, this build reads v{SHARD_VERSION}"
+        );
+        let i = v.get("index");
+        let d = v.get("dataset");
+        let mut clusters = Vec::new();
+        let entries = v.get("clusters").as_arr().context("shard manifest: clusters")?;
+        for (pos, c) in entries.iter().enumerate() {
+            let entry = ClusterEntry {
+                id: c.get("id").as_usize().context("cluster: id")?,
+                n: c.get("n").as_usize().context("cluster: n")?,
+                offset: c.get("offset").as_f64().context("cluster: offset")? as u64,
+                len: c.get("len").as_f64().context("cluster: len")? as u64,
+                crc: c.get("crc").as_f64().context("cluster: crc")? as u32,
+            };
+            ensure!(entry.id == pos, "cluster entries out of order: {} at {pos}", entry.id);
+            clusters.push(entry);
+        }
+        Ok(ShardManifest {
+            n: v.get("n").as_usize().context("shard manifest: n")?,
+            dim: v.get("dim").as_usize().context("shard manifest: dim")?,
+            k: v.get("k").as_usize().context("shard manifest: k")?,
+            seed: v
+                .get("seed")
+                .as_str()
+                .context("shard manifest: seed")?
+                .parse::<u64>()
+                .context("shard manifest: seed u64")?,
+            weight_model: weight_model_parse(
+                v.get("weight_model").as_str().context("shard manifest: weight_model")?,
+            )?,
+            index: IndexParams {
+                n_clusters: i.get("n_clusters").as_usize().context("index: n_clusters")?,
+                k: i.get("k").as_usize().context("index: k")?,
+                max_iters: i.get("max_iters").as_usize().context("index: max_iters")?,
+                tol_frac: i.get("tol_frac").as_f64().context("index: tol_frac")?,
+                max_cluster_size: i
+                    .get("max_cluster_size")
+                    .as_usize()
+                    .context("index: max_cluster_size")?,
+            },
+            dataset: DatasetSpec {
+                kind: d.get("kind").as_str().context("dataset: kind")?.to_string(),
+                source: d.get("source").as_str().context("dataset: source")?.to_string(),
+                n: d.get("n").as_usize().context("dataset: n")?,
+                seed: d
+                    .get("seed")
+                    .as_str()
+                    .context("dataset: seed")?
+                    .parse::<u64>()
+                    .context("dataset: seed u64")?,
+            },
+            clusters,
+        })
+    }
+
+    /// Load `dir/shards.json`.
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let v = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+        ShardManifest::from_json(&v).with_context(|| format!("{}", path.display()))
+    }
+}
+
+// ---------------------------------------------------------------- writer
+
+fn encode_record(parts: &BlockParts) -> Vec<u8> {
+    let n = parts.global_ids.len();
+    let k = parts.k;
+    let mut out = Vec::with_capacity(RECORD_HEADER + 4 * n + 8 * n * k);
+    out.extend_from_slice(&RECORD_MAGIC.to_le_bytes());
+    out.extend_from_slice(&parts.cluster_id.to_le_bytes());
+    out.extend_from_slice(&(n as u32).to_le_bytes());
+    out.extend_from_slice(&(k as u32).to_le_bytes());
+    for &g in &parts.global_ids {
+        out.extend_from_slice(&g.to_le_bytes());
+    }
+    for &j in &parts.nbr_idx {
+        out.extend_from_slice(&j.to_le_bytes());
+    }
+    for &w in &parts.nbr_w {
+        out.extend_from_slice(&w.to_le_bytes());
+    }
+    out
+}
+
+fn decode_record(bytes: &[u8]) -> Result<BlockParts> {
+    ensure!(bytes.len() >= RECORD_HEADER, "shard record truncated ({} bytes)", bytes.len());
+    let u32_at = |off: usize| {
+        u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+    };
+    ensure!(u32_at(0) == RECORD_MAGIC, "bad shard record magic");
+    let cluster_id = u32_at(4);
+    let n = u32_at(8) as usize;
+    let k = u32_at(12) as usize;
+    let need = RECORD_HEADER
+        .checked_add(n.checked_mul(4).context("record size overflows")?)
+        .and_then(|v| v.checked_add(n.checked_mul(k)?.checked_mul(8)?))
+        .context("record size overflows")?;
+    ensure!(
+        bytes.len() == need,
+        "shard record is {} bytes, header claims {need}",
+        bytes.len()
+    );
+    let mut off = RECORD_HEADER;
+    let mut global_ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        global_ids.push(u32_at(off));
+        off += 4;
+    }
+    let mut nbr_idx = Vec::with_capacity(n * k);
+    for _ in 0..n * k {
+        nbr_idx.push(u32_at(off) as i32);
+        off += 4;
+    }
+    let mut nbr_w = Vec::with_capacity(n * k);
+    for _ in 0..n * k {
+        nbr_w.push(f32::from_le_bytes(u32_at(off).to_le_bytes()));
+        off += 4;
+    }
+    Ok(BlockParts { cluster_id, global_ids, k, nbr_idx, nbr_w })
+}
+
+/// Cut a built index into a shard set at `dir` (created if needed).
+/// Atomic like the checkpoint store: data and manifest are written to
+/// temp names and renamed, manifest last — a crashed write never leaves a
+/// set that parses.
+#[allow(clippy::too_many_arguments)]
+pub fn write_shards(
+    dir: &Path,
+    index: &ClusterIndex,
+    weights: &EdgeWeights,
+    dim: usize,
+    seed: u64,
+    weight_model: WeightModel,
+    index_params: &IndexParams,
+    dataset: &DatasetSpec,
+) -> Result<ShardManifest> {
+    std::fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let data_tmp = dir.join(format!("{DATA_FILE}.tmp"));
+    let mut f = std::fs::File::create(&data_tmp)
+        .with_context(|| format!("create {}", data_tmp.display()))?;
+    let mut clusters = Vec::with_capacity(index.n_clusters());
+    let mut offset = 0u64;
+    for c in 0..index.n_clusters() {
+        let parts = BlockParts::extract(index, weights, c);
+        let bytes = encode_record(&parts);
+        f.write_all(&bytes)?;
+        clusters.push(ClusterEntry {
+            id: c,
+            n: parts.global_ids.len(),
+            offset,
+            len: bytes.len() as u64,
+            crc: crc32(&bytes),
+        });
+        offset += bytes.len() as u64;
+    }
+    f.sync_all().ok();
+    drop(f);
+    std::fs::rename(&data_tmp, dir.join(DATA_FILE))?;
+
+    let manifest = ShardManifest {
+        n: index.n(),
+        dim,
+        k: index.k,
+        seed,
+        weight_model,
+        index: index_params.clone(),
+        dataset: dataset.clone(),
+        clusters,
+    };
+    let man_tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+    std::fs::write(&man_tmp, manifest.to_json().pretty())
+        .with_context(|| format!("write {}", man_tmp.display()))?;
+    std::fs::rename(&man_tmp, dir.join(MANIFEST_FILE))?;
+    Ok(manifest)
+}
+
+// ---------------------------------------------------------------- reader
+
+/// An opened shard set: parsed manifest + one read-only mapping of the
+/// data file.  Cheap to open; pages of `shards.bin` are faulted in only
+/// when a cluster is actually loaded.
+pub struct ShardSet {
+    pub manifest: ShardManifest,
+    data: Mmap,
+}
+
+impl ShardSet {
+    pub fn open(dir: &Path) -> Result<ShardSet> {
+        let manifest = ShardManifest::load(dir)?;
+        let data = Mmap::open(&dir.join(DATA_FILE))?;
+        // validate the offset table against the mapped length up front so
+        // a truncated data file fails at open, not mid-training
+        let mut expect = 0u64;
+        for c in &manifest.clusters {
+            ensure!(
+                c.offset == expect,
+                "cluster {} record at offset {}, expected {expect}",
+                c.id,
+                c.offset
+            );
+            expect += c.len;
+        }
+        ensure!(
+            expect == data.len() as u64,
+            "shard data file is {} bytes, manifest accounts for {expect}",
+            data.len()
+        );
+        Ok(ShardSet { manifest, data })
+    }
+
+    /// Load one cluster's topology, crc-checking its record slice.
+    pub fn load_parts(&self, cluster: usize) -> Result<BlockParts> {
+        let entry = self
+            .manifest
+            .clusters
+            .get(cluster)
+            .with_context(|| format!("cluster {cluster} not in shard set"))?;
+        let lo = entry.offset as usize;
+        let hi = lo + entry.len as usize;
+        let bytes = &self.data.bytes()[lo..hi];
+        let got = crc32(bytes);
+        ensure!(
+            got == entry.crc,
+            "cluster {cluster} record crc {got:08x} != manifest {:08x} (corrupt shard file)",
+            entry.crc
+        );
+        let parts = decode_record(bytes)?;
+        ensure!(
+            parts.cluster_id as usize == cluster,
+            "record claims cluster {}, manifest slot is {cluster}",
+            parts.cluster_id
+        );
+        Ok(parts)
+    }
+
+    /// Load one cluster as a step-ready [`ClusterBlock`] (positions zeroed
+    /// — the coordinator ingests them over the wire).
+    pub fn load_block(
+        &self,
+        cluster: usize,
+        n_total: usize,
+        m_noise: f64,
+        negs: usize,
+    ) -> Result<ClusterBlock> {
+        Ok(ClusterBlock::from_parts(self.load_parts(cluster)?, None, n_total, m_noise, negs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ann::backend::NativeBackend;
+    use crate::ann::graph::edge_weights;
+    use crate::data::gaussian_mixture;
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nomad_shard_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn build_set(name: &str, n: usize) -> (std::path::PathBuf, ClusterIndex, EdgeWeights) {
+        let mut rng = Rng::new(3);
+        let ds = gaussian_mixture(n, 8, 4, 8.0, 0.2, 0.5, &mut rng);
+        let ip = IndexParams { n_clusters: 4, k: 5, ..Default::default() };
+        let idx = ClusterIndex::build(&ds.x, &ip, &NativeBackend::default(), &mut rng);
+        let ew = edge_weights(&idx, WeightModel::InverseRankForward);
+        let dir = tmp_dir(name);
+        let spec = DatasetSpec { kind: "synthetic".into(), source: "test".into(), n, seed: 3 };
+        write_shards(&dir, &idx, &ew, 8, 3, WeightModel::InverseRankForward, &ip, &spec)
+            .unwrap();
+        (dir, idx, ew)
+    }
+
+    #[test]
+    fn roundtrip_every_cluster_bitwise() {
+        let (dir, idx, ew) = build_set("roundtrip", 400);
+        let set = ShardSet::open(&dir).unwrap();
+        assert_eq!(set.manifest.clusters.len(), idx.n_clusters());
+        assert_eq!(set.manifest.n, 400);
+        for c in 0..idx.n_clusters() {
+            let live = BlockParts::extract(&idx, &ew, c);
+            let loaded = set.load_parts(c).unwrap();
+            assert_eq!(live, loaded, "cluster {c} must round-trip exactly");
+            // and through to a step-ready block
+            let block = set.load_block(c, 400, 5.0, 4).unwrap();
+            assert_eq!(block.n_real, live.global_ids.len());
+            assert_eq!(block.nbr_w[..block.n_real * block.k], live.nbr_w[..]);
+        }
+        assert_eq!(set.manifest.sizes(), idx.clusters.iter().map(|c| c.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn corrupt_record_byte_fails_crc() {
+        let (dir, _, _) = build_set("corrupt", 300);
+        let path = dir.join(DATA_FILE);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let set = ShardSet::open(&dir).unwrap();
+        // exactly one cluster's record covers the flipped byte
+        let bad: Vec<usize> =
+            (0..set.manifest.clusters.len()).filter(|&c| set.load_parts(c).is_err()).collect();
+        assert_eq!(bad.len(), 1, "one corrupt record, errors {bad:?}");
+        let e = set.load_parts(bad[0]).unwrap_err().to_string();
+        assert!(e.contains("crc"), "{e}");
+    }
+
+    #[test]
+    fn truncated_data_file_fails_at_open() {
+        let (dir, _, _) = build_set("trunc", 300);
+        let path = dir.join(DATA_FILE);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 10]).unwrap();
+        assert!(ShardSet::open(&dir).is_err());
+    }
+
+    #[test]
+    fn wrong_version_or_format_rejected() {
+        let (dir, _, _) = build_set("version", 300);
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"version\": 1", "\"version\": 99")).unwrap();
+        let e = ShardSet::open(&dir).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        std::fs::write(&path, text.replace("nomad-shards", "other-format")).unwrap();
+        assert!(ShardSet::open(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_cluster_is_an_error() {
+        let (dir, _, _) = build_set("missing", 300);
+        let set = ShardSet::open(&dir).unwrap();
+        assert!(set.load_parts(set.manifest.clusters.len()).is_err());
+    }
+}

@@ -102,8 +102,20 @@ pub fn modeled_speedup(hw: &HwProfile, one_dev: &EpochWork, n_dev: &EpochWork) -
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
     pub epochs: usize,
+    /// modeled all-gather traffic: R x 16 bytes received per device per
+    /// epoch (what the cost model charges the interconnect for)
     pub allgather_bytes_total: u64,
     pub positive_phase_bytes_total: u64, // always 0: the design invariant
+    /// **measured** frame bytes over every coordinator<->device link for
+    /// the whole run, both directions (real socket bytes under remote
+    /// placement; identical would-be frame bytes under in-process channel
+    /// placement).  Includes the epoch broadcast, gathers, ingests and
+    /// exports — compare against `allgather_bytes_total` to see how much
+    /// of the wire is the means table.
+    pub wire_bytes_total: u64,
+    /// per-epoch deltas of the measured wire bytes, one entry per trained
+    /// epoch (snapshot/checkpoint exports land in the epoch they follow)
+    pub wire_epoch_bytes: Vec<u64>,
     pub modeled_secs_total: f64,
     pub measured_secs_total: f64,
 }

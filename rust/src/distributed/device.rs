@@ -3,9 +3,12 @@
 //! Each worker owns its own [`StepBackend`] instance, created *inside* the
 //! thread (the XLA backend wraps a PJRT client, which is not `Send` — and a
 //! real multi-GPU deployment gives each device its own PJRT client anyway).
-//! Communication with the leader is over channels carrying plain data:
-//! the epoch broadcast (learning rate + the all-gathered means table) and
-//! the per-epoch gather (fresh local means + loss + timing).
+//! Communication with the leader is over a [`Transport`] carrying
+//! [`WireMsg`] frames: the epoch broadcast (learning rate + the
+//! all-gathered means table) and the per-epoch gather (fresh local means +
+//! loss + timing).  The same [`run_device_loop`] serves an in-process
+//! channel transport ([`spawn_device`]) and a `nomad worker` process's
+//! socket ([`super::worker`]).
 //!
 //! # Intra-device parallelism
 //!
@@ -23,15 +26,18 @@
 //! run) hold no share — so a multi-device simulation neither oversubscribes
 //! the host nor idles workers on do-nothing device threads.
 
+use super::proto::WireMsg;
+use super::transport::{channel_pair, Transport};
 use super::MeanEntry;
 use crate::embed::{ClusterBlock, StepBackend, StepInputs};
+use crate::util::error::Result;
 use crate::util::parallel::{num_threads, par_map_mut};
 use crate::util::rng::Rng;
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
 
 /// Leader -> device commands.
+#[derive(Clone, Debug, PartialEq)]
 pub enum DeviceCmd {
     /// Run one epoch over all local blocks.
     Epoch {
@@ -58,6 +64,7 @@ pub enum DeviceCmd {
 }
 
 /// Device -> leader replies.
+#[derive(Clone, Debug, PartialEq)]
 pub enum DeviceReply {
     EpochDone {
         device: usize,
@@ -80,11 +87,42 @@ pub enum DeviceReply {
     },
 }
 
-/// Handle owned by the leader.
-pub struct DeviceHandle {
+/// The leader's end of one device's [`Transport`] — the same struct
+/// whether the device is an in-process thread (then `join` holds its
+/// handle) or a remote worker process (then `join` is `None`).
+pub struct DeviceLink {
     pub device: usize,
-    pub cmd: Sender<DeviceCmd>,
-    pub join: std::thread::JoinHandle<()>,
+    pub transport: Box<dyn Transport>,
+    pub join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl DeviceLink {
+    pub fn send_cmd(&mut self, cmd: DeviceCmd) -> Result<()> {
+        self.transport.send(WireMsg::Cmd(cmd))
+    }
+
+    /// Blocking receive of the device's next reply.
+    pub fn recv_reply(&mut self) -> Result<DeviceReply> {
+        match self.transport.recv()? {
+            WireMsg::Reply(r) => Ok(r),
+            other => crate::bail!("device {}: expected a reply, got {other:?}", self.device),
+        }
+    }
+
+    /// Total frame bytes moved over this link, both directions.
+    pub fn wire_bytes(&self) -> u64 {
+        self.transport.bytes_sent() + self.transport.bytes_received()
+    }
+
+    /// Send `Stop` and reap the worker thread (remote workers just see the
+    /// connection close after the `Stop` frame).  Errors are ignored: a
+    /// device that already hung up is already stopped.
+    pub fn stop(&mut self) {
+        let _ = self.send_cmd(DeviceCmd::Stop);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
 }
 
 /// Split the host's worker threads across the devices that actually own
@@ -111,112 +149,138 @@ pub fn spawn_device(
     seed: u64,
     n_active_devices: usize,
     make_backend: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send>,
-    reply: Sender<DeviceReply>,
-) -> DeviceHandle {
-    let (cmd_tx, cmd_rx): (Sender<DeviceCmd>, Receiver<DeviceCmd>) = std::sync::mpsc::channel();
+) -> DeviceLink {
+    let (leader_end, mut device_end) = channel_pair();
     let join = std::thread::Builder::new()
         .name(format!("nomad-dev{device}"))
         .spawn(move || {
             let backend = make_backend();
-            // root of this device's RNG tree; never advanced, only forked
-            // per (epoch, block) so neither stepping order nor the epoch a
-            // run (re)starts at can change results
-            let rng_root = Rng::new(seed).fork(device as u64 + 1);
-
-            while let Ok(cmd) = cmd_rx.recv() {
-                match cmd {
-                    DeviceCmd::Stop => break,
-                    DeviceCmd::Export => {
-                        let mut positions = Vec::new();
-                        for b in &blocks {
-                            for (l, &g) in b.global_ids.iter().enumerate() {
-                                positions.push((g, [b.pos[l * 2], b.pos[l * 2 + 1]]));
-                            }
-                        }
-                        let _ = reply.send(DeviceReply::Exported { device, positions });
-                    }
-                    DeviceCmd::Ingest { positions } => {
-                        for b in blocks.iter_mut() {
-                            for (l, &g) in b.global_ids.iter().enumerate() {
-                                let g = g as usize;
-                                b.pos[l * 2] = positions[g * 2];
-                                b.pos[l * 2 + 1] = positions[g * 2 + 1];
-                            }
-                        }
-                        let _ = reply.send(DeviceReply::Ingested { device });
-                    }
-                    DeviceCmd::Epoch { epoch, lr, exaggeration, means } => {
-                        let budget = intra_device_budget(num_threads(), n_active_devices);
-                        let eroot = rng_root.fork(epoch as u64);
-                        let t0 = Instant::now();
-
-                        // (weighted loss, weight, flops) per block, in order
-                        let results: Vec<(f64, f64, f64)> = match backend.as_sync() {
-                            Some(shared) if budget > 1 && blocks.len() > 1 => {
-                                let block_threads = budget.min(blocks.len());
-                                let step_threads = (budget / block_threads).max(1);
-                                par_map_mut(&mut blocks, block_threads, |bi, b| {
-                                    let mut brng = eroot.fork(bi as u64);
-                                    step_block(
-                                        shared,
-                                        b,
-                                        lr,
-                                        exaggeration,
-                                        &means,
-                                        &mut brng,
-                                        step_threads,
-                                    )
-                                })
-                            }
-                            _ => blocks
-                                .iter_mut()
-                                .enumerate()
-                                .map(|(bi, b)| {
-                                    let mut brng = eroot.fork(bi as u64);
-                                    step_block(
-                                        &*backend,
-                                        b,
-                                        lr,
-                                        exaggeration,
-                                        &means,
-                                        &mut brng,
-                                        budget,
-                                    )
-                                })
-                                .collect(),
-                        };
-
-                        let mut loss_sum = 0.0f64;
-                        let mut loss_weight = 0.0f64;
-                        let mut flops = 0.0f64;
-                        for (ls, lw, fl) in &results {
-                            loss_sum += *ls;
-                            loss_weight += *lw;
-                            flops += *fl;
-                        }
-                        let step_secs = t0.elapsed().as_secs_f64();
-                        let fresh: Vec<MeanEntry> = blocks
-                            .iter()
-                            .map(|b| MeanEntry {
-                                cluster_id: b.cluster_id,
-                                mean: b.mean(),
-                                weight: b.mean_weight(n_total, m_noise),
-                            })
-                            .collect();
-                        let _ = reply.send(DeviceReply::EpochDone {
-                            device,
-                            means: fresh,
-                            loss_sum,
-                            loss_weight,
-                            step_secs,
-                            flops,
-                        });
-                    }
-                }
-            }
+            // a transport error here means the leader hung up (normal when
+            // the coordinator unwinds early) — nothing useful to report
+            let _ = run_device_loop(
+                device,
+                &mut blocks,
+                n_total,
+                m_noise,
+                seed,
+                n_active_devices,
+                &*backend,
+                &mut device_end,
+            );
         })
         .expect("spawn device thread");
-    DeviceHandle { device, cmd: cmd_tx, join }
+    DeviceLink { device, transport: Box::new(leader_end), join: Some(join) }
+}
+
+/// The device-side command loop, shared **verbatim** between in-process
+/// threads ([`spawn_device`]) and `nomad worker` processes
+/// ([`super::worker`]) — running the same code over either transport is
+/// what makes multi-process runs bitwise identical to in-process runs.
+///
+/// Returns on `Stop` (Ok) or on a transport error (leader hung up).
+#[allow(clippy::too_many_arguments)]
+pub fn run_device_loop(
+    device: usize,
+    blocks: &mut [ClusterBlock],
+    n_total: usize,
+    m_noise: f64,
+    seed: u64,
+    n_active_devices: usize,
+    backend: &dyn StepBackend,
+    transport: &mut dyn Transport,
+) -> Result<()> {
+    // root of this device's RNG tree; never advanced, only forked
+    // per (epoch, block) so neither stepping order nor the epoch a
+    // run (re)starts at can change results
+    let rng_root = Rng::new(seed).fork(device as u64 + 1);
+
+    loop {
+        let cmd = match transport.recv()? {
+            WireMsg::Cmd(cmd) => cmd,
+            other => crate::bail!("device {device}: expected a command, got {other:?}"),
+        };
+        match cmd {
+            DeviceCmd::Stop => return Ok(()),
+            DeviceCmd::Export => {
+                let mut positions = Vec::new();
+                for b in blocks.iter() {
+                    for (l, &g) in b.global_ids.iter().enumerate() {
+                        positions.push((g, [b.pos[l * 2], b.pos[l * 2 + 1]]));
+                    }
+                }
+                transport.send(WireMsg::Reply(DeviceReply::Exported { device, positions }))?;
+            }
+            DeviceCmd::Ingest { positions } => {
+                for b in blocks.iter_mut() {
+                    for (l, &g) in b.global_ids.iter().enumerate() {
+                        let g = g as usize;
+                        b.pos[l * 2] = positions[g * 2];
+                        b.pos[l * 2 + 1] = positions[g * 2 + 1];
+                    }
+                }
+                transport.send(WireMsg::Reply(DeviceReply::Ingested { device }))?;
+            }
+            DeviceCmd::Epoch { epoch, lr, exaggeration, means } => {
+                let budget = intra_device_budget(num_threads(), n_active_devices);
+                let eroot = rng_root.fork(epoch as u64);
+                let t0 = Instant::now();
+
+                // (weighted loss, weight, flops) per block, in order
+                let results: Vec<(f64, f64, f64)> = match backend.as_sync() {
+                    Some(shared) if budget > 1 && blocks.len() > 1 => {
+                        let block_threads = budget.min(blocks.len());
+                        let step_threads = (budget / block_threads).max(1);
+                        par_map_mut(blocks, block_threads, |bi, b| {
+                            let mut brng = eroot.fork(bi as u64);
+                            step_block(
+                                shared,
+                                b,
+                                lr,
+                                exaggeration,
+                                &means,
+                                &mut brng,
+                                step_threads,
+                            )
+                        })
+                    }
+                    _ => blocks
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(bi, b)| {
+                            let mut brng = eroot.fork(bi as u64);
+                            step_block(backend, b, lr, exaggeration, &means, &mut brng, budget)
+                        })
+                        .collect(),
+                };
+
+                let mut loss_sum = 0.0f64;
+                let mut loss_weight = 0.0f64;
+                let mut flops = 0.0f64;
+                for (ls, lw, fl) in &results {
+                    loss_sum += *ls;
+                    loss_weight += *lw;
+                    flops += *fl;
+                }
+                let step_secs = t0.elapsed().as_secs_f64();
+                let fresh: Vec<MeanEntry> = blocks
+                    .iter()
+                    .map(|b| MeanEntry {
+                        cluster_id: b.cluster_id,
+                        mean: b.mean(),
+                        weight: b.mean_weight(n_total, m_noise),
+                    })
+                    .collect();
+                transport.send(WireMsg::Reply(DeviceReply::EpochDone {
+                    device,
+                    means: fresh,
+                    loss_sum,
+                    loss_weight,
+                    step_secs,
+                    flops,
+                }))?;
+            }
+        }
+    }
 }
 
 /// Step one block: build its remote-means view, apply (cached) early
@@ -408,6 +472,49 @@ mod tests {
         let lb = step_block(&backend, &mut b, 0.3, 1.0, &without, &mut rng2, 1).0;
         assert_eq!(a.pos, b.pos);
         assert_eq!(la.to_bits(), lb.to_bits());
+    }
+
+    #[test]
+    fn spawned_device_serves_the_full_command_cycle() {
+        let make: Box<dyn FnOnce() -> Box<dyn StepBackend> + Send> =
+            Box::new(|| Box::new(NativeStepBackend::default()) as Box<dyn StepBackend>);
+        let mut link = spawn_device(0, vec![mini_block()], 2, 0.5, 42, 1, make);
+
+        // ingest fresh positions
+        let table = Arc::new(vec![1.0f32, 2.0, 3.0, 4.0]);
+        link.send_cmd(DeviceCmd::Ingest { positions: table }).unwrap();
+        assert_eq!(link.recv_reply().unwrap(), DeviceReply::Ingested { device: 0 });
+
+        // one epoch
+        link.send_cmd(DeviceCmd::Epoch {
+            epoch: 0,
+            lr: 0.1,
+            exaggeration: 1.0,
+            means: Arc::new(remote_means()),
+        })
+        .unwrap();
+        match link.recv_reply().unwrap() {
+            DeviceReply::EpochDone { device, means, loss_weight, .. } => {
+                assert_eq!(device, 0);
+                assert_eq!(means.len(), 1);
+                assert_eq!(loss_weight, 2.0);
+            }
+            other => panic!("expected EpochDone, got {other:?}"),
+        }
+
+        // export: both real rows come back, ids intact
+        link.send_cmd(DeviceCmd::Export).unwrap();
+        match link.recv_reply().unwrap() {
+            DeviceReply::Exported { positions, .. } => {
+                assert_eq!(positions.len(), 2);
+                assert_eq!(positions[0].0, 0);
+                assert_eq!(positions[1].0, 1);
+            }
+            other => panic!("expected Exported, got {other:?}"),
+        }
+
+        assert!(link.wire_bytes() > 0, "channel links still account frame bytes");
+        link.stop();
     }
 
     #[test]

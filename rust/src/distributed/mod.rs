@@ -1,10 +1,14 @@
-//! The simulated multi-device runtime (paper Fig 2).
+//! The multi-device runtime (paper Fig 2).
 //!
-//! A *device* is a long-lived OS thread owning a set of [`ClusterBlock`]s
-//! (whole K-Means clusters — the paper's sharding unit) and its own step
-//! backend (for the XLA path each device owns a private PJRT client, since
-//! a real deployment gives each GPU its own PJRT device).  The coordinator
-//! drives epoch-synchronous training:
+//! A *device* is a long-lived OS thread **or process** owning a set of
+//! [`ClusterBlock`]s (whole K-Means clusters — the paper's sharding unit)
+//! and its own step backend (for the XLA path each device owns a private
+//! PJRT client, since a real deployment gives each GPU its own PJRT
+//! device).  Either way it runs [`device::run_device_loop`] over a
+//! [`transport::Transport`] — an in-process channel pair, or a TCP/Unix
+//! socket framed by [`proto`] when the device is a `nomad worker` process
+//! streaming its blocks from an mmap'd shard set (DESIGN.md §12).  The
+//! coordinator drives epoch-synchronous training:
 //!
 //! ```text
 //! per epoch:   leader ──Epoch{epoch, lr, means}──▶ every device  (bcast)
@@ -26,7 +30,10 @@
 
 pub mod comm_model;
 pub mod device;
+pub mod proto;
 pub mod sharder;
+pub mod transport;
+pub mod worker;
 
 /// One all-gathered cluster mean.
 #[derive(Clone, Copy, Debug, PartialEq)]

@@ -1,0 +1,699 @@
+//! Versioned binary wire protocol for coordinator <-> device traffic.
+//!
+//! Every message travels as one **frame**:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic      "NMDF"
+//!      4     2  version    u16 LE (PROTO_VERSION)
+//!      6     2  msg type   u16 LE
+//!      8     4  payload length u32 LE
+//!     12     4  crc32 over (msg type ∥ payload length ∥ payload)
+//!     16     n  payload (little-endian fixed-width fields)
+//! ```
+//!
+//! The version rides in **every** header, so a coordinator/worker mismatch
+//! fails on the first frame with a clear error instead of a garbled
+//! payload.  The crc32 guards the payload the same way the checkpoint
+//! store guards its `.npy` state files (DESIGN.md §11): a flipped bit is
+//! an `Err`, never a panic and never silently wrong floats.  It also
+//! covers the type and length header fields — two commands share the
+//! empty payload (`Export`/`Stop`), so a flipped type bit must not alias
+//! one into the other; magic and version are checked by value instead.
+//! Decoding is hardened the way the npy reader is — claimed lengths are
+//! bounds-checked before any allocation, truncated or trailing bytes are
+//! errors.
+//!
+//! Float fields round-trip bitwise (`to_le_bytes`/`from_le_bytes`), which
+//! is what lets a TCP/Unix-socket run reproduce an in-process run exactly.
+
+use super::device::{DeviceCmd, DeviceReply};
+use super::MeanEntry;
+use crate::ensure;
+use crate::util::error::{Context, Result};
+use crate::viz::png::Crc32;
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+/// Frame magic: "NMDF" (NoMaD Frame).
+pub const MAGIC: [u8; 4] = *b"NMDF";
+/// Protocol version carried in every frame header.
+pub const PROTO_VERSION: u16 = 1;
+/// Fixed header size in bytes.
+pub const HEADER_BYTES: usize = 16;
+/// Upper bound on a payload (1 GiB) — a corrupt length field must not
+/// trigger a pathological allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 30;
+
+const TY_HELLO: u16 = 1;
+const TY_ASSIGN: u16 = 2;
+const TY_ASSIGNED: u16 = 3;
+const TY_EPOCH: u16 = 4;
+const TY_EXPORT: u16 = 5;
+const TY_INGEST: u16 = 6;
+const TY_STOP: u16 = 7;
+const TY_EPOCH_DONE: u16 = 8;
+const TY_EXPORTED: u16 = 9;
+const TY_INGESTED: u16 = 10;
+
+/// Who is speaking in the [`WireMsg::Hello`] handshake.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Coordinator,
+    Worker,
+}
+
+/// The coordinator's session-opening work order: which device a worker
+/// plays, and which clusters (in shard order — block RNG streams fork by
+/// block *index*) it must load from its shard set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Assignment {
+    pub device: usize,
+    /// devices that own at least one block (thread-budget divisor)
+    pub n_active: usize,
+    /// full dataset size (for p(m in r) = |r|/n)
+    pub n_total: usize,
+    pub negs: usize,
+    pub seed: u64,
+    pub m_noise: f64,
+    /// cluster ids in assignment order
+    pub clusters: Vec<u32>,
+}
+
+/// Everything that crosses a device boundary.
+///
+/// Handshake and assignment are wire-level concerns, so they live here
+/// rather than in [`DeviceCmd`]/[`DeviceReply`] — the epoch loop itself
+/// speaks exactly the same command/reply enums whether the transport is a
+/// channel or a socket.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireMsg {
+    Hello { role: Role },
+    Assign(Assignment),
+    Assigned { device: usize, n_blocks: usize, n_points: usize },
+    Cmd(DeviceCmd),
+    Reply(DeviceReply),
+}
+
+// ---------------------------------------------------------------- encode
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(cap: usize) -> Enc {
+        Enc { buf: Vec::with_capacity(cap) }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i32(&mut self, v: i32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn means(&mut self, means: &[MeanEntry]) {
+        self.u32(means.len() as u32);
+        for e in means {
+            self.u32(e.cluster_id);
+            self.f32(e.mean[0]);
+            self.f32(e.mean[1]);
+            self.f32(e.weight);
+        }
+    }
+}
+
+fn msg_type(msg: &WireMsg) -> u16 {
+    match msg {
+        WireMsg::Hello { .. } => TY_HELLO,
+        WireMsg::Assign(_) => TY_ASSIGN,
+        WireMsg::Assigned { .. } => TY_ASSIGNED,
+        WireMsg::Cmd(DeviceCmd::Epoch { .. }) => TY_EPOCH,
+        WireMsg::Cmd(DeviceCmd::Export) => TY_EXPORT,
+        WireMsg::Cmd(DeviceCmd::Ingest { .. }) => TY_INGEST,
+        WireMsg::Cmd(DeviceCmd::Stop) => TY_STOP,
+        WireMsg::Reply(DeviceReply::EpochDone { .. }) => TY_EPOCH_DONE,
+        WireMsg::Reply(DeviceReply::Exported { .. }) => TY_EXPORTED,
+        WireMsg::Reply(DeviceReply::Ingested { .. }) => TY_INGESTED,
+    }
+}
+
+/// Payload size in bytes, computed arithmetically (no serialization).
+/// Must agree exactly with [`encode`]'s output — the channel transport
+/// uses it to account would-be wire bytes without paying for encoding.
+fn payload_len(msg: &WireMsg) -> usize {
+    match msg {
+        WireMsg::Hello { .. } => 1,
+        WireMsg::Assign(a) => 4 + 4 + 8 + 4 + 8 + 8 + 4 + 4 * a.clusters.len(),
+        WireMsg::Assigned { .. } => 4 + 4 + 8,
+        WireMsg::Cmd(DeviceCmd::Epoch { means, .. }) => 8 + 4 + 4 + 4 + 16 * means.len(),
+        WireMsg::Cmd(DeviceCmd::Export) | WireMsg::Cmd(DeviceCmd::Stop) => 0,
+        WireMsg::Cmd(DeviceCmd::Ingest { positions }) => 8 + 4 * positions.len(),
+        WireMsg::Reply(DeviceReply::EpochDone { means, .. }) => {
+            4 + 8 + 8 + 8 + 8 + 4 + 16 * means.len()
+        }
+        WireMsg::Reply(DeviceReply::Exported { positions, .. }) => 4 + 8 + 12 * positions.len(),
+        WireMsg::Reply(DeviceReply::Ingested { .. }) => 4,
+    }
+}
+
+/// Total frame size (header + payload) this message encodes to.
+pub fn frame_len(msg: &WireMsg) -> usize {
+    HEADER_BYTES + payload_len(msg)
+}
+
+fn encode_payload(msg: &WireMsg) -> Vec<u8> {
+    let mut e = Enc::new(payload_len(msg));
+    match msg {
+        WireMsg::Hello { role } => {
+            e.u8(match role {
+                Role::Coordinator => 0,
+                Role::Worker => 1,
+            });
+        }
+        WireMsg::Assign(a) => {
+            e.u32(a.device as u32);
+            e.u32(a.n_active as u32);
+            e.u64(a.n_total as u64);
+            e.u32(a.negs as u32);
+            e.u64(a.seed);
+            e.f64(a.m_noise);
+            e.u32(a.clusters.len() as u32);
+            for &c in &a.clusters {
+                e.u32(c);
+            }
+        }
+        WireMsg::Assigned { device, n_blocks, n_points } => {
+            e.u32(*device as u32);
+            e.u32(*n_blocks as u32);
+            e.u64(*n_points as u64);
+        }
+        WireMsg::Cmd(DeviceCmd::Epoch { epoch, lr, exaggeration, means }) => {
+            e.u64(*epoch as u64);
+            e.f32(*lr);
+            e.f32(*exaggeration);
+            e.means(means);
+        }
+        WireMsg::Cmd(DeviceCmd::Export) | WireMsg::Cmd(DeviceCmd::Stop) => {}
+        WireMsg::Cmd(DeviceCmd::Ingest { positions }) => {
+            e.u64(positions.len() as u64);
+            for &v in positions.iter() {
+                e.f32(v);
+            }
+        }
+        WireMsg::Reply(DeviceReply::EpochDone {
+            device,
+            means,
+            loss_sum,
+            loss_weight,
+            step_secs,
+            flops,
+        }) => {
+            e.u32(*device as u32);
+            e.f64(*loss_sum);
+            e.f64(*loss_weight);
+            e.f64(*step_secs);
+            e.f64(*flops);
+            e.means(means);
+        }
+        WireMsg::Reply(DeviceReply::Exported { device, positions }) => {
+            e.u32(*device as u32);
+            e.u64(positions.len() as u64);
+            for (g, p) in positions {
+                e.u32(*g);
+                e.f32(p[0]);
+                e.f32(p[1]);
+            }
+        }
+        WireMsg::Reply(DeviceReply::Ingested { device }) => {
+            e.u32(*device as u32);
+        }
+    }
+    debug_assert_eq!(e.buf.len(), payload_len(msg), "payload_len drifted from encode");
+    e.buf
+}
+
+/// The frame checksum: crc32 over the type and length header fields plus
+/// the payload, so every bit `parse_header` cannot reject by value is
+/// still guarded.
+fn frame_crc(ty: u16, payload: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(&ty.to_le_bytes());
+    c.update(&(payload.len() as u32).to_le_bytes());
+    c.update(payload);
+    c.finish()
+}
+
+/// Encode a full frame (header + payload).
+pub fn encode(msg: &WireMsg) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let ty = msg_type(msg);
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+    out.extend_from_slice(&MAGIC);
+    out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    out.extend_from_slice(&ty.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&frame_crc(ty, &payload).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Dec<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, off: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.off + n <= self.b.len(),
+            "frame payload truncated: need {n} bytes at offset {}, have {}",
+            self.off,
+            self.b.len()
+        );
+        let s = &self.b[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.u32()?.to_le_bytes()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.u64()?.to_le_bytes()))
+    }
+    fn usize32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+    fn usize64(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("64-bit count overflows usize")
+    }
+    /// A claimed element count, sanity-bounded by the bytes actually left
+    /// in the payload so corrupt counts cannot drive huge allocations.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize32()?;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.b.len() - self.off,
+            "claimed count {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+    fn count64(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize64()?;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.b.len() - self.off,
+            "claimed count {n} exceeds remaining payload"
+        );
+        Ok(n)
+    }
+    fn means(&mut self) -> Result<Vec<MeanEntry>> {
+        let n = self.count(16)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(MeanEntry {
+                cluster_id: self.u32()?,
+                mean: [self.f32()?, self.f32()?],
+                weight: self.f32()?,
+            });
+        }
+        Ok(out)
+    }
+    fn done(&self) -> Result<()> {
+        ensure!(
+            self.off == self.b.len(),
+            "frame payload has {} trailing bytes",
+            self.b.len() - self.off
+        );
+        Ok(())
+    }
+}
+
+fn decode_payload(ty: u16, payload: &[u8]) -> Result<WireMsg> {
+    let mut d = Dec::new(payload);
+    let msg = match ty {
+        TY_HELLO => {
+            let role = match d.u8()? {
+                0 => Role::Coordinator,
+                1 => Role::Worker,
+                other => crate::bail!("unknown hello role {other}"),
+            };
+            WireMsg::Hello { role }
+        }
+        TY_ASSIGN => {
+            let device = d.usize32()?;
+            let n_active = d.usize32()?;
+            let n_total = d.usize64()?;
+            let negs = d.usize32()?;
+            let seed = d.u64()?;
+            let m_noise = d.f64()?;
+            let n = d.count(4)?;
+            let mut clusters = Vec::with_capacity(n);
+            for _ in 0..n {
+                clusters.push(d.u32()?);
+            }
+            WireMsg::Assign(Assignment { device, n_active, n_total, negs, seed, m_noise, clusters })
+        }
+        TY_ASSIGNED => WireMsg::Assigned {
+            device: d.usize32()?,
+            n_blocks: d.usize32()?,
+            n_points: d.usize64()?,
+        },
+        TY_EPOCH => {
+            let epoch = d.usize64()?;
+            let lr = d.f32()?;
+            let exaggeration = d.f32()?;
+            let means = Arc::new(d.means()?);
+            WireMsg::Cmd(DeviceCmd::Epoch { epoch, lr, exaggeration, means })
+        }
+        TY_EXPORT => WireMsg::Cmd(DeviceCmd::Export),
+        TY_STOP => WireMsg::Cmd(DeviceCmd::Stop),
+        TY_INGEST => {
+            let n = d.count64(4)?;
+            let mut positions = Vec::with_capacity(n);
+            for _ in 0..n {
+                positions.push(d.f32()?);
+            }
+            WireMsg::Cmd(DeviceCmd::Ingest { positions: Arc::new(positions) })
+        }
+        TY_EPOCH_DONE => {
+            let device = d.usize32()?;
+            let loss_sum = d.f64()?;
+            let loss_weight = d.f64()?;
+            let step_secs = d.f64()?;
+            let flops = d.f64()?;
+            let means = d.means()?;
+            WireMsg::Reply(DeviceReply::EpochDone {
+                device,
+                means,
+                loss_sum,
+                loss_weight,
+                step_secs,
+                flops,
+            })
+        }
+        TY_EXPORTED => {
+            let device = d.usize32()?;
+            let n = d.count64(12)?;
+            let mut positions = Vec::with_capacity(n);
+            for _ in 0..n {
+                positions.push((d.u32()?, [d.f32()?, d.f32()?]));
+            }
+            WireMsg::Reply(DeviceReply::Exported { device, positions })
+        }
+        TY_INGESTED => WireMsg::Reply(DeviceReply::Ingested { device: d.usize32()? }),
+        other => crate::bail!("unknown frame type {other}"),
+    };
+    d.done()?;
+    Ok(msg)
+}
+
+/// Validated header fields: (msg type, payload length).
+fn parse_header(h: &[u8; HEADER_BYTES]) -> Result<(u16, usize)> {
+    ensure!(h[0..4] == MAGIC, "bad frame magic {:02x?}", &h[0..4]);
+    let version = u16::from_le_bytes([h[4], h[5]]);
+    ensure!(
+        version == PROTO_VERSION,
+        "protocol version mismatch: peer speaks v{version}, this build speaks v{PROTO_VERSION}"
+    );
+    let ty = u16::from_le_bytes([h[6], h[7]]);
+    let len = u32::from_le_bytes([h[8], h[9], h[10], h[11]]);
+    ensure!(len <= MAX_PAYLOAD, "frame payload length {len} exceeds {MAX_PAYLOAD}");
+    Ok((ty, len as usize))
+}
+
+/// Decode one complete frame from a byte slice (tests, fuzzing).  The
+/// slice must hold exactly one frame — truncation and trailing bytes are
+/// both errors.
+pub fn decode(frame: &[u8]) -> Result<WireMsg> {
+    ensure!(
+        frame.len() >= HEADER_BYTES,
+        "frame truncated: {} bytes, header needs {HEADER_BYTES}",
+        frame.len()
+    );
+    let mut h = [0u8; HEADER_BYTES];
+    h.copy_from_slice(&frame[..HEADER_BYTES]);
+    let (ty, len) = parse_header(&h)?;
+    let payload = &frame[HEADER_BYTES..];
+    ensure!(
+        payload.len() == len,
+        "frame payload is {} bytes, header claims {len}",
+        payload.len()
+    );
+    let want = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+    let got = frame_crc(ty, payload);
+    ensure!(got == want, "frame crc mismatch: computed {got:08x}, header says {want:08x}");
+    decode_payload(ty, payload)
+}
+
+/// Write one frame; returns the bytes written.
+pub fn write_frame(w: &mut impl Write, msg: &WireMsg) -> Result<usize> {
+    let frame = encode(msg);
+    w.write_all(&frame).context("write frame")?;
+    Ok(frame.len())
+}
+
+/// Read one frame; returns the message and the bytes consumed.
+pub fn read_frame(r: &mut impl Read) -> Result<(WireMsg, usize)> {
+    let mut h = [0u8; HEADER_BYTES];
+    r.read_exact(&mut h).context("read frame header")?;
+    let (ty, len) = parse_header(&h)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).context("read frame payload")?;
+    let want = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
+    let got = frame_crc(ty, &payload);
+    ensure!(got == want, "frame crc mismatch: computed {got:08x}, header says {want:08x}");
+    let msg = decode_payload(ty, &payload)?;
+    Ok((msg, HEADER_BYTES + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn sample_msgs() -> Vec<WireMsg> {
+        let means = vec![
+            MeanEntry { cluster_id: 0, mean: [1.5, -2.25], weight: 0.125 },
+            MeanEntry { cluster_id: 7, mean: [-0.0, f32::MIN_POSITIVE], weight: 3.0 },
+        ];
+        vec![
+            WireMsg::Hello { role: Role::Coordinator },
+            WireMsg::Hello { role: Role::Worker },
+            WireMsg::Assign(Assignment {
+                device: 3,
+                n_active: 2,
+                n_total: 100_000,
+                negs: 8,
+                seed: u64::MAX,
+                m_noise: 5.5,
+                clusters: vec![9, 4, 17],
+            }),
+            WireMsg::Assigned { device: 3, n_blocks: 3, n_points: 41_234 },
+            WireMsg::Cmd(DeviceCmd::Epoch {
+                epoch: 123,
+                lr: 0.75,
+                exaggeration: 4.0,
+                means: Arc::new(means.clone()),
+            }),
+            WireMsg::Cmd(DeviceCmd::Export),
+            WireMsg::Cmd(DeviceCmd::Ingest {
+                positions: Arc::new(vec![0.0, -1.5, f32::NAN, 1.0e-38]),
+            }),
+            WireMsg::Cmd(DeviceCmd::Stop),
+            WireMsg::Reply(DeviceReply::EpochDone {
+                device: 1,
+                means,
+                loss_sum: -123.456,
+                loss_weight: 99.5,
+                step_secs: 0.001,
+                flops: 1.0e12,
+            }),
+            WireMsg::Reply(DeviceReply::Exported {
+                device: 0,
+                positions: vec![(0, [1.0, 2.0]), (42, [-3.5, 0.0])],
+            }),
+            WireMsg::Reply(DeviceReply::Ingested { device: 5 }),
+        ]
+    }
+
+    /// NaN-tolerant structural equality (PartialEq is false for NaN floats,
+    /// but the wire must still round-trip their bits exactly).
+    fn bits_equal(a: &WireMsg, b: &WireMsg) -> bool {
+        encode(a) == encode(b)
+    }
+
+    #[test]
+    fn roundtrip_every_variant() {
+        for msg in sample_msgs() {
+            let frame = encode(&msg);
+            let back = decode(&frame).unwrap();
+            assert!(bits_equal(&msg, &back), "{msg:?} != {back:?}");
+        }
+    }
+
+    #[test]
+    fn frame_len_matches_encoding() {
+        for msg in sample_msgs() {
+            assert_eq!(frame_len(&msg), encode(&msg).len(), "{msg:?}");
+        }
+    }
+
+    #[test]
+    fn stream_roundtrip_back_to_back_frames() {
+        let msgs = sample_msgs();
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_frame(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            let (back, n) = read_frame(&mut r).unwrap();
+            assert!(bits_equal(m, &back));
+            assert_eq!(n, frame_len(m));
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncation_anywhere_is_an_error_not_a_panic() {
+        for msg in sample_msgs() {
+            let frame = encode(&msg);
+            for cut in 0..frame.len() {
+                assert!(decode(&frame[..cut]).is_err(), "cut at {cut} must fail");
+            }
+        }
+    }
+
+    #[test]
+    fn single_bit_corruption_is_detected() {
+        // flip one bit in every byte position; header corruption trips the
+        // magic/version/length checks, payload corruption trips the crc
+        let msg = &sample_msgs()[2];
+        let frame = encode(msg);
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x01;
+            match decode(&bad) {
+                Err(_) => {}
+                Ok(back) => {
+                    // a flipped bit that still decodes must not decode to
+                    // the original (e.g. impossible here, but be explicit)
+                    panic!("corrupt byte {i} decoded as {back:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wrong_version_is_rejected_with_both_versions_named() {
+        let mut frame = encode(&WireMsg::Cmd(DeviceCmd::Stop));
+        frame[4] = 2; // version 2
+        let e = decode(&frame).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+        assert!(e.contains('2') && e.contains('1'), "{e}");
+    }
+
+    #[test]
+    fn unknown_type_and_bad_magic_rejected() {
+        let mut frame = encode(&WireMsg::Cmd(DeviceCmd::Export));
+        frame[6] = 0xEE;
+        frame[7] = 0xEE;
+        // the crc covers the type, so the raw edit trips it...
+        assert!(decode(&frame).unwrap_err().to_string().contains("crc"));
+        // ...and with a consistent crc the type check must fire
+        frame[12..16].copy_from_slice(&frame_crc(0xEEEE, &[]).to_le_bytes());
+        assert!(decode(&frame).unwrap_err().to_string().contains("type"));
+
+        let mut frame = encode(&WireMsg::Cmd(DeviceCmd::Export));
+        frame[0] = b'X';
+        assert!(decode(&frame).unwrap_err().to_string().contains("magic"));
+    }
+
+    #[test]
+    fn absurd_length_rejected_before_allocation() {
+        let mut frame = encode(&WireMsg::Cmd(DeviceCmd::Stop));
+        frame[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode(&frame).is_err());
+        // and through the streaming reader too
+        let mut r = &frame[..];
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn corrupt_interior_count_rejected() {
+        // Epoch payload: the means count lives after epoch+lr+exag; blow it
+        // up without fixing the crc -> crc catches it; fix the crc -> the
+        // count/remaining-bytes check catches it
+        let msg = WireMsg::Cmd(DeviceCmd::Epoch {
+            epoch: 1,
+            lr: 0.5,
+            exaggeration: 1.0,
+            means: Arc::new(vec![MeanEntry { cluster_id: 0, mean: [0.0, 0.0], weight: 1.0 }]),
+        });
+        let mut frame = encode(&msg);
+        let count_off = HEADER_BYTES + 8 + 4 + 4;
+        frame[count_off..count_off + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+        assert!(decode(&frame).is_err(), "crc must catch the edit");
+        let fixed_crc = frame_crc(TY_EPOCH, &frame[HEADER_BYTES..]);
+        frame[12..16].copy_from_slice(&fixed_crc.to_le_bytes());
+        let e = decode(&frame).unwrap_err().to_string();
+        assert!(e.contains("count") || e.contains("truncated"), "{e}");
+    }
+
+    #[test]
+    fn trailing_payload_bytes_rejected() {
+        let msg = WireMsg::Reply(DeviceReply::Ingested { device: 2 });
+        let mut frame = encode(&msg);
+        frame.extend_from_slice(&[0u8; 4]);
+        // header now disagrees with the slice length
+        assert!(decode(&frame).is_err());
+        // make the header agree and fix the crc: the payload decoder must
+        // still reject the 4 unconsumed bytes
+        let len = (frame.len() - HEADER_BYTES) as u32;
+        frame[8..12].copy_from_slice(&len.to_le_bytes());
+        let fixed_crc = frame_crc(TY_INGESTED, &frame[HEADER_BYTES..]);
+        frame[12..16].copy_from_slice(&fixed_crc.to_le_bytes());
+        let e = decode(&frame).unwrap_err().to_string();
+        assert!(e.contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn floats_roundtrip_bitwise() {
+        let weird = vec![0.1f32, -0.0, f32::NAN, f32::INFINITY, f32::MIN_POSITIVE, 1.0e-45];
+        let msg = WireMsg::Cmd(DeviceCmd::Ingest { positions: Arc::new(weird.clone()) });
+        match decode(&encode(&msg)).unwrap() {
+            WireMsg::Cmd(DeviceCmd::Ingest { positions }) => {
+                assert_eq!(positions.len(), weird.len());
+                for (a, b) in positions.iter().zip(&weird) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("wrong variant {other:?}"),
+        }
+    }
+}

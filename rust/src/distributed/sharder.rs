@@ -21,10 +21,23 @@ pub fn shard_clusters(sizes: &[usize], n_devices: usize) -> Vec<Vec<usize>> {
     out
 }
 
-/// Imbalance diagnostic: max device load / mean device load.
+/// Number of shards that actually own clusters.  Thread budgets and
+/// `Assignment::n_active` divide across *these* — a `n_devices >
+/// n_clusters` run spawns empty devices that must not hold a share
+/// ([`super::device::intra_device_budget`]).
+pub fn active_shards(shards: &[Vec<usize>]) -> usize {
+    shards.iter().filter(|s| !s.is_empty()).count()
+}
+
+/// Imbalance diagnostic: max device load / mean device load, over the
+/// devices that own at least one cluster.  Empty shards are excluded from
+/// the mean: they are a fact of `n_devices > n_clusters` runs, not a
+/// balance failure, and counting them would report a phantom imbalance of
+/// `n_devices / n_clusters` for a perfectly balanced assignment.
 pub fn imbalance(sizes: &[usize], shards: &[Vec<usize>]) -> f64 {
     let loads: Vec<usize> = shards
         .iter()
+        .filter(|s| !s.is_empty())
         .map(|s| s.iter().map(|&c| sizes[c]).sum())
         .collect();
     let max = *loads.iter().max().unwrap_or(&0) as f64;
@@ -76,7 +89,54 @@ mod tests {
     fn more_devices_than_clusters() {
         let sizes = vec![10, 20];
         let shards = shard_clusters(&sizes, 5);
-        let nonempty = shards.iter().filter(|s| !s.is_empty()).count();
-        assert_eq!(nonempty, 2);
+        assert_eq!(shards.len(), 5, "every requested device gets a (possibly empty) shard");
+        assert_eq!(active_shards(&shards), 2);
+        // the two clusters land on the two lowest device ids, largest first
+        assert_eq!(shards[0], vec![1]);
+        assert_eq!(shards[1], vec![0]);
+        assert!(shards[2..].iter().all(|s| s.is_empty()));
+        // a perfectly balanced-as-possible assignment must not report the
+        // phantom 5/2 imbalance that counting empty shards would produce
+        let imb = imbalance(&sizes, &shards);
+        assert!((imb - 20.0 / 15.0).abs() < 1e-9, "imbalance {imb}");
+    }
+
+    #[test]
+    fn zero_devices_degrades_to_one() {
+        let sizes = vec![4, 4, 4];
+        let shards = shard_clusters(&sizes, 0);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(active_shards(&shards), 1);
+        assert_eq!(shards[0].len(), 3);
+        assert!((imbalance(&sizes, &shards) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_clusters_leaves_every_shard_empty() {
+        let sizes: Vec<usize> = Vec::new();
+        let shards = shard_clusters(&sizes, 3);
+        assert_eq!(shards.len(), 3);
+        assert_eq!(active_shards(&shards), 0);
+        assert_eq!(imbalance(&sizes, &shards), 1.0, "no load, no imbalance");
+    }
+
+    #[test]
+    fn zero_size_clusters_are_assigned_without_panic() {
+        // empty clusters (possible under aggressive max_cluster_size
+        // splits) still get a home and still count as owned work
+        let sizes = vec![0, 10, 0, 5];
+        let shards = shard_clusters(&sizes, 2);
+        let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert!(imbalance(&sizes, &shards).is_finite());
+    }
+
+    #[test]
+    fn assignment_is_deterministic() {
+        let sizes = vec![7, 7, 7, 3, 3, 9];
+        let a = shard_clusters(&sizes, 4);
+        let b = shard_clusters(&sizes, 4);
+        assert_eq!(a, b, "ties must break deterministically");
     }
 }

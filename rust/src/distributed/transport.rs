@@ -1,0 +1,319 @@
+//! Message transports: in-process channel pair and framed socket streams.
+//!
+//! The coordinator's epoch loop speaks [`WireMsg`] over a [`Transport`]
+//! and never learns which one it got:
+//!
+//! * [`channel_pair`] — two crossed mpsc channels.  Messages move without
+//!   serialization (the simulated multi-device mode), but every send/recv
+//!   still accounts the exact frame bytes the message *would* occupy on a
+//!   socket ([`proto::frame_len`]), so `CommStats` wire-byte numbers are
+//!   comparable across placements.
+//! * [`FramedTransport`] — a real byte stream (TCP or Unix socket) framed
+//!   by [`proto`]; counts the bytes actually written/read.
+//!
+//! [`Endpoint`] parses the CLI's worker address syntax (`host:port`, or
+//! `unix:/path/to.sock`) and [`connect`] dials it with retry, so a
+//! coordinator can race worker startup in CI without a sleep-loop script.
+
+use super::proto::{self, Role, WireMsg};
+use crate::util::error::{Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// A bidirectional, ordered, reliable message pipe.
+pub trait Transport: Send {
+    fn send(&mut self, msg: WireMsg) -> Result<()>;
+    /// Blocking receive of the next message.
+    fn recv(&mut self) -> Result<WireMsg>;
+    /// Cumulative frame bytes sent (real or would-be).
+    fn bytes_sent(&self) -> u64;
+    /// Cumulative frame bytes received (real or would-be).
+    fn bytes_received(&self) -> u64;
+}
+
+// ------------------------------------------------------------- channels
+
+/// One end of an in-process transport (see [`channel_pair`]).
+pub struct ChannelTransport {
+    tx: Sender<WireMsg>,
+    rx: Receiver<WireMsg>,
+    sent: u64,
+    received: u64,
+}
+
+/// Two crossed unbounded channels: what end A sends, end B receives.
+pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
+    let (a_tx, b_rx) = std::sync::mpsc::channel();
+    let (b_tx, a_rx) = std::sync::mpsc::channel();
+    (
+        ChannelTransport { tx: a_tx, rx: a_rx, sent: 0, received: 0 },
+        ChannelTransport { tx: b_tx, rx: b_rx, sent: 0, received: 0 },
+    )
+}
+
+impl Transport for ChannelTransport {
+    fn send(&mut self, msg: WireMsg) -> Result<()> {
+        self.sent += proto::frame_len(&msg) as u64;
+        self.tx.send(msg).ok().context("channel transport: peer hung up")
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        let msg = self.rx.recv().ok().context("channel transport: peer hung up")?;
+        self.received += proto::frame_len(&msg) as u64;
+        Ok(msg)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+// -------------------------------------------------------------- streams
+
+/// A [`Transport`] over any `Read + Write` byte stream, using the
+/// length-prefixed frames of [`proto`].
+pub struct FramedTransport<S: Read + Write + Send> {
+    stream: S,
+    sent: u64,
+    received: u64,
+}
+
+impl<S: Read + Write + Send> FramedTransport<S> {
+    pub fn new(stream: S) -> FramedTransport<S> {
+        FramedTransport { stream, sent: 0, received: 0 }
+    }
+}
+
+impl<S: Read + Write + Send> Transport for FramedTransport<S> {
+    fn send(&mut self, msg: WireMsg) -> Result<()> {
+        let n = proto::write_frame(&mut self.stream, &msg)?;
+        self.stream.flush().context("flush frame")?;
+        self.sent += n as u64;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        let (msg, n) = proto::read_frame(&mut self.stream)?;
+        self.received += n as u64;
+        Ok(msg)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+// ------------------------------------------------------------ endpoints
+
+/// A worker address: `host:port` (TCP) or `unix:/path/to.sock`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(String),
+    #[cfg(unix)]
+    Unix(std::path::PathBuf),
+}
+
+impl Endpoint {
+    pub fn parse(spec: &str) -> Result<Endpoint> {
+        if let Some(path) = spec.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                crate::ensure!(!path.is_empty(), "empty unix socket path in '{spec}'");
+                return Ok(Endpoint::Unix(std::path::PathBuf::from(path)));
+            }
+            #[cfg(not(unix))]
+            crate::bail!("unix socket endpoints are not supported on this platform");
+        }
+        crate::ensure!(
+            spec.contains(':'),
+            "worker endpoint '{spec}' is neither host:port nor unix:/path"
+        );
+        Ok(Endpoint::Tcp(spec.to_string()))
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "{a}"),
+            #[cfg(unix)]
+            Endpoint::Unix(p) => write!(f, "unix:{}", p.display()),
+        }
+    }
+}
+
+/// Dial a worker, retrying until `patience` runs out — worker processes
+/// launched in parallel with the coordinator (the CI smoke job) need a
+/// moment to bind their listeners.
+pub fn connect(ep: &Endpoint, patience: Duration) -> Result<Box<dyn Transport>> {
+    let t0 = Instant::now();
+    loop {
+        let attempt: Result<Box<dyn Transport>> = match ep {
+            Endpoint::Tcp(addr) => TcpStream::connect(addr.as_str())
+                .map_err(crate::util::error::Error::msg)
+                .map(|s| {
+                    let _ = s.set_nodelay(true);
+                    Box::new(FramedTransport::new(s)) as Box<dyn Transport>
+                }),
+            #[cfg(unix)]
+            Endpoint::Unix(path) => std::os::unix::net::UnixStream::connect(path)
+                .map_err(crate::util::error::Error::msg)
+                .map(|s| Box::new(FramedTransport::new(s)) as Box<dyn Transport>),
+        };
+        match attempt {
+            Ok(t) => return Ok(t),
+            Err(_) if t0.elapsed() < patience => {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("connect to worker at {ep}"));
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ handshake
+
+/// Coordinator side of the version/role handshake: say hello, expect a
+/// worker back.  Any version mismatch already failed in the frame header.
+pub fn coordinator_handshake(t: &mut dyn Transport) -> Result<()> {
+    t.send(WireMsg::Hello { role: Role::Coordinator })?;
+    match t.recv()? {
+        WireMsg::Hello { role: Role::Worker } => Ok(()),
+        other => crate::bail!("handshake: expected worker hello, got {other:?}"),
+    }
+}
+
+/// Worker side: expect the coordinator's hello, answer with ours.
+pub fn worker_handshake(t: &mut dyn Transport) -> Result<()> {
+    match t.recv()? {
+        WireMsg::Hello { role: Role::Coordinator } => {}
+        other => crate::bail!("handshake: expected coordinator hello, got {other:?}"),
+    }
+    t.send(WireMsg::Hello { role: Role::Worker })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::device::DeviceCmd;
+    use crate::distributed::MeanEntry;
+    use std::sync::Arc;
+
+    fn epoch_msg() -> WireMsg {
+        WireMsg::Cmd(DeviceCmd::Epoch {
+            epoch: 3,
+            lr: 0.5,
+            exaggeration: 1.0,
+            means: Arc::new(vec![MeanEntry { cluster_id: 1, mean: [0.5, -0.5], weight: 2.0 }]),
+        })
+    }
+
+    #[test]
+    fn channel_pair_moves_messages_and_counts_frame_bytes() {
+        let (mut a, mut b) = channel_pair();
+        let msg = epoch_msg();
+        let want = proto::frame_len(&msg) as u64;
+        a.send(msg.clone()).unwrap();
+        let got = b.recv().unwrap();
+        assert_eq!(got, msg);
+        assert_eq!(a.bytes_sent(), want);
+        assert_eq!(b.bytes_received(), want);
+        assert_eq!(a.bytes_received(), 0);
+
+        b.send(WireMsg::Reply(crate::distributed::device::DeviceReply::Ingested {
+            device: 0,
+        }))
+        .unwrap();
+        a.recv().unwrap();
+        assert_eq!(a.bytes_received(), b.bytes_sent());
+    }
+
+    #[test]
+    fn dropped_peer_is_an_error_not_a_panic() {
+        let (mut a, b) = channel_pair();
+        drop(b);
+        assert!(a.send(epoch_msg()).is_err());
+        assert!(a.recv().is_err());
+    }
+
+    #[test]
+    fn framed_tcp_roundtrip_counts_real_bytes() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut t = FramedTransport::new(s);
+            let msg = t.recv().unwrap();
+            t.send(msg).unwrap(); // echo
+            (t.bytes_sent(), t.bytes_received())
+        });
+        let mut c = FramedTransport::new(TcpStream::connect(addr).unwrap());
+        let msg = epoch_msg();
+        let want = proto::frame_len(&msg) as u64;
+        c.send(msg.clone()).unwrap();
+        let back = c.recv().unwrap();
+        assert_eq!(back, msg);
+        assert_eq!(c.bytes_sent(), want);
+        assert_eq!(c.bytes_received(), want);
+        let (srv_sent, srv_recv) = server.join().unwrap();
+        assert_eq!((srv_sent, srv_recv), (want, want));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn framed_unix_socket_roundtrip_and_handshake() {
+        let dir = std::env::temp_dir().join("nomad_transport_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("hs_{}.sock", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let listener = std::os::unix::net::UnixListener::bind(&path).unwrap();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut t = FramedTransport::new(s);
+            worker_handshake(&mut t).unwrap();
+            matches!(t.recv().unwrap(), WireMsg::Cmd(DeviceCmd::Stop))
+        });
+        let ep = Endpoint::parse(&format!("unix:{}", path.display())).unwrap();
+        let mut c = connect(&ep, Duration::from_secs(5)).unwrap();
+        coordinator_handshake(&mut *c).unwrap();
+        c.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap();
+        assert!(server.join().unwrap());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn endpoint_parsing() {
+        let tcp = Endpoint::parse("127.0.0.1:9000").unwrap();
+        assert_eq!(tcp, Endpoint::Tcp("127.0.0.1:9000".into()));
+        assert!(Endpoint::parse("no-port-here").is_err());
+        #[cfg(unix)]
+        {
+            assert_eq!(
+                Endpoint::parse("unix:/tmp/w0.sock").unwrap(),
+                Endpoint::Unix("/tmp/w0.sock".into())
+            );
+            assert!(Endpoint::parse("unix:").is_err());
+        }
+    }
+
+    #[test]
+    fn connect_gives_up_after_patience() {
+        // a port from the dynamic range with nothing listening; patience of
+        // zero means exactly one attempt
+        let ep = Endpoint::Tcp("127.0.0.1:1".into());
+        let t0 = Instant::now();
+        assert!(connect(&ep, Duration::from_millis(0)).is_err());
+        assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+}

@@ -1,0 +1,332 @@
+//! The `nomad worker` process: one simulated GPU as a real OS process.
+//!
+//! A worker binds a listener (TCP or Unix socket), accepts the
+//! coordinator, handshakes, receives its [`Assignment`], loads **only the
+//! assigned clusters** from an mmap'd shard set ([`ShardSet`]) — never the
+//! corpus, never the init matrix — and then hands the connection to the
+//! exact same [`run_device_loop`] the in-process device threads run.
+//! Positions arrive over the wire via `DeviceCmd::Ingest`, epochs are
+//! driven by the coordinator's absolute-epoch broadcast, and the
+//! `(device seed, epoch, block)` RNG forks are untouched — which is why a
+//! multi-process run is bitwise identical to an in-process one
+//! (`tests/multiprocess.rs`, and the CI worker-smoke job with real
+//! processes).
+
+use super::device::run_device_loop;
+use super::proto::{Assignment, WireMsg};
+use super::transport::{worker_handshake, Endpoint, FramedTransport, Transport};
+use crate::data::shard::ShardSet;
+use crate::embed::native::NativeStepBackend;
+use crate::embed::ClusterBlock;
+use crate::ensure;
+use crate::util::error::{Context, Result};
+use std::path::Path;
+
+/// A bound worker listener, either flavor of [`Endpoint`].
+pub enum WorkerListener {
+    Tcp(std::net::TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+impl WorkerListener {
+    /// Bind `ep`.  A stale Unix socket file (a previous worker that died
+    /// without cleanup) is removed first — bind would otherwise fail with
+    /// `AddrInUse` forever.
+    pub fn bind(ep: &Endpoint) -> Result<WorkerListener> {
+        match ep {
+            Endpoint::Tcp(addr) => {
+                let l = std::net::TcpListener::bind(addr.as_str())
+                    .with_context(|| format!("bind {addr}"))?;
+                Ok(WorkerListener::Tcp(l))
+            }
+            #[cfg(unix)]
+            Endpoint::Unix(path) => {
+                let _ = std::fs::remove_file(path);
+                let l = std::os::unix::net::UnixListener::bind(path)
+                    .with_context(|| format!("bind unix:{}", path.display()))?;
+                Ok(WorkerListener::Unix(l))
+            }
+        }
+    }
+
+    /// The bound address, in [`Endpoint::parse`] syntax.  For TCP this is
+    /// the *resolved* address — bind to `127.0.0.1:0` and read the kernel's
+    /// port choice back (how the loopback tests avoid port collisions).
+    pub fn local_addr_string(&self) -> String {
+        match self {
+            WorkerListener::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "?:?".to_string()),
+            #[cfg(unix)]
+            WorkerListener::Unix(l) => match l.local_addr() {
+                Ok(a) => match a.as_pathname() {
+                    Some(p) => format!("unix:{}", p.display()),
+                    None => "unix:?".to_string(),
+                },
+                Err(_) => "unix:?".to_string(),
+            },
+        }
+    }
+
+    /// Block until the coordinator dials in; returns the framed connection.
+    pub fn accept_transport(&self) -> Result<Box<dyn Transport>> {
+        match self {
+            WorkerListener::Tcp(l) => {
+                let (s, _) = l.accept().context("accept coordinator connection")?;
+                let _ = s.set_nodelay(true);
+                Ok(Box::new(FramedTransport::new(s)))
+            }
+            #[cfg(unix)]
+            WorkerListener::Unix(l) => {
+                let (s, _) = l.accept().context("accept coordinator connection")?;
+                Ok(Box::new(FramedTransport::new(s)))
+            }
+        }
+    }
+}
+
+/// Check the coordinator's assignment against the shard manifest before
+/// loading anything: a coordinator driving a different dataset or seed
+/// must fail loudly here, not produce a silently-wrong embedding.
+fn validate_assignment(a: &Assignment, shards: &ShardSet) -> Result<()> {
+    let m = &shards.manifest;
+    ensure!(
+        a.n_total == m.n,
+        "assignment is for n={} points, shard set holds {}",
+        a.n_total,
+        m.n
+    );
+    ensure!(
+        a.seed == m.seed,
+        "assignment seed {} != shard set seed {} (different run)",
+        a.seed,
+        m.seed
+    );
+    for &c in &a.clusters {
+        ensure!(
+            (c as usize) < m.clusters.len(),
+            "assigned cluster {c} out of range (shard set has {})",
+            m.clusters.len()
+        );
+    }
+    Ok(())
+}
+
+/// Serve one coordinator session over an accepted connection: handshake,
+/// receive the assignment, load the assigned blocks from the shard set (in
+/// assignment order — the block-index RNG forks depend on it), acknowledge
+/// with block/point counts, then run the shared device loop to `Stop`.
+pub fn serve_session(
+    transport: &mut dyn Transport,
+    shards: &ShardSet,
+    verbose: bool,
+) -> Result<()> {
+    worker_handshake(transport)?;
+    let a = match transport.recv()? {
+        WireMsg::Assign(a) => a,
+        other => crate::bail!("worker: expected an assignment, got {other:?}"),
+    };
+    validate_assignment(&a, shards)?;
+
+    let mut blocks: Vec<ClusterBlock> = Vec::with_capacity(a.clusters.len());
+    for &c in &a.clusters {
+        blocks.push(shards.load_block(c as usize, a.n_total, a.m_noise, a.negs)?);
+    }
+    let n_points: usize = blocks.iter().map(|b| b.n_real).sum();
+    if verbose {
+        eprintln!(
+            "worker: device {} assigned {} clusters / {} points",
+            a.device,
+            blocks.len(),
+            n_points
+        );
+    }
+    transport.send(WireMsg::Assigned {
+        device: a.device,
+        n_blocks: blocks.len(),
+        n_points,
+    })?;
+
+    let backend = NativeStepBackend::default();
+    run_device_loop(
+        a.device,
+        &mut blocks,
+        a.n_total,
+        a.m_noise,
+        a.seed,
+        a.n_active,
+        &backend,
+        transport,
+    )
+}
+
+/// The `nomad worker` entry point: open the shard set, bind, serve one
+/// coordinator session, exit.  One session per process keeps lifetimes
+/// simple — the coordinator's `Stop` is the worker's exit.
+pub fn run_worker(listen: &Endpoint, shards_dir: &Path, verbose: bool) -> Result<()> {
+    let shards = ShardSet::open(shards_dir)
+        .with_context(|| format!("open shard set at {}", shards_dir.display()))?;
+    let listener = WorkerListener::bind(listen)?;
+    if verbose {
+        eprintln!(
+            "worker: listening on {} ({} clusters / {} points in shard set)",
+            listener.local_addr_string(),
+            shards.manifest.clusters.len(),
+            shards.manifest.n
+        );
+    }
+    let mut transport = listener.accept_transport()?;
+    let out = serve_session(&mut *transport, &shards, verbose);
+    // a dead socket file should not outlive the worker
+    #[cfg(unix)]
+    if let Endpoint::Unix(path) = listen {
+        let _ = std::fs::remove_file(path);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::device::{DeviceCmd, DeviceReply};
+    use crate::distributed::proto::Role;
+    use crate::distributed::transport::{channel_pair, connect, coordinator_handshake};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn test_shards(name: &str) -> ShardSet {
+        use crate::ann::backend::NativeBackend;
+        use crate::ann::graph::{edge_weights, WeightModel};
+        use crate::ann::{ClusterIndex, IndexParams};
+        use crate::checkpoint::DatasetSpec;
+        use crate::data::gaussian_mixture;
+        use crate::data::shard::write_shards;
+        use crate::util::rng::Rng;
+
+        let dir = std::env::temp_dir().join("nomad_worker_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Rng::new(9);
+        let ds = gaussian_mixture(350, 8, 4, 8.0, 0.2, 0.5, &mut rng);
+        let ip = IndexParams { n_clusters: 4, k: 5, ..Default::default() };
+        let idx = ClusterIndex::build(&ds.x, &ip, &NativeBackend::default(), &mut rng);
+        let ew = edge_weights(&idx, WeightModel::InverseRankForward);
+        let spec =
+            DatasetSpec { kind: "synthetic".into(), source: "test".into(), n: 350, seed: 9 };
+        write_shards(&dir, &idx, &ew, 8, 9, WeightModel::InverseRankForward, &ip, &spec)
+            .unwrap();
+        ShardSet::open(&dir).unwrap()
+    }
+
+    fn assignment(shards: &ShardSet, clusters: Vec<u32>) -> Assignment {
+        Assignment {
+            device: 0,
+            n_active: 1,
+            n_total: shards.manifest.n,
+            negs: 4,
+            seed: shards.manifest.seed,
+            m_noise: 5.0,
+            clusters,
+        }
+    }
+
+    #[test]
+    fn session_over_channel_serves_commands() {
+        let shards = test_shards("session");
+        let n = shards.manifest.n;
+        let (mut coord, mut worker_end) = channel_pair();
+        let a = assignment(&shards, vec![0, 2]);
+        let expect_points: usize =
+            shards.manifest.clusters[0].n + shards.manifest.clusters[2].n;
+
+        let server = std::thread::spawn(move || {
+            serve_session(&mut worker_end, &shards, false).unwrap();
+        });
+
+        coordinator_handshake(&mut coord).unwrap();
+        coord.send(WireMsg::Assign(a)).unwrap();
+        match coord.recv().unwrap() {
+            WireMsg::Assigned { device, n_blocks, n_points } => {
+                assert_eq!(device, 0);
+                assert_eq!(n_blocks, 2);
+                assert_eq!(n_points, expect_points);
+            }
+            other => panic!("expected Assigned, got {other:?}"),
+        }
+
+        // ingest a position table, then export it back
+        let table: Vec<f32> = (0..n * 2).map(|i| i as f32 * 0.01).collect();
+        coord
+            .send(WireMsg::Cmd(DeviceCmd::Ingest { positions: Arc::new(table.clone()) }))
+            .unwrap();
+        assert_eq!(
+            coord.recv().unwrap(),
+            WireMsg::Reply(DeviceReply::Ingested { device: 0 })
+        );
+        coord.send(WireMsg::Cmd(DeviceCmd::Export)).unwrap();
+        match coord.recv().unwrap() {
+            WireMsg::Reply(DeviceReply::Exported { positions, .. }) => {
+                assert_eq!(positions.len(), expect_points);
+                for (g, p) in positions {
+                    assert_eq!(p[0], table[g as usize * 2]);
+                    assert_eq!(p[1], table[g as usize * 2 + 1]);
+                }
+            }
+            other => panic!("expected Exported, got {other:?}"),
+        }
+        coord.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn mismatched_assignment_is_refused() {
+        let shards = test_shards("refuse");
+        let (mut coord, mut worker_end) = channel_pair();
+        let mut a = assignment(&shards, vec![0]);
+        a.seed ^= 1; // different run
+
+        let server =
+            std::thread::spawn(move || serve_session(&mut worker_end, &shards, false));
+        coordinator_handshake(&mut coord).unwrap();
+        coord.send(WireMsg::Assign(a)).unwrap();
+        let err = server.join().unwrap().unwrap_err().to_string();
+        assert!(err.contains("seed"), "{err}");
+    }
+
+    #[test]
+    fn out_of_range_cluster_is_refused() {
+        let shards = test_shards("range");
+        let (mut coord, mut worker_end) = channel_pair();
+        let a = assignment(&shards, vec![99]);
+        let server =
+            std::thread::spawn(move || serve_session(&mut worker_end, &shards, false));
+        coordinator_handshake(&mut coord).unwrap();
+        coord.send(WireMsg::Assign(a)).unwrap();
+        assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn tcp_listener_reports_resolved_port_and_accepts() {
+        let shards = test_shards("tcp");
+        let listener = WorkerListener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = listener.local_addr_string();
+        assert!(!addr.ends_with(":0"), "resolved port, got {addr}");
+
+        let server = std::thread::spawn(move || {
+            let mut t = listener.accept_transport().unwrap();
+            serve_session(&mut *t, &shards, false)
+        });
+        let ep = Endpoint::parse(&addr).unwrap();
+        let mut c = connect(&ep, Duration::from_secs(5)).unwrap();
+        // drive just the handshake prefix, then hang up: the worker must
+        // surface the dropped connection as an error, not a panic
+        c.send(WireMsg::Hello { role: Role::Coordinator }).unwrap();
+        match c.recv().unwrap() {
+            WireMsg::Hello { role: Role::Worker } => {}
+            other => panic!("expected worker hello, got {other:?}"),
+        }
+        drop(c);
+        assert!(server.join().unwrap().is_err());
+    }
+}

@@ -81,8 +81,72 @@ pub fn bucket_for(n: usize) -> usize {
     n.div_ceil(top) * top
 }
 
+/// The unpadded training topology of one cluster: exactly what a
+/// [`ClusterBlock`] is deterministically derived from (besides positions).
+///
+/// This is the **shard unit on disk** (`data/shard.rs`): a worker process
+/// that loads a cluster's `BlockParts` from an mmap'd shard file and calls
+/// [`ClusterBlock::from_parts`] builds a block identical to what the
+/// coordinator's in-process path builds from the full index — the bitwise
+/// equality of multi-process runs rests on this type being the complete
+/// interface between the two paths.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockParts {
+    /// global cluster id in the index
+    pub cluster_id: u32,
+    /// global point ids of the real rows
+    pub global_ids: Vec<u32>,
+    /// kNN fanout
+    pub k: usize,
+    /// local neighbor indices, n_real x k (self-loop for missing slots)
+    pub nbr_idx: Vec<i32>,
+    /// p(j|i) weights, n_real x k (0 for missing slots)
+    pub nbr_w: Vec<f32>,
+}
+
+impl BlockParts {
+    /// Extract cluster `c`'s topology from the built index + edge weights
+    /// (the shard writer's path; also the first half of
+    /// [`ClusterBlock::build`]).
+    pub fn extract(index: &ClusterIndex, weights: &EdgeWeights, c: usize) -> BlockParts {
+        let members = &index.clusters[c];
+        let n_real = members.len();
+        let k = index.k;
+
+        // local index of each global member
+        let mut local_of = std::collections::HashMap::with_capacity(n_real * 2);
+        for (l, &g) in members.iter().enumerate() {
+            local_of.insert(g, l as i32);
+        }
+
+        let mut nbr_idx = vec![0i32; n_real * k];
+        let mut nbr_w = vec![0.0f32; n_real * k];
+        for (l, &g) in members.iter().enumerate() {
+            let g = g as usize;
+            for s in 0..k {
+                let j = index.nbr_idx[g * k + s];
+                if j == NO_NEIGHBOR {
+                    nbr_idx[l * k + s] = l as i32; // self loop, weight 0
+                } else {
+                    let lj = *local_of
+                        .get(&j)
+                        .expect("kNN edge crossed cluster boundary — index invariant violated");
+                    nbr_idx[l * k + s] = lj;
+                    nbr_w[l * k + s] = weights.w[g * k + s];
+                }
+            }
+        }
+        BlockParts { cluster_id: c as u32, global_ids: members.clone(), k, nbr_idx, nbr_w }
+    }
+
+    /// Real row count.
+    pub fn n_real(&self) -> usize {
+        self.global_ids.len()
+    }
+}
+
 /// One cluster of points, padded to a bucket, with local-index edges.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClusterBlock {
     /// global cluster id in the index
     pub cluster_id: u32,
@@ -138,38 +202,39 @@ impl ClusterBlock {
         m_noise: f64,
         negs: usize,
     ) -> ClusterBlock {
-        let members = &index.clusters[c];
-        let n_real = members.len();
-        let size = bucket_for(n_real.max(1));
-        let k = index.k;
+        let parts = BlockParts::extract(index, weights, c);
+        ClusterBlock::from_parts(parts, Some(init), n_total, m_noise, negs)
+    }
 
-        // local index of each global member
-        let mut local_of = std::collections::HashMap::with_capacity(n_real * 2);
-        for (l, &g) in members.iter().enumerate() {
-            local_of.insert(g, l as i32);
-        }
+    /// Build the block from its serializable topology ([`BlockParts`] —
+    /// extracted live or loaded from a shard file).  With `init = None`
+    /// the positions start at 0 and await a `DeviceCmd::Ingest` (the
+    /// worker-process path: positions always arrive over the wire, so the
+    /// worker never needs the init matrix or the corpus).
+    pub fn from_parts(
+        parts: BlockParts,
+        init: Option<&[f32]>,
+        n_total: usize,
+        m_noise: f64,
+        negs: usize,
+    ) -> ClusterBlock {
+        let BlockParts { cluster_id, global_ids, k, nbr_idx: parts_idx, nbr_w: parts_w } = parts;
+        let n_real = global_ids.len();
+        let size = bucket_for(n_real.max(1));
 
         let mut pos = vec![0.0f32; size * 2];
         let mut nbr_idx = vec![0i32; size * k];
         let mut nbr_w = vec![0.0f32; size * k];
         let mut valid = vec![0.0f32; size];
 
-        for (l, &g) in members.iter().enumerate() {
-            let g = g as usize;
-            pos[l * 2] = init[g * 2];
-            pos[l * 2 + 1] = init[g * 2 + 1];
+        nbr_idx[..n_real * k].copy_from_slice(&parts_idx);
+        nbr_w[..n_real * k].copy_from_slice(&parts_w);
+        for (l, &g) in global_ids.iter().enumerate() {
             valid[l] = 1.0;
-            for s in 0..k {
-                let j = index.nbr_idx[g * k + s];
-                if j == NO_NEIGHBOR {
-                    nbr_idx[l * k + s] = l as i32; // self loop, weight 0
-                } else {
-                    let lj = *local_of
-                        .get(&j)
-                        .expect("kNN edge crossed cluster boundary — index invariant violated");
-                    nbr_idx[l * k + s] = lj;
-                    nbr_w[l * k + s] = weights.w[g * k + s];
-                }
+            if let Some(init) = init {
+                let g = g as usize;
+                pos[l * 2] = init[g * 2];
+                pos[l * 2 + 1] = init[g * 2 + 1];
             }
         }
         // padded rows: self loops
@@ -189,8 +254,8 @@ impl ClusterBlock {
         let neg_in = EdgeTranspose::build(&neg_idx, size, negs, |_| true);
 
         ClusterBlock {
-            cluster_id: c as u32,
-            global_ids: members.clone(),
+            cluster_id,
+            global_ids,
             size,
             n_real,
             pos,
@@ -300,6 +365,27 @@ mod tests {
             b.write_back(&mut global);
         }
         assert_eq!(global, init);
+    }
+
+    #[test]
+    fn from_parts_reproduces_build_exactly() {
+        // the shard path (extract -> serialize -> from_parts) must yield a
+        // block identical to the in-process build; positions arrive via an
+        // ingest, modeled here by copying them in after construction
+        let (idx, ew, init) = setup(300);
+        for c in 0..idx.n_clusters() {
+            let built = ClusterBlock::build(&idx, &ew, c, &init, 300, 5.0, 4);
+            let parts = BlockParts::extract(&idx, &ew, c);
+            assert_eq!(parts.n_real(), built.n_real);
+            let mut from_parts = ClusterBlock::from_parts(parts, None, 300, 5.0, 4);
+            assert!(from_parts.pos.iter().all(|&v| v == 0.0));
+            for (l, &g) in from_parts.global_ids.clone().iter().enumerate() {
+                let g = g as usize;
+                from_parts.pos[l * 2] = init[g * 2];
+                from_parts.pos[l * 2 + 1] = init[g * 2 + 1];
+            }
+            assert_eq!(from_parts, built);
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub mod block;
 pub mod native;
 pub mod sgd;
 
-pub use block::{ClusterBlock, EdgeTranspose};
+pub use block::{BlockParts, ClusterBlock, EdgeTranspose};
 
 use crate::util::rng::Rng;
 

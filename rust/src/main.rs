@@ -7,6 +7,12 @@
 //!            --checkpoint-dir the run is durable and resumable
 //!   resume   continue a killed/finished run from its run store
 //!            (bitwise identical to the uninterrupted run — DESIGN.md §11)
+//!   shard    cut a dataset's cluster topology into an mmap-able shard set
+//!            (`shards.json` + `shards.bin`) for `nomad worker` processes
+//!            (DESIGN.md §12)
+//!   worker   serve one device as an OS process: load assigned clusters
+//!            from a shard set, train under a remote coordinator
+//!            (`nomad embed --workers ...`), exit on its Stop
 //!   serve    serve a map artifact over HTTP: LOD tiles, kNN point
 //!            queries, and cache/latency stats (DESIGN.md §10); with
 //!            --watch <run_dir> it follows a training run live,
@@ -21,6 +27,10 @@
 //!   nomad embed --data pubmed --n 50000 --epochs 200 \
 //!       --checkpoint-dir out/pm_run --checkpoint-every 20 --out out/pm
 //!   nomad resume --run out/pm_run --out out/pm
+//!   nomad shard --data arxiv --n 20000 --clusters 64 --out out/shards
+//!   nomad worker --shards out/shards --listen 127.0.0.1:7701
+//!   nomad embed --data arxiv --n 20000 --shards out/shards \
+//!       --workers 127.0.0.1:7701,127.0.0.1:7702 --out out/dist
 //!   nomad serve --artifact out/wiki_artifact --addr 127.0.0.1:8080
 //!   nomad serve --watch out/pm_run --addr 127.0.0.1:8080
 //!   nomad metrics --npy vectors.npy --embedding out/run1_positions.npy
@@ -30,13 +40,17 @@
 //! used by the parallel kernels; the default is the machine's parallelism.
 
 use nomad::ann::backend::NativeBackend;
-use nomad::ann::graph::mutuality;
+use nomad::ann::graph::{edge_weights, mutuality};
 use nomad::ann::{ClusterIndex, IndexParams};
 use nomad::bail;
 use nomad::checkpoint::{self, params_fingerprint, DatasetSpec, RunStore};
 use nomad::cli::Args;
-use nomad::coordinator::{BackendKind, CheckpointCfg, NomadCoordinator, NomadRun, RunConfig};
-use nomad::data::{self, Dataset};
+use nomad::coordinator::{
+    BackendKind, CheckpointCfg, NomadCoordinator, NomadRun, Placement, RunConfig,
+};
+use nomad::data::{self, shard, Dataset};
+use nomad::distributed::transport::Endpoint;
+use nomad::distributed::worker;
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
 use nomad::linalg::Matrix;
@@ -54,13 +68,15 @@ fn main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("embed") => cmd_embed(&args),
         Some("resume") => cmd_resume(&args),
+        Some("shard") => cmd_shard(&args),
+        Some("worker") => cmd_worker(&args),
         Some("serve") => cmd_serve(&args),
         Some("index") => cmd_index(&args),
         Some("metrics") => cmd_metrics(&args),
         Some("info") => cmd_info(),
         _ => {
             eprintln!(
-                "usage: nomad <embed|resume|serve|index|metrics|info> [flags]  \
+                "usage: nomad <embed|resume|shard|worker|serve|index|metrics|info> [flags]  \
                  (see --help in source)"
             );
             Ok(())
@@ -168,10 +184,30 @@ fn cmd_embed(args: &Args) -> Result<()> {
         seed: args.u64("seed", 42),
         ..Default::default()
     };
+    // --workers ep1,ep2 promotes the devices to `nomad worker` processes;
+    // each endpoint is one device, paging its clusters from --shards
+    let placement = match args.get("workers") {
+        Some(list) => {
+            let dir = args
+                .get("shards")
+                .context("--workers requires --shards <dir> (written by `nomad shard`)")?;
+            let endpoints: Vec<String> = list
+                .split(',')
+                .map(|e| e.trim().to_string())
+                .filter(|e| !e.is_empty())
+                .collect();
+            if endpoints.is_empty() {
+                bail!("--workers needs at least one endpoint (host:port or unix:/path)");
+            }
+            Placement::Remote { endpoints, shards: Path::new(dir).to_path_buf() }
+        }
+        None => Placement::InProcess,
+    };
     let run_cfg = RunConfig {
         n_devices: args.usize("devices", 1),
         backend: if args.bool("xla") { BackendKind::Xla } else { BackendKind::Native },
         index: index_params(args),
+        placement,
         verbose: !args.bool("quiet"),
         ..Default::default()
     };
@@ -182,7 +218,14 @@ fn cmd_embed(args: &Args) -> Result<()> {
             if args.bool("resume") {
                 bail!("--resume requires --checkpoint-dir (or use `nomad resume --run <dir>`)");
             }
-            coord.fit(&ds, &NativeBackend::default())
+            match &coord.run.placement {
+                // worker sockets can fail mid-run: take the fallible path
+                Placement::Remote { .. } => {
+                    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                    coord.fit_resumable(ds.n(), &prep, None)?
+                }
+                Placement::InProcess => coord.fit(&ds, &NativeBackend::default()),
+            }
         }
         Some(dir) => {
             let dir = Path::new(dir);
@@ -285,6 +328,60 @@ fn cmd_resume(args: &Args) -> Result<()> {
     let prep = coord.prepare(&ds.x, &NativeBackend::default());
     let run = coord.resume_from(ds.n(), &prep, state, Some((&mut store, &cfg)))?;
     write_outputs(args, &ds, &coord, &run)
+}
+
+/// `nomad shard --out <dir>` — build the index for a dataset and cut it
+/// into the mmap shard set `nomad worker` processes page from.  Uses the
+/// same RNG stream prefix as the coordinator's `prepare` (a fresh
+/// `Rng::new(seed)` feeding the index build), so the shard topology is
+/// identical to what `nomad embed` with the same flags builds in-process.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let out = args.get("out").context("--out <dir> required")?;
+    let seed = args.u64("seed", 42); // same default as `embed`'s run seed
+    let idxp = index_params(args);
+    let weight_model = NomadParams::default().weight_model;
+    println!("dataset: {} ({} x {})", ds.name, ds.n(), ds.dim());
+
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let index = ClusterIndex::build(&ds.x, &idxp, &NativeBackend::default(), &mut rng);
+    let weights = edge_weights(&index, weight_model);
+    let spec = dataset_spec(args, &ds);
+    let manifest = shard::write_shards(
+        Path::new(out),
+        &index,
+        &weights,
+        ds.dim(),
+        seed,
+        weight_model,
+        &idxp,
+        &spec,
+    )?;
+    let bytes: u64 = manifest.clusters.iter().map(|c| c.len).sum();
+    println!(
+        "shard set: {out}/ ({} clusters, {} points, {} bytes) in {:.2}s",
+        manifest.clusters.len(),
+        manifest.n,
+        bytes,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("serve it:  nomad worker --shards {out} --listen 127.0.0.1:7701");
+    Ok(())
+}
+
+/// `nomad worker --shards <dir> --listen <addr>` — one device as an OS
+/// process.  Binds, waits for the coordinator, trains its assigned
+/// clusters, exits when the coordinator sends Stop (or hangs up).
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args
+        .get("listen")
+        .context("--listen <host:port | unix:/path.sock> required")?;
+    let dir = args
+        .get("shards")
+        .context("--shards <dir> required (written by `nomad shard`)")?;
+    let ep = Endpoint::parse(listen)?;
+    worker::run_worker(&ep, Path::new(dir), !args.bool("quiet"))
 }
 
 /// Shared output path of `embed` and `resume`: positions `.npy`, density

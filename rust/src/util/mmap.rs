@@ -1,0 +1,163 @@
+//! Read-only memory-mapped files, zero dependencies.
+//!
+//! The shard reader ([`crate::data::shard`]) serves per-cluster records out
+//! of one large data file; a worker process must be able to page in only
+//! the clusters it was assigned instead of reading the whole file.  On unix
+//! the std runtime already links libc, so `mmap(2)` is declared directly
+//! via `extern "C"` — no crate needed.  On non-unix targets [`Mmap::open`]
+//! degrades to reading the file into memory (same API, weaker paging).
+
+use crate::util::error::{Context, Result};
+use std::path::Path;
+
+/// A read-only mapping (or, off unix, an owned copy) of a file's bytes.
+pub struct Mmap {
+    ptr: *mut u8,
+    len: usize,
+    /// non-unix fallback storage; on unix stays `None`
+    fallback: Option<Vec<u8>>,
+}
+
+// The mapping is immutable shared memory; moving the handle across threads
+// is safe (the pointer's validity does not depend on the thread).
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+#[cfg(unix)]
+mod sys {
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        pub fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+}
+
+impl Mmap {
+    /// Map `path` read-only.  Empty files map to an empty slice.
+    #[cfg(unix)]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let len = f.metadata()?.len();
+        let len = usize::try_from(len).context("file too large to map")?;
+        if len == 0 {
+            return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0, fallback: None });
+        }
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1
+        if ptr.is_null() || ptr as isize == -1 {
+            crate::bail!("mmap of {} ({len} bytes) failed", path.display());
+        }
+        Ok(Mmap { ptr, len, fallback: None })
+    }
+
+    /// Non-unix fallback: same API, backed by an in-memory copy.
+    #[cfg(not(unix))]
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let mut data = std::fs::read(path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let ptr = data.as_mut_ptr();
+        let len = data.len();
+        Ok(Mmap { ptr, len, fallback: Some(data) })
+    }
+
+    /// The mapped bytes.
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        // Safety: `ptr` covers `len` readable bytes for the life of `self`
+        // (the mapping is unmapped only in Drop; the fallback Vec is owned).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if self.fallback.is_none() && self.len > 0 {
+            unsafe {
+                sys::munmap(self.ptr, self.len);
+            }
+        }
+        // non-unix: the Vec frees itself
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nomad_mmap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn maps_file_contents() {
+        let p = tmp("a.bin");
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&p, &data).unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert_eq!(m.len(), data.len());
+        assert_eq!(m.bytes(), &data[..]);
+    }
+
+    #[test]
+    fn empty_file_is_empty_slice() {
+        let p = tmp("empty.bin");
+        std::fs::write(&p, b"").unwrap();
+        let m = Mmap::open(&p).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(Mmap::open(&tmp("definitely_missing.bin")).is_err());
+    }
+
+    #[test]
+    fn mapping_outlives_reads_across_threads() {
+        let p = tmp("threads.bin");
+        std::fs::write(&p, vec![7u8; 4096]).unwrap();
+        let m = std::sync::Arc::new(Mmap::open(&p).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = std::sync::Arc::clone(&m);
+                std::thread::spawn(move || m.bytes().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+    }
+}

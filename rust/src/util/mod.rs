@@ -3,6 +3,7 @@
 //! statistics.
 pub mod error;
 pub mod json;
+pub mod mmap;
 pub mod npy;
 pub mod parallel;
 pub mod rng;

@@ -283,19 +283,48 @@ fn adler32(data: &[u8]) -> u32 {
     (b << 16) | a
 }
 
+/// Incremental CRC-32 (same polynomial as [`crc32`]) for callers that
+/// checksum discontiguous byte ranges — e.g. the wire protocol's frame
+/// checksum covers two header fields plus the payload without
+/// concatenating them.
+#[derive(Clone)]
+pub struct Crc32(u32);
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32(0xFFFF_FFFF)
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut crc = self.0;
+        for &b in data {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                let mask = (crc & 1).wrapping_neg();
+                crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+            }
+        }
+        self.0 = crc;
+    }
+
+    pub fn finish(&self) -> u32 {
+        !self.0
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Crc32::new()
+    }
+}
+
 /// Bitwise CRC-32 (IEEE, reflected, poly 0xEDB88320), as PNG requires.
 /// Public: the checkpoint run store (DESIGN.md §11) and the golden-run
 /// regression test reuse it to guard persisted state files.
 pub fn crc32(data: &[u8]) -> u32 {
-    let mut crc = 0xFFFF_FFFFu32;
-    for &b in data {
-        crc ^= b as u32;
-        for _ in 0..8 {
-            let mask = (crc & 1).wrapping_neg();
-            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
-        }
-    }
-    !crc
+    let mut c = Crc32::new();
+    c.update(data);
+    c.finish()
 }
 
 #[cfg(test)]

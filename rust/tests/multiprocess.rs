@@ -1,0 +1,218 @@
+//! Remote-placement end-to-end tests: a coordinator driving worker
+//! sessions over real sockets (TCP loopback and unix) must produce
+//! **bitwise identical** final positions to the in-process thread
+//! placement with the same seeds — the tentpole invariant of
+//! DESIGN.md §12.  Workers here run on threads; CI's worker-smoke job
+//! repeats the TCP case with real `nomad worker` OS processes.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::edge_weights;
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::checkpoint::DatasetSpec;
+use nomad::coordinator::{NomadCoordinator, NomadRun, Placement, RunConfig};
+use nomad::data::shard::write_shards;
+use nomad::data::{text_corpus_like, Dataset};
+use nomad::distributed::transport::Endpoint;
+use nomad::distributed::worker::run_worker;
+use nomad::embed::NomadParams;
+use nomad::util::rng::Rng;
+use std::path::PathBuf;
+
+const SEED: u64 = 7;
+const N: usize = 600;
+const EPOCHS: usize = 4;
+const CLUSTERS: usize = 8;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nomad_mp_{tag}_{}", std::process::id()))
+}
+
+fn dataset() -> Dataset {
+    let mut rng = Rng::new(0);
+    text_corpus_like(N, &mut rng)
+}
+
+fn coordinator(placement: Placement, n_devices: usize, seed: u64) -> NomadCoordinator {
+    NomadCoordinator::new(
+        NomadParams { epochs: EPOCHS, seed, ..Default::default() },
+        RunConfig {
+            n_devices,
+            index: IndexParams { n_clusters: CLUSTERS, ..Default::default() },
+            placement,
+            ..Default::default()
+        },
+    )
+}
+
+/// Write the shard set `nomad shard` would write for this dataset/seed —
+/// the same `Rng::new(seed)` stream prefix `prepare()` uses, so the
+/// topology matches the coordinator's index exactly.
+fn write_shard_set(dir: &PathBuf, ds: &Dataset, seed: u64) {
+    let _ = std::fs::remove_dir_all(dir);
+    let idxp = IndexParams { n_clusters: CLUSTERS, ..Default::default() };
+    let mut rng = Rng::new(seed);
+    let index = ClusterIndex::build(&ds.x, &idxp, &NativeBackend::default(), &mut rng);
+    let weights = edge_weights(&index, NomadParams::default().weight_model);
+    let spec = DatasetSpec { kind: "synthetic".into(), source: "arxiv".into(), n: N, seed: 0 };
+    let model = NomadParams::default().weight_model;
+    write_shards(dir, &index, &weights, ds.dim(), seed, model, &idxp, &spec)
+        .expect("write shard set");
+}
+
+/// Host one full worker lifecycle (bind, accept, serve, exit) per endpoint
+/// on a thread — exactly the code path `nomad worker` runs in a process.
+fn spawn_workers(
+    shard_dir: &PathBuf,
+    endpoints: Vec<Endpoint>,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<()>>) {
+    let mut specs = Vec::new();
+    let mut joins = Vec::new();
+    for ep in endpoints {
+        specs.push(match &ep {
+            Endpoint::Tcp(addr) => addr.clone(),
+            #[cfg(unix)]
+            Endpoint::Unix(p) => format!("unix:{}", p.display()),
+        });
+        let dir = shard_dir.clone();
+        joins.push(std::thread::spawn(move || {
+            run_worker(&ep, &dir, false).expect("worker run");
+        }));
+    }
+    (specs, joins)
+}
+
+fn in_process_reference(ds: &Dataset) -> NomadRun {
+    let coord = coordinator(Placement::InProcess, 2, SEED);
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    coord.fit_resumable(N, &prep, None).expect("in-process run")
+}
+
+fn assert_bitwise_equal(a: &NomadRun, b: &NomadRun) {
+    assert_eq!(a.positions.data.len(), b.positions.data.len());
+    for (i, (x, y)) in a.positions.data.iter().zip(&b.positions.data).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "positions diverge at f32 #{i}: {x} vs {y}"
+        );
+    }
+    assert_eq!(a.final_means.len(), b.final_means.len());
+    for (ea, eb) in a.final_means.iter().zip(&b.final_means) {
+        assert_eq!(ea.cluster_id, eb.cluster_id);
+        assert_eq!(ea.mean[0].to_bits(), eb.mean[0].to_bits());
+        assert_eq!(ea.mean[1].to_bits(), eb.mean[1].to_bits());
+        assert_eq!(ea.weight.to_bits(), eb.weight.to_bits());
+    }
+}
+
+#[test]
+fn tcp_workers_match_in_process_bitwise() {
+    let ds = dataset();
+    let shard_dir = scratch("tcp");
+    write_shard_set(&shard_dir, &ds, SEED);
+
+    // `:0` binds race-free ephemeral ports, but run_worker binds inside
+    // the worker thread — so bind fixed ports picked by the OS up front
+    let ports: Vec<u16> = (0..2)
+        .map(|_| {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe port");
+            let p = l.local_addr().expect("probe addr").port();
+            drop(l);
+            p
+        })
+        .collect();
+    let eps: Vec<Endpoint> =
+        ports.iter().map(|p| Endpoint::Tcp(format!("127.0.0.1:{p}"))).collect();
+    let (endpoints, joins) = spawn_workers(&shard_dir, eps);
+
+    let coord = coordinator(
+        Placement::Remote { endpoints, shards: shard_dir.clone() },
+        2,
+        SEED,
+    );
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let remote = coord.fit_resumable(N, &prep, None).expect("remote run");
+    for j in joins {
+        j.join().expect("worker thread");
+    }
+
+    let reference = in_process_reference(&ds);
+    assert_bitwise_equal(&reference, &remote);
+    assert!(remote.comm.wire_bytes_total > 0, "remote run must account real wire bytes");
+    assert_eq!(
+        remote.comm.wire_epoch_bytes.len(),
+        EPOCHS,
+        "one measured wire-byte sample per epoch"
+    );
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_workers_match_in_process_bitwise() {
+    let ds = dataset();
+    let shard_dir = scratch("unix");
+    write_shard_set(&shard_dir, &ds, SEED);
+
+    let eps: Vec<Endpoint> = (0..2)
+        .map(|i| Endpoint::Unix(std::env::temp_dir().join(format!(
+            "nomad_mp_sock_{}_{i}",
+            std::process::id()
+        ))))
+        .collect();
+    let (endpoints, joins) = spawn_workers(&shard_dir, eps);
+
+    let coord = coordinator(
+        Placement::Remote { endpoints, shards: shard_dir.clone() },
+        2,
+        SEED,
+    );
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let remote = coord.fit_resumable(N, &prep, None).expect("remote run");
+    for j in joins {
+        j.join().expect("worker thread");
+    }
+
+    let reference = in_process_reference(&ds);
+    assert_bitwise_equal(&reference, &remote);
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+#[test]
+fn mismatched_shard_set_is_refused_before_connecting() {
+    let ds = dataset();
+    let shard_dir = scratch("mismatch");
+    // shard set built from a different seed: topology cannot match
+    write_shard_set(&shard_dir, &ds, SEED ^ 1);
+
+    // endpoints are never dialed — manifest validation must fail first
+    let coord = coordinator(
+        Placement::Remote {
+            endpoints: vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            shards: shard_dir.clone(),
+        },
+        2,
+        SEED,
+    );
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let err = coord
+        .fit_resumable(N, &prep, None)
+        .expect_err("a foreign shard set must be refused");
+    assert!(err.to_string().contains("seed"), "error should name the mismatch: {err}");
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+#[test]
+fn missing_shard_dir_is_a_clean_error() {
+    let ds = dataset();
+    let coord = coordinator(
+        Placement::Remote {
+            endpoints: vec!["127.0.0.1:1".into(), "127.0.0.1:1".into()],
+            shards: scratch("nonexistent"),
+        },
+        2,
+        SEED,
+    );
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    assert!(coord.fit_resumable(N, &prep, None).is_err());
+}
