@@ -22,7 +22,7 @@ use nomad::data::shard::{write_shards, ShardSet};
 use nomad::data::text_corpus_like;
 use nomad::distributed::comm_model;
 use nomad::distributed::transport::Endpoint;
-use nomad::distributed::worker::{serve_session, WorkerListener};
+use nomad::distributed::worker::{serve_session, WorkerCfg, WorkerListener};
 use nomad::embed::NomadParams;
 use nomad::util::rng::Rng;
 use std::path::PathBuf;
@@ -58,7 +58,7 @@ fn spawn_workers(
         endpoints.push(listener.local_addr_string());
         joins.push(std::thread::spawn(move || {
             let mut t = listener.accept_transport().expect("accept coordinator");
-            serve_session(&mut *t, &shards, false).expect("worker session");
+            serve_session(&mut *t, &shards, &WorkerCfg::default()).expect("worker session");
         }));
     }
     (endpoints, joins)

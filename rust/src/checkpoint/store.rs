@@ -73,6 +73,9 @@ pub struct RunStore {
     run_info: Json,
     /// live checkpoint epochs, ascending
     checkpoints: Vec<usize>,
+    /// classified fault records appended by the coordinator's recovery
+    /// supervisor, in order (persisted in `run.json`, DESIGN.md §13)
+    faults: Vec<Json>,
 }
 
 fn ckpt_dirname(epochs_done: usize) -> String {
@@ -97,6 +100,7 @@ impl RunStore {
             fingerprint,
             run_info,
             checkpoints: Vec::new(),
+            faults: Vec::new(),
         };
         store.write_manifest()?;
         Ok(store)
@@ -132,11 +136,17 @@ impl RunStore {
             .collect::<Result<Vec<usize>>>()?;
         checkpoints.sort_unstable();
         checkpoints.dedup();
+        // absent in stores written before fault records existed
+        let faults = match v.get("faults").as_arr() {
+            Some(a) => a.to_vec(),
+            None => Vec::new(),
+        };
         Ok(RunStore {
             dir: dir.to_path_buf(),
             fingerprint,
             run_info: v.get("run").clone(),
             checkpoints,
+            faults,
         })
     }
 
@@ -191,6 +201,7 @@ impl RunStore {
                 "checkpoints",
                 json::arr(self.checkpoints.iter().map(|&e| json::num(e as f64)).collect()),
             ),
+            ("faults", json::arr(self.faults.clone())),
             ("run", self.run_info.clone()),
         ]);
         let tmp = self.dir.join("run.json.tmp");
@@ -379,6 +390,49 @@ impl RunStore {
         let e = self.latest().context("run store has no checkpoints yet")?;
         self.load(e)
     }
+
+    /// Load the newest checkpoint that reads back clean, skipping torn or
+    /// corrupt entries — a machine crash can leave the newest directory
+    /// unreadable even through the tmp+rename dance if the filesystem
+    /// reordered the data behind the rename.  Errs only when the store
+    /// holds no loadable checkpoint at all.
+    pub fn load_latest_valid(&self) -> Result<CheckpointState> {
+        ensure!(!self.checkpoints.is_empty(), "run store has no checkpoints yet");
+        let mut last_err = None;
+        for &e in self.checkpoints.iter().rev() {
+            match self.load(e) {
+                Ok(st) => return Ok(st),
+                Err(err) => last_err = Some(err),
+            }
+        }
+        Err(last_err.expect("at least one load attempted"))
+            .with_context(|| format!("no valid checkpoint in {}", self.dir.display()))
+    }
+
+    /// Append a classified fault record to the run manifest, so an
+    /// interrupted-and-recovered run stays visible post-hoc (DESIGN.md
+    /// §13).
+    pub fn record_fault(
+        &mut self,
+        kind: &str,
+        device: usize,
+        restart_epoch: usize,
+        detail: &str,
+    ) -> Result<()> {
+        self.faults.push(json::obj(vec![
+            ("kind", json::s(kind)),
+            ("device", json::num(device as f64)),
+            ("restart_epoch", json::num(restart_epoch as f64)),
+            ("detail", json::s(detail)),
+        ]));
+        self.write_manifest()
+    }
+
+    /// Fault records appended so far (parsed back from the manifest on
+    /// reopen).
+    pub fn faults(&self) -> &[Json] {
+        &self.faults
+    }
 }
 
 #[cfg(test)]
@@ -546,6 +600,36 @@ mod tests {
         assert!(RunStore::open(&dir2).is_err());
         // missing entirely
         assert!(RunStore::open(&tmp("missing")).is_err());
+    }
+
+    #[test]
+    fn load_latest_valid_skips_a_torn_checkpoint() {
+        let mut store = demo_store("torn");
+        store.save(&demo_state(2, 16, 2), &SaveOpts::default()).unwrap();
+        store.save(&demo_state(4, 16, 2), &SaveOpts::default()).unwrap();
+        // tear the newest write: truncate its positions payload
+        let p = store.ckpt_dir(4).join("positions.npy");
+        let orig = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &orig[..orig.len() - 7]).unwrap();
+        assert!(store.load_latest().is_err(), "strict load must still fail");
+        let st = store.load_latest_valid().unwrap();
+        assert_eq!(st.epochs_done, 2, "must fall back to the older clean checkpoint");
+        // tear the older one too: nothing valid remains
+        std::fs::write(store.ckpt_dir(2).join("means.npy"), b"NU").unwrap();
+        let e = store.load_latest_valid().unwrap_err().to_string();
+        assert!(e.contains("no valid checkpoint"), "{e}");
+    }
+
+    #[test]
+    fn fault_records_survive_the_manifest_roundtrip() {
+        let mut store = demo_store("faultlog");
+        store.record_fault("timeout", 1, 25, "device 1: epoch deadline expired").unwrap();
+        store.record_fault("disconnect", 0, 25, "connection reset by peer").unwrap();
+        let re = RunStore::open(store.dir()).unwrap();
+        assert_eq!(re.faults().len(), 2);
+        assert_eq!(re.faults()[0].get("kind").as_str(), Some("timeout"));
+        assert_eq!(re.faults()[0].get("restart_epoch").as_usize(), Some(25));
+        assert_eq!(re.faults()[1].get("device").as_usize(), Some(0));
     }
 
     #[test]

@@ -27,15 +27,16 @@ use crate::data::shard::ShardManifest;
 use crate::data::Dataset;
 use crate::distributed::comm_model::{self, CommStats, EpochWork, HwProfile};
 use crate::distributed::device::{spawn_device, DeviceCmd, DeviceLink, DeviceReply};
+use crate::distributed::fault::{FaultEvent, FaultKind, FaultPlan};
 use crate::distributed::proto::{Assignment, WireMsg};
 use crate::distributed::sharder::{active_shards, shard_clusters};
-use crate::distributed::transport::{connect, coordinator_handshake, Endpoint};
+use crate::distributed::transport::{connect_with, coordinator_handshake, Endpoint};
 use crate::distributed::{MeanEntry, MEAN_ENTRY_BYTES};
 use crate::embed::sgd::{Exaggeration, LrSchedule};
 use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
 use crate::ensure;
 use crate::linalg::{pca::pca_init, Matrix};
-use crate::util::error::Result;
+use crate::util::error::{Context, Error, Result};
 use crate::util::rng::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -80,6 +81,8 @@ pub struct RunConfig {
     pub placement: Placement,
     /// print progress lines
     pub verbose: bool,
+    /// deadlines + supervised-recovery policy for remote placements
+    pub recovery: RecoveryCfg,
 }
 
 impl Default for RunConfig {
@@ -91,6 +94,52 @@ impl Default for RunConfig {
             index: IndexParams::default(),
             placement: Placement::InProcess,
             verbose: false,
+            recovery: RecoveryCfg::default(),
+        }
+    }
+}
+
+/// Failure-handling policy under [`Placement::Remote`] (DESIGN.md §13).
+///
+/// Every remote wait is bounded: link reads/writes by `io_timeout`, the
+/// per-epoch reply barrier by `epoch_base + epoch_per_block x` the busiest
+/// device's block count, and dials by `connect_patience`.  When a link
+/// faults, the coordinator classifies the error ([`FaultKind`]), drops the
+/// session, rolls back to the newest *valid* checkpoint (or the run's
+/// starting state), re-establishes every device — on a recovery attempt a
+/// dead endpoint's logical device rotates onto the next surviving endpoint
+/// — and replays.  Replayed epochs are bitwise identical because RNG
+/// streams are forked from `(seed, logical device, epoch, block)` and the
+/// re-placed worker receives the dead device's original assignment.
+#[derive(Clone, Debug)]
+pub struct RecoveryCfg {
+    /// steady-state read/write deadline on every remote link; `None`
+    /// blocks forever (not recommended outside debugging)
+    pub io_timeout: Option<Duration>,
+    /// base of the per-epoch reply deadline
+    pub epoch_base: Duration,
+    /// per-block slack added to the epoch deadline for the busiest device
+    pub epoch_per_block: Duration,
+    /// dial patience per endpoint attempt (capped exponential backoff
+    /// happens inside [`connect_with`])
+    pub connect_patience: Duration,
+    /// checkpoint-rollback recoveries before the run gives up with the
+    /// last classified fault
+    pub max_recoveries: usize,
+    /// coordinator-side fault injection, one optional plan per device
+    /// link, applied on the *first* establishment only (chaos tests)
+    pub fault_plans: Vec<FaultPlan>,
+}
+
+impl Default for RecoveryCfg {
+    fn default() -> Self {
+        RecoveryCfg {
+            io_timeout: Some(Duration::from_secs(30)),
+            epoch_base: Duration::from_secs(60),
+            epoch_per_block: Duration::from_secs(10),
+            connect_patience: Duration::from_secs(10),
+            max_recoveries: 3,
+            fault_plans: Vec::new(),
         }
     }
 }
@@ -239,7 +288,12 @@ impl NomadCoordinator {
         self.run_epochs(n, prep, Some(state), sink)
     }
 
-    /// The epoch engine behind `fit_prepared`/`fit_resumable`/`resume_from`.
+    /// The epoch engine behind `fit_prepared`/`fit_resumable`/`resume_from`:
+    /// a supervision loop around [`attempt_session`](Self::attempt_session).
+    /// Each attempt establishes every device link and drives the epochs to
+    /// completion; on a classified link fault under [`Placement::Remote`]
+    /// the supervisor rolls back to the newest valid checkpoint and replays
+    /// — bitwise identically — up to [`RecoveryCfg::max_recoveries`] times.
     fn run_epochs(
         &self,
         n: usize,
@@ -248,15 +302,18 @@ impl NomadCoordinator {
         mut sink: Option<(&mut RunStore, &CheckpointCfg)>,
     ) -> Result<NomadRun> {
         let p = &self.params;
-        let index = &prep.index;
-        let n_clusters = index.n_clusters();
+        let n_clusters = prep.index.n_clusters();
 
         // ---- sharding (Fig 2) -------------------------------------------
-        let sizes: Vec<usize> = index.clusters.iter().map(|c| c.len()).collect();
+        let sizes: Vec<usize> = prep.index.clusters.iter().map(|c| c.len()).collect();
         let n_devices = match &self.run.placement {
             Placement::InProcess => self.run.n_devices,
             Placement::Remote { endpoints, .. } => endpoints.len(),
         };
+        let remote = matches!(self.run.placement, Placement::Remote { .. });
+        if remote {
+            ensure!(n_devices > 0, "remote placement needs at least one worker endpoint");
+        }
         let shards = shard_clusters(&sizes, n_devices);
         // thread budgets divide across the shards that own blocks: when
         // n_devices > n_clusters the empty shards must not hold a share
@@ -289,24 +346,140 @@ impl NomadCoordinator {
             );
         }
 
-        // initial means table: restored verbatim on resume (it is the
-        // all-gathered table epoch `epochs_done` consumed in the original
-        // run), computed from the index + init positions otherwise —
-        // deliberately *not* from the blocks, so the remote placement
-        // (whose blocks live in worker processes) uses the exact same f64
-        // accumulation as [`ClusterBlock::mean`] and stays bitwise equal
-        let mut means_table: Vec<MeanEntry> = match &resume {
-            Some(st) => st.means.clone(),
-            None => initial_means_table(index, &prep.init.data, n, p),
-        };
+        // the shard manifest is validated once, up front: a mismatch is a
+        // configuration error, never a recoverable fault
+        if let Placement::Remote { shards: shard_dir, .. } = &self.run.placement {
+            let manifest = ShardManifest::load(shard_dir)?;
+            validate_manifest(&manifest, &sizes, n, p, &self.run.index)?;
+        }
+
+        // per-epoch reply deadline, scaled to the busiest device's block
+        // count; remote only — an in-process device shares our fate and
+        // can only stall by panicking, which surfaces as a channel hangup
+        let rec = &self.run.recovery;
+        let max_blocks = shards.iter().map(|s| s.len()).max().unwrap_or(0);
+        let deadline = remote.then(|| rec.epoch_base + rec.epoch_per_block * max_blocks as u32);
+
+        let base_resume = resume;
+        let mut rollback: Option<CheckpointState> = base_resume.clone();
+        let mut faults: Vec<FaultEvent> = Vec::new();
+        let mut recoveries = 0usize;
+        let mut lost_wire = 0u64;
+        let t_train = Instant::now();
+
+        loop {
+            let (outcome, session_wire) = self.attempt_session(
+                n,
+                prep,
+                &shards,
+                n_active,
+                fp,
+                &rollback,
+                &mut sink,
+                deadline,
+                recoveries == 0,
+                t_train,
+            );
+            let fault = match outcome {
+                Ok(out) => {
+                    let train_secs = t_train.elapsed().as_secs_f64();
+                    let comm = CommStats {
+                        epochs: p.epochs - out.start_epoch,
+                        allgather_bytes_total: out.allgather_bytes,
+                        positive_phase_bytes_total: 0,
+                        wire_bytes_total: lost_wire + session_wire,
+                        wire_epoch_bytes: out.wire_epoch_bytes,
+                        modeled_secs_total: out.modeled_total,
+                        measured_secs_total: train_secs,
+                        faults,
+                        recoveries,
+                    };
+                    return Ok(NomadRun {
+                        positions: out.positions,
+                        loss_history: out.loss_history,
+                        final_means: out.means_table,
+                        snapshots: out.snapshots,
+                        comm,
+                        index_secs: prep.index_secs,
+                        train_secs,
+                        modeled_train_secs: out.modeled_total,
+                        n_clusters,
+                        device_step_secs: out.device_step_secs,
+                        last_epoch_work: out.last_work,
+                    });
+                }
+                Err(SessionErr::Fatal(e)) => return Err(e),
+                Err(SessionErr::Fault { device, err }) => {
+                    lost_wire += session_wire;
+                    (device, err)
+                }
+            };
+            let (device, err) = fault;
+            let kind = FaultKind::classify(&err);
+            // in-process device faults are process bugs, not infrastructure
+            // failures — fail fast instead of replaying a broken binary
+            if !remote {
+                return Err(err);
+            }
+            if recoveries >= rec.max_recoveries {
+                return Err(err).with_context(|| {
+                    format!(
+                        "giving up after {recoveries} recovery(ies): device {device} \
+                         fault classified {}",
+                        kind.name()
+                    )
+                });
+            }
+            // roll back to the newest checkpoint that reads back clean
+            // (torn writes are skipped), else the state this call started
+            // from, else epoch 0
+            rollback = match sink.as_mut() {
+                Some((store, _)) => store.load_latest_valid().ok().or_else(|| base_resume.clone()),
+                None => base_resume.clone(),
+            };
+            let restart_epoch = rollback.as_ref().map_or(0, |st| st.epochs_done);
+            if self.run.verbose {
+                eprintln!(
+                    "[nomad] device {device} fault ({}): {err}; rolling back to epoch \
+                     {restart_epoch}",
+                    kind.name()
+                );
+            }
+            faults.push(FaultEvent { kind, device, restart_epoch, detail: err.to_string() });
+            if let Some((store, _)) = sink.as_mut() {
+                store.record_fault(kind.name(), device, restart_epoch, &err.to_string())?;
+            }
+            recoveries += 1;
+        }
+    }
+
+    /// One establish + drive attempt.  Returns the session outcome plus the
+    /// wire bytes this session moved — counted even when it faulted, so
+    /// `wire_bytes_total` stays honest across recoveries.
+    #[allow(clippy::too_many_arguments)]
+    fn attempt_session(
+        &self,
+        n: usize,
+        prep: &Prepared,
+        shards: &[Vec<usize>],
+        n_active: usize,
+        fp: u32,
+        rollback: &Option<CheckpointState>,
+        sink: &mut Option<(&mut RunStore, &CheckpointCfg)>,
+        deadline: Option<Duration>,
+        first_attempt: bool,
+        t_train: Instant,
+    ) -> (std::result::Result<SessionOut, SessionErr>, u64) {
+        let p = &self.params;
 
         // ---- devices: spawn threads, or dial worker processes -----------
         let mut links: Vec<DeviceLink> = match &self.run.placement {
             Placement::InProcess => {
+                let n_clusters = prep.index.n_clusters();
                 let blocks: Vec<ClusterBlock> = (0..n_clusters)
                     .map(|c| {
                         ClusterBlock::build(
-                            index,
+                            &prep.index,
                             &prep.weights,
                             c,
                             &prep.init.data,
@@ -337,19 +510,61 @@ impl NomadCoordinator {
                 }
                 links
             }
-            Placement::Remote { endpoints, shards: shard_dir } => {
-                let manifest = ShardManifest::load(shard_dir)?;
-                validate_manifest(&manifest, &sizes, n, p, &self.run.index)?;
-                connect_remote(endpoints, &shards, n_active, n, p, self.run.verbose)?
+            Placement::Remote { endpoints, .. } => {
+                match connect_remote(
+                    endpoints,
+                    shards,
+                    n_active,
+                    n,
+                    p,
+                    &self.run.recovery,
+                    first_attempt,
+                    self.run.verbose,
+                ) {
+                    Ok(links) => links,
+                    Err((device, err)) => return (Err(SessionErr::Fault { device, err }), 0),
+                }
             }
         };
 
+        let out = self.drive_session(&mut links, n, prep, fp, rollback, sink, deadline, t_train);
+        if out.is_ok() {
+            for link in links.iter_mut() {
+                link.stop();
+            }
+        }
+        // a faulted session's links are simply dropped: surviving worker
+        // sessions notice the close and exit, and the re-established links
+        // start fresh sessions
+        let wire = links.iter().map(|l| l.wire_bytes()).sum();
+        (out, wire)
+    }
+
+    /// Drive one established session from the rollback state to the final
+    /// epoch: ingest barrier, epoch loop, snapshots, checkpoints, final
+    /// export.  Link errors come back attributed to the device they
+    /// surfaced on; checkpoint-store errors are fatal (a rollback could not
+    /// write its way out of those either).
+    #[allow(clippy::too_many_arguments)]
+    fn drive_session(
+        &self,
+        links: &mut [DeviceLink],
+        n: usize,
+        prep: &Prepared,
+        fp: u32,
+        rollback: &Option<CheckpointState>,
+        sink: &mut Option<(&mut RunStore, &CheckpointCfg)>,
+        deadline: Option<Duration>,
+        t_train: Instant,
+    ) -> std::result::Result<SessionOut, SessionErr> {
+        let p = &self.params;
+
         // ---- ingest barrier ---------------------------------------------
-        // resumed runs load the checkpoint positions; fresh *remote* runs
-        // load the init positions (worker blocks start zeroed — positions
-        // always travel over the wire, never through the shard files);
-        // fresh in-process runs built their blocks from init already
-        let ingest: Option<Arc<Vec<f32>>> = match &resume {
+        // rolled-back/resumed runs load the checkpoint positions; fresh
+        // *remote* runs load the init positions (worker blocks start zeroed
+        // — positions always travel over the wire, never through the shard
+        // files); fresh in-process runs built their blocks from init already
+        let ingest: Option<Arc<Vec<f32>>> = match rollback {
             Some(st) => Some(Arc::new(st.positions.data.clone())),
             None => match &self.run.placement {
                 Placement::Remote { .. } => Some(Arc::new(prep.init.data.clone())),
@@ -358,55 +573,75 @@ impl NomadCoordinator {
         };
         if let Some(table) = ingest {
             for link in links.iter_mut() {
-                link.send_cmd(DeviceCmd::Ingest { positions: Arc::clone(&table) })?;
+                let d = link.device;
+                link.send_cmd(DeviceCmd::Ingest { positions: Arc::clone(&table) })
+                    .map_err(dev_fault(d))?;
             }
+            let by = deadline.map(|dl| Instant::now() + dl);
             for link in links.iter_mut() {
-                match link.recv_reply()? {
+                let d = link.device;
+                match recv_by(link, by).map_err(dev_fault(d))? {
                     DeviceReply::Ingested { .. } => {}
-                    other => crate::bail!("expected Ingested during barrier, got {other:?}"),
+                    other => {
+                        return Err(dev_fault(d)(Error::msg(format!(
+                            "expected Ingested during barrier, got {other:?}"
+                        ))))
+                    }
                 }
             }
         }
-        let start_epoch = match &resume {
-            Some(st) => st.epochs_done,
-            None => 0,
+        let start_epoch = rollback.as_ref().map_or(0, |st| st.epochs_done);
+
+        // initial means table: restored verbatim on rollback/resume (it is
+        // the all-gathered table epoch `epochs_done` consumed in the
+        // original run), computed from the index + init positions otherwise
+        // — deliberately *not* from the blocks, so the remote placement
+        // (whose blocks live in worker processes) uses the exact same f64
+        // accumulation as [`ClusterBlock::mean`] and stays bitwise equal
+        let mut means_table: Vec<MeanEntry> = match rollback {
+            Some(st) => st.means.clone(),
+            None => initial_means_table(&prep.index, &prep.init.data, n, p),
         };
 
-        // ---- epoch loop ---------------------------------------------------
+        // ---- epoch loop -------------------------------------------------
         let lr_sched = LrSchedule::nomad_default(n, p.epochs, p.lr_initial);
         let exag = Exaggeration { factor: p.exaggeration, epochs: p.exaggeration_epochs };
-        let mut loss_history = match resume {
-            Some(st) => st.loss_history,
+        let mut loss_history = match rollback {
+            Some(st) => st.loss_history.clone(),
             None => Vec::with_capacity(p.epochs),
         };
         let mut snapshots = Vec::new();
-        let mut comm = CommStats::default();
+        let mut allgather_bytes = 0u64;
+        let mut wire_epoch_bytes = Vec::new();
         let mut modeled_total = 0.0f64;
         let mut device_step_secs = vec![0.0f64; links.len()];
         let mut last_work = EpochWork::default();
         let mut last_saved: Option<usize> = None;
         let mut wire_before: u64 = links.iter().map(|l| l.wire_bytes()).sum();
-        let t_train = Instant::now();
 
         for epoch in start_epoch..p.epochs {
             let lr = lr_sched.at(epoch) as f32;
             let table = Arc::new(means_table.clone());
             for link in links.iter_mut() {
+                let d = link.device;
                 link.send_cmd(DeviceCmd::Epoch {
                     epoch,
                     lr,
                     exaggeration: exag.factor_at(epoch),
                     means: Arc::clone(&table),
-                })?;
+                })
+                .map_err(dev_fault(d))?;
             }
             // every device computes concurrently; replies are drained in
-            // link order and folded in device order, so the f64
-            // accumulation (and thus the loss history) is independent of
-            // completion order
+            // link order under one shared deadline and folded in device
+            // order, so the f64 accumulation (and thus the loss history)
+            // is independent of completion order
+            let by = deadline.map(|dl| Instant::now() + dl);
             let mut done: Vec<(usize, Vec<MeanEntry>, f64, f64, f64, f64)> =
                 Vec::with_capacity(links.len());
             for link in links.iter_mut() {
-                match link.recv_reply()? {
+                let d = link.device;
+                match recv_by(link, by).map_err(dev_fault(d))? {
                     DeviceReply::EpochDone {
                         device,
                         means,
@@ -417,7 +652,11 @@ impl NomadCoordinator {
                     } => {
                         done.push((device, means, ls, lw, step_secs, flops));
                     }
-                    other => crate::bail!("expected EpochDone, got {other:?}"),
+                    other => {
+                        return Err(dev_fault(d)(Error::msg(format!(
+                            "expected EpochDone, got {other:?}"
+                        ))))
+                    }
                 }
             }
             done.sort_by_key(|d| d.0);
@@ -445,7 +684,7 @@ impl NomadCoordinator {
             }
             means_table = fresh;
             let bytes = means_table.len() as u64 * MEAN_ENTRY_BYTES * links.len() as u64;
-            comm.allgather_bytes_total += bytes;
+            allgather_bytes += bytes;
             let work = EpochWork {
                 max_dev_flops,
                 total_flops,
@@ -459,7 +698,8 @@ impl NomadCoordinator {
 
             if let Some(every) = self.run.snapshot_every {
                 if (epoch + 1) % every == 0 && epoch + 1 < p.epochs {
-                    let positions = collect_positions(&mut links, n)?;
+                    let positions = collect_positions(links, n, deadline)
+                        .map_err(|(device, err)| SessionErr::Fault { device, err })?;
                     snapshots.push(Snapshot {
                         epoch: epoch + 1,
                         wall_secs: t_train.elapsed().as_secs_f64(),
@@ -473,7 +713,8 @@ impl NomadCoordinator {
             // leader state epoch `epoch + 1` starts from
             if let Some((store, cfg)) = sink.as_mut() {
                 if cfg.every > 0 && (epoch + 1) % cfg.every == 0 {
-                    let positions = collect_positions(&mut links, n)?;
+                    let positions = collect_positions(links, n, deadline)
+                        .map_err(|(device, err)| SessionErr::Fault { device, err })?;
                     let st = CheckpointState {
                         epochs_done: epoch + 1,
                         positions,
@@ -481,16 +722,18 @@ impl NomadCoordinator {
                         loss_history: loss_history.clone(),
                         fingerprint: fp,
                     };
-                    store.save(
-                        &st,
-                        &SaveOpts {
-                            retain: cfg.retain,
-                            artifact: cfg.artifact,
-                            labels: cfg.labels.as_deref(),
-                            dataset: &cfg.dataset,
-                            seed: p.seed,
-                        },
-                    )?;
+                    store
+                        .save(
+                            &st,
+                            &SaveOpts {
+                                retain: cfg.retain,
+                                artifact: cfg.artifact,
+                                labels: cfg.labels.as_deref(),
+                                dataset: &cfg.dataset,
+                                seed: p.seed,
+                            },
+                        )
+                        .map_err(SessionErr::Fatal)?;
                     last_saved = Some(epoch + 1);
                     if self.run.verbose {
                         eprintln!(
@@ -504,7 +747,7 @@ impl NomadCoordinator {
             // measured wire traffic this epoch, all links, both directions
             // (snapshot/checkpoint exports land in the epoch they follow)
             let wire_now: u64 = links.iter().map(|l| l.wire_bytes()).sum();
-            comm.wire_epoch_bytes.push(wire_now - wire_before);
+            wire_epoch_bytes.push(wire_now - wire_before);
             wire_before = wire_now;
 
             if self.run.verbose && (epoch % 25 == 0 || epoch + 1 == p.epochs) {
@@ -515,7 +758,8 @@ impl NomadCoordinator {
             }
         }
 
-        let positions = collect_positions(&mut links, n)?;
+        let positions = collect_positions(links, n, deadline)
+            .map_err(|(device, err)| SessionErr::Fault { device, err })?;
 
         // final checkpoint, unless the loop already wrote (or the store
         // already holds) one for the last epoch
@@ -528,42 +772,70 @@ impl NomadCoordinator {
                     loss_history: loss_history.clone(),
                     fingerprint: fp,
                 };
-                store.save(
-                    &st,
-                    &SaveOpts {
-                        retain: cfg.retain,
-                        artifact: cfg.artifact,
-                        labels: cfg.labels.as_deref(),
-                        dataset: &cfg.dataset,
-                        seed: p.seed,
-                    },
-                )?;
+                store
+                    .save(
+                        &st,
+                        &SaveOpts {
+                            retain: cfg.retain,
+                            artifact: cfg.artifact,
+                            labels: cfg.labels.as_deref(),
+                            dataset: &cfg.dataset,
+                            seed: p.seed,
+                        },
+                    )
+                    .map_err(SessionErr::Fatal)?;
             }
         }
 
-        for link in links.iter_mut() {
-            link.stop();
-        }
-        comm.wire_bytes_total = links.iter().map(|l| l.wire_bytes()).sum();
-
-        let train_secs = t_train.elapsed().as_secs_f64();
-        comm.epochs = p.epochs - start_epoch;
-        comm.modeled_secs_total = modeled_total;
-        comm.measured_secs_total = train_secs;
-
-        Ok(NomadRun {
+        Ok(SessionOut {
+            start_epoch,
             positions,
+            means_table,
             loss_history,
-            final_means: means_table,
             snapshots,
-            comm,
-            index_secs: prep.index_secs,
-            train_secs,
-            modeled_train_secs: modeled_total,
-            n_clusters,
             device_step_secs,
-            last_epoch_work: last_work,
+            modeled_total,
+            last_work,
+            allgather_bytes,
+            wire_epoch_bytes,
         })
+    }
+}
+
+/// Everything one successfully-completed session hands back to the
+/// supervision loop in [`NomadCoordinator::run_epochs`].
+struct SessionOut {
+    start_epoch: usize,
+    positions: Matrix,
+    means_table: Vec<MeanEntry>,
+    loss_history: Vec<f64>,
+    snapshots: Vec<Snapshot>,
+    device_step_secs: Vec<f64>,
+    modeled_total: f64,
+    last_work: EpochWork,
+    allgather_bytes: u64,
+    wire_epoch_bytes: Vec<u64>,
+}
+
+/// How a session attempt failed: a fault on a specific device link (the
+/// supervisor may roll back and replay), or a fatal error no recovery can
+/// fix (e.g. the checkpoint store refusing writes).
+enum SessionErr {
+    Fault { device: usize, err: Error },
+    Fatal(Error),
+}
+
+/// Attribute a link error to its device for the recovery supervisor.
+fn dev_fault(device: usize) -> impl Fn(Error) -> SessionErr {
+    move |err| SessionErr::Fault { device, err }
+}
+
+/// Blocking receive when no deadline applies (in-process), bounded
+/// otherwise.
+fn recv_by(link: &mut DeviceLink, by: Option<Instant>) -> Result<DeviceReply> {
+    match by {
+        Some(t) => link.recv_reply_by(t),
+        None => link.recv_reply(),
     }
 }
 
@@ -678,68 +950,125 @@ fn validate_manifest(
     Ok(())
 }
 
-/// Dial each worker endpoint in device order, handshake, and send its
-/// cluster assignment; returns the links once every worker acknowledged.
+/// Dial a worker for every logical device, handshake, and send its cluster
+/// assignment; returns the links once every worker acknowledged.
+///
+/// On the first establishment device `d` dials endpoint `d` (wrapped in a
+/// fault injector when [`RecoveryCfg::fault_plans`] says so).  On recovery
+/// attempts it walks the endpoint list starting from its home slot, so a
+/// dead worker's logical device rotates onto the next surviving endpoint —
+/// which simply serves one more session with the dead device's original
+/// assignment, keeping every RNG stream (and therefore the embedding)
+/// bitwise identical.  Errors come back attributed to the device that
+/// could not be placed.
 fn connect_remote(
     endpoints: &[String],
     shards: &[Vec<usize>],
     n_active: usize,
     n: usize,
     p: &NomadParams,
+    rec: &RecoveryCfg,
+    first_attempt: bool,
     verbose: bool,
-) -> Result<Vec<DeviceLink>> {
-    ensure!(!endpoints.is_empty(), "remote placement needs at least one worker endpoint");
-    let mut links = Vec::with_capacity(endpoints.len());
-    for (d, spec) in endpoints.iter().enumerate() {
-        let ep = Endpoint::parse(spec)?;
-        let mut transport = connect(&ep, Duration::from_secs(10))?;
-        coordinator_handshake(&mut *transport)?;
-        transport.send(WireMsg::Assign(Assignment {
-            device: d,
-            n_active,
-            n_total: n,
-            negs: p.negs,
-            seed: p.seed,
-            m_noise: p.m_noise,
-            clusters: shards[d].iter().map(|&c| c as u32).collect(),
-        }))?;
-        match transport.recv()? {
-            WireMsg::Assigned { device, n_blocks, n_points } => {
-                ensure!(device == d, "worker at {ep} answered as device {device}, expected {d}");
-                ensure!(
-                    n_blocks == shards[d].len(),
-                    "worker at {ep} loaded {n_blocks} blocks, assigned {}",
-                    shards[d].len()
-                );
-                if verbose {
-                    eprintln!(
-                        "[nomad] worker {ep}: device {device}, {n_blocks} blocks, \
-                         {n_points} points"
-                    );
+) -> std::result::Result<Vec<DeviceLink>, (usize, Error)> {
+    let mut links = Vec::with_capacity(shards.len());
+    for (d, clusters) in shards.iter().enumerate() {
+        let plan = if first_attempt { rec.fault_plans.get(d) } else { None };
+        let tries = if first_attempt { 1 } else { endpoints.len() };
+        let mut last: Option<Error> = None;
+        let mut placed = None;
+        for i in 0..tries {
+            let spec = &endpoints[(d + i) % endpoints.len()];
+            match establish_link(d, spec, plan, clusters, n_active, n, p, rec, verbose) {
+                Ok(link) => {
+                    placed = Some(link);
+                    break;
                 }
+                Err(e) => last = Some(e),
             }
-            other => crate::bail!("worker at {ep}: expected Assigned, got {other:?}"),
         }
-        links.push(DeviceLink { device: d, transport, join: None });
+        match placed {
+            Some(link) => links.push(link),
+            None => {
+                let e = last.expect("at least one endpoint was tried");
+                let err = Error::msg(format!("device {d}: no endpoint accepted its assignment: {e}"));
+                return Err((d, err));
+            }
+        }
     }
     Ok(links)
 }
 
-fn collect_positions(links: &mut [DeviceLink], n: usize) -> Result<Matrix> {
-    for link in links.iter_mut() {
-        link.send_cmd(DeviceCmd::Export)?;
+/// One dial + handshake + assignment exchange under the recovery deadlines.
+#[allow(clippy::too_many_arguments)]
+fn establish_link(
+    device: usize,
+    spec: &str,
+    plan: Option<&FaultPlan>,
+    clusters: &[usize],
+    n_active: usize,
+    n: usize,
+    p: &NomadParams,
+    rec: &RecoveryCfg,
+    verbose: bool,
+) -> Result<DeviceLink> {
+    let ep = Endpoint::parse(spec)?;
+    let mut transport = connect_with(&ep, rec.connect_patience, plan)?;
+    transport.set_timeouts(rec.io_timeout, rec.io_timeout)?;
+    coordinator_handshake(&mut *transport)?;
+    transport.send(WireMsg::Assign(Assignment {
+        device,
+        n_active,
+        n_total: n,
+        negs: p.negs,
+        seed: p.seed,
+        m_noise: p.m_noise,
+        clusters: clusters.iter().map(|&c| c as u32).collect(),
+    }))?;
+    match transport.recv()? {
+        WireMsg::Assigned { device: got, n_blocks, n_points } => {
+            ensure!(got == device, "worker at {ep} answered as device {got}, expected {device}");
+            ensure!(
+                n_blocks == clusters.len(),
+                "worker at {ep} loaded {n_blocks} blocks, assigned {}",
+                clusters.len()
+            );
+            if verbose {
+                eprintln!(
+                    "[nomad] worker {ep}: device {device}, {n_blocks} blocks, \
+                     {n_points} points"
+                );
+            }
+        }
+        other => crate::bail!("worker at {ep}: expected Assigned, got {other:?}"),
     }
+    Ok(DeviceLink { device, transport, join: None, io_timeout: rec.io_timeout })
+}
+
+/// Export and stitch the full positions matrix, one deadline-bounded reply
+/// per link; errors are attributed to the device they surfaced on.
+fn collect_positions(
+    links: &mut [DeviceLink],
+    n: usize,
+    deadline: Option<Duration>,
+) -> std::result::Result<Matrix, (usize, Error)> {
+    for link in links.iter_mut() {
+        let d = link.device;
+        link.send_cmd(DeviceCmd::Export).map_err(|e| (d, e))?;
+    }
+    let by = deadline.map(|dl| Instant::now() + dl);
     let mut m = Matrix::zeros(n, 2);
     for link in links.iter_mut() {
-        match link.recv_reply()? {
+        let d = link.device;
+        match recv_by(link, by).map_err(|e| (d, e))? {
             DeviceReply::Exported { positions, .. } => {
-                for (g, p) in positions {
+                for (g, pos) in positions {
                     let g = g as usize;
-                    m.data[g * 2] = p[0];
-                    m.data[g * 2 + 1] = p[1];
+                    m.data[g * 2] = pos[0];
+                    m.data[g * 2 + 1] = pos[1];
                 }
             }
-            other => crate::bail!("expected Exported, got {other:?}"),
+            other => return Err((d, Error::msg(format!("expected Exported, got {other:?}")))),
         }
     }
     Ok(m)
@@ -916,5 +1245,27 @@ mod tests {
         );
         let run = coord.fit(&ds, &NativeBackend::default());
         assert!(run.loss_history.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn remote_with_no_endpoints_fails_fast() {
+        // a misconfigured placement is a config error, not a fault to
+        // retry: the supervisor must refuse before dialing anything
+        let mut rng = Rng::new(5);
+        let ds = gaussian_mixture(120, 8, 2, 8.0, 0.0, 0.3, &mut rng);
+        let coord = NomadCoordinator::new(
+            tiny_params(2),
+            RunConfig {
+                placement: Placement::Remote {
+                    endpoints: vec![],
+                    shards: PathBuf::from("/nonexistent-shard-dir"),
+                },
+                index: IndexParams { n_clusters: 2, k: 4, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        let e = coord.fit_resumable(ds.n(), &prep, None).unwrap_err().to_string();
+        assert!(e.contains("endpoint"), "{e}");
     }
 }

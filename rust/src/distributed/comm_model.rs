@@ -118,6 +118,12 @@ pub struct CommStats {
     pub wire_epoch_bytes: Vec<u64>,
     pub modeled_secs_total: f64,
     pub measured_secs_total: f64,
+    /// every classified fault the coordinator observed, in order — a run
+    /// that hit faults and recovered reports them here and in the run
+    /// manifest (DESIGN.md §13)
+    pub faults: Vec<super::fault::FaultEvent>,
+    /// how many checkpoint-rollback recoveries the run performed
+    pub recoveries: usize,
 }
 
 #[cfg(test)]

@@ -94,6 +94,9 @@ pub struct DeviceLink {
     pub device: usize,
     pub transport: Box<dyn Transport>,
     pub join: Option<std::thread::JoinHandle<()>>,
+    /// steady-state read/write deadline the link reverts to after a
+    /// [`recv_reply_by`](DeviceLink::recv_reply_by) tightens it
+    pub io_timeout: Option<std::time::Duration>,
 }
 
 impl DeviceLink {
@@ -107,6 +110,23 @@ impl DeviceLink {
             WireMsg::Reply(r) => Ok(r),
             other => crate::bail!("device {}: expected a reply, got {other:?}", self.device),
         }
+    }
+
+    /// Receive the next reply before the absolute deadline `by`, however
+    /// much of it is left — the coordinator's epoch barrier is one shared
+    /// deadline, not a fresh per-device allowance.  Restores the link's
+    /// steady-state timeout afterwards.
+    pub fn recv_reply_by(&mut self, by: Instant) -> Result<DeviceReply> {
+        let remaining = by.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            crate::bail!("device {}: epoch deadline expired (recv timed out)", self.device);
+        }
+        self.transport.set_timeouts(Some(remaining), None)?;
+        let out = self.recv_reply();
+        // best-effort restore; a link whose reset fails is about to be
+        // torn down by the error path anyway
+        let _ = self.transport.set_timeouts(self.io_timeout, self.io_timeout);
+        out
     }
 
     /// Total frame bytes moved over this link, both directions.
@@ -169,7 +189,7 @@ pub fn spawn_device(
             );
         })
         .expect("spawn device thread");
-    DeviceLink { device, transport: Box::new(leader_end), join: Some(join) }
+    DeviceLink { device, transport: Box::new(leader_end), join: Some(join), io_timeout: None }
 }
 
 /// The device-side command loop, shared **verbatim** between in-process
@@ -515,6 +535,28 @@ mod tests {
 
         assert!(link.wire_bytes() > 0, "channel links still account frame bytes");
         link.stop();
+    }
+
+    #[test]
+    fn epoch_deadline_surfaces_as_a_classified_timeout() {
+        use crate::distributed::fault::FaultKind;
+        use std::time::Duration;
+
+        let (leader_end, _device_end) = channel_pair();
+        let mut link = DeviceLink {
+            device: 3,
+            transport: Box::new(leader_end),
+            join: None,
+            io_timeout: None,
+        };
+        // a silent device: the deadline must fire, classified as a timeout
+        let t0 = Instant::now();
+        let e = link.recv_reply_by(Instant::now() + Duration::from_millis(30)).unwrap_err();
+        assert_eq!(FaultKind::classify(&e), FaultKind::Timeout, "{e}");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+        // an already-expired deadline fails immediately, without a recv
+        let e = link.recv_reply_by(Instant::now()).unwrap_err();
+        assert_eq!(FaultKind::classify(&e), FaultKind::Timeout, "{e}");
     }
 
     #[test]

@@ -1,0 +1,454 @@
+//! Deterministic fault injection and fault classification (DESIGN.md §13).
+//!
+//! A [`FaultInjector`] wraps a raw socket stream with its own [`proto`]
+//! framing and fires a scripted [`FaultAction`] when a given frame index
+//! crosses it in a given direction — so every failure mode a week-long
+//! distributed run can hit (dropped frames, stalls, bit corruption, dead
+//! peers) is reproducible in a unit test, byte for byte, run after run.
+//! Frame indices count from 0 per direction: on the coordinator side of a
+//! link, send frame 0 is `Hello`, 1 is `Assign`, 2 is `Ingest`, 3 is the
+//! first `Epoch`, 4 the first `Export` — one scalar selects a protocol
+//! phase to break (`tests/chaos.rs` sweeps it).
+//!
+//! [`FaultKind::classify`] is the other half: it maps any transport-layer
+//! error (injected or organic) onto the coarse failure classes the
+//! coordinator's recovery loop handles, by matching the stable substrings
+//! [`proto`] and the transports put in their messages ("timed out",
+//! "connection reset", "crc mismatch", ...).  Every recovery is recorded
+//! as a [`FaultEvent`] in `CommStats` and the run manifest.
+
+use super::proto::{self, WireMsg, HEADER_BYTES};
+use super::transport::{Transport, WireStream};
+use crate::util::error::{Error, Result};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::time::Duration;
+
+/// Which direction of the wrapped stream a rule watches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Send,
+    Recv,
+}
+
+/// What happens to the selected frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// the frame silently never travels (lost datagram / dead NIC queue)
+    Drop,
+    /// the frame travels late (congestion); everything else is normal
+    Delay(Duration),
+    /// the frame travels with one payload (or crc) byte flipped
+    Corrupt,
+    /// the peer wedges: sleep this long, then fail as timed out and
+    /// poison the link
+    Hang(Duration),
+    /// the peer dies: fail as connection-reset and poison the link
+    Disconnect,
+}
+
+/// One scripted fault: `action` fires when frame number `frame` (0-based,
+/// counted per direction) crosses in direction `dir`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultRule {
+    pub dir: Dir,
+    pub frame: u64,
+    pub action: FaultAction,
+}
+
+/// A deterministic fault script for one link.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// A plan with a single rule.
+    pub fn one(dir: Dir, frame: u64, action: FaultAction) -> FaultPlan {
+        FaultPlan { rules: vec![FaultRule { dir, frame, action }] }
+    }
+
+    /// A seeded random single-fault plan: one of the *fail-fast* actions
+    /// (corrupt / hang / disconnect — never a silent drop, whose only
+    /// detector is the epoch deadline) at a frame in `0..max_frame`, on a
+    /// random direction.  Same seed, same plan, always.
+    pub fn seeded(seed: u64, max_frame: u64, hang: Duration) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17);
+        let dir = if rng.below(2) == 0 { Dir::Send } else { Dir::Recv };
+        let frame = rng.below(max_frame.max(1) as usize) as u64;
+        let action = match rng.below(3) {
+            0 => FaultAction::Corrupt,
+            1 => FaultAction::Hang(hang),
+            _ => FaultAction::Disconnect,
+        };
+        FaultPlan::one(dir, frame, action)
+    }
+
+    /// The action scripted for this (direction, frame), if any.
+    pub fn action_at(&self, dir: Dir, frame: u64) -> Option<FaultAction> {
+        self.rules
+            .iter()
+            .find(|r| r.dir == dir && r.frame == frame)
+            .map(|r| r.action)
+    }
+}
+
+/// The coarse failure classes the recovery loop distinguishes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// a deadline expired (read/write timeout, epoch deadline)
+    Timeout,
+    /// the peer hung up (reset, closed, broken pipe, EOF mid-frame)
+    Disconnect,
+    /// a frame arrived but its crc did not check out
+    Corruption,
+    /// framing was intact but the content violated the protocol (bad
+    /// magic/version/type, unexpected message for the phase)
+    Protocol,
+    Other,
+}
+
+impl FaultKind {
+    /// Classify a transport-layer error by the stable substrings the
+    /// proto/transport layers put in their messages.
+    pub fn classify(e: &Error) -> FaultKind {
+        let s = e.to_string();
+        if s.contains("timed out") {
+            FaultKind::Timeout
+        } else if s.contains("connection reset")
+            || s.contains("connection closed")
+            || s.contains("hung up")
+        {
+            FaultKind::Disconnect
+        } else if s.contains("crc mismatch") {
+            FaultKind::Corruption
+        } else if s.contains("magic")
+            || s.contains("version")
+            || s.contains("frame type")
+            || s.contains("expected")
+        {
+            FaultKind::Protocol
+        } else {
+            FaultKind::Other
+        }
+    }
+
+    /// Stable name for manifests and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Timeout => "timeout",
+            FaultKind::Disconnect => "disconnect",
+            FaultKind::Corruption => "corruption",
+            FaultKind::Protocol => "protocol",
+            FaultKind::Other => "other",
+        }
+    }
+}
+
+/// One classified fault the coordinator observed and recovered from (or
+/// died on).  Surfaces in `CommStats::faults` and the run manifest.
+#[derive(Clone, Debug)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// logical device whose link faulted (usize::MAX when unattributable)
+    pub device: usize,
+    /// the epoch training restarted from after the rollback
+    pub restart_epoch: usize,
+    /// the underlying error text
+    pub detail: String,
+}
+
+/// A [`Transport`] over a raw stream that executes a [`FaultPlan`].
+///
+/// Runs the same [`proto`] framing as `FramedTransport`, plus the
+/// scripted faults.  Drop still *accounts* the frame bytes (the sender
+/// believes it sent); Corrupt flips one byte the crc covers, so the peer
+/// sees exactly the "crc mismatch" a real flipped bit would cause; Hang
+/// and Disconnect poison the link — every later call fails like a dead
+/// socket would.
+pub struct FaultInjector<S: WireStream> {
+    stream: S,
+    plan: FaultPlan,
+    /// names the wrapped side in injected-error messages ("worker", ...)
+    tag: &'static str,
+    sent_frames: u64,
+    recv_frames: u64,
+    sent: u64,
+    received: u64,
+    poisoned: bool,
+}
+
+impl<S: WireStream> FaultInjector<S> {
+    pub fn new(stream: S, plan: FaultPlan, tag: &'static str) -> FaultInjector<S> {
+        FaultInjector {
+            stream,
+            plan,
+            tag,
+            sent_frames: 0,
+            recv_frames: 0,
+            sent: 0,
+            received: 0,
+            poisoned: false,
+        }
+    }
+
+    fn poisoned_err<T>(&self) -> Result<T> {
+        crate::bail!("{}: connection reset by injected fault", self.tag)
+    }
+}
+
+impl<S: WireStream> Transport for FaultInjector<S> {
+    fn send(&mut self, msg: WireMsg) -> Result<()> {
+        if self.poisoned {
+            return self.poisoned_err();
+        }
+        let frame_no = self.sent_frames;
+        self.sent_frames += 1;
+        match self.plan.action_at(Dir::Send, frame_no) {
+            Some(FaultAction::Drop) => {
+                // the frame vanishes, but the sender's accounting (and its
+                // belief that the send succeeded) is that of a normal send
+                self.sent += proto::frame_len(&msg) as u64;
+                Ok(())
+            }
+            Some(FaultAction::Corrupt) => {
+                let mut frame = proto::encode(&msg);
+                // flip a bit the crc covers: first payload byte, or the
+                // crc field itself for empty payloads — never the length
+                // field, so framing stays aligned for later frames
+                let idx = if frame.len() > HEADER_BYTES { HEADER_BYTES } else { 12 };
+                frame[idx] ^= 0x40;
+                self.stream
+                    .write_all(&frame)
+                    .and_then(|()| self.stream.flush())
+                    .map_err(|e| Error::msg(format!("write frame: {e}")))?;
+                self.sent += frame.len() as u64;
+                Ok(())
+            }
+            Some(FaultAction::Hang(d)) => {
+                std::thread::sleep(d);
+                self.poisoned = true;
+                crate::bail!("{}: send timed out (injected hang at frame {frame_no})", self.tag)
+            }
+            Some(FaultAction::Disconnect) => {
+                self.poisoned = true;
+                crate::bail!(
+                    "{}: connection reset (injected disconnect at frame {frame_no})",
+                    self.tag
+                )
+            }
+            Some(FaultAction::Delay(d)) => {
+                std::thread::sleep(d);
+                let n = proto::write_frame(&mut self.stream, &msg)?;
+                self.stream
+                    .flush()
+                    .map_err(|e| Error::msg(format!("flush frame: {e}")))?;
+                self.sent += n as u64;
+                Ok(())
+            }
+            None => {
+                let n = proto::write_frame(&mut self.stream, &msg)?;
+                self.stream
+                    .flush()
+                    .map_err(|e| Error::msg(format!("flush frame: {e}")))?;
+                self.sent += n as u64;
+                Ok(())
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<WireMsg> {
+        loop {
+            if self.poisoned {
+                return self.poisoned_err();
+            }
+            let frame_no = self.recv_frames;
+            self.recv_frames += 1;
+            match self.plan.action_at(Dir::Recv, frame_no) {
+                Some(FaultAction::Drop) => {
+                    // read the real frame off the wire and discard it, so
+                    // framing stays aligned and the *next* recv sees the
+                    // next frame — the peer's send "was lost"
+                    let (_msg, n) = proto::read_frame(&mut self.stream)?;
+                    self.received += n as u64;
+                    continue;
+                }
+                Some(FaultAction::Corrupt) => {
+                    // the frame arrives but one bit flipped in transit:
+                    // consume it, then fail exactly as the crc check would
+                    let (_msg, n) = proto::read_frame(&mut self.stream)?;
+                    self.received += n as u64;
+                    crate::bail!(
+                        "{}: frame crc mismatch (injected corruption at frame {frame_no})",
+                        self.tag
+                    )
+                }
+                Some(FaultAction::Hang(d)) => {
+                    std::thread::sleep(d);
+                    self.poisoned = true;
+                    crate::bail!(
+                        "{}: recv timed out (injected hang at frame {frame_no})",
+                        self.tag
+                    )
+                }
+                Some(FaultAction::Disconnect) => {
+                    self.poisoned = true;
+                    crate::bail!(
+                        "{}: connection reset (injected disconnect at frame {frame_no})",
+                        self.tag
+                    )
+                }
+                Some(FaultAction::Delay(d)) => {
+                    std::thread::sleep(d);
+                    let (msg, n) = proto::read_frame(&mut self.stream)?;
+                    self.received += n as u64;
+                    return Ok(msg);
+                }
+                None => {
+                    let (msg, n) = proto::read_frame(&mut self.stream)?;
+                    self.received += n as u64;
+                    return Ok(msg);
+                }
+            }
+        }
+    }
+
+    fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
+        self.stream.set_stream_timeouts(read, write)
+    }
+
+    fn bytes_sent(&self) -> u64 {
+        self.sent
+    }
+
+    fn bytes_received(&self) -> u64 {
+        self.received
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributed::device::DeviceCmd;
+    use crate::distributed::transport::FramedTransport;
+    use std::net::{TcpListener, TcpStream};
+
+    fn tcp_pair() -> (TcpStream, TcpStream) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        (client, server)
+    }
+
+    #[test]
+    fn classification_matches_stable_substrings() {
+        let cases = [
+            ("device 1: recv timed out after 3.0s", FaultKind::Timeout),
+            ("read frame header: connection reset/closed", FaultKind::Disconnect),
+            ("channel transport: peer hung up", FaultKind::Disconnect),
+            ("frame crc mismatch: computed 0, header says 1", FaultKind::Corruption),
+            ("bad frame magic [58, 4d, 44, 46]", FaultKind::Protocol),
+            ("unknown frame type 61166", FaultKind::Protocol),
+            ("expected EpochDone, got Hello", FaultKind::Protocol),
+            ("no space left on device", FaultKind::Other),
+        ];
+        for (msg, want) in cases {
+            assert_eq!(FaultKind::classify(&Error::msg(msg)), want, "{msg}");
+        }
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_fail_fast() {
+        for seed in 0..32u64 {
+            let a = FaultPlan::seeded(seed, 5, Duration::from_millis(10));
+            let b = FaultPlan::seeded(seed, 5, Duration::from_millis(10));
+            assert_eq!(a.rules, b.rules, "seed {seed} must replay");
+            assert_eq!(a.rules.len(), 1);
+            assert!(a.rules[0].frame < 5);
+            assert!(!matches!(a.rules[0].action, FaultAction::Drop | FaultAction::Delay(_)));
+        }
+        // seeds actually vary the plan
+        let plans: Vec<FaultPlan> =
+            (0..32).map(|s| FaultPlan::seeded(s, 5, Duration::from_millis(10))).collect();
+        assert!(plans.windows(2).any(|w| w[0].rules != w[1].rules));
+    }
+
+    #[test]
+    fn corrupt_send_trips_the_peer_crc_check() {
+        let (client, server) = tcp_pair();
+        let mut inj =
+            FaultInjector::new(client, FaultPlan::one(Dir::Send, 0, FaultAction::Corrupt), "t");
+        let peer = std::thread::spawn(move || {
+            let mut t = FramedTransport::new(server);
+            let first = t.recv();
+            (first, t.recv())
+        });
+        inj.send(WireMsg::Cmd(DeviceCmd::Export)).unwrap();
+        drop(inj);
+        let (first, _second) = peer.join().unwrap();
+        let e = first.unwrap_err().to_string();
+        assert!(e.contains("crc mismatch"), "{e}");
+    }
+
+    #[test]
+    fn dropped_send_frame_never_arrives_but_later_frames_do() {
+        let (client, server) = tcp_pair();
+        let mut inj =
+            FaultInjector::new(client, FaultPlan::one(Dir::Send, 0, FaultAction::Drop), "t");
+        let peer = std::thread::spawn(move || FramedTransport::new(server).recv());
+        inj.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap(); // dropped
+        inj.send(WireMsg::Cmd(DeviceCmd::Export)).unwrap(); // arrives first
+        assert!(inj.bytes_sent() > 0, "dropped frames still account bytes");
+        match peer.join().unwrap().unwrap() {
+            WireMsg::Cmd(DeviceCmd::Export) => {}
+            other => panic!("peer should have seen Export, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_drop_skips_to_the_next_frame() {
+        let (client, server) = tcp_pair();
+        let mut inj =
+            FaultInjector::new(client, FaultPlan::one(Dir::Recv, 0, FaultAction::Drop), "t");
+        let peer = std::thread::spawn(move || {
+            let mut t = FramedTransport::new(server);
+            t.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap();
+            t.send(WireMsg::Cmd(DeviceCmd::Export)).unwrap();
+        });
+        match inj.recv().unwrap() {
+            WireMsg::Cmd(DeviceCmd::Export) => {}
+            other => panic!("frame 0 should have been dropped, got {other:?}"),
+        }
+        peer.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_and_hang_poison_the_link_with_classified_errors() {
+        let (client, _server) = tcp_pair();
+        let mut inj = FaultInjector::new(
+            client,
+            FaultPlan::one(Dir::Send, 0, FaultAction::Disconnect),
+            "worker",
+        );
+        let e = inj.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap_err();
+        assert_eq!(FaultKind::classify(&e), FaultKind::Disconnect);
+        // poisoned: every later op fails the same way
+        let e2 = inj.recv().unwrap_err();
+        assert_eq!(FaultKind::classify(&e2), FaultKind::Disconnect);
+
+        let (client, _server) = tcp_pair();
+        let mut inj = FaultInjector::new(
+            client,
+            FaultPlan::one(Dir::Recv, 0, FaultAction::Hang(Duration::from_millis(5))),
+            "worker",
+        );
+        let e = inj.recv().unwrap_err();
+        assert_eq!(FaultKind::classify(&e), FaultKind::Timeout);
+        assert_eq!(
+            FaultKind::classify(&inj.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap_err()),
+            FaultKind::Disconnect,
+            "poisoned links look like dead sockets"
+        );
+    }
+}

@@ -1,0 +1,256 @@
+//! Deterministic structure-aware fuzzing for the wire decoder.
+//!
+//! `cargo test`-runnable, pure std: a seeded corpus of every [`WireMsg`]
+//! variant is mutated with frame-structure-aware operators (bit flips,
+//! length-field boundary values, truncation, extension, splicing, crc
+//! zeroing/fixing) and fed to both decoders — [`proto::decode`] on the
+//! slice and [`proto::read_frame`] through a reader that returns the
+//! bytes in adversarially small chunks.  The decoders must return
+//! `Ok`/`Err`, never panic, never allocate from a hostile length claim,
+//! and must agree: a frame the slice decoder accepts is byte-exact, so
+//! the streaming decoder has to accept it too.
+//!
+//! Everything is a pure function of the seed, so any crash reproduces
+//! from two integers; crashes get promoted to regression tests in
+//! `tests/wire_proto.rs`.
+
+use super::device::{DeviceCmd, DeviceReply};
+use super::proto::{self, Assignment, Role, WireMsg, HEADER_BYTES, MAX_PAYLOAD};
+use super::MeanEntry;
+use crate::util::rng::Rng;
+use crate::viz::png::Crc32;
+use std::io::Read;
+use std::sync::Arc;
+
+/// Tally of one fuzzing run (slice-decoder outcomes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FuzzOutcome {
+    /// Mutated frames fed to the decoders.
+    pub iters: usize,
+    /// Frames the slice decoder accepted (pristine corpus warm-up included).
+    pub decoded_ok: usize,
+    /// Frames it rejected with an error (the canonical truncation warm-up
+    /// guarantees this is nonzero for every seed).
+    pub rejected: usize,
+}
+
+/// One exemplar frame per message variant — the mutation corpus.  The
+/// test-only `proto::tests::sample_msgs` is `cfg(test)`, so the fuzz
+/// harness carries its own.
+pub fn corpus() -> Vec<WireMsg> {
+    let means = vec![
+        MeanEntry { cluster_id: 2, mean: [0.75, -1.5], weight: 4.0 },
+        MeanEntry { cluster_id: 11, mean: [-0.0, f32::MIN_POSITIVE], weight: 0.25 },
+    ];
+    vec![
+        WireMsg::Hello { role: Role::Coordinator },
+        WireMsg::Hello { role: Role::Worker },
+        WireMsg::Assign(Assignment {
+            device: 1,
+            n_active: 2,
+            n_total: 4096,
+            negs: 8,
+            seed: 0xDEAD_BEEF,
+            m_noise: 2.5,
+            clusters: vec![3, 0, 12],
+        }),
+        WireMsg::Assigned { device: 1, n_blocks: 3, n_points: 2048 },
+        WireMsg::Cmd(DeviceCmd::Epoch {
+            epoch: 17,
+            lr: 0.5,
+            exaggeration: 4.0,
+            means: Arc::new(means.clone()),
+        }),
+        WireMsg::Cmd(DeviceCmd::Export),
+        WireMsg::Cmd(DeviceCmd::Ingest { positions: Arc::new(vec![1.0, -2.5, 0.0, 3.25]) }),
+        WireMsg::Cmd(DeviceCmd::Stop),
+        WireMsg::Reply(DeviceReply::EpochDone {
+            device: 1,
+            means,
+            loss_sum: -12.5,
+            loss_weight: 64.0,
+            step_secs: 0.25,
+            flops: 1.0e9,
+        }),
+        WireMsg::Reply(DeviceReply::Exported {
+            device: 0,
+            positions: vec![(7, [1.0, -1.0]), (9, [0.5, 0.25])],
+        }),
+        WireMsg::Reply(DeviceReply::Ingested { device: 3 }),
+    ]
+}
+
+/// Recompute the header crc over the (possibly mutated) type/length
+/// fields and payload, so structural mutations can still produce frames
+/// that reach the payload decoder instead of dying at the crc check.
+fn fix_crc(frame: &mut [u8]) {
+    if frame.len() < HEADER_BYTES {
+        return;
+    }
+    let mut c = Crc32::new();
+    c.update(&frame[6..12]);
+    c.update(&frame[HEADER_BYTES..]);
+    let crc = c.finish().to_le_bytes();
+    frame[12..16].copy_from_slice(&crc);
+}
+
+/// Apply one structure-aware mutation in place.  `donor` is another
+/// corpus frame for the splice operator.
+fn mutate(frame: &mut Vec<u8>, donor: &[u8], rng: &mut Rng) {
+    match rng.below(7) {
+        0 => {
+            // flip one bit anywhere
+            if !frame.is_empty() {
+                let i = rng.below(frame.len());
+                frame[i] ^= 1 << rng.below(8);
+            }
+        }
+        1 => {
+            // drive the length field to a boundary value
+            if frame.len() >= HEADER_BYTES {
+                let payload = (frame.len() - HEADER_BYTES) as u32;
+                let boundary = [
+                    0,
+                    1,
+                    payload.wrapping_sub(1),
+                    payload.wrapping_add(1),
+                    MAX_PAYLOAD,
+                    MAX_PAYLOAD + 1,
+                    u32::MAX,
+                ];
+                let v = boundary[rng.below(boundary.len())];
+                frame[8..12].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        2 => {
+            // truncate anywhere, header included
+            if !frame.is_empty() {
+                let keep = rng.below(frame.len());
+                frame.truncate(keep);
+            }
+        }
+        3 => {
+            // append trailing garbage
+            for _ in 0..rng.below(24) + 1 {
+                frame.push(rng.next_u64() as u8);
+            }
+        }
+        4 => {
+            // zero the crc field
+            if frame.len() >= HEADER_BYTES {
+                frame[12..16].fill(0);
+            }
+        }
+        5 => {
+            // splice: our prefix, the donor's suffix
+            let cut = rng.below(frame.len().min(donor.len()).max(1));
+            frame.truncate(cut);
+            frame.extend_from_slice(&donor[cut.min(donor.len())..]);
+        }
+        _ => fix_crc(frame),
+    }
+}
+
+/// A reader that hands out at most 7 bytes per `read` call, the count
+/// drawn from its own rng stream — the streaming decoder must survive
+/// arbitrarily fragmented delivery (short TCP reads).
+struct Chunked<'a> {
+    data: &'a [u8],
+    off: usize,
+    rng: Rng,
+}
+
+impl Read for Chunked<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let left = self.data.len() - self.off;
+        if left == 0 || buf.is_empty() {
+            return Ok(0);
+        }
+        let max = buf.len().min(left).min(7);
+        let n = self.rng.below(max) + 1;
+        buf[..n].copy_from_slice(&self.data[self.off..self.off + n]);
+        self.off += n;
+        Ok(n)
+    }
+}
+
+/// Run `iters` mutated frames through both decoders.  Panics only on a
+/// decoder bug: either decoder panicking internally, or the slice
+/// decoder accepting a frame the streaming decoder rejects.
+pub fn run(seed: u64, iters: usize) -> FuzzOutcome {
+    let frames: Vec<Vec<u8>> = corpus().iter().map(proto::encode).collect();
+    let mut rng = Rng::new(seed).fork(0xF0);
+    let mut decoded_ok = 0usize;
+    let mut rejected = 0usize;
+
+    // warm-up establishes both counters for every seed: pristine frames
+    // must decode, a canonical truncation must not
+    for f in &frames {
+        match proto::decode(f) {
+            Ok(_) => decoded_ok += 1,
+            Err(e) => panic!("pristine corpus frame rejected: {e}"),
+        }
+    }
+    assert!(proto::decode(&frames[0][..HEADER_BYTES - 1]).is_err());
+    rejected += 1;
+
+    for i in 0..iters {
+        let mut frame = frames[rng.below(frames.len())].clone();
+        let donor = &frames[rng.below(frames.len())];
+        for _ in 0..rng.below(3) + 1 {
+            mutate(&mut frame, donor, &mut rng);
+        }
+
+        let slice_ok = match proto::decode(&frame) {
+            Ok(_) => {
+                decoded_ok += 1;
+                true
+            }
+            Err(_) => {
+                rejected += 1;
+                false
+            }
+        };
+
+        let mut r = Chunked { data: &frame, off: 0, rng: rng.fork(i as u64) };
+        let stream_ok = proto::read_frame(&mut r).is_ok();
+        if slice_ok {
+            // the slice held exactly one valid frame, so the streaming
+            // decoder has no excuse
+            assert!(stream_ok, "slice decoder accepted what the stream decoder rejected");
+        }
+    }
+    FuzzOutcome { iters, decoded_ok, rejected }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fuzz_is_deterministic_in_the_seed() {
+        let a = run(42, 300);
+        let b = run(42, 300);
+        assert_eq!(a, b);
+        assert_eq!(a.iters, 300);
+        assert_eq!(a.decoded_ok + a.rejected, 300 + corpus().len() + 1);
+    }
+
+    #[test]
+    fn fuzz_exercises_both_outcomes() {
+        for seed in [0u64, 1, 0xBAD5EED] {
+            let out = run(seed, 200);
+            assert!(out.decoded_ok > 0, "seed {seed}: nothing decoded");
+            assert!(out.rejected > 0, "seed {seed}: nothing rejected");
+        }
+    }
+
+    #[test]
+    fn chunked_reader_delivers_everything() {
+        let frame = proto::encode(&WireMsg::Cmd(DeviceCmd::Export));
+        let mut r = Chunked { data: &frame, off: 0, rng: Rng::new(7) };
+        let mut out = Vec::new();
+        r.read_to_end(&mut out).unwrap();
+        assert_eq!(out, frame);
+    }
+}

@@ -30,6 +30,8 @@
 
 pub mod comm_model;
 pub mod device;
+pub mod fault;
+pub mod fuzz;
 pub mod proto;
 pub mod sharder;
 pub mod transport;

@@ -471,20 +471,46 @@ pub fn decode(frame: &[u8]) -> Result<WireMsg> {
     decode_payload(ty, payload)
 }
 
+/// Normalize an io error into the stable phrases `FaultKind::classify`
+/// keys on: deadline expiry reads "timed out", a lost peer reads
+/// "connection reset"/"connection closed", everything else keeps its own
+/// message.  (`WouldBlock` is what a socket read timeout surfaces as on
+/// unix; its Display text — "Resource temporarily unavailable" — says
+/// nothing about deadlines, hence the rewrite.)
+fn io_ctx(op: &str, e: std::io::Error) -> crate::util::error::Error {
+    use std::io::ErrorKind as K;
+    let what = match e.kind() {
+        K::TimedOut | K::WouldBlock => "timed out".to_string(),
+        K::ConnectionReset | K::ConnectionAborted | K::BrokenPipe | K::NotConnected => {
+            "connection reset by peer".to_string()
+        }
+        K::UnexpectedEof => "connection closed mid-frame".to_string(),
+        _ => e.to_string(),
+    };
+    crate::util::error::Error::msg(format!("{op}: {what}"))
+}
+
 /// Write one frame; returns the bytes written.
 pub fn write_frame(w: &mut impl Write, msg: &WireMsg) -> Result<usize> {
     let frame = encode(msg);
-    w.write_all(&frame).context("write frame")?;
+    w.write_all(&frame).map_err(|e| io_ctx("write frame", e))?;
     Ok(frame.len())
 }
 
 /// Read one frame; returns the message and the bytes consumed.
 pub fn read_frame(r: &mut impl Read) -> Result<(WireMsg, usize)> {
     let mut h = [0u8; HEADER_BYTES];
-    r.read_exact(&mut h).context("read frame header")?;
+    r.read_exact(&mut h).map_err(|e| io_ctx("read frame header", e))?;
     let (ty, len) = parse_header(&h)?;
-    let mut payload = vec![0u8; len];
-    r.read_exact(&mut payload).context("read frame payload")?;
+    // the header's length field passed the MAX_PAYLOAD bound, but a hostile
+    // peer can still claim far more than it sends — grow the buffer as the
+    // bytes actually arrive instead of trusting the claim up front
+    let mut payload = Vec::with_capacity(len.min(1 << 20));
+    let took = r
+        .take(len as u64)
+        .read_to_end(&mut payload)
+        .map_err(|e| io_ctx("read frame payload", e))?;
+    ensure!(took == len, "read frame payload: connection closed mid-frame ({took} of {len} bytes)");
     let want = u32::from_le_bytes([h[12], h[13], h[14], h[15]]);
     let got = frame_crc(ty, &payload);
     ensure!(got == want, "frame crc mismatch: computed {got:08x}, header says {want:08x}");

@@ -15,11 +15,12 @@
 //! `unix:/path/to.sock`) and [`connect`] dials it with retry, so a
 //! coordinator can race worker startup in CI without a sleep-loop script.
 
+use super::fault::{FaultInjector, FaultPlan};
 use super::proto::{self, Role, WireMsg};
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, Error, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::time::{Duration, Instant};
 
 /// A bidirectional, ordered, reliable message pipe.
@@ -27,10 +28,60 @@ pub trait Transport: Send {
     fn send(&mut self, msg: WireMsg) -> Result<()>;
     /// Blocking receive of the next message.
     fn recv(&mut self) -> Result<WireMsg>;
+    /// Deadlines for subsequent operations; `None` blocks forever (the
+    /// default).  An expired deadline surfaces as an error whose text
+    /// contains "timed out" (see `FaultKind::classify`).
+    fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()>;
     /// Cumulative frame bytes sent (real or would-be).
     fn bytes_sent(&self) -> u64;
     /// Cumulative frame bytes received (real or would-be).
     fn bytes_received(&self) -> u64;
+}
+
+/// A raw byte stream a [`FramedTransport`] (or a
+/// [`FaultInjector`]) can frame: read/write plus kernel-level deadline
+/// control.  Implemented for [`TcpStream`] and `UnixStream`.
+pub trait WireStream: Read + Write + Send {
+    /// Apply read/write timeouts to the underlying descriptor.  `None`
+    /// blocks forever; zero durations are clamped up (the OS rejects 0).
+    fn set_stream_timeouts(
+        &mut self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()>;
+}
+
+/// The smallest timeout the OS accepts (`set_read_timeout(Some(0))` is an
+/// error by contract); an already-expired deadline becomes this.
+fn clamp_timeout(d: Option<Duration>) -> Option<Duration> {
+    d.map(|d| d.max(Duration::from_millis(1)))
+}
+
+impl WireStream for TcpStream {
+    fn set_stream_timeouts(
+        &mut self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()> {
+        self.set_read_timeout(clamp_timeout(read))
+            .map_err(|e| Error::msg(format!("set read timeout: {e}")))?;
+        self.set_write_timeout(clamp_timeout(write))
+            .map_err(|e| Error::msg(format!("set write timeout: {e}")))
+    }
+}
+
+#[cfg(unix)]
+impl WireStream for std::os::unix::net::UnixStream {
+    fn set_stream_timeouts(
+        &mut self,
+        read: Option<Duration>,
+        write: Option<Duration>,
+    ) -> Result<()> {
+        self.set_read_timeout(clamp_timeout(read))
+            .map_err(|e| Error::msg(format!("set read timeout: {e}")))?;
+        self.set_write_timeout(clamp_timeout(write))
+            .map_err(|e| Error::msg(format!("set write timeout: {e}")))
+    }
 }
 
 // ------------------------------------------------------------- channels
@@ -39,6 +90,7 @@ pub trait Transport: Send {
 pub struct ChannelTransport {
     tx: Sender<WireMsg>,
     rx: Receiver<WireMsg>,
+    read_timeout: Option<Duration>,
     sent: u64,
     received: u64,
 }
@@ -48,8 +100,8 @@ pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
     let (a_tx, b_rx) = std::sync::mpsc::channel();
     let (b_tx, a_rx) = std::sync::mpsc::channel();
     (
-        ChannelTransport { tx: a_tx, rx: a_rx, sent: 0, received: 0 },
-        ChannelTransport { tx: b_tx, rx: b_rx, sent: 0, received: 0 },
+        ChannelTransport { tx: a_tx, rx: a_rx, read_timeout: None, sent: 0, received: 0 },
+        ChannelTransport { tx: b_tx, rx: b_rx, read_timeout: None, sent: 0, received: 0 },
     )
 }
 
@@ -60,9 +112,28 @@ impl Transport for ChannelTransport {
     }
 
     fn recv(&mut self) -> Result<WireMsg> {
-        let msg = self.rx.recv().ok().context("channel transport: peer hung up")?;
+        let msg = match self.read_timeout {
+            None => self.rx.recv().ok().context("channel transport: peer hung up")?,
+            Some(d) => match self.rx.recv_timeout(d) {
+                Ok(m) => m,
+                Err(RecvTimeoutError::Timeout) => crate::bail!(
+                    "channel transport: recv timed out after {:.3}s",
+                    d.as_secs_f64()
+                ),
+                Err(RecvTimeoutError::Disconnected) => {
+                    crate::bail!("channel transport: peer hung up")
+                }
+            },
+        };
         self.received += proto::frame_len(&msg) as u64;
         Ok(msg)
+    }
+
+    fn set_timeouts(&mut self, read: Option<Duration>, _write: Option<Duration>) -> Result<()> {
+        // sends on an unbounded channel cannot block, so only the read
+        // side has a deadline to honour
+        self.read_timeout = read;
+        Ok(())
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -76,24 +147,26 @@ impl Transport for ChannelTransport {
 
 // -------------------------------------------------------------- streams
 
-/// A [`Transport`] over any `Read + Write` byte stream, using the
+/// A [`Transport`] over a socket byte stream ([`WireStream`]), using the
 /// length-prefixed frames of [`proto`].
-pub struct FramedTransport<S: Read + Write + Send> {
+pub struct FramedTransport<S: WireStream> {
     stream: S,
     sent: u64,
     received: u64,
 }
 
-impl<S: Read + Write + Send> FramedTransport<S> {
+impl<S: WireStream> FramedTransport<S> {
     pub fn new(stream: S) -> FramedTransport<S> {
         FramedTransport { stream, sent: 0, received: 0 }
     }
 }
 
-impl<S: Read + Write + Send> Transport for FramedTransport<S> {
+impl<S: WireStream> Transport for FramedTransport<S> {
     fn send(&mut self, msg: WireMsg) -> Result<()> {
         let n = proto::write_frame(&mut self.stream, &msg)?;
-        self.stream.flush().context("flush frame")?;
+        self.stream
+            .flush()
+            .map_err(|e| Error::msg(format!("flush frame: {e}")))?;
         self.sent += n as u64;
         Ok(())
     }
@@ -102,6 +175,10 @@ impl<S: Read + Write + Send> Transport for FramedTransport<S> {
         let (msg, n) = proto::read_frame(&mut self.stream)?;
         self.received += n as u64;
         Ok(msg)
+    }
+
+    fn set_timeouts(&mut self, read: Option<Duration>, write: Option<Duration>) -> Result<()> {
+        self.stream.set_stream_timeouts(read, write)
     }
 
     fn bytes_sent(&self) -> u64 {
@@ -152,31 +229,69 @@ impl std::fmt::Display for Endpoint {
     }
 }
 
+/// First retry delay of [`connect`]'s backoff schedule.
+const BACKOFF_FIRST: Duration = Duration::from_millis(25);
+/// Backoff delays double up to this cap.
+const BACKOFF_CAP: Duration = Duration::from_millis(800);
+
+/// Wrap a freshly-dialed stream: plain framing, or fault-injected framing
+/// when a test scripted a [`FaultPlan`] for this link.
+fn wrap_stream<S: WireStream + 'static>(
+    stream: S,
+    plan: Option<&FaultPlan>,
+) -> Box<dyn Transport> {
+    match plan {
+        Some(p) => Box::new(FaultInjector::new(stream, p.clone(), "coordinator")),
+        None => Box::new(FramedTransport::new(stream)),
+    }
+}
+
 /// Dial a worker, retrying until `patience` runs out — worker processes
 /// launched in parallel with the coordinator (the CI smoke job) need a
-/// moment to bind their listeners.
+/// moment to bind their listeners.  Retries follow a deterministic capped
+/// exponential backoff (25 ms doubling to 800 ms); a zero `patience`
+/// means exactly one attempt.  The final error names the attempt count.
 pub fn connect(ep: &Endpoint, patience: Duration) -> Result<Box<dyn Transport>> {
+    connect_with(ep, patience, None)
+}
+
+/// [`connect`] with an optional coordinator-side [`FaultPlan`] applied to
+/// the resulting link (fault-injection tests only).
+pub fn connect_with(
+    ep: &Endpoint,
+    patience: Duration,
+    plan: Option<&FaultPlan>,
+) -> Result<Box<dyn Transport>> {
     let t0 = Instant::now();
+    let mut backoff = BACKOFF_FIRST;
+    let mut attempts: u32 = 0;
     loop {
+        attempts += 1;
         let attempt: Result<Box<dyn Transport>> = match ep {
             Endpoint::Tcp(addr) => TcpStream::connect(addr.as_str())
-                .map_err(crate::util::error::Error::msg)
+                .map_err(Error::msg)
                 .map(|s| {
                     let _ = s.set_nodelay(true);
-                    Box::new(FramedTransport::new(s)) as Box<dyn Transport>
+                    wrap_stream(s, plan)
                 }),
             #[cfg(unix)]
             Endpoint::Unix(path) => std::os::unix::net::UnixStream::connect(path)
-                .map_err(crate::util::error::Error::msg)
-                .map(|s| Box::new(FramedTransport::new(s)) as Box<dyn Transport>),
+                .map_err(Error::msg)
+                .map(|s| wrap_stream(s, plan)),
         };
         match attempt {
             Ok(t) => return Ok(t),
             Err(_) if t0.elapsed() < patience => {
-                std::thread::sleep(Duration::from_millis(100));
+                std::thread::sleep(backoff.min(patience.saturating_sub(t0.elapsed())));
+                backoff = (backoff * 2).min(BACKOFF_CAP);
             }
             Err(e) => {
-                return Err(e).with_context(|| format!("connect to worker at {ep}"));
+                return Err(e).with_context(|| {
+                    format!(
+                        "connect to worker at {ep} after {attempts} attempt(s) over {:.1}s",
+                        t0.elapsed().as_secs_f64()
+                    )
+                });
             }
         }
     }
@@ -315,5 +430,27 @@ mod tests {
         let t0 = Instant::now();
         assert!(connect(&ep, Duration::from_millis(0)).is_err());
         assert!(t0.elapsed() < Duration::from_secs(30));
+    }
+
+    #[test]
+    fn connect_error_reports_the_attempt_count() {
+        let ep = Endpoint::Tcp("127.0.0.1:1".into());
+        let err = connect(&ep, Duration::from_millis(60)).unwrap_err().to_string();
+        assert!(err.contains("attempt"), "no attempt count in: {err}");
+        assert!(err.contains("127.0.0.1:1"), "no endpoint in: {err}");
+    }
+
+    #[test]
+    fn channel_recv_honours_the_read_deadline() {
+        let (mut a, _b) = channel_pair();
+        a.set_timeouts(Some(Duration::from_millis(20)), None).unwrap();
+        let err = a.recv().unwrap_err().to_string();
+        assert!(err.contains("timed out"), "not a timeout error: {err}");
+        // clearing the deadline goes back to blocking mode — verified by
+        // a peerless recv reporting the hangup instead of a timeout
+        drop(_b);
+        a.set_timeouts(None, None).unwrap();
+        let err = a.recv().unwrap_err().to_string();
+        assert!(err.contains("hung up"), "not a hangup error: {err}");
     }
 }

@@ -13,14 +13,50 @@
 //! processes).
 
 use super::device::run_device_loop;
+use super::fault::{FaultInjector, FaultPlan};
 use super::proto::{Assignment, WireMsg};
-use super::transport::{worker_handshake, Endpoint, FramedTransport, Transport};
+use super::transport::{worker_handshake, Endpoint, FramedTransport, Transport, WireStream};
 use crate::data::shard::ShardSet;
 use crate::embed::native::NativeStepBackend;
 use crate::embed::ClusterBlock;
 use crate::ensure;
 use crate::util::error::{Context, Result};
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// How a worker process behaves across coordinator sessions.
+#[derive(Clone, Debug)]
+pub struct WorkerCfg {
+    pub verbose: bool,
+    /// Read/write deadline from accept until the assignment is acknowledged
+    /// — a half-open or slow-loris coordinator connection times out here
+    /// instead of wedging the worker before the handshake completes.
+    pub handshake_timeout: Duration,
+    /// Read/write deadline once a session is established (`None` blocks
+    /// forever, the pre-deadline behavior).
+    pub session_timeout: Option<Duration>,
+    /// Exit after this many accepted sessions (`None` = serve until a
+    /// coordinator sends `Stop`).  `Some(1)` makes a worker die with its
+    /// first session — the chaos tests' "killed worker".
+    pub max_sessions: Option<usize>,
+    /// Scripted fault plan per accepted session index (tests only; absent
+    /// entries serve cleanly).
+    pub faults: Vec<FaultPlan>,
+}
+
+impl Default for WorkerCfg {
+    fn default() -> WorkerCfg {
+        WorkerCfg {
+            verbose: false,
+            handshake_timeout: Duration::from_secs(10),
+            session_timeout: Some(Duration::from_secs(600)),
+            max_sessions: None,
+            faults: Vec::new(),
+        }
+    }
+}
 
 /// A bound worker listener, either flavor of [`Endpoint`].
 pub enum WorkerListener {
@@ -85,6 +121,57 @@ impl WorkerListener {
             }
         }
     }
+
+    /// Switch the listener's accept into (non)blocking mode.
+    pub fn set_nonblocking(&self, nb: bool) -> Result<()> {
+        match self {
+            WorkerListener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            WorkerListener::Unix(l) => l.set_nonblocking(nb),
+        }
+        .map_err(|e| crate::util::error::Error::msg(format!("set listener nonblocking: {e}")))
+    }
+
+    /// Non-blocking accept: `Ok(None)` when nobody is dialing.  The
+    /// accepted stream is switched back to blocking mode (deadlines are
+    /// applied per session) and wrapped in the session's fault plan when
+    /// one is scripted.
+    pub fn try_accept(&self, plan: Option<&FaultPlan>) -> Result<Option<Box<dyn Transport>>> {
+        fn wrap<S: WireStream + 'static>(s: S, plan: Option<&FaultPlan>) -> Box<dyn Transport> {
+            match plan {
+                Some(p) => Box::new(FaultInjector::new(s, p.clone(), "worker")),
+                None => Box::new(FramedTransport::new(s)),
+            }
+        }
+        let would_block = |e: &std::io::Error| {
+            matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+            )
+        };
+        match self {
+            WorkerListener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| crate::util::error::Error::msg(format!("accept: {e}")))?;
+                    let _ = s.set_nodelay(true);
+                    Ok(Some(wrap(s, plan)))
+                }
+                Err(ref e) if would_block(e) => Ok(None),
+                Err(e) => Err(crate::util::error::Error::msg(format!("accept: {e}"))),
+            },
+            #[cfg(unix)]
+            WorkerListener::Unix(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)
+                        .map_err(|e| crate::util::error::Error::msg(format!("accept: {e}")))?;
+                    Ok(Some(wrap(s, plan)))
+                }
+                Err(ref e) if would_block(e) => Ok(None),
+                Err(e) => Err(crate::util::error::Error::msg(format!("accept: {e}"))),
+            },
+        }
+    }
 }
 
 /// Check the coordinator's assignment against the shard manifest before
@@ -118,11 +205,17 @@ fn validate_assignment(a: &Assignment, shards: &ShardSet) -> Result<()> {
 /// receive the assignment, load the assigned blocks from the shard set (in
 /// assignment order — the block-index RNG forks depend on it), acknowledge
 /// with block/point counts, then run the shared device loop to `Stop`.
+///
+/// The handshake phase (hello through `Assigned`) runs under
+/// `cfg.handshake_timeout`; the established session under
+/// `cfg.session_timeout` — neither a silent socket nor a wedged
+/// coordinator can pin this thread forever.
 pub fn serve_session(
     transport: &mut dyn Transport,
     shards: &ShardSet,
-    verbose: bool,
+    cfg: &WorkerCfg,
 ) -> Result<()> {
+    transport.set_timeouts(Some(cfg.handshake_timeout), Some(cfg.handshake_timeout))?;
     worker_handshake(transport)?;
     let a = match transport.recv()? {
         WireMsg::Assign(a) => a,
@@ -135,7 +228,7 @@ pub fn serve_session(
         blocks.push(shards.load_block(c as usize, a.n_total, a.m_noise, a.negs)?);
     }
     let n_points: usize = blocks.iter().map(|b| b.n_real).sum();
-    if verbose {
+    if cfg.verbose {
         eprintln!(
             "worker: device {} assigned {} clusters / {} points",
             a.device,
@@ -148,6 +241,7 @@ pub fn serve_session(
         n_blocks: blocks.len(),
         n_points,
     })?;
+    transport.set_timeouts(cfg.session_timeout, cfg.session_timeout)?;
 
     let backend = NativeStepBackend::default();
     run_device_loop(
@@ -162,14 +256,95 @@ pub fn serve_session(
     )
 }
 
-/// The `nomad worker` entry point: open the shard set, bind, serve one
-/// coordinator session, exit.  One session per process keeps lifetimes
-/// simple — the coordinator's `Stop` is the worker's exit.
-pub fn run_worker(listen: &Endpoint, shards_dir: &Path, verbose: bool) -> Result<()> {
-    let shards = ShardSet::open(shards_dir)
-        .with_context(|| format!("open shard set at {}", shards_dir.display()))?;
+/// Accept-and-serve loop over an already-bound listener.  Sessions run on
+/// their own threads (a faulted session must not block a coordinator
+/// re-dialing after recovery); the worker exits once a session completed
+/// with the coordinator's `Stop` — or, when `cfg.max_sessions` caps the
+/// accept count, once the last accepted session ends, with an error if
+/// none of them was stopped cleanly.
+pub fn serve_listener(
+    listener: WorkerListener,
+    shards: Arc<ShardSet>,
+    cfg: &WorkerCfg,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    // the path to unlink on exit, captured before the listener moves
+    #[cfg(unix)]
+    let sock_path = match &listener {
+        WorkerListener::Unix(l) => {
+            l.local_addr().ok().and_then(|a| a.as_pathname().map(|p| p.to_path_buf()))
+        }
+        _ => None,
+    };
+    let got_stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut listener = Some(listener);
+    let mut started = 0usize;
+    let mut threads = Vec::new();
+    loop {
+        let accepting = cfg.max_sessions.map_or(true, |m| started < m);
+        if !accepting && listener.is_some() {
+            // close the listener so a re-dialing coordinator is refused
+            // immediately instead of queueing on a dead worker
+            listener = None;
+            #[cfg(unix)]
+            if let Some(p) = &sock_path {
+                let _ = std::fs::remove_file(p);
+            }
+        }
+        if (got_stop.load(Ordering::SeqCst) || !accepting)
+            && active.load(Ordering::SeqCst) == 0
+        {
+            break;
+        }
+        if let Some(l) = &listener {
+            if let Some(mut transport) = l.try_accept(cfg.faults.get(started))? {
+                started += 1;
+                let shards = Arc::clone(&shards);
+                let got_stop = Arc::clone(&got_stop);
+                let active = Arc::clone(&active);
+                let scfg = cfg.clone();
+                active.fetch_add(1, Ordering::SeqCst);
+                threads.push(std::thread::spawn(move || {
+                    match serve_session(&mut *transport, &shards, &scfg) {
+                        Ok(()) => got_stop.store(true, Ordering::SeqCst),
+                        Err(e) => {
+                            if scfg.verbose {
+                                eprintln!("worker: session ended: {e}");
+                            }
+                        }
+                    }
+                    active.fetch_sub(1, Ordering::SeqCst);
+                }));
+                continue; // another coordinator may already be dialing
+            }
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    for t in threads {
+        let _ = t.join();
+    }
+    #[cfg(unix)]
+    if let Some(p) = &sock_path {
+        let _ = std::fs::remove_file(p);
+    }
+    ensure!(
+        got_stop.load(Ordering::SeqCst),
+        "worker exited without a coordinator Stop ({started} session(s) served)"
+    );
+    Ok(())
+}
+
+/// The `nomad worker` entry point: open the shard set, bind, serve
+/// coordinator sessions until one ends with `Stop` (see
+/// [`serve_listener`]).
+pub fn run_worker(listen: &Endpoint, shards_dir: &Path, cfg: &WorkerCfg) -> Result<()> {
+    let shards = Arc::new(
+        ShardSet::open(shards_dir)
+            .with_context(|| format!("open shard set at {}", shards_dir.display()))?,
+    );
     let listener = WorkerListener::bind(listen)?;
-    if verbose {
+    if cfg.verbose {
         eprintln!(
             "worker: listening on {} ({} clusters / {} points in shard set)",
             listener.local_addr_string(),
@@ -177,14 +352,7 @@ pub fn run_worker(listen: &Endpoint, shards_dir: &Path, verbose: bool) -> Result
             shards.manifest.n
         );
     }
-    let mut transport = listener.accept_transport()?;
-    let out = serve_session(&mut *transport, &shards, verbose);
-    // a dead socket file should not outlive the worker
-    #[cfg(unix)]
-    if let Endpoint::Unix(path) = listen {
-        let _ = std::fs::remove_file(path);
-    }
-    out
+    serve_listener(listener, shards, cfg)
 }
 
 #[cfg(test)]
@@ -241,7 +409,7 @@ mod tests {
             shards.manifest.clusters[0].n + shards.manifest.clusters[2].n;
 
         let server = std::thread::spawn(move || {
-            serve_session(&mut worker_end, &shards, false).unwrap();
+            serve_session(&mut worker_end, &shards, &WorkerCfg::default()).unwrap();
         });
 
         coordinator_handshake(&mut coord).unwrap();
@@ -286,8 +454,9 @@ mod tests {
         let mut a = assignment(&shards, vec![0]);
         a.seed ^= 1; // different run
 
-        let server =
-            std::thread::spawn(move || serve_session(&mut worker_end, &shards, false));
+        let server = std::thread::spawn(move || {
+            serve_session(&mut worker_end, &shards, &WorkerCfg::default())
+        });
         coordinator_handshake(&mut coord).unwrap();
         coord.send(WireMsg::Assign(a)).unwrap();
         let err = server.join().unwrap().unwrap_err().to_string();
@@ -299,8 +468,9 @@ mod tests {
         let shards = test_shards("range");
         let (mut coord, mut worker_end) = channel_pair();
         let a = assignment(&shards, vec![99]);
-        let server =
-            std::thread::spawn(move || serve_session(&mut worker_end, &shards, false));
+        let server = std::thread::spawn(move || {
+            serve_session(&mut worker_end, &shards, &WorkerCfg::default())
+        });
         coordinator_handshake(&mut coord).unwrap();
         coord.send(WireMsg::Assign(a)).unwrap();
         assert!(server.join().unwrap().is_err());
@@ -315,7 +485,7 @@ mod tests {
 
         let server = std::thread::spawn(move || {
             let mut t = listener.accept_transport().unwrap();
-            serve_session(&mut *t, &shards, false)
+            serve_session(&mut *t, &shards, &WorkerCfg::default())
         });
         let ep = Endpoint::parse(&addr).unwrap();
         let mut c = connect(&ep, Duration::from_secs(5)).unwrap();
@@ -328,5 +498,64 @@ mod tests {
         }
         drop(c);
         assert!(server.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn half_open_connection_times_out_instead_of_wedging() {
+        let shards = Arc::new(test_shards("halfopen"));
+        let listener = WorkerListener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = listener.local_addr_string();
+        let cfg = WorkerCfg {
+            handshake_timeout: Duration::from_millis(200),
+            max_sessions: Some(1),
+            ..Default::default()
+        };
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let _ = tx.send(serve_listener(listener, shards, &cfg));
+        });
+        // a slow-loris coordinator: dial, then send nothing and stay open
+        let _idle = std::net::TcpStream::connect(addr.as_str()).unwrap();
+        let out = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("worker must exit on its own, not wedge on the silent socket");
+        let e = out.unwrap_err().to_string();
+        assert!(e.contains("without a coordinator Stop"), "{e}");
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn worker_survives_a_dead_session_and_serves_the_next_coordinator() {
+        let shards = Arc::new(test_shards("redial"));
+        let a = assignment(&shards, vec![1]);
+        let listener = WorkerListener::bind(&Endpoint::Tcp("127.0.0.1:0".into())).unwrap();
+        let addr = listener.local_addr_string();
+        let cfg =
+            WorkerCfg { handshake_timeout: Duration::from_millis(500), ..Default::default() };
+        let worker_shards = Arc::clone(&shards);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let worker = std::thread::spawn(move || {
+            let _ = tx.send(serve_listener(listener, worker_shards, &cfg));
+        });
+
+        let ep = Endpoint::parse(&addr).unwrap();
+        // session 1: the coordinator dies mid-handshake
+        {
+            let mut c = connect(&ep, Duration::from_secs(5)).unwrap();
+            c.send(WireMsg::Hello { role: Role::Coordinator }).unwrap();
+        }
+        // session 2: a clean establish-and-stop — the worker must still be
+        // accepting after the first session's error
+        let mut c = connect(&ep, Duration::from_secs(5)).unwrap();
+        coordinator_handshake(&mut *c).unwrap();
+        c.send(WireMsg::Assign(a)).unwrap();
+        match c.recv().unwrap() {
+            WireMsg::Assigned { n_blocks, .. } => assert_eq!(n_blocks, 1),
+            other => panic!("expected Assigned, got {other:?}"),
+        }
+        c.send(WireMsg::Cmd(DeviceCmd::Stop)).unwrap();
+        let out = rx.recv_timeout(Duration::from_secs(30)).expect("worker exits after Stop");
+        assert!(out.is_ok(), "{out:?}");
+        worker.join().unwrap();
     }
 }

@@ -46,11 +46,11 @@ use nomad::bail;
 use nomad::checkpoint::{self, params_fingerprint, DatasetSpec, RunStore};
 use nomad::cli::Args;
 use nomad::coordinator::{
-    BackendKind, CheckpointCfg, NomadCoordinator, NomadRun, Placement, RunConfig,
+    BackendKind, CheckpointCfg, NomadCoordinator, NomadRun, Placement, RecoveryCfg, RunConfig,
 };
 use nomad::data::{self, shard, Dataset};
 use nomad::distributed::transport::Endpoint;
-use nomad::distributed::worker;
+use nomad::distributed::worker::{self, WorkerCfg};
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
 use nomad::linalg::Matrix;
@@ -209,6 +209,10 @@ fn cmd_embed(args: &Args) -> Result<()> {
         index: index_params(args),
         placement,
         verbose: !args.bool("quiet"),
+        recovery: RecoveryCfg {
+            max_recoveries: args.usize("max-recoveries", 3),
+            ..Default::default()
+        },
         ..Default::default()
     };
     let coord = NomadCoordinator::new(params, run_cfg);
@@ -256,7 +260,9 @@ fn cmd_embed(args: &Args) -> Result<()> {
                         spec
                     );
                 }
-                let state = store.load_latest()?;
+                // tolerate a torn newest checkpoint (killed mid-write):
+                // fall back to the newest one that reads clean
+                let state = store.load_latest_valid()?;
                 println!(
                     "resuming from checkpoint @ epoch {} / {}",
                     state.epochs_done, coord.params.epochs
@@ -320,7 +326,8 @@ fn cmd_resume(args: &Args) -> Result<()> {
     }
     let state = match args.try_parse::<usize>("from-epoch")? {
         Some(e) => store.load(e)?,
-        None => store.load_latest()?,
+        // the newest checkpoint that reads clean (a kill can tear the last)
+        None => store.load_latest_valid()?,
     };
     println!("resuming from checkpoint @ epoch {} / {}", state.epochs_done, coord.params.epochs);
 
@@ -373,6 +380,9 @@ fn cmd_shard(args: &Args) -> Result<()> {
 /// `nomad worker --shards <dir> --listen <addr>` — one device as an OS
 /// process.  Binds, waits for the coordinator, trains its assigned
 /// clusters, exits when the coordinator sends Stop (or hangs up).
+/// `--handshake-timeout-ms` bounds half-open connections,
+/// `--session-timeout-ms` bounds an idle session (0 = wait forever), and
+/// `--max-sessions N` exits after serving N coordinator sessions.
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args
         .get("listen")
@@ -381,7 +391,17 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .get("shards")
         .context("--shards <dir> required (written by `nomad shard`)")?;
     let ep = Endpoint::parse(listen)?;
-    worker::run_worker(&ep, Path::new(dir), !args.bool("quiet"))
+    let cfg = WorkerCfg {
+        verbose: !args.bool("quiet"),
+        handshake_timeout: Duration::from_millis(args.u64("handshake-timeout-ms", 10_000).max(1)),
+        session_timeout: match args.u64("session-timeout-ms", 600_000) {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        },
+        max_sessions: args.try_parse::<usize>("max-sessions")?,
+        faults: Vec::new(),
+    };
+    worker::run_worker(&ep, Path::new(dir), &cfg)
 }
 
 /// Shared output path of `embed` and `resume`: positions `.npy`, density

@@ -1,0 +1,498 @@
+//! Chaos matrix for the fault-tolerant distributed runtime (DESIGN.md
+//! §13): every fault class (corrupt / hang / disconnect / silent drop),
+//! injected at every protocol phase (handshake, assignment, ingest, epoch
+//! compute, export), on either side of the wire, must end one of exactly
+//! two ways —
+//!
+//!   * the coordinator classifies the fault, rolls back to the newest
+//!     valid checkpoint (or the run's start), re-places the lost device
+//!     (rotating onto a surviving endpoint when its worker died), and the
+//!     finished run is **bitwise identical** to the in-process reference;
+//!   * or it fails fast with a classified error.
+//!
+//! Never an unbounded wait: every scenario's coordinator runs under a
+//! watchdog thread that panics if it wedges.  Faults are scripted through
+//! `WorkerCfg::faults` (worker side, per accepted session) and
+//! `RecoveryCfg::fault_plans` (coordinator side, first establishment
+//! only), so every scenario replays deterministically.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::graph::edge_weights;
+use nomad::ann::{ClusterIndex, IndexParams};
+use nomad::checkpoint::{params_fingerprint, run_info_json, DatasetSpec, RunStore};
+use nomad::coordinator::{
+    CheckpointCfg, NomadCoordinator, NomadRun, Placement, RecoveryCfg, RunConfig,
+};
+use nomad::data::shard::{write_shards, ShardSet};
+use nomad::data::{text_corpus_like, Dataset};
+use nomad::distributed::fault::{Dir, FaultAction, FaultKind, FaultPlan};
+use nomad::distributed::transport::Endpoint;
+use nomad::distributed::worker::{serve_listener, WorkerCfg, WorkerListener};
+use nomad::embed::NomadParams;
+use nomad::util::error::Error;
+use nomad::util::rng::Rng;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+const SEED: u64 = 21;
+const N: usize = 360;
+const EPOCHS: usize = 3;
+const CLUSTERS: usize = 6;
+const DEVICES: usize = 2;
+/// Hard upper bound on any single scenario — "no unbounded waits".
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nomad_chaos_{tag}_{}", std::process::id()))
+}
+
+fn dataset() -> Dataset {
+    let mut rng = Rng::new(0);
+    text_corpus_like(N, &mut rng)
+}
+
+fn coordinator(placement: Placement, rec: RecoveryCfg) -> NomadCoordinator {
+    NomadCoordinator::new(
+        NomadParams { epochs: EPOCHS, seed: SEED, ..Default::default() },
+        RunConfig {
+            n_devices: DEVICES,
+            index: IndexParams { n_clusters: CLUSTERS, ..Default::default() },
+            placement,
+            recovery: rec,
+            ..Default::default()
+        },
+    )
+}
+
+/// Short deadlines everywhere, so injected hangs and drops surface in
+/// seconds instead of the production half-minutes.
+fn recovery(fault_plans: Vec<FaultPlan>, max_recoveries: usize) -> RecoveryCfg {
+    RecoveryCfg {
+        io_timeout: Some(Duration::from_secs(1)),
+        epoch_base: Duration::from_secs(2),
+        epoch_per_block: Duration::from_millis(200),
+        connect_patience: Duration::from_millis(400),
+        max_recoveries,
+        fault_plans,
+    }
+}
+
+fn worker_cfg(plan: Option<FaultPlan>, max_sessions: Option<usize>) -> WorkerCfg {
+    WorkerCfg {
+        verbose: false,
+        handshake_timeout: Duration::from_secs(2),
+        session_timeout: Some(Duration::from_secs(10)),
+        max_sessions,
+        faults: plan.into_iter().collect(),
+    }
+}
+
+/// The shard set `nomad shard` would write for this dataset/seed (same
+/// `Rng::new(seed)` prefix as `prepare()`, so topologies match).
+fn write_shard_set(dir: &Path, ds: &Dataset, seed: u64) {
+    let _ = std::fs::remove_dir_all(dir);
+    let idxp = IndexParams { n_clusters: CLUSTERS, ..Default::default() };
+    let mut rng = Rng::new(seed);
+    let index = ClusterIndex::build(&ds.x, &idxp, &NativeBackend::default(), &mut rng);
+    let weights = edge_weights(&index, NomadParams::default().weight_model);
+    let spec = DatasetSpec { kind: "synthetic".into(), source: "chaos".into(), n: N, seed: 0 };
+    let model = NomadParams::default().weight_model;
+    write_shards(dir, &index, &weights, ds.dim(), seed, model, &idxp, &spec)
+        .expect("write shard set");
+}
+
+/// Bind one listener per worker config (kernel-chosen ports — race free)
+/// and serve each on a thread.  Faulted and killed workers exit with their
+/// own errors by design, so results are deliberately ignored.
+fn spawn_chaos_workers(
+    shard_dir: &Path,
+    cfgs: Vec<WorkerCfg>,
+    unix: bool,
+    tag: &str,
+) -> (Vec<String>, Vec<std::thread::JoinHandle<()>>) {
+    let mut endpoints = Vec::new();
+    let mut joins = Vec::new();
+    for (i, cfg) in cfgs.into_iter().enumerate() {
+        let ep = {
+            #[cfg(unix)]
+            {
+                if unix {
+                    Endpoint::Unix(std::env::temp_dir().join(format!(
+                        "nomad_chaos_{tag}_{i}_{}",
+                        std::process::id()
+                    )))
+                } else {
+                    Endpoint::Tcp("127.0.0.1:0".into())
+                }
+            }
+            #[cfg(not(unix))]
+            {
+                let _ = (unix, i, tag);
+                Endpoint::Tcp("127.0.0.1:0".into())
+            }
+        };
+        let listener = WorkerListener::bind(&ep).expect("bind chaos worker");
+        endpoints.push(listener.local_addr_string());
+        let shards = Arc::new(ShardSet::open(shard_dir).expect("open shard set"));
+        joins.push(std::thread::spawn(move || {
+            let _ = serve_listener(listener, shards, &cfg);
+        }));
+    }
+    (endpoints, joins)
+}
+
+/// Run `f` on its own thread and panic if it outlives the watchdog — the
+/// matrix's "no unbounded waits" teeth.
+fn with_watchdog<T: Send + 'static>(tag: &str, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = mpsc::channel();
+    let t = std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    match rx.recv_timeout(WATCHDOG) {
+        Ok(out) => {
+            let _ = t.join();
+            out
+        }
+        Err(_) => panic!(
+            "{tag}: coordinator exceeded the {}s watchdog — unbounded wait",
+            WATCHDOG.as_secs()
+        ),
+    }
+}
+
+/// One full remote scenario: shard set, workers, coordinator under the
+/// watchdog, teardown.  `store_dir` switches on per-epoch checkpointing
+/// (every 1, retain 2) so recoveries roll back to a real checkpoint.
+fn chaos_run(
+    tag: &str,
+    worker_cfgs: Vec<WorkerCfg>,
+    fault_plans: Vec<FaultPlan>,
+    max_recoveries: usize,
+    unix: bool,
+    store_dir: Option<PathBuf>,
+) -> Result<NomadRun, Error> {
+    let ds = dataset();
+    let shard_dir = scratch(&format!("{tag}_shards"));
+    write_shard_set(&shard_dir, &ds, SEED);
+    let (endpoints, joins) = spawn_chaos_workers(&shard_dir, worker_cfgs, unix, tag);
+    let rec = recovery(fault_plans, max_recoveries);
+    let placement = Placement::Remote { endpoints, shards: shard_dir.clone() };
+    let out = with_watchdog(tag, move || {
+        let ds = dataset();
+        let coord = coordinator(placement, rec);
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        match store_dir {
+            Some(dir) => {
+                let _ = std::fs::remove_dir_all(&dir);
+                let fp = params_fingerprint(N, &coord.params, &coord.run.index);
+                let spec = DatasetSpec {
+                    kind: "synthetic".into(),
+                    source: "chaos".into(),
+                    n: N,
+                    seed: 0,
+                };
+                let info = run_info_json(N, DEVICES, &coord.params, &coord.run.index, &spec);
+                let mut store = RunStore::create(&dir, fp, info).expect("create run store");
+                let cfg = CheckpointCfg {
+                    every: 1,
+                    retain: 2,
+                    artifact: false,
+                    labels: None,
+                    dataset: "chaos".into(),
+                };
+                coord.fit_resumable(N, &prep, Some((&mut store, &cfg)))
+            }
+            None => coord.fit_resumable(N, &prep, None),
+        }
+    });
+    for j in joins {
+        let _ = j.join();
+    }
+    let _ = std::fs::remove_dir_all(&shard_dir);
+    out
+}
+
+fn in_process_reference() -> NomadRun {
+    let ds = dataset();
+    let coord = coordinator(Placement::InProcess, RecoveryCfg::default());
+    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    coord.fit_resumable(N, &prep, None).expect("in-process reference run")
+}
+
+fn assert_bitwise_equal(tag: &str, a: &NomadRun, b: &NomadRun) {
+    assert_eq!(a.positions.data.len(), b.positions.data.len(), "{tag}: position counts");
+    for (i, (x, y)) in a.positions.data.iter().zip(&b.positions.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: positions diverge at f32 #{i}: {x} vs {y}");
+    }
+    assert_eq!(a.final_means.len(), b.final_means.len(), "{tag}: means table sizes");
+    for (ea, eb) in a.final_means.iter().zip(&b.final_means) {
+        assert_eq!(ea.cluster_id, eb.cluster_id, "{tag}: means table order");
+        assert_eq!(ea.mean[0].to_bits(), eb.mean[0].to_bits(), "{tag}: mean x");
+        assert_eq!(ea.mean[1].to_bits(), eb.mean[1].to_bits(), "{tag}: mean y");
+        assert_eq!(ea.weight.to_bits(), eb.weight.to_bits(), "{tag}: mean weight");
+    }
+}
+
+/// A recovered run must have seen (and classified) at least one fault and
+/// still match the in-process reference bit for bit.
+fn assert_recovered_bitwise(tag: &str, run: &NomadRun, reference: &NomadRun) {
+    assert!(run.comm.recoveries >= 1, "{tag}: expected at least one recovery");
+    assert!(!run.comm.faults.is_empty(), "{tag}: a recovery must record its faults");
+    for f in &run.comm.faults {
+        assert_ne!(f.kind, FaultKind::Other, "{tag}: fault must classify, got {f:?}");
+    }
+    assert_bitwise_equal(tag, reference, run);
+}
+
+// ---- recoverable faults, swept across every protocol phase --------------
+
+#[test]
+fn corrupted_worker_replies_recover_bitwise_at_every_phase() {
+    // worker send frames: 0 Hello, 1 Assigned, 2 Ingested, 3 EpochDone(e0),
+    // 4 EpochDone(e1) — the coordinator's crc check detects each in place
+    let reference = in_process_reference();
+    for frame in 0..=4u64 {
+        let tag = format!("send_corrupt_f{frame}");
+        let plan = FaultPlan::one(Dir::Send, frame, FaultAction::Corrupt);
+        let run = chaos_run(
+            &tag,
+            vec![worker_cfg(Some(plan), None), worker_cfg(None, None)],
+            vec![],
+            3,
+            false,
+            None,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: must recover, got: {e}"));
+        assert_recovered_bitwise(&tag, &run, &reference);
+    }
+}
+
+#[test]
+fn worker_side_receive_corruption_recovers_bitwise_at_every_phase() {
+    // worker recv frames: 0 Hello, 1 Assign, 2 Ingest, 3 Epoch(e0),
+    // 4 Epoch(e1).  The *worker* sees the crc mismatch and dies; the
+    // coordinator observes the hangup — the other detection path
+    let reference = in_process_reference();
+    for frame in 0..=4u64 {
+        let tag = format!("recv_corrupt_f{frame}");
+        let plan = FaultPlan::one(Dir::Recv, frame, FaultAction::Corrupt);
+        let run = chaos_run(
+            &tag,
+            vec![worker_cfg(Some(plan), None), worker_cfg(None, None)],
+            vec![],
+            3,
+            false,
+            None,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: must recover, got: {e}"));
+        assert_recovered_bitwise(&tag, &run, &reference);
+    }
+}
+
+#[test]
+fn killed_worker_rotates_its_device_to_a_survivor_at_every_phase() {
+    // worker 0 dies mid-session (injected disconnect) and its listener is
+    // gone (max_sessions = 1): recovery must re-place logical device 0 on
+    // the surviving worker, which then hosts both devices' sessions
+    let reference = in_process_reference();
+    for frame in 0..=4u64 {
+        let tag = format!("kill_f{frame}");
+        let plan = FaultPlan::one(Dir::Send, frame, FaultAction::Disconnect);
+        let run = chaos_run(
+            &tag,
+            vec![worker_cfg(Some(plan), Some(1)), worker_cfg(None, None)],
+            vec![],
+            3,
+            false,
+            None,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: must rotate and recover, got: {e}"));
+        assert_recovered_bitwise(&tag, &run, &reference);
+    }
+}
+
+#[test]
+fn hung_worker_is_cut_off_by_the_deadline_and_recovers() {
+    let reference = in_process_reference();
+    let plan = FaultPlan::one(Dir::Send, 3, FaultAction::Hang(Duration::from_secs(3)));
+    let run = chaos_run(
+        "worker_hang",
+        vec![worker_cfg(Some(plan), None), worker_cfg(None, None)],
+        vec![],
+        3,
+        false,
+        None,
+    )
+    .expect("a hang must be bounded by the deadline, then recovered");
+    assert!(
+        run.comm.faults.iter().any(|f| f.kind == FaultKind::Timeout),
+        "a hang must classify as a timeout: {:?}",
+        run.comm.faults
+    );
+    assert_recovered_bitwise("worker_hang", &run, &reference);
+}
+
+#[test]
+fn a_silently_dropped_reply_trips_the_deadline_and_recovers() {
+    // device 0's Ingested ack (coordinator recv frame 2) vanishes: the only
+    // detector for a silent drop is the deadline, which must fire and
+    // classify it as a timeout
+    let reference = in_process_reference();
+    let plan = FaultPlan::one(Dir::Recv, 2, FaultAction::Drop);
+    let run = chaos_run(
+        "coord_drop",
+        vec![worker_cfg(None, None), worker_cfg(None, None)],
+        vec![plan],
+        3,
+        false,
+        None,
+    )
+    .expect("a dropped frame must be caught by the deadline, then recovered");
+    assert!(
+        run.comm.faults.iter().any(|f| f.kind == FaultKind::Timeout),
+        "a silent drop must surface as a timeout: {:?}",
+        run.comm.faults
+    );
+    assert_recovered_bitwise("coord_drop", &run, &reference);
+}
+
+#[test]
+fn seeded_coordinator_side_faults_recover_bitwise() {
+    // randomized-but-reproducible plans on the coordinator side of device
+    // 0's link: corrupt / hang / disconnect, either direction, any of the
+    // first five frames — same seed, same scenario, every run
+    let reference = in_process_reference();
+    for seed in 0..6u64 {
+        let tag = format!("seeded_{seed}");
+        let plan = FaultPlan::seeded(seed, 5, Duration::from_secs(2));
+        let run = chaos_run(
+            &tag,
+            vec![worker_cfg(None, None), worker_cfg(None, None)],
+            vec![plan],
+            3,
+            false,
+            None,
+        )
+        .unwrap_or_else(|e| panic!("{tag}: must recover, got: {e}"));
+        assert_recovered_bitwise(&tag, &run, &reference);
+    }
+}
+
+// ---- checkpoint rollback + manifest accounting ---------------------------
+
+#[test]
+fn recovery_rolls_back_to_the_newest_checkpoint_and_records_the_fault() {
+    // with per-epoch checkpointing the worker's send frames are 0 Hello,
+    // 1 Assigned, 2 Ingested, 3 EpochDone(e0), 4 Exported(ckpt@1),
+    // 5 EpochDone(e1): corrupting frame 5 faults *after* the epoch-1
+    // checkpoint exists, so the rollback must land there — not at epoch 0
+    let reference = in_process_reference();
+    let store_dir = scratch("rollback_store");
+    let plan = FaultPlan::one(Dir::Send, 5, FaultAction::Corrupt);
+    let run = chaos_run(
+        "ckpt_rollback",
+        vec![worker_cfg(Some(plan), None), worker_cfg(None, None)],
+        vec![],
+        3,
+        false,
+        Some(store_dir.clone()),
+    )
+    .expect("must roll back to the checkpoint and recover");
+    assert_recovered_bitwise("ckpt_rollback", &run, &reference);
+    let fault = &run.comm.faults[0];
+    assert_eq!(fault.kind, FaultKind::Corruption, "crc faults classify as corruption");
+    assert_eq!(fault.restart_epoch, 1, "rollback must land on the epoch-1 checkpoint");
+
+    // the fault survives in the run manifest, next to the checkpoints
+    let store = RunStore::open(&store_dir).expect("reopen run store");
+    assert_eq!(store.faults().len(), 1, "the fault must be recorded in run.json");
+    assert_eq!(store.faults()[0].get("kind").as_str(), Some("corruption"));
+    assert_eq!(store.latest(), Some(EPOCHS), "the recovered run still checkpoints its end");
+    let _ = std::fs::remove_dir_all(&store_dir);
+}
+
+// ---- fail-fast paths -----------------------------------------------------
+
+#[test]
+fn exhausted_recovery_budget_fails_fast_with_a_classified_error() {
+    let plan = FaultPlan::one(Dir::Send, 3, FaultAction::Corrupt);
+    let err = chaos_run(
+        "give_up",
+        vec![worker_cfg(Some(plan), Some(1)), worker_cfg(None, Some(1))],
+        vec![],
+        0,
+        false,
+        None,
+    )
+    .expect_err("zero recovery budget must surface the fault");
+    let msg = err.to_string();
+    assert!(msg.contains("giving up after 0"), "{msg}");
+    assert!(msg.contains("corruption"), "the error must carry the classification: {msg}");
+}
+
+#[test]
+fn a_fully_dead_cluster_fails_fast_instead_of_waiting_forever() {
+    // two endpoints nobody listens on: every dial is refused, every
+    // recovery attempt walks both endpoints, and the run gives up within
+    // its connect deadlines — bounded, classified, no workers needed
+    let ports: Vec<u16> = (0..DEVICES)
+        .map(|_| {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").expect("probe port");
+            let p = l.local_addr().expect("probe addr").port();
+            drop(l);
+            p
+        })
+        .collect();
+    let ds = dataset();
+    let shard_dir = scratch("dead_cluster_shards");
+    write_shard_set(&shard_dir, &ds, SEED);
+    let endpoints: Vec<String> = ports.iter().map(|p| format!("127.0.0.1:{p}")).collect();
+    let rec = recovery(vec![], 1);
+    let placement = Placement::Remote { endpoints, shards: shard_dir.clone() };
+    let err = with_watchdog("dead_cluster", move || {
+        let ds = dataset();
+        let coord = coordinator(placement, rec);
+        let prep = coord.prepare(&ds.x, &NativeBackend::default());
+        coord.fit_resumable(N, &prep, None)
+    })
+    .expect_err("a dead cluster must not hang the coordinator");
+    let msg = err.to_string();
+    assert!(msg.contains("giving up after 1"), "{msg}");
+    assert!(msg.contains("no endpoint accepted"), "{msg}");
+    let _ = std::fs::remove_dir_all(&shard_dir);
+}
+
+// ---- unix-socket transport (reduced sweep) -------------------------------
+
+#[cfg(unix)]
+#[test]
+fn unix_socket_faults_recover_bitwise() {
+    let reference = in_process_reference();
+
+    // transient corruption: recovery re-dials the same unix endpoint
+    let plan = FaultPlan::one(Dir::Send, 3, FaultAction::Corrupt);
+    let run = chaos_run(
+        "unix_corrupt",
+        vec![worker_cfg(Some(plan), None), worker_cfg(None, None)],
+        vec![],
+        3,
+        true,
+        None,
+    )
+    .expect("unix corruption must recover");
+    assert_recovered_bitwise("unix_corrupt", &run, &reference);
+
+    // a killed worker (socket file unlinked) rotates onto the survivor
+    let plan = FaultPlan::one(Dir::Send, 1, FaultAction::Disconnect);
+    let run = chaos_run(
+        "unix_kill",
+        vec![worker_cfg(Some(plan), Some(1)), worker_cfg(None, None)],
+        vec![],
+        3,
+        true,
+        None,
+    )
+    .expect("unix worker death must rotate and recover");
+    assert_recovered_bitwise("unix_kill", &run, &reference);
+}

@@ -13,7 +13,7 @@ use nomad::coordinator::{NomadCoordinator, NomadRun, Placement, RunConfig};
 use nomad::data::shard::write_shards;
 use nomad::data::{text_corpus_like, Dataset};
 use nomad::distributed::transport::Endpoint;
-use nomad::distributed::worker::run_worker;
+use nomad::distributed::worker::{run_worker, WorkerCfg};
 use nomad::embed::NomadParams;
 use nomad::util::rng::Rng;
 use std::path::PathBuf;
@@ -75,7 +75,7 @@ fn spawn_workers(
         });
         let dir = shard_dir.clone();
         joins.push(std::thread::spawn(move || {
-            run_worker(&ep, &dir, false).expect("worker run");
+            run_worker(&ep, &dir, &WorkerCfg::default()).expect("worker run");
         }));
     }
     (specs, joins)

@@ -143,6 +143,79 @@ fn streams_of_frames_read_back_in_order() {
 }
 
 #[test]
+fn fuzz_smoke_over_several_seeds() {
+    // the structure-aware fuzzer (distributed::fuzz) must complete with
+    // both outcomes represented and identical tallies on replay — any
+    // decoder panic fails this test with a two-integer reproducer
+    for seed in [0u64, 7, 0xF00D] {
+        let a = nomad::distributed::fuzz::run(seed, 250);
+        let b = nomad::distributed::fuzz::run(seed, 250);
+        assert_eq!(a, b, "fuzz run not deterministic for seed {seed}");
+        assert!(a.decoded_ok > 0 && a.rejected > 0, "seed {seed}: degenerate run {a:?}");
+    }
+}
+
+// ---- regression tests promoted from fuzzing the streaming decoder ----
+
+#[test]
+fn hostile_length_claim_does_not_allocate_or_hang() {
+    // a header claiming MAX_PAYLOAD with only a few real payload bytes:
+    // the reader must grow with the bytes actually received (bounded by
+    // EOF), then report a mid-frame close — not reserve 1 GiB up front
+    let mut frame = encode(&WireMsg::Cmd(DeviceCmd::Stop));
+    frame[8..12].copy_from_slice(&(1u32 << 30).to_le_bytes());
+    frame.extend_from_slice(&[0xAB; 32]);
+    let mut r = std::io::Cursor::new(&frame[..]);
+    let e = read_frame(&mut r).unwrap_err().to_string();
+    assert!(e.contains("closed mid-frame"), "wrong failure mode: {e}");
+}
+
+#[test]
+fn one_byte_at_a_time_delivery_decodes_cleanly() {
+    // the pathological fragmentation case the fuzzer's chunked reader
+    // approaches: every read returns one byte
+    struct OneByte<'a>(&'a [u8]);
+    impl std::io::Read for OneByte<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            match (self.0.split_first(), buf.is_empty()) {
+                (Some((&b, rest)), false) => {
+                    buf[0] = b;
+                    self.0 = rest;
+                    Ok(1)
+                }
+                _ => Ok(0),
+            }
+        }
+    }
+    let msg = WireMsg::Cmd(DeviceCmd::Ingest { positions: Arc::new(vec![1.0, -2.0, 3.5]) });
+    let frame = encode(&msg);
+    let (back, n) = read_frame(&mut OneByte(&frame)).expect("fragmented frame decodes");
+    assert_eq!(back, msg);
+    assert_eq!(n, frame.len());
+}
+
+#[test]
+fn io_failures_read_as_classified_fault_text() {
+    use nomad::distributed::fault::FaultKind;
+    // an exhausted stream mid-header must classify as a disconnect, and a
+    // timeout errno must classify as a timeout — the recovery supervisor
+    // keys off these phrases
+    let frame = encode(&WireMsg::Cmd(DeviceCmd::Export));
+    let mut r = std::io::Cursor::new(&frame[..HEADER_BYTES - 2]);
+    let err = read_frame(&mut r).unwrap_err();
+    assert_eq!(FaultKind::classify(&err), FaultKind::Disconnect, "{err}");
+
+    struct TimesOut;
+    impl std::io::Read for TimesOut {
+        fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+            Err(std::io::Error::from(std::io::ErrorKind::WouldBlock))
+        }
+    }
+    let err = read_frame(&mut TimesOut).unwrap_err();
+    assert_eq!(FaultKind::classify(&err), FaultKind::Timeout, "{err}");
+}
+
+#[test]
 fn special_floats_survive_the_wire_bitwise() {
     let weird = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, 1e-42];
     let msg = WireMsg::Cmd(DeviceCmd::Ingest {
