@@ -85,6 +85,7 @@ pub fn within_clusters(
                 let oi = unsafe {
                     std::slice::from_raw_parts_mut((idx_base as *mut u32).add(g * k), k)
                 };
+                // SAFETY: as above — the same rows of the d² vector.
                 let od = unsafe {
                     std::slice::from_raw_parts_mut((d2_base as *mut f32).add(g * k), k)
                 };

@@ -36,6 +36,7 @@ use crate::embed::sgd::{Exaggeration, LrSchedule};
 use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
 use crate::ensure;
 use crate::linalg::{pca::pca_init, Matrix};
+use crate::util::clock::{deadline_in, Stopwatch};
 use crate::util::error::{Context, Error, Result};
 use crate::util::rng::Rng;
 use std::path::PathBuf;
@@ -220,7 +221,7 @@ impl NomadCoordinator {
     /// separately so benches can reuse an index across configurations.
     pub fn prepare(&self, x: &Matrix, ann: &dyn AnnBackend) -> Prepared {
         let mut rng = Rng::new(self.params.seed);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let index = ClusterIndex::build(x, &self.run.index, ann, &mut rng);
         debug_assert!(index.edges_respect_clusters());
         let weights = edge_weights(&index, self.params.weight_model);
@@ -233,7 +234,7 @@ impl NomadCoordinator {
             }
             m
         };
-        Prepared { index, weights, init, index_secs: t0.elapsed().as_secs_f64() }
+        Prepared { index, weights, init, index_secs: t0.secs() }
     }
 
     /// Full training run on a dataset.
@@ -365,7 +366,7 @@ impl NomadCoordinator {
         let mut faults: Vec<FaultEvent> = Vec::new();
         let mut recoveries = 0usize;
         let mut lost_wire = 0u64;
-        let t_train = Instant::now();
+        let t_train = Stopwatch::start();
 
         loop {
             let (outcome, session_wire) = self.attempt_session(
@@ -382,7 +383,7 @@ impl NomadCoordinator {
             );
             let fault = match outcome {
                 Ok(out) => {
-                    let train_secs = t_train.elapsed().as_secs_f64();
+                    let train_secs = t_train.secs();
                     let comm = CommStats {
                         epochs: p.epochs - out.start_epoch,
                         allgather_bytes_total: out.allgather_bytes,
@@ -468,7 +469,7 @@ impl NomadCoordinator {
         sink: &mut Option<(&mut RunStore, &CheckpointCfg)>,
         deadline: Option<Duration>,
         first_attempt: bool,
-        t_train: Instant,
+        t_train: Stopwatch,
     ) -> (std::result::Result<SessionOut, SessionErr>, u64) {
         let p = &self.params;
 
@@ -555,7 +556,7 @@ impl NomadCoordinator {
         rollback: &Option<CheckpointState>,
         sink: &mut Option<(&mut RunStore, &CheckpointCfg)>,
         deadline: Option<Duration>,
-        t_train: Instant,
+        t_train: Stopwatch,
     ) -> std::result::Result<SessionOut, SessionErr> {
         let p = &self.params;
 
@@ -577,7 +578,7 @@ impl NomadCoordinator {
                 link.send_cmd(DeviceCmd::Ingest { positions: Arc::clone(&table) })
                     .map_err(dev_fault(d))?;
             }
-            let by = deadline.map(|dl| Instant::now() + dl);
+            let by = deadline_in(deadline);
             for link in links.iter_mut() {
                 let d = link.device;
                 match recv_by(link, by).map_err(dev_fault(d))? {
@@ -636,7 +637,7 @@ impl NomadCoordinator {
             // link order under one shared deadline and folded in device
             // order, so the f64 accumulation (and thus the loss history)
             // is independent of completion order
-            let by = deadline.map(|dl| Instant::now() + dl);
+            let by = deadline_in(deadline);
             let mut done: Vec<(usize, Vec<MeanEntry>, f64, f64, f64, f64)> =
                 Vec::with_capacity(links.len());
             for link in links.iter_mut() {
@@ -702,7 +703,7 @@ impl NomadCoordinator {
                         .map_err(|(device, err)| SessionErr::Fault { device, err })?;
                     snapshots.push(Snapshot {
                         epoch: epoch + 1,
-                        wall_secs: t_train.elapsed().as_secs_f64(),
+                        wall_secs: t_train.secs(),
                         modeled_secs: modeled_total,
                         positions,
                     });
@@ -1056,7 +1057,7 @@ fn collect_positions(
         let d = link.device;
         link.send_cmd(DeviceCmd::Export).map_err(|e| (d, e))?;
     }
-    let by = deadline.map(|dl| Instant::now() + dl);
+    let by = deadline_in(deadline);
     let mut m = Matrix::zeros(n, 2);
     for link in links.iter_mut() {
         let d = link.device;

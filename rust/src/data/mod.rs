@@ -53,11 +53,7 @@ fn power_law_sizes(n: usize, clusters: usize, alpha: f64, rng: &mut Rng) -> Vec<
     let mut left = n - sizes.iter().sum::<usize>();
     // largest remainders get the leftover units
     let mut order: Vec<usize> = (0..clusters).collect();
-    order.sort_by(|&a, &b| {
-        (exact[b] - exact[b].floor())
-            .partial_cmp(&(exact[a] - exact[a].floor()))
-            .unwrap()
-    });
+    order.sort_by(|&a, &b| (exact[b] - exact[b].floor()).total_cmp(&(exact[a] - exact[a].floor())));
     for &i in order.iter().cycle().take(left.min(clusters * 2)) {
         if left == 0 {
             break;

@@ -232,13 +232,16 @@ fn encode_record(parts: &BlockParts) -> Vec<u8> {
 
 fn decode_record(bytes: &[u8]) -> Result<BlockParts> {
     ensure!(bytes.len() >= RECORD_HEADER, "shard record truncated ({} bytes)", bytes.len());
-    let u32_at = |off: usize| {
-        u32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]])
+    let u32_at = |off: usize| -> Result<u32> {
+        let s = bytes
+            .get(off..off + 4)
+            .with_context(|| format!("shard record truncated at offset {off}"))?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
     };
-    ensure!(u32_at(0) == RECORD_MAGIC, "bad shard record magic");
-    let cluster_id = u32_at(4);
-    let n = u32_at(8) as usize;
-    let k = u32_at(12) as usize;
+    ensure!(u32_at(0)? == RECORD_MAGIC, "bad shard record magic");
+    let cluster_id = u32_at(4)?;
+    let n = u32_at(8)? as usize;
+    let k = u32_at(12)? as usize;
     let need = RECORD_HEADER
         .checked_add(n.checked_mul(4).context("record size overflows")?)
         .and_then(|v| v.checked_add(n.checked_mul(k)?.checked_mul(8)?))
@@ -251,17 +254,17 @@ fn decode_record(bytes: &[u8]) -> Result<BlockParts> {
     let mut off = RECORD_HEADER;
     let mut global_ids = Vec::with_capacity(n);
     for _ in 0..n {
-        global_ids.push(u32_at(off));
+        global_ids.push(u32_at(off)?);
         off += 4;
     }
     let mut nbr_idx = Vec::with_capacity(n * k);
     for _ in 0..n * k {
-        nbr_idx.push(u32_at(off) as i32);
+        nbr_idx.push(u32_at(off)? as i32);
         off += 4;
     }
     let mut nbr_w = Vec::with_capacity(n * k);
     for _ in 0..n * k {
-        nbr_w.push(f32::from_le_bytes(u32_at(off).to_le_bytes()));
+        nbr_w.push(f32::from_le_bytes(u32_at(off)?.to_le_bytes()));
         off += 4;
     }
     Ok(BlockParts { cluster_id, global_ids, k, nbr_idx, nbr_w })
@@ -364,8 +367,14 @@ impl ShardSet {
             .get(cluster)
             .with_context(|| format!("cluster {cluster} not in shard set"))?;
         let lo = entry.offset as usize;
-        let hi = lo + entry.len as usize;
-        let bytes = &self.data.bytes()[lo..hi];
+        let hi = lo
+            .checked_add(entry.len as usize)
+            .with_context(|| format!("cluster {cluster} record extent overflows"))?;
+        let bytes = self
+            .data
+            .bytes()
+            .get(lo..hi)
+            .with_context(|| format!("cluster {cluster} record {lo}..{hi} outside data file"))?;
         let got = crc32(bytes);
         ensure!(
             got == entry.crc,

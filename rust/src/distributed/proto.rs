@@ -281,13 +281,15 @@ impl<'a> Dec<'a> {
         Dec { b, off: 0 }
     }
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        ensure!(
-            self.off + n <= self.b.len(),
-            "frame payload truncated: need {n} bytes at offset {}, have {}",
-            self.off,
-            self.b.len()
-        );
-        let s = &self.b[self.off..self.off + n];
+        let end = self.off.checked_add(n);
+        let s = match end.and_then(|e| self.b.get(self.off..e)) {
+            Some(s) => s,
+            None => crate::bail!(
+                "frame payload truncated: need {n} bytes at offset {}, have {}",
+                self.off,
+                self.b.len()
+            ),
+        };
         self.off += n;
         Ok(s)
     }

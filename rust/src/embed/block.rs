@@ -113,8 +113,9 @@ impl BlockParts {
         let n_real = members.len();
         let k = index.k;
 
-        // local index of each global member
-        let mut local_of = std::collections::HashMap::with_capacity(n_real * 2);
+        // local index of each global member (BTreeMap: lookup-only here, and
+        // determinism-critical modules ban hash collections outright)
+        let mut local_of = std::collections::BTreeMap::new();
         for (l, &g) in members.iter().enumerate() {
             local_of.insert(g, l as i32);
         }

@@ -292,6 +292,7 @@ pub fn topk_tiled_into(
         let oi = unsafe {
             std::slice::from_raw_parts_mut((idx_base as *mut u32).add(i0 * k), (i1 - i0) * k)
         };
+        // SAFETY: as above — the same rows of the d² vector.
         let od = unsafe {
             std::slice::from_raw_parts_mut((d2_base as *mut f32).add(i0 * k), (i1 - i0) * k)
         };

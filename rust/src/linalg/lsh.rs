@@ -8,7 +8,7 @@
 
 use crate::linalg::Matrix;
 use crate::util::rng::Rng;
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// A random-hyperplane hasher producing `bits`-bit signatures.
 pub struct HyperplaneLsh {
@@ -51,7 +51,7 @@ pub fn lsh_seed_centroids(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
     let lsh = HyperplaneLsh::new(x.cols, bits.min(24), rng);
     let hashes = lsh.hash_all(x);
 
-    let mut buckets: HashMap<u64, Vec<usize>> = HashMap::new();
+    let mut buckets: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
     for (i, h) in hashes.iter().enumerate() {
         buckets.entry(*h).or_default().push(i);
     }

@@ -305,15 +305,19 @@ fn start_with(
         // dropping tx disconnects the workers' receiver
     });
 
-    let watcher = watch.map(|(run_dir, poll)| {
-        let state = Arc::clone(&state);
-        let stop = Arc::clone(&stop);
-        let tile_cfg = cfg.tile;
-        std::thread::Builder::new()
-            .name("nomad-watch".to_string())
-            .spawn(move || watch_loop(&run_dir, poll, &state, &stop, tile_cfg))
-            .expect("spawn watcher thread")
-    });
+    let watcher = match watch {
+        Some((run_dir, poll)) => {
+            let state = Arc::clone(&state);
+            let stop = Arc::clone(&stop);
+            let tile_cfg = cfg.tile;
+            let handle = std::thread::Builder::new()
+                .name("nomad-watch".to_string())
+                .spawn(move || watch_loop(&run_dir, poll, &state, &stop, tile_cfg))
+                .context("spawn watcher thread")?;
+            Some(handle)
+        }
+        None => None,
+    };
 
     Ok(ServerHandle { addr, state, stop, accept: Some(accept), workers, watcher })
 }

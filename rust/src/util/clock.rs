@@ -1,0 +1,54 @@
+//! The only sanctioned wall-clock access for determinism-critical modules.
+//!
+//! The invariant linter (DESIGN.md §14) bans `Instant::now` / `SystemTime`
+//! inside `embed/`, `linalg/`, `ann/`, `coordinator/`, `checkpoint/` and the
+//! wire/shard codecs: a raw clock read next to numerics is how wall time
+//! leaks into results.  This module is the funnel instead — it offers only
+//! *telemetry* (elapsed seconds for reports) and *deadlines* (timeout
+//! instants for I/O waits), shapes that cannot feed gradient math.  Clock
+//! values read here must never influence floats that end up in positions,
+//! means, or losses.
+
+use std::time::{Duration, Instant};
+
+/// An elapsed-time probe for telemetry fields (`index_secs`,
+/// `measured_secs_total`, snapshot `wall_secs`).
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch(Instant::now())
+    }
+
+    /// Seconds since `start()`.
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+/// Resolve an optional timeout into an absolute receive deadline
+/// (`None` waits forever).
+pub fn deadline_in(timeout: Option<Duration>) -> Option<Instant> {
+    timeout.map(|dl| Instant::now() + dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_is_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(a >= 0.0 && b >= a);
+    }
+
+    #[test]
+    fn deadline_none_passes_through() {
+        assert!(deadline_in(None).is_none());
+        let by = deadline_in(Some(Duration::from_secs(5))).expect("deadline");
+        assert!(by > Instant::now());
+    }
+}

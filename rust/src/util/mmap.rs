@@ -6,24 +6,36 @@
 //! the std runtime already links libc, so `mmap(2)` is declared directly
 //! via `extern "C"` — no crate needed.  On non-unix targets [`Mmap::open`]
 //! degrades to reading the file into memory (same API, weaker paging).
+//!
+//! Under Miri the fallback path is used on unix too: Miri cannot model
+//! foreign `mmap` memory, and an owned `Vec` gives the soundness gate a
+//! fully tracked allocation while exercising the same `ptr`/`len` slice
+//! reconstruction that the real mapping uses.
 
 use crate::util::error::{Context, Result};
 use std::path::Path;
 
-/// A read-only mapping (or, off unix, an owned copy) of a file's bytes.
+/// A read-only mapping (or, off unix / under Miri, an owned copy) of a
+/// file's bytes.
 pub struct Mmap {
     ptr: *mut u8,
     len: usize,
-    /// non-unix fallback storage; on unix stays `None`
+    /// fallback storage; on the real unix mmap path stays `None`
     fallback: Option<Vec<u8>>,
 }
 
-// The mapping is immutable shared memory; moving the handle across threads
-// is safe (the pointer's validity does not depend on the thread).
+// SAFETY: `Mmap` is `Send`/`Sync` despite holding a raw pointer because the
+// memory behind `ptr` is immutable shared state whose validity does not
+// depend on which thread touches it: either a PROT_READ, MAP_PRIVATE
+// mapping that stays mapped until `Drop` runs (with `&mut self`, i.e.
+// exclusive access), or bytes owned by the `fallback` Vec, which is never
+// mutated after `open` returns.  No `&self` method writes through `ptr`,
+// so concurrent `bytes()` calls are concurrent reads of immutable memory.
 unsafe impl Send for Mmap {}
+// SAFETY: as above — shared references only ever read the mapping.
 unsafe impl Sync for Mmap {}
 
-#[cfg(unix)]
+#[cfg(all(unix, not(miri)))]
 mod sys {
     pub const PROT_READ: i32 = 1;
     pub const MAP_PRIVATE: i32 = 2;
@@ -43,7 +55,7 @@ mod sys {
 
 impl Mmap {
     /// Map `path` read-only.  Empty files map to an empty slice.
-    #[cfg(unix)]
+    #[cfg(all(unix, not(miri)))]
     pub fn open(path: &Path) -> Result<Mmap> {
         use std::os::unix::io::AsRawFd;
         let f = std::fs::File::open(path)
@@ -53,6 +65,9 @@ impl Mmap {
         if len == 0 {
             return Ok(Mmap { ptr: std::ptr::null_mut(), len: 0, fallback: None });
         }
+        // SAFETY: plain FFI call with a valid open fd, a length measured
+        // from that fd, and no requested address; the kernel either maps
+        // `len` readable bytes or returns MAP_FAILED, checked below.
         let ptr = unsafe {
             sys::mmap(
                 std::ptr::null_mut(),
@@ -70,8 +85,8 @@ impl Mmap {
         Ok(Mmap { ptr, len, fallback: None })
     }
 
-    /// Non-unix fallback: same API, backed by an in-memory copy.
-    #[cfg(not(unix))]
+    /// Non-unix / Miri fallback: same API, backed by an in-memory copy.
+    #[cfg(any(not(unix), miri))]
     pub fn open(path: &Path) -> Result<Mmap> {
         let mut data = std::fs::read(path)
             .with_context(|| format!("read {}", path.display()))?;
@@ -85,8 +100,11 @@ impl Mmap {
         if self.len == 0 {
             return &[];
         }
-        // Safety: `ptr` covers `len` readable bytes for the life of `self`
-        // (the mapping is unmapped only in Drop; the fallback Vec is owned).
+        // SAFETY: `ptr` covers `len` readable, initialized bytes for the
+        // life of `self` — the mapping is unmapped only in Drop, and the
+        // fallback Vec is owned by `self` and never reallocated after
+        // `open`.  The returned slice borrows `self`, so it cannot outlive
+        // either backing store.
         unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
     }
 
@@ -101,13 +119,16 @@ impl Mmap {
 
 impl Drop for Mmap {
     fn drop(&mut self) {
-        #[cfg(unix)]
+        #[cfg(all(unix, not(miri)))]
         if self.fallback.is_none() && self.len > 0 {
+            // SAFETY: on this path `ptr`/`len` are exactly the address and
+            // length returned by the successful mmap in `open`, unmapped
+            // exactly once (Drop runs once, with exclusive access).
             unsafe {
                 sys::munmap(self.ptr, self.len);
             }
         }
-        // non-unix: the Vec frees itself
+        // fallback: the Vec frees itself
     }
 }
 

@@ -1,6 +1,7 @@
 //! Foundational substrates built from scratch for the offline environment:
 //! PRNG, JSON, npy interchange, data parallelism, error handling, summary
 //! statistics.
+pub mod clock;
 pub mod error;
 pub mod json;
 pub mod mmap;

@@ -29,7 +29,7 @@ pub struct NpyF32 {
 
 impl NpyF32 {
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         NpyF32 { shape, data }
     }
 
@@ -69,7 +69,7 @@ pub struct NpyF64 {
 
 impl NpyF64 {
     pub fn new(shape: Vec<usize>, data: Vec<f64>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         NpyF64 { shape, data }
     }
 

@@ -18,6 +18,59 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Debug-build shadow checker for the dynamic-chunking dispatch.
+///
+/// Every unsafe block below is sound only because the atomic cursor hands
+/// each work unit to exactly one worker.  That argument lives in SAFETY
+/// comments; this struct re-checks it at runtime when debug assertions are
+/// on (tests, Miri): each unit must be claimed exactly once, and every
+/// unit must be claimed by the time the primitive returns.  Release builds
+/// compile it to nothing.
+struct ShadowClaims {
+    #[cfg(debug_assertions)]
+    claimed: Vec<std::sync::atomic::AtomicU8>,
+}
+
+impl ShadowClaims {
+    fn new(n: usize) -> ShadowClaims {
+        #[cfg(not(debug_assertions))]
+        let _ = n;
+        ShadowClaims {
+            #[cfg(debug_assertions)]
+            claimed: (0..n).map(|_| std::sync::atomic::AtomicU8::new(0)).collect(),
+        }
+    }
+
+    /// Record that work unit `i` was handed to a worker.
+    fn claim(&self, i: usize) {
+        #[cfg(not(debug_assertions))]
+        let _ = i;
+        #[cfg(debug_assertions)]
+        {
+            let prev = self.claimed[i].fetch_add(1, Ordering::Relaxed);
+            assert_eq!(prev, 0, "parallel dispatch claimed unit {i} twice");
+        }
+    }
+
+    fn claim_range(&self, a: usize, b: usize) {
+        for i in a..b {
+            self.claim(i);
+        }
+    }
+
+    /// Assert every unit was dispatched (called after the scope joins).
+    fn finish(&self) {
+        #[cfg(debug_assertions)]
+        for (i, c) in self.claimed.iter().enumerate() {
+            assert_eq!(
+                c.load(Ordering::Relaxed),
+                1,
+                "parallel dispatch never ran unit {i}"
+            );
+        }
+    }
+}
+
 /// Number of worker threads to use.
 pub fn num_threads() -> usize {
     if let Ok(v) = std::env::var("NOMAD_THREADS") {
@@ -36,8 +89,11 @@ where
     F: Fn(usize, usize) + Sync,
 {
     let threads = threads.max(1).min(n.max(1));
+    let shadow = ShadowClaims::new(n);
     if threads <= 1 || n <= chunk {
+        shadow.claim_range(0, n);
         f(0, n);
+        shadow.finish();
         return;
     }
     let cursor = AtomicUsize::new(0);
@@ -48,10 +104,13 @@ where
                 if start >= n {
                     break;
                 }
-                f(start, (start + chunk).min(n));
+                let end = (start + chunk).min(n);
+                shadow.claim_range(start, end);
+                f(start, end);
             });
         }
     });
+    shadow.finish();
 }
 
 /// Parallel map over `0..n`, returning results in index order.
@@ -66,6 +125,7 @@ where
     }
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots = out.as_mut_ptr() as usize;
+    let shadow = ShadowClaims::new(n);
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads {
@@ -74,6 +134,7 @@ where
                 if i >= n {
                     break;
                 }
+                shadow.claim(i);
                 let v = f(i);
                 // SAFETY: each index i is claimed exactly once via the atomic
                 // cursor, so no two threads write the same slot; the vector
@@ -85,6 +146,7 @@ where
             });
         }
     });
+    shadow.finish();
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 
@@ -107,6 +169,7 @@ where
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
     let slots = out.as_mut_ptr() as usize;
     let base = items.as_mut_ptr() as usize;
+    let shadow = ShadowClaims::new(n);
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads {
@@ -115,17 +178,20 @@ where
                 if i >= n {
                     break;
                 }
+                shadow.claim(i);
                 // SAFETY: each index i is claimed exactly once via the
                 // atomic cursor, so no two threads alias items[i] or the
                 // result slot; both vectors outlive the scope.
                 let item = unsafe { &mut *(base as *mut T).add(i) };
                 let v = f(i, item);
+                // SAFETY: as above — slot i is owned by this claim.
                 unsafe {
                     std::ptr::write((slots as *mut Option<R>).add(i), Some(v));
                 }
             });
         }
     });
+    shadow.finish();
     out.into_iter().map(|v| v.expect("slot filled")).collect()
 }
 
@@ -144,6 +210,7 @@ where
         return;
     }
     let base = data.as_mut_ptr() as usize;
+    let shadow = ShadowClaims::new(rows);
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads {
@@ -153,6 +220,7 @@ where
                     break;
                 }
                 let r1 = (r0 + chunk_rows).min(rows);
+                shadow.claim_range(r0, r1);
                 // SAFETY: row ranges [r0, r1) are disjoint across workers
                 // (claimed via the atomic cursor) and in-bounds.
                 let slice = unsafe {
@@ -165,6 +233,7 @@ where
             });
         }
     });
+    shadow.finish();
 }
 
 #[cfg(test)]

@@ -23,7 +23,7 @@ impl Summary {
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / (n.max(2) - 1) as f64;
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         let q = |p: f64| -> f64 {
             let idx = (p * (n - 1) as f64).round() as usize;
             sorted[idx.min(n - 1)]
@@ -88,6 +88,19 @@ mod tests {
     fn summary_empty() {
         let s = Summary::of(&[]);
         assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn summary_nan_does_not_panic() {
+        // regression: the old partial_cmp().unwrap() comparator panicked on
+        // NaN samples; total_cmp sorts NaN after every finite value.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, 3.0]);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan()); // NaN sorts last under total order
+        let t = Summary::of(&[f64::NAN, f64::NAN]);
+        assert_eq!(t.n, 2);
+        assert!(t.max.is_nan());
     }
 
     #[test]

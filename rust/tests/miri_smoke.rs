@@ -1,0 +1,169 @@
+//! Miri soundness smoke tests (DESIGN.md §14).
+//!
+//! Every unsafe block in the tree lives in the parallel dispatch
+//! primitives, the mmap wrapper, or the gather/knn engines built on top of
+//! them.  This suite drives each of those through *small* shapes so the
+//! whole file stays tractable under Miri (~1000x slowdown) while still
+//! exercising the aliasing-sensitive paths: disjoint-slot writes in
+//! `par_map`/`par_map_mut`, disjoint row slices in `par_rows_mut`, the
+//! owner-computes gather engine, wire-frame decoding, and the `Mmap`
+//! fallback (an owned Vec under Miri, same `ptr`/`len` slice
+//! reconstruction as the real mapping).
+//!
+//! CI runs `cargo +nightly miri test --test miri_smoke` with
+//! `MIRIFLAGS=-Zmiri-disable-isolation` (the mmap and shard tests touch
+//! the filesystem).  The same tests pass natively, so the file also runs
+//! in the plain tier-1 sweep.
+
+use nomad::embed::native::{nomad_grad_gather, nomad_grad_serial};
+use nomad::embed::EdgeTranspose;
+use nomad::util::parallel::{par_for_chunks, par_map, par_map_mut, par_rows_mut};
+use nomad::util::rng::Rng;
+
+#[test]
+fn par_map_small_shapes() {
+    for (n, threads) in [(0usize, 4usize), (1, 4), (7, 3), (16, 4)] {
+        let out = par_map(n, threads, |i| i * i);
+        assert_eq!(out, (0..n).map(|i| i * i).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn par_map_mut_small_shapes() {
+    for (n, threads) in [(1usize, 4usize), (5, 2), (12, 4)] {
+        let mut items: Vec<u64> = (0..n as u64).collect();
+        let out = par_map_mut(&mut items, threads, |i, v| {
+            *v += 100;
+            i as u64
+        });
+        assert_eq!(items, (100..100 + n as u64).collect::<Vec<_>>());
+        assert_eq!(out, (0..n as u64).collect::<Vec<_>>());
+    }
+}
+
+#[test]
+fn par_for_chunks_small_shapes() {
+    use std::sync::atomic::{AtomicU8, Ordering};
+    let n = 13;
+    let hits: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(0)).collect();
+    par_for_chunks(n, 3, 4, |a, b| {
+        for h in &hits[a..b] {
+            h.fetch_add(1, Ordering::Relaxed);
+        }
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn par_rows_mut_small_shapes() {
+    let cols = 3;
+    let rows = 7;
+    let mut m = vec![0f32; rows * cols];
+    par_rows_mut(&mut m, cols, 2, 4, |r0, chunk| {
+        for (dr, row) in chunk.chunks_mut(cols).enumerate() {
+            for v in row.iter_mut() {
+                *v = (r0 + dr) as f32;
+            }
+        }
+    });
+    for r in 0..rows {
+        for c in 0..cols {
+            assert_eq!(m[r * cols + c], r as f32);
+        }
+    }
+}
+
+#[test]
+fn gather_engine_tiny_vs_serial_oracle() {
+    // one tiny padded problem through the unsafe gather path, 2 workers
+    let mut rng = Rng::new(42);
+    let (size, n_real, k, negs, r) = (8usize, 6usize, 2usize, 2usize, 3usize);
+    let pos: Vec<f32> = (0..size * 2).map(|_| rng.normal()).collect();
+    let mut nbr_idx = vec![0i32; size * k];
+    let mut nbr_w = vec![0.0f32; size * k];
+    let mut neg_idx = vec![0i32; size * negs];
+    for i in 0..size {
+        for s in 0..k {
+            nbr_idx[i * k + s] = rng.below(n_real) as i32;
+            nbr_w[i * k + s] = if i < n_real { rng.f32() } else { 0.0 };
+        }
+        for s in 0..negs {
+            neg_idx[i * negs + s] = if i < n_real { rng.below(n_real) as i32 } else { i as i32 };
+        }
+    }
+    let neg_w = 0.5f32;
+    let means: Vec<f32> = (0..r * 2).map(|_| rng.normal()).collect();
+    let mean_w: Vec<f32> = (0..r).map(|_| rng.f32()).collect();
+    let mut valid = vec![0.0f32; size];
+    for v in valid.iter_mut().take(n_real) {
+        *v = 1.0;
+    }
+    let nbr_in = EdgeTranspose::build(&nbr_idx, size, k, |e| nbr_w[e] != 0.0);
+    let neg_in = EdgeTranspose::build(&neg_idx, size, negs, |_| true);
+    let mx: Vec<f32> = means.iter().step_by(2).copied().collect();
+    let my: Vec<f32> = means.iter().skip(1).step_by(2).copied().collect();
+
+    let (gs, ls) = nomad_grad_serial(
+        &pos, &nbr_idx, &nbr_w, &neg_idx, neg_w, &means, &mean_w, &valid, k, negs,
+    );
+    let (gg, lg) = nomad_grad_gather(
+        &pos, &nbr_idx, &nbr_w, &nbr_in, &neg_idx, &neg_in, neg_w, &mx, &my, &mean_w, &valid, k,
+        negs, 2,
+    );
+    assert!((ls - lg).abs() < 1e-5 * (1.0 + ls.abs()), "loss serial {ls} vs gather {lg}");
+    for i in 0..size * 2 {
+        assert!(gg[i].is_finite(), "coord {i} not finite");
+        assert!(
+            (gs[i] - gg[i]).abs() < 1e-5 * (1.0 + gs[i].abs()),
+            "coord {i}: serial {} gather {}",
+            gs[i],
+            gg[i]
+        );
+    }
+    for l in n_real..size {
+        assert_eq!(gg[l * 2], 0.0, "padding row {l} moved");
+        assert_eq!(gg[l * 2 + 1], 0.0, "padding row {l} moved");
+    }
+}
+
+#[test]
+fn proto_roundtrip_and_corruption() {
+    use nomad::distributed::proto::{decode, encode, Role, WireMsg};
+    for msg in [WireMsg::Hello { role: Role::Coordinator }, WireMsg::Hello { role: Role::Worker }] {
+        let frame = encode(&msg);
+        let back = decode(&frame).expect("round-trip decode");
+        assert_eq!(msg, back);
+        // a flipped payload bit must be an Err, never a panic
+        let mut bad = frame.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 1;
+        assert!(decode(&bad).is_err());
+        // truncation at every prefix must be an Err, never a panic
+        for cut in 0..frame.len() {
+            assert!(decode(&frame[..cut]).is_err(), "prefix {cut} must fail");
+        }
+    }
+}
+
+#[test]
+fn mmap_fallback_roundtrip() {
+    // under Miri the Vec-backed fallback path is taken; natively this is
+    // the real mmap. Both reconstruct the slice from a raw ptr/len pair.
+    let dir = std::env::temp_dir().join("nomad_miri_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("m.bin");
+    let data: Vec<u8> = (0..=127u8).collect();
+    std::fs::write(&p, &data).unwrap();
+    let m = nomad::util::mmap::Mmap::open(&p).unwrap();
+    assert_eq!(m.bytes(), &data[..]);
+    let shared = std::sync::Arc::new(m);
+    let handles: Vec<_> = (0..2)
+        .map(|_| {
+            let m = std::sync::Arc::clone(&shared);
+            std::thread::spawn(move || m.bytes().iter().map(|&b| b as u32).sum::<u32>())
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), (0..=127u32).sum::<u32>());
+    }
+}

@@ -1,0 +1,5 @@
+//! Repo automation for the NOMAD workspace.  The only subcommand today is
+//! the invariant linter (`cargo run -p xtask -- lint`); see [`lint`] and
+//! DESIGN.md §14.
+
+pub mod lint;

@@ -1,0 +1,778 @@
+//! Line-oriented invariant linter for `rust/src` (DESIGN.md §14).
+//!
+//! Every headline property of this reproduction — bitwise thread-count
+//! invariance, bitwise multi-process equality, bitwise checkpoint
+//! recovery — rests on hand-written source-level invariants: the
+//! `(d², index)` tie contract, the `(device, epoch, block)` RNG contract,
+//! disjoint-slot unsafe dispatch in `par_map_mut`, and no-panic parsing of
+//! untrusted bytes.  This linter turns those from discipline into a gate.
+//!
+//! The scanner is deliberately *not* a Rust parser: it lexes just enough
+//! (strings, char literals vs lifetimes, nested block comments,
+//! `#[cfg(test)]` regions, brace/paren depth) to match tokens in real code
+//! without tripping on `"unsafe"` inside a string literal or `HashMap` in
+//! prose.  Heuristic limits are documented on each rule; the escape hatch
+//! for a justified exception is an explicit, counted pragma on the same
+//! line or the line above:
+//!
+//! ```text
+//! // lint: allow(det_time, reason = "wall-clock deadline, never feeds numerics")
+//! ```
+//!
+//! A pragma that suppresses nothing is itself an error, so stale
+//! exceptions cannot linger.
+
+use std::path::{Path, PathBuf};
+
+/// One enforced rule.  `id()` is the name pragmas must use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// (a) every `unsafe` block / fn / impl needs an immediately preceding
+    /// `// SAFETY:` comment.
+    SafetyComment,
+    /// (b) `.partial_cmp(...)` is banned everywhere: with `unwrap` it
+    /// panics on NaN, with `unwrap_or` it silently breaks the tie
+    /// contract.  Use `total_cmp` or a derived total order.
+    PartialCmp,
+    /// (b) `sort_by`/`sort_unstable_by` must use a total-order comparator
+    /// (`total_cmp`, `Ord::cmp`, `Reverse`).
+    FloatSort,
+    /// (c) direct clock reads (`Instant::now`, `SystemTime`) are banned in
+    /// determinism-critical modules; go through `util::clock`.
+    DetTime,
+    /// (c) `HashMap`/`HashSet` are banned in determinism-critical modules
+    /// (iteration order varies run to run); use `BTreeMap`/`BTreeSet` or a
+    /// sorted Vec.
+    DetHash,
+    /// (c) thread-identity reads (`thread::current`, `ThreadId`) are
+    /// banned in determinism-critical modules.
+    DetThread,
+    /// (d) `unwrap`/`expect`/`panic!`-family calls are banned in
+    /// untrusted-input parsers (lock-poison `.lock().unwrap()` and
+    /// `debug_assert!` excepted).
+    ParserPanic,
+    /// (d) computed slice indices are banned in byte-level parsers;
+    /// literal or SCREAMING_CASE-const indices into length-checked
+    /// headers are allowed, everything else must use `.get()`.
+    ParserIndex,
+    /// A malformed or unused `lint: allow` pragma (not suppressible).
+    Pragma,
+}
+
+impl Rule {
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety_comment",
+            Rule::PartialCmp => "partial_cmp",
+            Rule::FloatSort => "float_sort",
+            Rule::DetTime => "det_time",
+            Rule::DetHash => "det_hash",
+            Rule::DetThread => "det_thread",
+            Rule::ParserPanic => "parser_panic",
+            Rule::ParserIndex => "parser_index",
+            Rule::Pragma => "pragma",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Rule> {
+        Some(match s {
+            "safety_comment" => Rule::SafetyComment,
+            "partial_cmp" => Rule::PartialCmp,
+            "float_sort" => Rule::FloatSort,
+            "det_time" => Rule::DetTime,
+            "det_hash" => Rule::DetHash,
+            "det_thread" => Rule::DetThread,
+            "parser_panic" => Rule::ParserPanic,
+            "parser_index" => Rule::ParserIndex,
+            _ => return None,
+        })
+    }
+}
+
+/// One rule violation at a 1-based source line.
+#[derive(Debug)]
+pub struct Violation {
+    pub line: usize,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+/// The outcome of linting one file.
+#[derive(Debug, Default)]
+pub struct FileOutcome {
+    pub violations: Vec<Violation>,
+    /// pragmas that suppressed at least one violation
+    pub pragmas_used: usize,
+}
+
+/// The outcome of linting a whole tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// (path relative to the src root, violation)
+    pub violations: Vec<(String, Violation)>,
+    pub files: usize,
+    pub pragmas_used: usize,
+}
+
+// ---------------------------------------------------------------------------
+// lexer: split source into per-line code and comment streams
+// ---------------------------------------------------------------------------
+
+/// One source line after lexing: `code` has string/char-literal contents
+/// blanked (structure retained), `comment` holds the text of any `//` or
+/// `/* */` comment on the line.
+struct Line {
+    code: String,
+    comment: String,
+    in_test: bool,
+}
+
+fn is_ident_char(c: char) -> bool {
+    c == '_' || c.is_alphanumeric()
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && is_ident_char(b[i - 1])
+}
+
+/// If `b[j]` is the `r` of a raw-string opener (`r"`, `r#"`, ...), return
+/// the number of `#`s; else None.
+fn raw_hashes(b: &[char], j: usize) -> Option<usize> {
+    let mut h = 0usize;
+    let mut k = j + 1;
+    while b.get(k) == Some(&'#') {
+        h += 1;
+        k += 1;
+    }
+    if b.get(k) == Some(&'"') {
+        Some(h)
+    } else {
+        None
+    }
+}
+
+fn lex(src: &str) -> Vec<Line> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        Block(u32),
+        Str,
+        RawStr(usize),
+        Char,
+    }
+    let b: Vec<char> = src.chars().collect();
+    let mut st = St::Code;
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                in_test: false,
+            });
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                if c == '/' && b.get(i + 1) == Some(&'/') {
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                } else if c == 'r' && !prev_is_ident(&b, i) && raw_hashes(&b, i).is_some() {
+                    let h = raw_hashes(&b, i).unwrap();
+                    code.push('"');
+                    code.push('"');
+                    st = St::RawStr(h);
+                    i += h + 2; // past r, the #s, and the opening quote
+                } else if c == 'b'
+                    && !prev_is_ident(&b, i)
+                    && b.get(i + 1) == Some(&'r')
+                    && raw_hashes(&b, i + 1).is_some()
+                {
+                    let h = raw_hashes(&b, i + 1).unwrap();
+                    code.push('"');
+                    code.push('"');
+                    st = St::RawStr(h);
+                    i += h + 3; // past b, r, the #s, and the opening quote
+                } else if c == '\'' {
+                    // lifetime (`'a`, `'_`) vs char literal (`'a'`, `'\n'`)
+                    let n1 = b.get(i + 1).copied();
+                    let n2 = b.get(i + 2).copied();
+                    let lifetime = matches!(n1, Some(ch) if ch == '_' || ch.is_alphabetic())
+                        && n2 != Some('\'');
+                    if lifetime {
+                        code.push('\'');
+                        i += 1;
+                    } else {
+                        code.push('\'');
+                        code.push(' ');
+                        code.push('\'');
+                        st = St::Char;
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::Block(d) => {
+                if c == '/' && b.get(i + 1) == Some(&'*') {
+                    st = St::Block(d + 1);
+                    i += 2;
+                } else if c == '*' && b.get(i + 1) == Some(&'/') {
+                    st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    // keep an escaped newline on its own line for numbering
+                    i += if b.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            St::RawStr(h) => {
+                if c == '"' && (0..h).all(|t| b.get(i + 1 + t) == Some(&'#')) {
+                    st = St::Code;
+                    i += 1 + h;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if c == '\\' {
+                    i += if b.get(i + 1) == Some(&'\n') { 1 } else { 2 };
+                } else if c == '\'' {
+                    st = St::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(Line { code, comment, in_test: false });
+    lines
+}
+
+/// Mark lines inside `#[cfg(test)]`-gated items (the conventional
+/// `#[cfg(test)] mod tests { ... }`).  Heuristic: the attribute arms a
+/// flag; the next `{` opens the exempt region, which closes with its
+/// matching brace.  Known limit: a `#[cfg(test)]` on a brace-less item
+/// (e.g. a `use`) would over-extend to the next braced item — the
+/// convention in this tree is attribute-on-module only.
+fn mark_test_regions(lines: &mut [Line]) {
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut open_at: Option<i64> = None;
+    for line in lines.iter_mut() {
+        let mut in_test = open_at.is_some() || pending;
+        if open_at.is_none()
+            && (line.code.contains("#[cfg(test)]") || line.code.contains("#[cfg(all(test"))
+        {
+            pending = true;
+            in_test = true;
+        }
+        for ch in line.code.chars() {
+            match ch {
+                '{' => {
+                    if pending && open_at.is_none() {
+                        open_at = Some(depth);
+                        pending = false;
+                        in_test = true;
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    if open_at == Some(depth) {
+                        open_at = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.in_test = in_test;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pragmas
+// ---------------------------------------------------------------------------
+
+/// `Some(Ok(rule))` for a well-formed `lint: allow(rule, reason = "...")`,
+/// `Some(Err(why))` for a malformed one, `None` when the comment is not a
+/// pragma at all.
+fn parse_pragma(comment: &str) -> Option<Result<Rule, String>> {
+    let at = comment.find("lint:")?;
+    let body = comment[at + 5..].trim_start();
+    let body = match body.strip_prefix("allow(") {
+        Some(r) => r,
+        None => {
+            return Some(Err(
+                "pragma must be `lint: allow(<rule>, reason = \"...\")`".to_string()
+            ))
+        }
+    };
+    let (name, rest) = match body.split_once(',') {
+        Some(p) => p,
+        None => return Some(Err("pragma missing `, reason = \"...\"`".to_string())),
+    };
+    let rule = match Rule::from_id(name.trim()) {
+        Some(r) => r,
+        None => return Some(Err(format!("unknown lint rule `{}`", name.trim()))),
+    };
+    let rest = rest.trim_start();
+    let rest = match rest.strip_prefix("reason") {
+        Some(r) => r.trim_start(),
+        None => return Some(Err("pragma missing `reason = \"...\"`".to_string())),
+    };
+    let rest = match rest.strip_prefix('=') {
+        Some(r) => r.trim_start(),
+        None => return Some(Err("pragma missing `= \"...\"` after `reason`".to_string())),
+    };
+    let rest = match rest.strip_prefix('"') {
+        Some(r) => r,
+        None => return Some(Err("pragma reason must be a quoted string".to_string())),
+    };
+    let reason = match rest.split_once('"') {
+        Some((r, _)) => r,
+        None => return Some(Err("pragma reason string is unterminated".to_string())),
+    };
+    if reason.trim().is_empty() {
+        return Some(Err("pragma reason must be nonempty".to_string()));
+    }
+    Some(Ok(rule))
+}
+
+// ---------------------------------------------------------------------------
+// scope predicates
+// ---------------------------------------------------------------------------
+
+/// Modules whose numerics must be bitwise reproducible (DESIGN.md §14).
+fn is_determinism_critical(rel: &str) -> bool {
+    rel.starts_with("embed/")
+        || rel.starts_with("linalg/")
+        || rel.starts_with("ann/")
+        || rel.starts_with("coordinator/")
+        || rel.starts_with("checkpoint/")
+        || rel == "distributed/proto.rs"
+        || rel == "data/shard.rs"
+}
+
+/// Files that parse untrusted input (wire frames, npy files, shard
+/// manifests, HTTP requests, CLI args): a panic here is a crash an
+/// attacker or a corrupt file can trigger.
+fn is_untrusted_parser(rel: &str) -> bool {
+    matches!(
+        rel,
+        "distributed/proto.rs" | "util/npy.rs" | "data/shard.rs" | "serve/http.rs" | "cli.rs"
+    )
+}
+
+/// The byte-level subset of the parser files, where the computed-index ban
+/// additionally applies (HTTP/CLI parse `&str` by splitting, not offsets).
+fn is_byte_parser(rel: &str) -> bool {
+    matches!(rel, "distributed/proto.rs" | "util/npy.rs" | "data/shard.rs")
+}
+
+// ---------------------------------------------------------------------------
+// token scanning helpers
+// ---------------------------------------------------------------------------
+
+/// Find `needle` in `hay` at identifier boundaries.  Boundary checks only
+/// apply on sides where the needle itself starts/ends with an identifier
+/// char (so `assert!` rejects `debug_assert!` on the left but doesn't
+/// constrain what follows the `!`).
+fn find_token(hay: &str, needle: &str) -> bool {
+    let needs_before = needle.chars().next().map_or(false, is_ident_char);
+    let needs_after = needle.chars().next_back().map_or(false, is_ident_char);
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let before_ok = !needs_before
+            || at == 0
+            || !is_ident_char(hay[..at].chars().next_back().unwrap_or(' '));
+        let after_ok = !needs_after
+            || hay[at + needle.len()..]
+                .chars()
+                .next()
+                .map_or(true, |c| !is_ident_char(c));
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Collect the text of a parenthesized call span starting at the `(` at
+/// byte offset `col` of line `ln`, following up to 50 continuation lines.
+fn paren_span(lines: &[Line], ln: usize, col: usize) -> String {
+    let mut out = String::new();
+    let mut depth = 0i32;
+    for (off, line) in lines.iter().enumerate().skip(ln).take(50) {
+        let code: &str = if off == ln { &line.code[col..] } else { &line.code };
+        for ch in code.chars() {
+            out.push(ch);
+            match ch {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return out;
+                    }
+                }
+                _ => {}
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Is this index expression allowed in a byte parser?  Literal numbers and
+/// SCREAMING_CASE consts (and ranges of those) index length-checked
+/// headers; anything computed must go through `.get()`.
+fn index_content_ok(content: &str) -> bool {
+    fn literal_or_const(s: &str) -> bool {
+        if s.is_empty() {
+            return false;
+        }
+        let all_digits = s.chars().all(|c| c.is_ascii_digit() || c == '_');
+        let first_upper = s.chars().next().map_or(false, |c| c.is_ascii_uppercase());
+        let all_const =
+            s.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_');
+        all_digits || (first_upper && all_const)
+    }
+    let c = content.trim();
+    if let Some((a, b)) = c.split_once("..") {
+        let b = b.strip_prefix('=').unwrap_or(b).trim();
+        let a = a.trim();
+        (a.is_empty() || literal_or_const(a)) && (b.is_empty() || literal_or_const(b))
+    } else {
+        literal_or_const(c)
+    }
+}
+
+/// True when the `.unwrap()` at byte offset `p` is the allowed lock-poison
+/// idiom (`.lock().unwrap()` etc.): poisoning is a programmer-error
+/// propagation, not attacker-reachable input handling.
+fn is_poison_unwrap(code: &str, p: usize) -> bool {
+    let head = &code[..p];
+    head.ends_with(".lock()") || head.ends_with(".read()") || head.ends_with(".write()")
+}
+
+/// All byte offsets of `needle` in `hay`.
+fn occurrences(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        out.push(from + p);
+        from = from + p + needle.len();
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// the rules
+// ---------------------------------------------------------------------------
+
+/// Does the `unsafe` on line `ln` have an immediately preceding (or
+/// same-line) `// SAFETY:` comment?  The upward walk skips contiguous
+/// comment lines, attribute lines, and chained `unsafe impl ... {}` lines
+/// (one SAFETY block may justify a Send+Sync pair); a blank line or any
+/// other code breaks adjacency.
+fn has_safety_comment(lines: &[Line], ln: usize) -> bool {
+    if lines[ln].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = ln;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        let code = l.code.trim();
+        if code.is_empty() && l.comment.is_empty() {
+            return false; // blank line
+        }
+        let skippable = code.is_empty()
+            || code.starts_with("#[")
+            || (code.contains("unsafe impl") && code.ends_with("{}"));
+        if !skippable {
+            return false;
+        }
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lint one file's source.  `rel` is the path relative to the src root
+/// with `/` separators (it selects which rule groups apply).
+pub fn lint_source(rel: &str, src: &str) -> FileOutcome {
+    let mut lines = lex(src);
+    mark_test_regions(&mut lines);
+
+    let critical = is_determinism_critical(rel);
+    let parser = is_untrusted_parser(rel);
+    let byte_parser = is_byte_parser(rel);
+
+    let mut raw: Vec<Violation> = Vec::new();
+    let mut pragmas: Vec<(usize, Rule)> = Vec::new(); // (0-based line, rule)
+
+    for (ln, line) in lines.iter().enumerate() {
+        match parse_pragma(&line.comment) {
+            Some(Ok(rule)) => pragmas.push((ln, rule)),
+            Some(Err(why)) => raw.push(Violation { line: ln + 1, rule: Rule::Pragma, msg: why }),
+            None => {}
+        }
+
+        let code = &line.code;
+
+        // (a) SAFETY comments, everywhere (tests included)
+        if find_token(code, "unsafe") && !has_safety_comment(&lines, ln) {
+            raw.push(Violation {
+                line: ln + 1,
+                rule: Rule::SafetyComment,
+                msg: "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            });
+        }
+
+        // (b) tie contract, everywhere
+        if code.contains(".partial_cmp(") && !code.contains("fn partial_cmp") {
+            raw.push(Violation {
+                line: ln + 1,
+                rule: Rule::PartialCmp,
+                msg: "`partial_cmp` breaks the tie contract on NaN — use `total_cmp` or a \
+                      derived total order"
+                    .to_string(),
+            });
+        }
+        for needle in [".sort_by(", ".sort_unstable_by("] {
+            if let Some(p) = code.find(needle) {
+                let span = paren_span(&lines, ln, p + needle.len() - 1);
+                let total = span.contains("total_cmp")
+                    || span.contains(".cmp(")
+                    || span.contains("cmp::")
+                    || span.contains("Reverse(");
+                if !total {
+                    raw.push(Violation {
+                        line: ln + 1,
+                        rule: Rule::FloatSort,
+                        msg: format!(
+                            "`{}` without a total-order comparator (`total_cmp`, `Ord::cmp`, \
+                             `Reverse`)",
+                            needle.trim_start_matches('.').trim_end_matches('(')
+                        ),
+                    });
+                }
+            }
+        }
+
+        // (c) determinism-critical modules, non-test code only
+        if critical && !line.in_test {
+            if code.contains("Instant::now") || find_token(code, "SystemTime") {
+                raw.push(Violation {
+                    line: ln + 1,
+                    rule: Rule::DetTime,
+                    msg: "direct clock read in a determinism-critical module — route through \
+                          `util::clock` (deadlines/telemetry only)"
+                        .to_string(),
+                });
+            }
+            if find_token(code, "HashMap") || find_token(code, "HashSet") {
+                raw.push(Violation {
+                    line: ln + 1,
+                    rule: Rule::DetHash,
+                    msg: "HashMap/HashSet in a determinism-critical module (iteration order is \
+                          nondeterministic) — use BTreeMap/BTreeSet or a sorted Vec"
+                        .to_string(),
+                });
+            }
+            if code.contains("thread::current") || find_token(code, "ThreadId") {
+                raw.push(Violation {
+                    line: ln + 1,
+                    rule: Rule::DetThread,
+                    msg: "thread-identity read in a determinism-critical module".to_string(),
+                });
+            }
+        }
+
+        // (d) untrusted-input parsers, non-test code only
+        if parser && !line.in_test {
+            for p in occurrences(code, ".unwrap()") {
+                if !is_poison_unwrap(code, p) {
+                    raw.push(Violation {
+                        line: ln + 1,
+                        rule: Rule::ParserPanic,
+                        msg: "`.unwrap()` in an untrusted-input parser — return an Err"
+                            .to_string(),
+                    });
+                }
+            }
+            if code.contains(".expect(") {
+                raw.push(Violation {
+                    line: ln + 1,
+                    rule: Rule::ParserPanic,
+                    msg: "`.expect(...)` in an untrusted-input parser — return an Err"
+                        .to_string(),
+                });
+            }
+            for mac in
+                ["panic!", "unreachable!", "todo!", "unimplemented!", "assert!", "assert_eq!",
+                 "assert_ne!"]
+            {
+                if find_token(code, mac) {
+                    raw.push(Violation {
+                        line: ln + 1,
+                        rule: Rule::ParserPanic,
+                        msg: format!("`{mac}` in an untrusted-input parser — return an Err"),
+                    });
+                }
+            }
+        }
+        if byte_parser && !line.in_test {
+            let chars: Vec<char> = code.chars().collect();
+            for (j, &ch) in chars.iter().enumerate() {
+                if ch != '[' || j == 0 {
+                    continue;
+                }
+                let p = chars[j - 1];
+                let indexing = p == ']' || p == ')' || p == '?' || is_ident_char(p);
+                if !indexing {
+                    continue;
+                }
+                // matching `]` on the same line
+                let mut depth = 0i32;
+                let mut end = None;
+                for (t, &c2) in chars.iter().enumerate().skip(j) {
+                    match c2 {
+                        '[' => depth += 1,
+                        ']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = Some(t);
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                let content: String = match end {
+                    Some(e) => chars[j + 1..e].iter().collect(),
+                    None => String::new(), // multi-line index: flag it
+                };
+                if end.is_none() || !index_content_ok(&content) {
+                    raw.push(Violation {
+                        line: ln + 1,
+                        rule: Rule::ParserIndex,
+                        msg: format!(
+                            "computed slice index `[{}]` in a byte parser — use `.get()` with \
+                             an error",
+                            content.trim()
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // pragma suppression: a pragma covers its own line and the next line
+    let mut used = vec![false; pragmas.len()];
+    let mut violations: Vec<Violation> = Vec::new();
+    for v in raw {
+        let l0 = v.line - 1;
+        let mut suppressed = false;
+        for (pi, &(pl, pr)) in pragmas.iter().enumerate() {
+            if pr == v.rule && (pl == l0 || pl + 1 == l0) {
+                used[pi] = true;
+                suppressed = true;
+                break;
+            }
+        }
+        if !suppressed {
+            violations.push(v);
+        }
+    }
+    let pragmas_used = used.iter().filter(|u| **u).count();
+    for (pi, &(pl, pr)) in pragmas.iter().enumerate() {
+        if !used[pi] {
+            violations.push(Violation {
+                line: pl + 1,
+                rule: Rule::Pragma,
+                msg: format!("unused lint pragma for `{}` — remove it", pr.id()),
+            });
+        }
+    }
+    violations.sort_by_key(|v| v.line);
+    FileOutcome { violations, pragmas_used }
+}
+
+// ---------------------------------------------------------------------------
+// tree walking
+// ---------------------------------------------------------------------------
+
+fn collect_rs(root: &Path, rel: PathBuf, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(root.join(&rel))?.collect::<std::io::Result<Vec<_>>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let r = rel.join(e.file_name());
+        if e.file_type()?.is_dir() {
+            collect_rs(root, r, out)?;
+        } else if r.extension().map_or(false, |x| x == "rs") {
+            out.push(r);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `src_root` (deterministic order).
+pub fn lint_tree(src_root: &Path) -> std::io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(src_root, PathBuf::new(), &mut files)?;
+    let mut report = Report::default();
+    for rel in files {
+        let src = std::fs::read_to_string(src_root.join(&rel))?;
+        let rel_str = rel
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let out = lint_source(&rel_str, &src);
+        report.files += 1;
+        report.pragmas_used += out.pragmas_used;
+        for v in out.violations {
+            report.violations.push((rel_str.clone(), v));
+        }
+    }
+    Ok(report)
+}

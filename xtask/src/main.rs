@@ -1,0 +1,62 @@
+//! `cargo run -p xtask -- lint [src-root ...]`
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage/IO error.
+
+use std::path::{Path, PathBuf};
+
+fn default_src_root() -> PathBuf {
+    // xtask/ sits next to rust/ at the workspace root
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent directory")
+        .join("rust")
+        .join("src")
+}
+
+fn run_lint(roots: &[PathBuf]) -> i32 {
+    let mut total_violations = 0usize;
+    let mut total_files = 0usize;
+    let mut total_pragmas = 0usize;
+    for root in roots {
+        let report = match xtask::lint::lint_tree(root) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("xtask lint: cannot walk {}: {e}", root.display());
+                return 2;
+            }
+        };
+        for (rel, v) in &report.violations {
+            println!("{}/{}:{}: [{}] {}", root.display(), rel, v.line, v.rule.id(), v.msg);
+        }
+        total_violations += report.violations.len();
+        total_files += report.files;
+        total_pragmas += report.pragmas_used;
+    }
+    println!(
+        "xtask lint: {} violation(s), {} pragma suppression(s) across {} file(s)",
+        total_violations, total_pragmas, total_files
+    );
+    if total_violations > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("lint") => {
+            let roots: Vec<PathBuf> = if args.len() > 1 {
+                args[1..].iter().map(PathBuf::from).collect()
+            } else {
+                vec![default_src_root()]
+            };
+            std::process::exit(run_lint(&roots));
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-root ...]");
+            std::process::exit(2);
+        }
+    }
+}

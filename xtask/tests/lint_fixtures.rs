@@ -1,0 +1,410 @@
+//! Fixture tests for the invariant linter: every rule must fire on a
+//! seeded violation and stay silent on the compliant twin, the pragma
+//! machinery must suppress exactly what it names, and the lexer must not
+//! trip on tokens hidden in strings or comments.
+
+use xtask::lint::lint_source;
+
+/// Lint `src` as if it lived at `rel`, returning `(line, rule_id)` pairs.
+fn lint(rel: &str, src: &str) -> Vec<(usize, String)> {
+    lint_source(rel, src)
+        .violations
+        .into_iter()
+        .map(|v| (v.line, v.rule.id().to_string()))
+        .collect()
+}
+
+fn rules(rel: &str, src: &str) -> Vec<String> {
+    lint(rel, src).into_iter().map(|(_, r)| r).collect()
+}
+
+// ------------------------------------------------------------ rule (a)
+
+#[test]
+fn unsafe_without_safety_comment_fires() {
+    let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0; }\n}\n";
+    assert_eq!(lint("embed/x.rs", src), vec![(2, "safety_comment".to_string())]);
+}
+
+#[test]
+fn unsafe_with_safety_line_above_is_clean() {
+    let src =
+        "fn f(p: *mut u8) {\n    // SAFETY: p is valid for writes\n    unsafe { *p = 0; }\n}\n";
+    assert!(lint("embed/x.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_with_same_line_safety_is_clean() {
+    let src = "fn f(p: *mut u8) {\n    unsafe { *p = 0; } // SAFETY: p is valid\n}\n";
+    assert!(lint("embed/x.rs", src).is_empty());
+}
+
+#[test]
+fn safety_walk_skips_attributes_and_comment_lines() {
+    let src = "\
+// SAFETY: justified at length
+// over two comment lines
+#[inline]
+unsafe fn g() {}
+";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn one_safety_comment_covers_chained_unsafe_impl_pair() {
+    let src = "\
+struct S(*mut u8);
+// SAFETY: the pointer is never written through
+unsafe impl Send for S {}
+unsafe impl Sync for S {}
+";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn blank_line_breaks_safety_adjacency() {
+    let src = "// SAFETY: stale comment\n\nunsafe fn g() {}\n";
+    assert_eq!(rules("a.rs", src), vec!["safety_comment"]);
+}
+
+#[test]
+fn multiline_unsafe_block_only_flags_opening_line() {
+    let src = "\
+fn f(p: *mut u8) {
+    let v = unsafe {
+        *p
+    };
+}
+";
+    assert_eq!(lint("a.rs", src), vec![(2, "safety_comment".to_string())]);
+}
+
+#[test]
+fn safety_applies_inside_tests_too() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        unsafe { std::hint::unreachable_unchecked() }
+    }
+}
+";
+    assert_eq!(rules("a.rs", src), vec!["safety_comment"]);
+}
+
+// ------------------------------------------------------ lexer traps
+
+#[test]
+fn unsafe_in_string_literal_is_ignored() {
+    let src = "fn f() { let s = \"this unsafe word\"; let _ = s; }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_in_raw_string_is_ignored() {
+    let src = "fn f() { let s = r#\"unsafe { }\"#; let _ = s; }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_in_comment_is_ignored() {
+    let src = "// this mentions unsafe code but contains none\nfn f() {}\n/* unsafe here too */\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn unsafe_as_identifier_substring_is_ignored() {
+    let src = "fn f() { let not_unsafe_flag = 1; let _ = not_unsafe_flag; }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn char_literal_quote_does_not_eat_rest_of_line() {
+    // a char literal containing '"' must not open a string state
+    let src = "fn f() { let c = '\"'; let _ = (c, \"unsafe\"); }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn lifetime_is_not_a_char_literal() {
+    // if 'a were lexed as a char opening, the rest of the file would be
+    // swallowed and the real violation below would be missed
+    let src = "fn f<'a>(x: &'a u32) -> &'a u32 { x }\nfn g() { unsafe { } }\n";
+    assert_eq!(lint("a.rs", src), vec![(2, "safety_comment".to_string())]);
+}
+
+// ------------------------------------------------------------ rule (b)
+
+#[test]
+fn partial_cmp_fires_everywhere_even_in_tests() {
+    let src = "\
+#[cfg(test)]
+mod tests {
+    fn t(a: f32, b: f32) { let _ = a.partial_cmp(&b); }
+}
+";
+    assert_eq!(rules("serve/x.rs", src), vec!["partial_cmp"]);
+}
+
+#[test]
+fn partial_cmp_definition_is_allowed() {
+    let src = "fn partial_cmp(a: u8, b: u8) -> u8 { a + b }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn float_sort_without_total_order_fires() {
+    let src = "fn f(v: &mut [f32]) { v.sort_by(|a, b| b.abs().cmp2(&a.abs())); }\n";
+    assert_eq!(rules("a.rs", src), vec!["float_sort"]);
+}
+
+#[test]
+fn float_sort_with_total_cmp_is_clean() {
+    let src = "fn f(v: &mut [f32]) { v.sort_by(|a, b| a.total_cmp(b)); }\n";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn float_sort_multiline_comparator_is_scanned_to_closing_paren() {
+    let src = "\
+fn f(v: &mut [(f32, u32)]) {
+    v.sort_by(|a, b| {
+        a.0.total_cmp(&b.0)
+    });
+}
+";
+    assert!(lint("a.rs", src).is_empty());
+}
+
+#[test]
+fn sort_unstable_by_is_covered() {
+    let src = "fn f(v: &mut [f32]) { v.sort_unstable_by(|a, b| cmp2(a, b)); }\n";
+    assert_eq!(rules("a.rs", src), vec!["float_sort"]);
+}
+
+// ------------------------------------------------------------ rule (c)
+
+#[test]
+fn determinism_rules_fire_only_in_critical_modules() {
+    let src = "\
+use std::collections::HashMap;
+fn f() {
+    let t = std::time::Instant::now();
+    let m: HashMap<u32, u32> = HashMap::new();
+    let id = std::thread::current().id();
+    let _ = (t, m, id);
+}
+";
+    let critical = rules("coordinator/mod.rs", src);
+    assert_eq!(critical, vec!["det_hash", "det_time", "det_hash", "det_thread"]);
+    // the same source in a non-critical module is clean
+    assert!(lint("serve/http.rs", src).is_empty());
+}
+
+#[test]
+fn determinism_rules_exempt_test_modules() {
+    let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = std::time::Instant::now();
+        let _: std::collections::HashSet<u8> = Default::default();
+    }
+}
+";
+    assert!(lint("embed/native.rs", src).is_empty());
+}
+
+#[test]
+fn critical_scope_includes_wire_and_shard_codecs() {
+    let src = "fn f() { let _ = std::time::Instant::now(); }\n";
+    assert_eq!(rules("distributed/proto.rs", src), vec!["det_time"]);
+    assert_eq!(rules("data/shard.rs", src), vec!["det_time"]);
+    assert!(lint("distributed/worker.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------ rule (d)
+
+#[test]
+fn parser_panics_fire_in_parser_files_only() {
+    let src = "fn f(v: Option<u8>) -> u8 { v.unwrap() }\n";
+    assert_eq!(rules("cli.rs", src), vec!["parser_panic"]);
+    assert!(lint("viz/png.rs", src).is_empty());
+}
+
+#[test]
+fn lock_poison_unwrap_is_allowed() {
+    let src = "\
+fn f(m: &std::sync::Mutex<u8>, r: &std::sync::RwLock<u8>) -> u8 {
+    *m.lock().unwrap() + *r.read().unwrap() + { *r.write().unwrap() }
+}
+";
+    assert!(lint("serve/http.rs", src).is_empty());
+}
+
+#[test]
+fn expect_and_panic_macros_fire() {
+    let src = "\
+fn f(v: Option<u8>) -> u8 {
+    if v.is_none() { panic!(\"no\"); }
+    v.expect(\"checked\")
+}
+";
+    let got = rules("serve/http.rs", src);
+    assert_eq!(got, vec!["parser_panic", "parser_panic"]);
+}
+
+#[test]
+fn debug_assert_is_not_assert() {
+    let src = "fn f(n: usize) { debug_assert!(n < 10); debug_assert_eq!(n, n); }\n";
+    assert!(lint("cli.rs", src).is_empty());
+}
+
+#[test]
+fn assert_macros_fire_in_parsers() {
+    let src = "fn f(n: usize) { assert!(n < 10); assert_eq!(n, n); assert_ne!(n, 1); }\n";
+    assert_eq!(rules("util/npy.rs", src), vec!["parser_panic"; 3]);
+}
+
+#[test]
+fn parser_rules_exempt_tests() {
+    let src = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() { assert_eq!(Some(1).unwrap(), 1); }
+}
+";
+    assert!(lint("cli.rs", src).is_empty());
+}
+
+#[test]
+fn computed_index_fires_in_byte_parsers_only() {
+    let src = "fn f(b: &[u8], off: usize) -> u8 { b[off] }\n";
+    assert_eq!(rules("util/npy.rs", src), vec!["parser_index"]);
+    assert_eq!(rules("data/shard.rs", src), vec!["parser_index"]);
+    // http/cli parse &str by splitting; the index ban does not apply
+    assert!(lint("serve/http.rs", src).is_empty());
+}
+
+#[test]
+fn literal_and_const_indices_are_allowed() {
+    let src = "\
+const HEADER: usize = 16;
+fn f(b: &[u8]) -> u8 {
+    let _ = &b[0..4];
+    let _ = &b[..HEADER];
+    let _ = &b[HEADER..];
+    b[12]
+}
+";
+    assert!(lint("util/npy.rs", src).is_empty());
+}
+
+#[test]
+fn computed_range_index_fires() {
+    let src = "fn f(b: &[u8], lo: usize, hi: usize) -> &[u8] { &b[lo..hi] }\n";
+    assert_eq!(rules("data/shard.rs", src), vec!["parser_index"]);
+}
+
+#[test]
+fn array_type_brackets_are_not_indexing() {
+    let src = "fn f() -> [u8; 4] { let h: [u8; 4] = [0; 4]; h }\n";
+    assert!(lint("util/npy.rs", src).is_empty());
+}
+
+// ------------------------------------------------------------- pragmas
+
+#[test]
+fn pragma_on_same_line_suppresses_and_is_counted() {
+    let src =
+        "fn f(p: *mut u8) { unsafe { *p = 0; } } // lint: allow(safety_comment, reason = \"fixture\")\n";
+    let out = lint_source("a.rs", src);
+    assert!(out.violations.is_empty());
+    assert_eq!(out.pragmas_used, 1);
+}
+
+#[test]
+fn pragma_on_line_above_suppresses() {
+    let src = "\
+// lint: allow(det_time, reason = \"deadline only, never feeds numerics\")
+fn f() { let _ = std::time::Instant::now(); }
+";
+    let out = lint_source("coordinator/mod.rs", src);
+    assert!(out.violations.is_empty());
+    assert_eq!(out.pragmas_used, 1);
+}
+
+#[test]
+fn pragma_only_suppresses_its_named_rule() {
+    let src = "\
+// lint: allow(det_time, reason = \"wrong rule for this line\")
+fn f(v: &mut [f32]) { v.sort_by(|a, b| cmp2(a, b)); }
+";
+    // the float_sort violation survives AND the pragma is flagged unused
+    let got = rules("a.rs", src);
+    assert!(got.contains(&"float_sort".to_string()), "{got:?}");
+    assert!(got.contains(&"pragma".to_string()), "{got:?}");
+}
+
+#[test]
+fn unused_pragma_is_an_error() {
+    let src = "// lint: allow(partial_cmp, reason = \"nothing here uses it\")\nfn f() {}\n";
+    assert_eq!(lint("a.rs", src), vec![(1, "pragma".to_string())]);
+}
+
+#[test]
+fn malformed_pragmas_are_errors() {
+    for bad in [
+        "// lint: allow(unknown_rule, reason = \"x\")\n",
+        "// lint: allow(partial_cmp)\n",
+        "// lint: allow(partial_cmp, reason = )\n",
+        "// lint: allow(partial_cmp, reason = \"\")\n",
+        "// lint: deny(partial_cmp, reason = \"x\")\n",
+    ] {
+        assert_eq!(rules("a.rs", bad), vec!["pragma"], "fixture: {bad}");
+    }
+}
+
+#[test]
+fn pragma_does_not_reach_two_lines_down() {
+    let src = "\
+// lint: allow(partial_cmp, reason = \"too far away\")
+
+fn f(a: f32, b: f32) { let _ = a.partial_cmp(&b); }
+";
+    let got = rules("a.rs", src);
+    assert!(got.contains(&"partial_cmp".to_string()), "{got:?}");
+    assert!(got.contains(&"pragma".to_string()), "{got:?}");
+}
+
+// -------------------------------------------------------- end to end
+
+#[test]
+fn seeded_multi_rule_fixture_reports_every_violation_in_line_order() {
+    let src = "\
+use std::collections::HashMap;
+fn f(b: &[u8], off: usize) -> u8 {
+    let m: HashMap<u8, u8> = HashMap::new();
+    let _ = (m, std::time::Instant::now());
+    unsafe { std::hint::unreachable_unchecked() };
+    b[off]
+}
+";
+    let got = lint("data/shard.rs", src);
+    let lines: Vec<usize> = got.iter().map(|(l, _)| *l).collect();
+    assert_eq!(lines, {
+        let mut s = lines.clone();
+        s.sort_unstable();
+        s
+    });
+    let ids: Vec<&str> = got.iter().map(|(_, r)| r.as_str()).collect();
+    assert_eq!(
+        ids,
+        vec!["det_hash", "det_hash", "det_time", "safety_comment", "parser_index"]
+    );
+}
