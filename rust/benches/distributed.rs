@@ -5,9 +5,12 @@
 //! (per-epoch mean/max from `CommStats::wire_epoch_bytes`), the modeled
 //! all-gather volume, and the cost model's per-epoch time — so the modeled
 //! communication story (DESIGN.md §3) can be checked against bytes that
-//! actually crossed a socket.  Exits nonzero unless the remote run's final
-//! positions are **bitwise identical** to the in-process run with the same
-//! seeds (the tentpole invariant of DESIGN.md §12).
+//! actually crossed a socket.  Every row also carries the obs registry's
+//! `nomad_wire_bytes_total` delta for the run, and the bench exits nonzero
+//! if it drifts from `CommStats` — the registry and the run report are one
+//! source of truth (DESIGN.md §15).  Exits nonzero unless the remote run's
+//! final positions are **bitwise identical** to the in-process run with
+//! the same seeds (the tentpole invariant of DESIGN.md §12).
 //!
 //!   cargo bench --bench distributed  [-- --n 6000 --epochs 30 | --smoke]
 
@@ -24,6 +27,7 @@ use nomad::distributed::comm_model;
 use nomad::distributed::transport::Endpoint;
 use nomad::distributed::worker::{serve_session, WorkerCfg, WorkerListener};
 use nomad::embed::NomadParams;
+use nomad::obs::metrics::{self, Value};
 use nomad::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -62,6 +66,34 @@ fn spawn_workers(
         }));
     }
     (endpoints, joins)
+}
+
+/// Sum of every series of a counter family in the global obs registry.
+fn obs_counter_total(name: &str) -> u64 {
+    match metrics::snapshot().families.get(name) {
+        Some(fam) => fam
+            .series
+            .values()
+            .map(|v| match v {
+                Value::Counter(c) => *c,
+                _ => 0,
+            })
+            .sum(),
+        None => 0,
+    }
+}
+
+/// Fail the bench if the obs registry's wire-byte delta for this run
+/// drifts from the `CommStats` total — both must come from the same
+/// transport accounting.
+fn check_wire_source(placement: &str, obs_delta: u64, comm_total: u64) {
+    if obs_delta != comm_total {
+        eprintln!(
+            "FAIL: {placement}: obs nomad_wire_bytes_total delta {obs_delta} != \
+             CommStats wire_bytes_total {comm_total}"
+        );
+        std::process::exit(1);
+    }
 }
 
 fn row_stats(run: &NomadRun) -> (u64, u64, f64) {
@@ -124,9 +156,12 @@ fn main() {
     let mut reference: Option<Vec<f32>> = None;
 
     for devices in [1usize, 2, 4] {
+        let wire_obs_before = obs_counter_total("nomad_wire_bytes_total");
         let coord = coordinator(epochs, Placement::InProcess, devices);
         let prep = coord.prepare(&ds.x, &NativeBackend::default());
         let run = coord.fit_resumable(n, &prep, None).expect("in-process run");
+        let wire_obs = obs_counter_total("nomad_wire_bytes_total") - wire_obs_before;
+        check_wire_source("in-process", wire_obs, run.comm.wire_bytes_total);
         let (mean, max, modeled) = row_stats(&run);
         table.row(vec![
             "in-process".into(),
@@ -143,6 +178,7 @@ fn main() {
             ("devices", jsonx::num(devices as f64)),
             ("train_secs", jsonx::num(run.train_secs)),
             ("wire_bytes_total", jsonx::num(run.comm.wire_bytes_total as f64)),
+            ("wire_bytes_obs", jsonx::num(wire_obs as f64)),
             ("wire_epoch_mean", jsonx::num(mean as f64)),
             ("wire_epoch_max", jsonx::num(max as f64)),
             ("allgather_bytes", jsonx::num(run.comm.allgather_bytes_total as f64)),
@@ -154,6 +190,7 @@ fn main() {
     }
 
     // the same 2-device run, but over real loopback TCP worker sessions
+    let wire_obs_before = obs_counter_total("nomad_wire_bytes_total");
     let (endpoints, joins) = spawn_workers(&shard_dir, 2);
     let coord = coordinator(
         epochs,
@@ -165,6 +202,8 @@ fn main() {
     for j in joins {
         j.join().expect("worker thread");
     }
+    let wire_obs = obs_counter_total("nomad_wire_bytes_total") - wire_obs_before;
+    check_wire_source("tcp-workers", wire_obs, run.comm.wire_bytes_total);
     let (mean, max, modeled) = row_stats(&run);
     table.row(vec![
         "tcp-workers".into(),
@@ -181,6 +220,7 @@ fn main() {
         ("devices", jsonx::num(2.0)),
         ("train_secs", jsonx::num(run.train_secs)),
         ("wire_bytes_total", jsonx::num(run.comm.wire_bytes_total as f64)),
+        ("wire_bytes_obs", jsonx::num(wire_obs as f64)),
         ("wire_epoch_mean", jsonx::num(mean as f64)),
         ("wire_epoch_max", jsonx::num(max as f64)),
         ("allgather_bytes", jsonx::num(run.comm.allgather_bytes_total as f64)),

@@ -5,7 +5,7 @@
 //! print the same rows/series the paper reports), and JSON result dumps to
 //! `bench_results/` for EXPERIMENTS.md bookkeeping.
 
-use crate::util::json::{arr, obj, s, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 use crate::util::stats::Summary;
 use std::time::Instant;
 
@@ -105,13 +105,38 @@ impl Table {
     }
 }
 
+/// Schema version of the [`bench_envelope`] wrapper around every
+/// `BENCH_*.json` payload.
+pub const BENCH_SCHEMA_VERSION: i64 = 1;
+
+/// Wrap a bench payload in the shared result envelope — schema version,
+/// bench name, thread budget, and build profile — so every `BENCH_*.json`
+/// self-describes the run that produced it and downstream tooling can
+/// compare like with like.
+pub fn bench_envelope(name: &str, payload: Json) -> Json {
+    obj(vec![
+        ("schema_version", num(BENCH_SCHEMA_VERSION as f64)),
+        ("bench", s(name)),
+        ("threads", num(crate::util::parallel::num_threads() as f64)),
+        (
+            "profile",
+            s(if cfg!(debug_assertions) { "debug" } else { "release" }),
+        ),
+        ("payload", payload),
+    ])
+}
+
 /// Dump a machine-readable bench payload to
 /// `bench_results/BENCH_<name>.json` — the CI smoke run and perf-tracking
 /// tooling consume these (shapes, ns/op, speedups), while
-/// [`Table::save_json`] keeps the human-oriented table mirror.
+/// [`Table::save_json`] keeps the human-oriented table mirror.  The
+/// payload lands under the `"payload"` key of the [`bench_envelope`].
 pub fn save_bench_json(name: &str, payload: Json) {
     let _ = std::fs::create_dir_all("bench_results");
-    let _ = std::fs::write(format!("bench_results/BENCH_{name}.json"), payload.pretty());
+    let _ = std::fs::write(
+        format!("bench_results/BENCH_{name}.json"),
+        bench_envelope(name, payload).pretty(),
+    );
 }
 
 /// Format seconds human-readably.
@@ -176,6 +201,19 @@ mod tests {
         t.row(vec!["longer".into(), "1".into()]);
         t.print(); // should not panic
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn bench_envelope_roundtrips_with_the_schema() {
+        let payload = obj(vec![("ns_per_op", num(12.5))]);
+        let env = bench_envelope("demo", payload);
+        let back = Json::parse(&env.pretty()).unwrap();
+        assert_eq!(back.get("schema_version").as_i64(), Some(BENCH_SCHEMA_VERSION));
+        assert_eq!(back.get("bench").as_str(), Some("demo"));
+        assert!(back.get("threads").as_usize().unwrap() >= 1);
+        let profile = back.get("profile").as_str().unwrap();
+        assert!(profile == "debug" || profile == "release", "{profile}");
+        assert_eq!(back.get("payload").get("ns_per_op").as_f64(), Some(12.5));
     }
 
     #[test]

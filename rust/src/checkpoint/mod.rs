@@ -27,7 +27,7 @@
 
 pub mod store;
 
-pub use store::{RunStore, SaveOpts};
+pub use store::{epoch_telemetry_json, RunStore, SaveOpts};
 
 use crate::ann::graph::WeightModel;
 use crate::ann::IndexParams;

@@ -30,7 +30,9 @@ use super::CheckpointState;
 use crate::distributed::MeanEntry;
 use crate::ensure;
 use crate::linalg::Matrix;
+use crate::obs::metrics;
 use crate::serve::artifact::{MapArtifact, Provenance};
+use crate::util::clock::Stopwatch;
 use crate::util::error::{Context, Result};
 use crate::util::json::{self, Json};
 use crate::util::npy::{NpyF32, NpyF64};
@@ -76,6 +78,9 @@ pub struct RunStore {
     /// classified fault records appended by the coordinator's recovery
     /// supervisor, in order (persisted in `run.json`, DESIGN.md §13)
     faults: Vec<Json>,
+    /// per-epoch telemetry entries appended by the coordinator's epoch
+    /// loop (persisted in `run.json`, DESIGN.md §15)
+    telemetry: Vec<Json>,
 }
 
 fn ckpt_dirname(epochs_done: usize) -> String {
@@ -101,6 +106,7 @@ impl RunStore {
             run_info,
             checkpoints: Vec::new(),
             faults: Vec::new(),
+            telemetry: Vec::new(),
         };
         store.write_manifest()?;
         Ok(store)
@@ -141,12 +147,18 @@ impl RunStore {
             Some(a) => a.to_vec(),
             None => Vec::new(),
         };
+        // likewise absent in stores written before telemetry existed
+        let telemetry = match v.get("telemetry").as_arr() {
+            Some(a) => a.to_vec(),
+            None => Vec::new(),
+        };
         Ok(RunStore {
             dir: dir.to_path_buf(),
             fingerprint,
             run_info: v.get("run").clone(),
             checkpoints,
             faults,
+            telemetry,
         })
     }
 
@@ -202,6 +214,7 @@ impl RunStore {
                 json::arr(self.checkpoints.iter().map(|&e| json::num(e as f64)).collect()),
             ),
             ("faults", json::arr(self.faults.clone())),
+            ("telemetry", json::arr(self.telemetry.clone())),
             ("run", self.run_info.clone()),
         ]);
         let tmp = self.dir.join("run.json.tmp");
@@ -217,6 +230,7 @@ impl RunStore {
     /// (the coordinator's sorted all-gather invariant) — they are stored
     /// implicitly and reconstructed on load.
     pub fn save(&mut self, st: &CheckpointState, opts: &SaveOpts) -> Result<()> {
+        let t_save = Stopwatch::start();
         ensure!(st.positions.cols == 2, "positions must be n x 2");
         ensure!(
             st.loss_history.len() == st.epochs_done,
@@ -306,6 +320,14 @@ impl RunStore {
             // best effort: a failed prune leaves an orphan dir, not a bad run
             let _ = std::fs::remove_dir_all(self.ckpt_dir(e));
         }
+        metrics::counter("nomad_checkpoints_total", "Checkpoints published.", &[]).inc();
+        metrics::histogram(
+            "nomad_checkpoint_save_seconds",
+            "Checkpoint assemble-and-publish wall time.",
+            &metrics::DURATION_BUCKETS_S,
+            &[],
+        )
+        .observe(t_save.secs());
         Ok(())
     }
 
@@ -433,6 +455,46 @@ impl RunStore {
     pub fn faults(&self) -> &[Json] {
         &self.faults
     }
+
+    /// Buffer one per-epoch telemetry entry (see [`epoch_telemetry_json`]).
+    /// Entries land in `run.json`'s `"telemetry"` array on the next
+    /// manifest rewrite — a checkpoint save or a fault record — never on
+    /// their own, so the epoch loop does not pay a manifest write per
+    /// epoch.
+    pub fn record_epoch_telemetry(&mut self, entry: Json) {
+        self.telemetry.push(entry);
+    }
+
+    /// Per-epoch telemetry entries (parsed back from the manifest on
+    /// reopen; entries buffered after the last manifest rewrite are
+    /// memory-only until the next one).
+    pub fn telemetry(&self) -> &[Json] {
+        &self.telemetry
+    }
+}
+
+/// One per-epoch telemetry entry for [`RunStore::record_epoch_telemetry`]
+/// — the numbers the coordinator's epoch loop knows as the epoch closes.
+/// Telemetry only: these values are *read from* training state, never fed
+/// back into it.
+pub fn epoch_telemetry_json(
+    epoch: usize,
+    loss: f64,
+    lr: f64,
+    wire_bytes: u64,
+    max_dev_secs: f64,
+    modeled_secs: f64,
+    wall_secs: f64,
+) -> Json {
+    json::obj(vec![
+        ("epoch", json::num(epoch as f64)),
+        ("loss", json::num(loss)),
+        ("lr", json::num(lr)),
+        ("wire_bytes", json::num(wire_bytes as f64)),
+        ("max_dev_secs", json::num(max_dev_secs)),
+        ("modeled_secs", json::num(modeled_secs)),
+        ("wall_secs", json::num(wall_secs)),
+    ])
 }
 
 #[cfg(test)]
@@ -630,6 +692,22 @@ mod tests {
         assert_eq!(re.faults()[0].get("kind").as_str(), Some("timeout"));
         assert_eq!(re.faults()[0].get("restart_epoch").as_usize(), Some(25));
         assert_eq!(re.faults()[1].get("device").as_usize(), Some(0));
+    }
+
+    #[test]
+    fn telemetry_entries_survive_the_manifest_roundtrip() {
+        let mut store = demo_store("telemetry");
+        store.record_epoch_telemetry(epoch_telemetry_json(0, 1.5, 100.0, 64, 0.01, 0.1, 0.2));
+        store.record_epoch_telemetry(epoch_telemetry_json(1, 1.25, 99.0, 64, 0.01, 0.1, 0.4));
+        // buffered only: a reopen before any manifest rewrite sees nothing
+        assert!(RunStore::open(store.dir()).unwrap().telemetry().is_empty());
+        // a checkpoint save flushes the buffer into run.json
+        store.save(&demo_state(2, 8, 2), &SaveOpts::default()).unwrap();
+        let re = RunStore::open(store.dir()).unwrap();
+        assert_eq!(re.telemetry().len(), 2);
+        assert_eq!(re.telemetry()[0].get("epoch").as_usize(), Some(0));
+        assert_eq!(re.telemetry()[0].get("wire_bytes").as_usize(), Some(64));
+        assert_eq!(re.telemetry()[1].get("loss").as_f64(), Some(1.25));
     }
 
     #[test]

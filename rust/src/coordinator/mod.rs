@@ -22,7 +22,9 @@
 use crate::ann::backend::AnnBackend;
 use crate::ann::graph::{edge_weights, EdgeWeights};
 use crate::ann::{ClusterIndex, IndexParams};
-use crate::checkpoint::{params_fingerprint, CheckpointState, RunStore, SaveOpts};
+use crate::checkpoint::{
+    epoch_telemetry_json, params_fingerprint, CheckpointState, RunStore, SaveOpts,
+};
 use crate::data::shard::ShardManifest;
 use crate::data::Dataset;
 use crate::distributed::comm_model::{self, CommStats, EpochWork, HwProfile};
@@ -36,6 +38,8 @@ use crate::embed::sgd::{Exaggeration, LrSchedule};
 use crate::embed::{ApproxMode, ClusterBlock, NomadParams, StepBackend};
 use crate::ensure;
 use crate::linalg::{pca::pca_init, Matrix};
+use crate::obs::metrics;
+use crate::obs::trace::{self, COORDINATOR, NO_BLOCK};
 use crate::util::clock::{deadline_in, Stopwatch};
 use crate::util::error::{Context, Error, Result};
 use crate::util::rng::Rng;
@@ -395,6 +399,23 @@ impl NomadCoordinator {
                         faults,
                         recoveries,
                     };
+                    // mirror the run totals onto the obs registry, so
+                    // `/metrics` and BENCH_distributed.json report from the
+                    // same accounting (DESIGN.md §15)
+                    metrics::counter("nomad_epochs_total", "Training epochs completed.", &[])
+                        .add(comm.epochs as u64);
+                    metrics::counter(
+                        "nomad_wire_bytes_total",
+                        "Wire bytes moved across all device links, both directions.",
+                        &[],
+                    )
+                    .add(comm.wire_bytes_total);
+                    metrics::counter(
+                        "nomad_allgather_bytes_total",
+                        "Modeled means-table all-gather bytes.",
+                        &[],
+                    )
+                    .add(comm.allgather_bytes_total);
                     return Ok(NomadRun {
                         positions: out.positions,
                         loss_history: out.loss_history,
@@ -447,6 +468,14 @@ impl NomadCoordinator {
                 );
             }
             faults.push(FaultEvent { kind, device, restart_epoch, detail: err.to_string() });
+            metrics::counter(
+                "nomad_faults_total",
+                "Classified device-link faults.",
+                &[("kind", kind.name())],
+            )
+            .inc();
+            metrics::counter("nomad_recoveries_total", "Checkpoint-rollback recoveries.", &[])
+                .inc();
             if let Some((store, _)) = sink.as_mut() {
                 store.record_fault(kind.name(), device, restart_epoch, &err.to_string())?;
             }
@@ -572,7 +601,9 @@ impl NomadCoordinator {
                 Placement::InProcess => None,
             },
         };
+        let start_epoch = rollback.as_ref().map_or(0, |st| st.epochs_done);
         if let Some(table) = ingest {
+            let _sp = trace::span(COORDINATOR, start_epoch as u64, NO_BLOCK, "ingest");
             for link in links.iter_mut() {
                 let d = link.device;
                 link.send_cmd(DeviceCmd::Ingest { positions: Arc::clone(&table) })
@@ -591,7 +622,6 @@ impl NomadCoordinator {
                 }
             }
         }
-        let start_epoch = rollback.as_ref().map_or(0, |st| st.epochs_done);
 
         // initial means table: restored verbatim on rollback/resume (it is
         // the all-gathered table epoch `epochs_done` consumed in the
@@ -623,15 +653,18 @@ impl NomadCoordinator {
         for epoch in start_epoch..p.epochs {
             let lr = lr_sched.at(epoch) as f32;
             let table = Arc::new(means_table.clone());
-            for link in links.iter_mut() {
-                let d = link.device;
-                link.send_cmd(DeviceCmd::Epoch {
-                    epoch,
-                    lr,
-                    exaggeration: exag.factor_at(epoch),
-                    means: Arc::clone(&table),
-                })
-                .map_err(dev_fault(d))?;
+            {
+                let _sp = trace::span(COORDINATOR, epoch as u64, NO_BLOCK, "broadcast");
+                for link in links.iter_mut() {
+                    let d = link.device;
+                    link.send_cmd(DeviceCmd::Epoch {
+                        epoch,
+                        lr,
+                        exaggeration: exag.factor_at(epoch),
+                        means: Arc::clone(&table),
+                    })
+                    .map_err(dev_fault(d))?;
+                }
             }
             // every device computes concurrently; replies are drained in
             // link order under one shared deadline and folded in device
@@ -640,26 +673,30 @@ impl NomadCoordinator {
             let by = deadline_in(deadline);
             let mut done: Vec<(usize, Vec<MeanEntry>, f64, f64, f64, f64)> =
                 Vec::with_capacity(links.len());
-            for link in links.iter_mut() {
-                let d = link.device;
-                match recv_by(link, by).map_err(dev_fault(d))? {
-                    DeviceReply::EpochDone {
-                        device,
-                        means,
-                        loss_sum: ls,
-                        loss_weight: lw,
-                        step_secs,
-                        flops,
-                    } => {
-                        done.push((device, means, ls, lw, step_secs, flops));
-                    }
-                    other => {
-                        return Err(dev_fault(d)(Error::msg(format!(
-                            "expected EpochDone, got {other:?}"
-                        ))))
+            {
+                let _sp = trace::span(COORDINATOR, epoch as u64, NO_BLOCK, "comm_wait");
+                for link in links.iter_mut() {
+                    let d = link.device;
+                    match recv_by(link, by).map_err(dev_fault(d))? {
+                        DeviceReply::EpochDone {
+                            device,
+                            means,
+                            loss_sum: ls,
+                            loss_weight: lw,
+                            step_secs,
+                            flops,
+                        } => {
+                            done.push((device, means, ls, lw, step_secs, flops));
+                        }
+                        other => {
+                            return Err(dev_fault(d)(Error::msg(format!(
+                                "expected EpochDone, got {other:?}"
+                            ))))
+                        }
                     }
                 }
             }
+            let _fold_span = trace::span(COORDINATOR, epoch as u64, NO_BLOCK, "fold");
             done.sort_by_key(|d| d.0);
             let mut loss_sum = 0.0;
             let mut loss_w = 0.0;
@@ -696,9 +733,11 @@ impl NomadCoordinator {
             last_work = work;
             modeled_total += comm_model::epoch_time(&self.hw, &work);
             loss_history.push(epoch_mean_loss(loss_sum, loss_w));
+            drop(_fold_span);
 
             if let Some(every) = self.run.snapshot_every {
                 if (epoch + 1) % every == 0 && epoch + 1 < p.epochs {
+                    let _sp = trace::span(COORDINATOR, epoch as u64, NO_BLOCK, "snapshot");
                     let positions = collect_positions(links, n, deadline)
                         .map_err(|(device, err)| SessionErr::Fault { device, err })?;
                     snapshots.push(Snapshot {
@@ -714,6 +753,7 @@ impl NomadCoordinator {
             // leader state epoch `epoch + 1` starts from
             if let Some((store, cfg)) = sink.as_mut() {
                 if cfg.every > 0 && (epoch + 1) % cfg.every == 0 {
+                    let _sp = trace::span(COORDINATOR, epoch as u64, NO_BLOCK, "checkpoint");
                     let positions = collect_positions(links, n, deadline)
                         .map_err(|(device, err)| SessionErr::Fault { device, err })?;
                     let st = CheckpointState {
@@ -748,8 +788,25 @@ impl NomadCoordinator {
             // measured wire traffic this epoch, all links, both directions
             // (snapshot/checkpoint exports land in the epoch they follow)
             let wire_now: u64 = links.iter().map(|l| l.wire_bytes()).sum();
-            wire_epoch_bytes.push(wire_now - wire_before);
+            let wire_delta = wire_now - wire_before;
+            wire_epoch_bytes.push(wire_delta);
             wire_before = wire_now;
+
+            // buffer a per-epoch telemetry entry for run.json; pure output
+            // — the values above were already computed, nothing reads back
+            if let Some((store, _)) = sink.as_mut() {
+                store.record_epoch_telemetry(epoch_telemetry_json(
+                    epoch,
+                    *loss_history.last().unwrap(),
+                    lr as f64,
+                    wire_delta,
+                    max_dev_secs,
+                    modeled_total,
+                    t_train.secs(),
+                ));
+            }
+            // epoch barrier: spill this thread's span buffer to the sink
+            trace::flush_thread();
 
             if self.run.verbose && (epoch % 25 == 0 || epoch + 1 == p.epochs) {
                 eprintln!(

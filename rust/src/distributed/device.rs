@@ -30,6 +30,8 @@ use super::proto::WireMsg;
 use super::transport::{channel_pair, Transport};
 use super::MeanEntry;
 use crate::embed::{ClusterBlock, StepBackend, StepInputs};
+use crate::obs::trace::{self, NO_BLOCK};
+use crate::util::clock::{self, Stopwatch};
 use crate::util::error::Result;
 use crate::util::parallel::{num_threads, par_map_mut};
 use crate::util::rng::Rng;
@@ -117,7 +119,7 @@ impl DeviceLink {
     /// deadline, not a fresh per-device allowance.  Restores the link's
     /// steady-state timeout afterwards.
     pub fn recv_reply_by(&mut self, by: Instant) -> Result<DeviceReply> {
-        let remaining = by.saturating_duration_since(Instant::now());
+        let remaining = clock::remaining_until(by);
         if remaining.is_zero() {
             crate::bail!("device {}: epoch deadline expired (recv timed out)", self.device);
         }
@@ -243,14 +245,17 @@ pub fn run_device_loop(
             DeviceCmd::Epoch { epoch, lr, exaggeration, means } => {
                 let budget = intra_device_budget(num_threads(), n_active_devices);
                 let eroot = rng_root.fork(epoch as u64);
-                let t0 = Instant::now();
+                let t0 = Stopwatch::start();
 
                 // (weighted loss, weight, flops) per block, in order
+                let _step_span = trace::span(device as i64, epoch as u64, NO_BLOCK, "step");
                 let results: Vec<(f64, f64, f64)> = match backend.as_sync() {
                     Some(shared) if budget > 1 && blocks.len() > 1 => {
                         let block_threads = budget.min(blocks.len());
                         let step_threads = (budget / block_threads).max(1);
                         par_map_mut(blocks, block_threads, |bi, b| {
+                            let _sp =
+                                trace::span(device as i64, epoch as u64, bi as i64, "block_step");
                             let mut brng = eroot.fork(bi as u64);
                             step_block(
                                 shared,
@@ -267,11 +272,14 @@ pub fn run_device_loop(
                         .iter_mut()
                         .enumerate()
                         .map(|(bi, b)| {
+                            let _sp =
+                                trace::span(device as i64, epoch as u64, bi as i64, "block_step");
                             let mut brng = eroot.fork(bi as u64);
                             step_block(backend, b, lr, exaggeration, &means, &mut brng, budget)
                         })
                         .collect(),
                 };
+                drop(_step_span);
 
                 let mut loss_sum = 0.0f64;
                 let mut loss_weight = 0.0f64;
@@ -281,7 +289,7 @@ pub fn run_device_loop(
                     loss_weight += *lw;
                     flops += *fl;
                 }
-                let step_secs = t0.elapsed().as_secs_f64();
+                let step_secs = t0.secs();
                 let fresh: Vec<MeanEntry> = blocks
                     .iter()
                     .map(|b| MeanEntry {
@@ -298,6 +306,9 @@ pub fn run_device_loop(
                     step_secs,
                     flops,
                 }))?;
+                // EpochDone is this device's epoch barrier — spill the
+                // thread-local span buffer to the shared sink here
+                trace::flush_thread();
             }
         }
     }

@@ -149,6 +149,23 @@ fn msg_type(msg: &WireMsg) -> u16 {
     }
 }
 
+/// Stable lowercase name of a message's frame type — the `type` label on
+/// the transport's per-message obs counters (DESIGN.md §15).
+pub fn msg_kind(msg: &WireMsg) -> &'static str {
+    match msg {
+        WireMsg::Hello { .. } => "hello",
+        WireMsg::Assign(_) => "assign",
+        WireMsg::Assigned { .. } => "assigned",
+        WireMsg::Cmd(DeviceCmd::Epoch { .. }) => "epoch",
+        WireMsg::Cmd(DeviceCmd::Export) => "export",
+        WireMsg::Cmd(DeviceCmd::Ingest { .. }) => "ingest",
+        WireMsg::Cmd(DeviceCmd::Stop) => "stop",
+        WireMsg::Reply(DeviceReply::EpochDone { .. }) => "epoch_done",
+        WireMsg::Reply(DeviceReply::Exported { .. }) => "exported",
+        WireMsg::Reply(DeviceReply::Ingested { .. }) => "ingested",
+    }
+}
+
 /// Payload size in bytes, computed arithmetically (no serialization).
 /// Must agree exactly with [`encode`]'s output — the channel transport
 /// uses it to account would-be wire bytes without paying for encoding.

@@ -11,17 +11,24 @@
 //! * [`FramedTransport`] — a real byte stream (TCP or Unix socket) framed
 //!   by [`proto`]; counts the bytes actually written/read.
 //!
+//! Both transports also publish per-message-type frame counts, bytes,
+//! and call latency to the obs registry (DESIGN.md §15), so `/metrics`
+//! and the distributed bench report from the same accounting the
+//! `CommStats` totals are built on.
+//!
 //! [`Endpoint`] parses the CLI's worker address syntax (`host:port`, or
 //! `unix:/path/to.sock`) and [`connect`] dials it with retry, so a
 //! coordinator can race worker startup in CI without a sleep-loop script.
 
 use super::fault::{FaultInjector, FaultPlan};
 use super::proto::{self, Role, WireMsg};
+use crate::obs::metrics;
+use crate::util::clock::{self, Stopwatch};
 use crate::util::error::{Context, Error, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// A bidirectional, ordered, reliable message pipe.
 pub trait Transport: Send {
@@ -84,6 +91,36 @@ impl WireStream for std::os::unix::net::UnixStream {
     }
 }
 
+/// Record one completed frame move on the obs registry (DESIGN.md §15):
+/// count, bytes, and time in the transport call, labeled by direction and
+/// message type.  Telemetry only — values flow out of the transport, never
+/// back into it.
+fn account_frame(dir: &'static str, kind: &'static str, bytes: u64, secs: f64) {
+    if !metrics::enabled() {
+        return;
+    }
+    let labels = &[("dir", dir), ("type", kind)];
+    metrics::counter(
+        "nomad_frames_total",
+        "Wire frames moved, by direction and message type.",
+        labels,
+    )
+    .inc();
+    metrics::counter(
+        "nomad_frame_bytes_total",
+        "Wire frame bytes moved (real or would-be), by direction and message type.",
+        labels,
+    )
+    .add(bytes);
+    metrics::histogram(
+        "nomad_frame_seconds",
+        "Time spent inside transport send/recv calls.",
+        &metrics::DURATION_BUCKETS_S,
+        labels,
+    )
+    .observe(secs);
+}
+
 // ------------------------------------------------------------- channels
 
 /// One end of an in-process transport (see [`channel_pair`]).
@@ -107,11 +144,17 @@ pub fn channel_pair() -> (ChannelTransport, ChannelTransport) {
 
 impl Transport for ChannelTransport {
     fn send(&mut self, msg: WireMsg) -> Result<()> {
-        self.sent += proto::frame_len(&msg) as u64;
-        self.tx.send(msg).ok().context("channel transport: peer hung up")
+        let t0 = Stopwatch::start();
+        let kind = proto::msg_kind(&msg);
+        let bytes = proto::frame_len(&msg) as u64;
+        self.sent += bytes;
+        self.tx.send(msg).ok().context("channel transport: peer hung up")?;
+        account_frame("send", kind, bytes, t0.secs());
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<WireMsg> {
+        let t0 = Stopwatch::start();
         let msg = match self.read_timeout {
             None => self.rx.recv().ok().context("channel transport: peer hung up")?,
             Some(d) => match self.rx.recv_timeout(d) {
@@ -125,7 +168,9 @@ impl Transport for ChannelTransport {
                 }
             },
         };
-        self.received += proto::frame_len(&msg) as u64;
+        let bytes = proto::frame_len(&msg) as u64;
+        self.received += bytes;
+        account_frame("recv", proto::msg_kind(&msg), bytes, t0.secs());
         Ok(msg)
     }
 
@@ -163,17 +208,22 @@ impl<S: WireStream> FramedTransport<S> {
 
 impl<S: WireStream> Transport for FramedTransport<S> {
     fn send(&mut self, msg: WireMsg) -> Result<()> {
+        let t0 = Stopwatch::start();
+        let kind = proto::msg_kind(&msg);
         let n = proto::write_frame(&mut self.stream, &msg)?;
         self.stream
             .flush()
             .map_err(|e| Error::msg(format!("flush frame: {e}")))?;
         self.sent += n as u64;
+        account_frame("send", kind, n as u64, t0.secs());
         Ok(())
     }
 
     fn recv(&mut self) -> Result<WireMsg> {
+        let t0 = Stopwatch::start();
         let (msg, n) = proto::read_frame(&mut self.stream)?;
         self.received += n as u64;
+        account_frame("recv", proto::msg_kind(&msg), n as u64, t0.secs());
         Ok(msg)
     }
 
@@ -262,7 +312,8 @@ pub fn connect_with(
     patience: Duration,
     plan: Option<&FaultPlan>,
 ) -> Result<Box<dyn Transport>> {
-    let t0 = Instant::now();
+    let t0 = Stopwatch::start();
+    let by = clock::deadline_in(Some(patience)).expect("some timeout gives some deadline");
     let mut backoff = BACKOFF_FIRST;
     let mut attempts: u32 = 0;
     loop {
@@ -281,15 +332,15 @@ pub fn connect_with(
         };
         match attempt {
             Ok(t) => return Ok(t),
-            Err(_) if t0.elapsed() < patience => {
-                std::thread::sleep(backoff.min(patience.saturating_sub(t0.elapsed())));
+            Err(_) if !clock::expired(by) => {
+                std::thread::sleep(backoff.min(clock::remaining_until(by)));
                 backoff = (backoff * 2).min(BACKOFF_CAP);
             }
             Err(e) => {
                 return Err(e).with_context(|| {
                     format!(
                         "connect to worker at {ep} after {attempts} attempt(s) over {:.1}s",
-                        t0.elapsed().as_secs_f64()
+                        t0.secs()
                     )
                 });
             }
@@ -324,6 +375,7 @@ mod tests {
     use crate::distributed::device::DeviceCmd;
     use crate::distributed::MeanEntry;
     use std::sync::Arc;
+    use std::time::Instant;
 
     fn epoch_msg() -> WireMsg {
         WireMsg::Cmd(DeviceCmd::Epoch {

@@ -20,6 +20,7 @@ use crate::data::shard::ShardSet;
 use crate::embed::native::NativeStepBackend;
 use crate::embed::ClusterBlock;
 use crate::ensure;
+use crate::obs::metrics;
 use crate::util::error::{Context, Result};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -306,14 +307,31 @@ pub fn serve_listener(
                 let scfg = cfg.clone();
                 active.fetch_add(1, Ordering::SeqCst);
                 threads.push(std::thread::spawn(move || {
-                    match serve_session(&mut *transport, &shards, &scfg) {
-                        Ok(()) => got_stop.store(true, Ordering::SeqCst),
+                    let active_gauge = metrics::gauge(
+                        "nomad_worker_active_sessions",
+                        "Coordinator sessions currently being served.",
+                        &[],
+                    );
+                    active_gauge.add(1.0);
+                    let outcome = match serve_session(&mut *transport, &shards, &scfg) {
+                        Ok(()) => {
+                            got_stop.store(true, Ordering::SeqCst);
+                            "stop"
+                        }
                         Err(e) => {
                             if scfg.verbose {
                                 eprintln!("worker: session ended: {e}");
                             }
+                            "error"
                         }
-                    }
+                    };
+                    metrics::counter(
+                        "nomad_worker_sessions_total",
+                        "Coordinator sessions served, by how they ended.",
+                        &[("outcome", outcome)],
+                    )
+                    .inc();
+                    active_gauge.add(-1.0);
                     active.fetch_sub(1, Ordering::SeqCst);
                 }));
                 continue; // another coordinator may already be dialing

@@ -25,6 +25,7 @@ pub mod data;
 pub mod ann;
 pub mod baselines;
 pub mod metrics;
+pub mod obs;
 pub mod viz;
 pub mod checkpoint;
 pub mod coordinator;

@@ -54,6 +54,7 @@ use nomad::distributed::worker::{self, WorkerCfg};
 use nomad::embed::NomadParams;
 use nomad::harness::{evaluate, EvalCfg};
 use nomad::linalg::Matrix;
+use nomad::obs;
 use nomad::serve::{self, MapArtifact, Provenance, ServeConfig, TileConfig};
 use nomad::util::error::{Context, Result};
 use nomad::util::npy::NpyF32;
@@ -174,6 +175,17 @@ fn checkpoint_cfg(args: &Args, ds: &Dataset) -> CheckpointCfg {
 }
 
 fn cmd_embed(args: &Args) -> Result<()> {
+    // telemetry: the metrics registry is on by default (--no-telemetry
+    // turns it off); span tracing is on only when a trace file is wanted.
+    // Either way fitted positions are bitwise identical — telemetry flows
+    // out of training, never back in (tests/obs_determinism.rs).
+    if args.bool("no-telemetry") {
+        obs::metrics::set_enabled(false);
+    }
+    let trace_out = args.get("trace-out").map(|p| Path::new(p).to_path_buf());
+    if trace_out.is_some() {
+        obs::trace::set_enabled(true);
+    }
     let ds = load_dataset(args)?;
     println!("dataset: {} ({} x {})", ds.name, ds.n(), ds.dim());
     let params = NomadParams {
@@ -289,6 +301,16 @@ fn cmd_embed(args: &Args) -> Result<()> {
             }
         }
     };
+    if let Some(path) = &trace_out {
+        obs::trace::set_enabled(false);
+        let spans = obs::trace::take_all();
+        obs::export::write_chrome_trace(path, &spans)?;
+        println!(
+            "trace: {} ({} spans — load in chrome://tracing or Perfetto)",
+            path.display(),
+            spans.len()
+        );
+    }
     write_outputs(args, &ds, &coord, &run)
 }
 
@@ -381,9 +403,15 @@ fn cmd_shard(args: &Args) -> Result<()> {
 /// process.  Binds, waits for the coordinator, trains its assigned
 /// clusters, exits when the coordinator sends Stop (or hangs up).
 /// `--handshake-timeout-ms` bounds half-open connections,
-/// `--session-timeout-ms` bounds an idle session (0 = wait forever), and
-/// `--max-sessions N` exits after serving N coordinator sessions.
+/// `--session-timeout-ms` bounds an idle session (0 = wait forever),
+/// `--max-sessions N` exits after serving N coordinator sessions,
+/// `--metrics-listen <addr>` exposes the process's Prometheus metrics, and
+/// `--no-telemetry` turns the registry off (the CI zero-perturbation gate
+/// A/Bs this across a real multiprocess run).
 fn cmd_worker(args: &Args) -> Result<()> {
+    if args.bool("no-telemetry") {
+        obs::metrics::set_enabled(false);
+    }
     let listen = args
         .get("listen")
         .context("--listen <host:port | unix:/path.sock> required")?;
@@ -401,6 +429,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
         max_sessions: args.try_parse::<usize>("max-sessions")?,
         faults: Vec::new(),
     };
+    if let Some(addr) = args.get("metrics-listen") {
+        let bound = obs::export::spawn_metrics_listener(addr)?;
+        eprintln!("worker: metrics on http://{bound}/");
+    }
     worker::run_worker(&ep, Path::new(dir), &cfg)
 }
 
@@ -506,7 +538,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             handle.addr,
             poll
         );
-        println!("  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats");
+        println!(
+            "  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats  |  \
+             GET /metrics"
+        );
         handle.wait();
         return Ok(());
     }
@@ -518,7 +553,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = art.positions.rows;
     let handle = serve::http::start(art, &cfg)?;
     println!("serving {} points ({}) on http://{}", n, dir, handle.addr);
-    println!("  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats");
+    println!(
+        "  GET /tiles/{{z}}/{{x}}/{{y}}.png  |  GET /query?x=&y=&k=  |  GET /stats  |  \
+         GET /metrics"
+    );
     handle.wait();
     Ok(())
 }

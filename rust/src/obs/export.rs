@@ -1,0 +1,269 @@
+//! Exporters: Prometheus text exposition, JSON snapshots, Chrome
+//! trace-event JSON, and a minimal scrape listener for worker processes.
+
+use super::metrics::{self, Snapshot, Value};
+use super::trace::{SpanRecord, COORDINATOR, NO_BLOCK};
+use crate::util::error::{Context, Result};
+use crate::util::json::{self, Json};
+use std::io::{Read as _, Write as _};
+use std::path::Path;
+
+/// Render a snapshot in the Prometheus text exposition format (0.0.4):
+/// `# HELP` / `# TYPE` per family, cumulative `_bucket{le=...}` series plus
+/// `_sum` / `_count` for histograms.  Deterministic: families and series
+/// come pre-sorted from the snapshot.
+pub fn prometheus_text(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    for (name, fam) in &snap.families {
+        out.push_str(&format!("# HELP {name} {}\n", fam.help.replace('\n', " ")));
+        out.push_str(&format!("# TYPE {name} {}\n", fam.kind.name()));
+        for (labels, v) in &fam.series {
+            match v {
+                Value::Counter(c) => {
+                    out.push_str(&series_line(name, labels, &c.to_string()));
+                }
+                Value::Gauge(g) => {
+                    out.push_str(&series_line(name, labels, &fmt_f64(*g)));
+                }
+                Value::Histogram { bounds, buckets, sum, count, .. } => {
+                    let mut cum = 0u64;
+                    for (i, b) in bounds.iter().enumerate() {
+                        cum += buckets[i];
+                        let le = with_le(labels, &fmt_f64(*b));
+                        out.push_str(&series_line(&format!("{name}_bucket"), &le, &cum.to_string()));
+                    }
+                    let le = with_le(labels, "+Inf");
+                    out.push_str(&series_line(&format!("{name}_bucket"), &le, &count.to_string()));
+                    out.push_str(&series_line(&format!("{name}_sum"), labels, &fmt_f64(*sum)));
+                    out.push_str(&series_line(&format!("{name}_count"), labels, &count.to_string()));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn series_line(name: &str, labels: &str, value: &str) -> String {
+    if labels.is_empty() {
+        format!("{name} {value}\n")
+    } else {
+        format!("{name}{{{labels}}} {value}\n")
+    }
+}
+
+fn with_le(labels: &str, le: &str) -> String {
+    if labels.is_empty() {
+        format!("le=\"{le}\"")
+    } else {
+        format!("{labels},le=\"{le}\"")
+    }
+}
+
+fn fmt_f64(v: f64) -> String {
+    // Rust's shortest round-trip float formatting is valid Prometheus
+    // number syntax (integral floats render bare: 3.0 -> "3")
+    format!("{v}")
+}
+
+/// A snapshot as a JSON value (the machine-readable sibling of
+/// [`prometheus_text`], used by the per-epoch `run.json` telemetry and the
+/// bench reports).
+pub fn json_snapshot(snap: &Snapshot) -> Json {
+    let mut families = Vec::new();
+    for (name, fam) in &snap.families {
+        let mut series = Vec::new();
+        for (labels, v) in &fam.series {
+            let val = match v {
+                Value::Counter(c) => json::num(*c as f64),
+                Value::Gauge(g) => json::num(*g),
+                Value::Histogram { bounds, buckets, sum, count, max } => json::obj(vec![
+                    ("bounds", json::arr(bounds.iter().map(|b| json::num(*b)).collect())),
+                    ("buckets", json::arr(buckets.iter().map(|c| json::num(*c as f64)).collect())),
+                    ("sum", json::num(*sum)),
+                    ("count", json::num(*count as f64)),
+                    ("max", json::num(*max)),
+                ]),
+            };
+            series.push(json::obj(vec![("labels", json::s(labels)), ("value", val)]));
+        }
+        families.push(json::obj(vec![
+            ("name", json::s(name)),
+            ("kind", json::s(fam.kind.name())),
+            ("help", json::s(&fam.help)),
+            ("series", json::arr(series)),
+        ]));
+    }
+    json::obj(vec![("families", json::arr(families))])
+}
+
+fn pid_of(device: i64) -> f64 {
+    // coordinator (-1) renders as pid 0, device d as pid d+1
+    (device + 1) as f64
+}
+
+/// Render spans as Chrome trace-event JSON (`chrome://tracing`, Perfetto):
+/// one complete (`ph:"X"`) event per span, pid = device (coordinator is
+/// pid 0), plus `process_name` metadata events so the flamegraph rows are
+/// labeled.
+pub fn chrome_trace(spans: &[SpanRecord]) -> Json {
+    let mut events = Vec::new();
+    let mut devices: Vec<i64> = spans.iter().map(|s| s.device).collect();
+    devices.sort_unstable();
+    devices.dedup();
+    for d in devices {
+        let label =
+            if d == COORDINATOR { "coordinator".to_string() } else { format!("device {d}") };
+        events.push(json::obj(vec![
+            ("name", json::s("process_name")),
+            ("ph", json::s("M")),
+            ("pid", json::num(pid_of(d))),
+            ("tid", json::num(0.0)),
+            ("args", json::obj(vec![("name", json::s(&label))])),
+        ]));
+    }
+    for s in spans {
+        let mut args = vec![("epoch", json::num(s.epoch as f64))];
+        if s.block != NO_BLOCK {
+            args.push(("block", json::num(s.block as f64)));
+        }
+        events.push(json::obj(vec![
+            ("name", json::s(s.phase)),
+            ("ph", json::s("X")),
+            ("pid", json::num(pid_of(s.device))),
+            ("tid", json::num(0.0)),
+            ("ts", json::num(s.start_us as f64)),
+            ("dur", json::num(s.dur_us as f64)),
+            ("args", json::obj(args)),
+        ]));
+    }
+    json::obj(vec![("traceEvents", json::arr(events))])
+}
+
+/// Write spans as a Chrome trace file (`nomad embed --trace-out`).
+pub fn write_chrome_trace(path: &Path, spans: &[SpanRecord]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace(spans).pretty())
+        .with_context(|| format!("writing trace to {}", path.display()))
+}
+
+/// Spawn a minimal HTTP listener that answers every request with the
+/// global registry's Prometheus exposition — the `nomad worker
+/// --metrics-listen <addr>` surface.  Detached: runs for the life of the
+/// process.  Returns the bound address (port 0 resolves).
+pub fn spawn_metrics_listener(addr: &str) -> Result<std::net::SocketAddr> {
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding metrics listener on {addr}"))?;
+    let bound = listener.local_addr()?;
+    let _detached = std::thread::Builder::new()
+        .name("obs-metrics".to_string())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(mut stream) = conn else { continue };
+                // drain the request line politely, then answer; a scrape
+                // client that pipelines gets Connection: close anyway
+                let _ = stream.set_read_timeout(Some(std::time::Duration::from_secs(2)));
+                let mut buf = [0u8; 1024];
+                let _ = stream.read(&mut buf);
+                let body = prometheus_text(&metrics::snapshot());
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                     charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+                let _ = stream.write_all(resp.as_bytes());
+            }
+        })
+        .context("spawning metrics listener thread")?;
+    Ok(bound)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+
+    #[test]
+    fn prometheus_golden() {
+        let r = Registry::new();
+        r.counter("nomad_test_events_total", "Events seen.", &[("kind", "a")]).add(3);
+        r.gauge("nomad_test_depth", "Queue depth.", &[]).set(2.5);
+        let h = r.histogram("nomad_test_wait_seconds", "Wait time.", &[0.5, 2.0], &[]);
+        // dyadic values: the CAS-accumulated sum is exact, so the golden
+        // text is stable
+        h.observe(0.25);
+        h.observe(1.0);
+        h.observe(2.0);
+        h.observe(5.0);
+        let text = prometheus_text(&r.snapshot());
+        let expect = "\
+# HELP nomad_test_depth Queue depth.
+# TYPE nomad_test_depth gauge
+nomad_test_depth 2.5
+# HELP nomad_test_events_total Events seen.
+# TYPE nomad_test_events_total counter
+nomad_test_events_total{kind=\"a\"} 3
+# HELP nomad_test_wait_seconds Wait time.
+# TYPE nomad_test_wait_seconds histogram
+nomad_test_wait_seconds_bucket{le=\"0.5\"} 1
+nomad_test_wait_seconds_bucket{le=\"2\"} 3
+nomad_test_wait_seconds_bucket{le=\"+Inf\"} 4
+nomad_test_wait_seconds_sum 8.25
+nomad_test_wait_seconds_count 4
+";
+        assert_eq!(text, expect);
+    }
+
+    #[test]
+    fn chrome_trace_golden() {
+        let spans = vec![
+            SpanRecord {
+                device: COORDINATOR,
+                epoch: 0,
+                block: NO_BLOCK,
+                phase: "comm_wait",
+                start_us: 10,
+                dur_us: 5,
+            },
+            SpanRecord {
+                device: 0,
+                epoch: 0,
+                block: 2,
+                phase: "gradient",
+                start_us: 11,
+                dur_us: 3,
+            },
+        ];
+        let j = chrome_trace(&spans);
+        let events = j.get("traceEvents").as_arr().expect("traceEvents");
+        assert_eq!(events.len(), 4); // 2 metadata + 2 spans
+        assert_eq!(events[0].get("ph").as_str(), Some("M"));
+        let coord = &events[2];
+        assert_eq!(coord.get("ph").as_str(), Some("X"));
+        assert_eq!(coord.get("pid").as_f64(), Some(0.0));
+        assert_eq!(coord.get("name").as_str(), Some("comm_wait"));
+        assert_eq!(coord.get("ts").as_f64(), Some(10.0));
+        assert_eq!(coord.get("dur").as_f64(), Some(5.0));
+        let dev = &events[3];
+        assert_eq!(dev.get("pid").as_f64(), Some(1.0));
+        assert_eq!(dev.get("args").get("block").as_f64(), Some(2.0));
+        // round-trips through the in-tree parser
+        let reparsed = Json::parse(&j.pretty()).expect("trace json parses");
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn json_snapshot_shape() {
+        let r = Registry::new();
+        r.counter("c_total", "c", &[]).inc();
+        let j = json_snapshot(&r.snapshot());
+        let fams = j.get("families").as_arr().expect("families");
+        assert_eq!(fams[0].get("name").as_str(), Some("c_total"));
+        assert_eq!(fams[0].get("kind").as_str(), Some("counter"));
+    }
+}

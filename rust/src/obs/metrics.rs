@@ -1,0 +1,568 @@
+//! Process-global metrics registry: counters, gauges, and fixed-bucket
+//! histograms with label sets.
+//!
+//! Hot-path recording is handle-based — a handle holds an `Arc` to its
+//! atomics, so `inc`/`observe` touch no locks and no registry state.  When
+//! recording is disabled ([`set_enabled`]) every record call reduces to one
+//! relaxed load and a branch.  Registration (cold path) is lock-striped by
+//! metric-name hash so concurrent registration from device threads does not
+//! serialize on a single registry mutex.  Snapshots collate everything into
+//! `BTreeMap`s keyed by name and rendered label set, so export order is
+//! deterministic regardless of registration order or stripe layout.
+//!
+//! Metric naming convention (DESIGN.md §15): `nomad_<subsystem>_<what>`
+//! with a unit suffix (`_total` for counters, `_seconds` / `_bytes` for
+//! histograms and gauges), labels for low-cardinality dimensions only
+//! (message type, route, fault kind — never point counts or epochs).
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Global recording gate.  On by default: recording is cheap (relaxed
+/// atomics) and structurally unable to perturb results.  The determinism
+/// CI gate runs with this off to prove the "off" arm exists and matches.
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Default duration buckets (seconds): ~0.5 ms to 10 s, roughly
+/// logarithmic — shared by request latency, frame waits, and checkpoint
+/// publishes so exposition stays comparable across subsystems.
+pub const DURATION_BUCKETS_S: [f64; 14] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Monotone event count.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// A counter not registered anywhere — for per-instance stats (e.g.
+    /// one cache's hit count) that a scrape surface mirrors explicitly.
+    pub fn detached() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn value(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value (stored as `f64` bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn detached() -> Gauge {
+        Gauge(Arc::new(AtomicU64::new(0)))
+    }
+
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.0.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn add(&self, delta: f64) {
+        if enabled() {
+            fetch_add_f64(&self.0, delta);
+        }
+    }
+
+    pub fn value(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+struct HistCore {
+    /// Upper bounds (inclusive, `le` semantics), strictly increasing.
+    bounds: Vec<f64>,
+    /// Per-bucket (non-cumulative) counts; `bounds.len() + 1` entries, the
+    /// last being the overflow (`+Inf`) bucket.
+    buckets: Vec<AtomicU64>,
+    sum_bits: AtomicU64,
+    count: AtomicU64,
+    max_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram.  Also tracks the exact running max (the
+/// `/stats` surface reports `max_ms`, which buckets alone cannot).
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    pub fn detached(bounds: &[f64]) -> Histogram {
+        let mut b: Vec<f64> = bounds.to_vec();
+        b.retain(|x| x.is_finite());
+        b.sort_by(|a, x| a.total_cmp(x));
+        b.dedup();
+        let buckets = (0..=b.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram(Arc::new(HistCore {
+            bounds: b,
+            buckets,
+            sum_bits: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            max_bits: AtomicU64::new(0),
+        }))
+    }
+
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        let c = &*self.0;
+        // first bound >= v counts it (`le` semantics); NaN overflows
+        let i = if v.is_nan() {
+            c.bounds.len()
+        } else {
+            c.bounds.partition_point(|b| *b < v)
+        };
+        c.buckets[i].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        fetch_add_f64(&c.sum_bits, v);
+        fetch_max_f64(&c.max_bits, v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Largest observed value (0.0 before any observation).
+    pub fn max(&self) -> f64 {
+        f64::from_bits(self.0.max_bits.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-interpolated quantile estimate (`histogram_quantile` style):
+    /// linear within the winning bucket; the overflow bucket reports the
+    /// observed max.  `0.0` before any observation.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let c = &*self.0;
+        let total = c.count.load(Ordering::Relaxed);
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, b) in c.buckets.iter().enumerate() {
+            let n = b.load(Ordering::Relaxed);
+            if n == 0 {
+                cum += n;
+                continue;
+            }
+            if (cum + n) as f64 >= rank {
+                if i == c.bounds.len() {
+                    return self.max();
+                }
+                let lo = if i == 0 { 0.0 } else { c.bounds[i - 1] };
+                let hi = c.bounds[i];
+                let frac = ((rank - cum as f64) / n as f64).clamp(0.0, 1.0);
+                return lo + (hi - lo) * frac;
+            }
+            cum += n;
+        }
+        self.max()
+    }
+
+    fn snapshot_value(&self) -> Value {
+        let c = &*self.0;
+        Value::Histogram {
+            bounds: c.bounds.clone(),
+            buckets: c.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            sum: self.sum(),
+            count: self.count(),
+            max: self.max(),
+        }
+    }
+}
+
+fn fetch_add_f64(cell: &AtomicU64, delta: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn fetch_max_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        if v.is_nan() || v <= f64::from_bits(cur) {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Handle {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+struct Family {
+    help: &'static str,
+    kind: Kind,
+    bounds: Vec<f64>,
+    series: HashMap<String, Handle>,
+}
+
+/// A metrics registry.  [`global`] is the process-wide default; subsystems
+/// with per-instance stats (the serve layer spins up one server per test)
+/// can own a private `Registry` and merge its snapshot at scrape time.
+pub struct Registry {
+    stripes: Vec<Mutex<HashMap<&'static str, Family>>>,
+}
+
+const STRIPES: usize = 16;
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry { stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn stripe(&self, name: &str) -> &Mutex<HashMap<&'static str, Family>> {
+        &self.stripes[(fnv1a(name.as_bytes()) as usize) % STRIPES]
+    }
+
+    pub fn counter(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> Counter {
+        match self.register(name, help, Kind::Counter, &[], labels) {
+            Handle::Counter(c) => c,
+            // name already registered under a different kind: record into
+            // a detached handle rather than corrupt the family or panic
+            _ => Counter::detached(),
+        }
+    }
+
+    pub fn gauge(&self, name: &'static str, help: &'static str, labels: &[(&str, &str)]) -> Gauge {
+        match self.register(name, help, Kind::Gauge, &[], labels) {
+            Handle::Gauge(g) => g,
+            _ => Gauge::detached(),
+        }
+    }
+
+    pub fn histogram(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        match self.register(name, help, Kind::Histogram, bounds, labels) {
+            Handle::Histogram(h) => h,
+            _ => Histogram::detached(bounds),
+        }
+    }
+
+    fn register(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: Kind,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Handle {
+        let key = render_labels(labels);
+        let mut map = self.stripe(name).lock().unwrap();
+        let fam = map.entry(name).or_insert_with(|| Family {
+            help,
+            kind,
+            bounds: bounds.to_vec(),
+            series: HashMap::new(),
+        });
+        if fam.kind != kind {
+            return match kind {
+                Kind::Counter => Handle::Counter(Counter::detached()),
+                Kind::Gauge => Handle::Gauge(Gauge::detached()),
+                Kind::Histogram => Handle::Histogram(Histogram::detached(bounds)),
+            };
+        }
+        let family_bounds = fam.bounds.clone();
+        fam.series
+            .entry(key)
+            .or_insert_with(|| match kind {
+                Kind::Counter => Handle::Counter(Counter::detached()),
+                Kind::Gauge => Handle::Gauge(Gauge::detached()),
+                // all series of one family share the family's bounds,
+                // whatever the late registrant asked for
+                Kind::Histogram => Handle::Histogram(Histogram::detached(&family_bounds)),
+            })
+            .clone()
+    }
+
+    /// Deterministically ordered copy of every registered series.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut families = BTreeMap::new();
+        for stripe in &self.stripes {
+            let map = stripe.lock().unwrap();
+            for (name, fam) in map.iter() {
+                let mut series = BTreeMap::new();
+                for (labels, h) in &fam.series {
+                    let v = match h {
+                        Handle::Counter(c) => Value::Counter(c.value()),
+                        Handle::Gauge(g) => Value::Gauge(g.value()),
+                        Handle::Histogram(h) => h.snapshot_value(),
+                    };
+                    series.insert(labels.clone(), v);
+                }
+                families.insert(
+                    name.to_string(),
+                    FamilySnap { help: fam.help.to_string(), kind: fam.kind, series },
+                );
+            }
+        }
+        Snapshot { families }
+    }
+
+    /// Drop every registered family.  Existing handles keep recording into
+    /// their (now unreachable) atomics.  Test helper.
+    #[doc(hidden)]
+    pub fn reset(&self) {
+        for stripe in &self.stripes {
+            stripe.lock().unwrap().clear();
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Render a label set as Prometheus series-key text, sorted by label name
+/// so identical sets always collide: `kind="crash",phase="epoch"`.
+pub fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+    pairs.sort_by(|a, b| a.0.cmp(b.0));
+    let mut out = String::new();
+    for (i, (k, v)) in pairs.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        for ch in v.chars() {
+            match ch {
+                '\\' => out.push_str("\\\\"),
+                '"' => out.push_str("\\\""),
+                '\n' => out.push_str("\\n"),
+                c => out.push(c),
+            }
+        }
+        out.push('"');
+    }
+    out
+}
+
+/// One exported series value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Counter(u64),
+    Gauge(f64),
+    Histogram { bounds: Vec<f64>, buckets: Vec<u64>, sum: f64, count: u64, max: f64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct FamilySnap {
+    pub help: String,
+    pub kind: Kind,
+    /// Rendered label set -> value, lexicographically ordered.
+    pub series: BTreeMap<String, Value>,
+}
+
+/// A point-in-time, deterministically ordered view of a registry.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub families: BTreeMap<String, FamilySnap>,
+}
+
+impl Snapshot {
+    /// Merge `other` into `self` (other wins on series collisions) — how a
+    /// scrape surface combines the global registry with an instance one.
+    pub fn merge(mut self, other: Snapshot) -> Snapshot {
+        for (name, fam) in other.families {
+            match self.families.get_mut(&name) {
+                None => {
+                    self.families.insert(name, fam);
+                }
+                Some(mine) => mine.series.extend(fam.series),
+            }
+        }
+        self
+    }
+}
+
+fn global_registry() -> &'static Registry {
+    static G: OnceLock<Registry> = OnceLock::new();
+    G.get_or_init(Registry::new)
+}
+
+/// The process-wide registry (train, distributed, checkpoint metrics).
+pub fn global() -> &'static Registry {
+    global_registry()
+}
+
+pub fn counter(name: &'static str, help: &'static str, labels: &[(&str, &str)]) -> Counter {
+    global().counter(name, help, labels)
+}
+
+pub fn gauge(name: &'static str, help: &'static str, labels: &[(&str, &str)]) -> Gauge {
+    global().gauge(name, help, labels)
+}
+
+pub fn histogram(
+    name: &'static str,
+    help: &'static str,
+    bounds: &[f64],
+    labels: &[(&str, &str)],
+) -> Histogram {
+    global().histogram(name, help, bounds, labels)
+}
+
+/// Snapshot of the process-wide registry.
+pub fn snapshot() -> Snapshot {
+    global().snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_record() {
+        let r = Registry::new();
+        let c = r.counter("t_total", "help", &[("k", "a")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.value(), 5);
+        let g = r.gauge("t_gauge", "help", &[]);
+        g.set(2.5);
+        g.add(0.5);
+        assert_eq!(g.value(), 3.0);
+        // same (name, labels) -> same underlying series
+        let c2 = r.counter("t_total", "help", &[("k", "a")]);
+        c2.inc();
+        assert_eq!(c.value(), 6);
+    }
+
+    #[test]
+    fn histogram_buckets_boundaries_and_overflow() {
+        let h = Histogram::detached(&[1.0, 2.0, 4.0]);
+        // exactly-on-boundary lands in that bucket (le semantics)
+        for v in [0.5, 1.0, 1.5, 2.0, 4.0, 9.0, f64::NAN] {
+            h.observe(v);
+        }
+        let Value::Histogram { buckets, count, max, .. } = h.snapshot_value() else {
+            panic!("histogram snapshot")
+        };
+        assert_eq!(buckets, vec![2, 2, 1, 2]); // le1: .5,1; le2: 1.5,2; le4: 4; inf: 9,NaN
+        assert_eq!(count, 7);
+        assert_eq!(max, 9.0);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates() {
+        let h = Histogram::detached(&[1.0, 2.0]);
+        for _ in 0..50 {
+            h.observe(0.5);
+        }
+        for _ in 0..50 {
+            h.observe(1.5);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((0.0..=1.0).contains(&p50), "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!((1.0..=2.0).contains(&p99), "p99 {p99}");
+        h.observe(10.0); // overflow bucket
+        assert_eq!(h.quantile(1.0), 10.0);
+        assert_eq!(Histogram::detached(&[1.0]).quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn snapshot_order_is_deterministic() {
+        let r = Registry::new();
+        r.counter("z_total", "z", &[("b", "2")]).inc();
+        r.counter("a_total", "a", &[]).inc();
+        r.counter("z_total", "z", &[("b", "1")]).inc();
+        let names: Vec<String> = r.snapshot().families.keys().cloned().collect();
+        assert_eq!(names, vec!["a_total".to_string(), "z_total".to_string()]);
+        let z = &r.snapshot().families["z_total"];
+        let keys: Vec<String> = z.series.keys().cloned().collect();
+        assert_eq!(keys, vec!["b=\"1\"".to_string(), "b=\"2\"".to_string()]);
+    }
+
+    #[test]
+    fn label_rendering_sorts_and_escapes() {
+        assert_eq!(render_labels(&[("b", "x"), ("a", "q\"\\")]), "a=\"q\\\"\\\\\",b=\"x\"");
+        assert_eq!(render_labels(&[]), "");
+    }
+
+    #[test]
+    fn kind_clash_yields_detached_handle() {
+        let r = Registry::new();
+        let _c = r.counter("clash", "h", &[]);
+        let g = r.gauge("clash", "h", &[]);
+        g.set(7.0); // must not corrupt the counter family
+        let snap = r.snapshot();
+        assert!(matches!(snap.families["clash"].series[""], Value::Counter(0)));
+    }
+}

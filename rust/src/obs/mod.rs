@@ -1,0 +1,20 @@
+//! `obs` — zero-perturbation telemetry (DESIGN.md §15).
+//!
+//! Three pieces: a process-global registry of counters / gauges /
+//! fixed-bucket histograms ([`metrics`]), lightweight span tracing keyed on
+//! (device, epoch, block, phase) recorded off the sanctioned
+//! [`crate::util::clock::Stopwatch`] ([`trace`]), and exporters for
+//! Prometheus text exposition, JSON snapshots, and Chrome trace-event JSON
+//! ([`export`]).
+//!
+//! The contract that makes this safe to leave on: telemetry records *out*
+//! of the computation and never feeds a value *back in*.  No clock read,
+//! counter, or span duration may influence floats that end up in
+//! positions, means, or losses — CI gates that a fit with telemetry fully
+//! enabled is bitwise identical to one with it disabled.  `obs` is the one
+//! sanctioned telemetry sink for `distributed/` and `serve/`; the xtask
+//! `obs_sink` lint rule keeps raw `Instant::now` / `SystemTime` reads out
+//! of those trees so all timing flows through `util/clock.rs`.
+pub mod export;
+pub mod metrics;
+pub mod trace;

@@ -1,0 +1,188 @@
+//! Lightweight span tracing keyed on (device, epoch, block, phase).
+//!
+//! Spans are timed off the sanctioned [`Stopwatch`] against one
+//! process-wide origin and buffered in per-thread vectors; a buffer spills
+//! into the global sink only when full, when its thread exits, or when the
+//! owner calls [`flush_thread`] at a barrier — so the training data path
+//! never contends on a shared lock.  Tracing is off by default and costs
+//! one relaxed load per span site when off; clock reads happen only while
+//! tracing is on, and the values flow only outward (into the trace file),
+//! never back into computation.
+
+use crate::util::clock::Stopwatch;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn set_enabled(on: bool) {
+    if on {
+        origin(); // pin the time origin before the first span
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `device` value for coordinator-side phases (exported as pid 0).
+pub const COORDINATOR: i64 = -1;
+
+/// `block` value for spans covering a whole epoch phase, not one block.
+pub const NO_BLOCK: i64 = -1;
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Device index, or [`COORDINATOR`].
+    pub device: i64,
+    pub epoch: u64,
+    /// Block index within the device, or [`NO_BLOCK`].
+    pub block: i64,
+    pub phase: &'static str,
+    /// Microseconds since the process trace origin.
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+fn origin() -> &'static Stopwatch {
+    static ORIGIN: OnceLock<Stopwatch> = OnceLock::new();
+    ORIGIN.get_or_init(Stopwatch::start)
+}
+
+fn now_us() -> u64 {
+    (origin().secs() * 1e6) as u64
+}
+
+/// Spill threshold for the per-thread buffer.
+const FLUSH_AT: usize = 1024;
+
+/// Thread-local span buffer; its `Drop` spills leftovers into the global
+/// sink, so scoped pool threads (the block-parallel region) never lose
+/// spans recorded after their last explicit flush.
+struct LocalBuf(Vec<SpanRecord>);
+
+impl Drop for LocalBuf {
+    fn drop(&mut self) {
+        if !self.0.is_empty() {
+            sink().lock().unwrap().append(&mut self.0);
+        }
+    }
+}
+
+thread_local! {
+    static LOCAL: RefCell<LocalBuf> = const { RefCell::new(LocalBuf(Vec::new())) };
+}
+
+fn sink() -> &'static Mutex<Vec<SpanRecord>> {
+    static SINK: OnceLock<Mutex<Vec<SpanRecord>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn record(rec: SpanRecord) {
+    // A span can outlive its thread's LOCAL destructor during teardown;
+    // fall back to the sink directly rather than lose (or panic on) it.
+    let spill = LOCAL
+        .try_with(|l| {
+            let mut l = l.borrow_mut();
+            l.0.push(rec.clone());
+            if l.0.len() >= FLUSH_AT {
+                Some(std::mem::take(&mut l.0))
+            } else {
+                None
+            }
+        })
+        .unwrap_or_else(|_| Some(vec![rec]));
+    if let Some(mut batch) = spill {
+        sink().lock().unwrap().append(&mut batch);
+    }
+}
+
+/// An in-flight span; records itself on drop.  Disarmed (free) when
+/// tracing is off.
+pub struct Span {
+    device: i64,
+    epoch: u64,
+    block: i64,
+    phase: &'static str,
+    start_us: u64,
+    armed: bool,
+}
+
+/// Open a span.  `phase` must be a static label (`"gradient"`,
+/// `"comm_wait"`, ...) — the set of phases is the trace's vocabulary, not
+/// a data channel.
+pub fn span(device: i64, epoch: u64, block: i64, phase: &'static str) -> Span {
+    if !enabled() {
+        return Span { device, epoch, block, phase, start_us: 0, armed: false };
+    }
+    Span { device, epoch, block, phase, start_us: now_us(), armed: true }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end = now_us();
+        record(SpanRecord {
+            device: self.device,
+            epoch: self.epoch,
+            block: self.block,
+            phase: self.phase,
+            start_us: self.start_us,
+            dur_us: end.saturating_sub(self.start_us),
+        });
+    }
+}
+
+/// Drain the calling thread's buffer into the global sink.  Call at
+/// barriers (end of epoch, session teardown) — never inside a hot loop.
+pub fn flush_thread() {
+    let _ = LOCAL.try_with(|l| {
+        let mut l = l.borrow_mut();
+        if !l.0.is_empty() {
+            sink().lock().unwrap().append(&mut l.0);
+        }
+    });
+}
+
+/// Flush the calling thread and take every recorded span, deterministically
+/// ordered by (device, epoch, block, phase, start).
+pub fn take_all() -> Vec<SpanRecord> {
+    flush_thread();
+    let mut spans = std::mem::take(&mut *sink().lock().unwrap());
+    spans.sort_by(|a, b| {
+        (a.device, a.epoch, a.block, a.phase, a.start_us)
+            .cmp(&(b.device, b.epoch, b.block, b.phase, b.start_us))
+    });
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // one test fn: the enable flag is process-global, so splitting these
+    // across #[test]s would race under the threaded test runner
+    #[test]
+    fn spans_flush_and_sort() {
+        set_enabled(false);
+        assert!(!span(0, 0, 0, "noop").armed, "disabled spans must disarm");
+        set_enabled(true);
+        drop(span(1, 0, NO_BLOCK, "b_phase"));
+        drop(span(0, 0, 2, "a_phase"));
+        std::thread::spawn(|| drop(span(0, 0, 1, "a_phase"))).join().unwrap();
+        set_enabled(false);
+        let spans = take_all();
+        let mine: Vec<&SpanRecord> =
+            spans.iter().filter(|s| s.phase == "a_phase" || s.phase == "b_phase").collect();
+        assert_eq!(mine.len(), 3);
+        assert_eq!((mine[0].device, mine[0].block), (0, 1));
+        assert_eq!((mine[1].device, mine[1].block), (0, 2));
+        assert_eq!((mine[2].device, mine[2].block), (1, NO_BLOCK));
+        assert!(mine.iter().all(|s| s.start_us > 0 || s.dur_us < 1_000_000));
+    }
+}

@@ -12,10 +12,14 @@
 //! count, not request count); inside a shard, recency is a monotone
 //! per-shard tick: a `HashMap` holds `key -> (tick, value)` and a
 //! `BTreeMap` mirrors `tick -> key`, so get/put/evict are all O(log n).
-//! Hit, miss, and eviction counters feed `/stats`.
+//! Hit, miss, and eviction counters are obs counters (DESIGN.md §15):
+//! detached per-instance by default (so every cache — and every test
+//! server — counts independently), or registered handles injected by the
+//! HTTP server via [`TileCache::with_counters`] so `/stats` and
+//! `/metrics` read one source of truth.
 
+use crate::obs::metrics::Counter;
 use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// `(artifact generation, packed z/x/y tile coordinate)`.
@@ -50,20 +54,36 @@ pub struct TileCache {
     shards: Vec<Mutex<Shard>>,
     per_shard_cap: usize,
     capacity: usize,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    evictions: AtomicU64,
+    hits: Counter,
+    misses: Counter,
+    evictions: Counter,
 }
 
 impl TileCache {
     pub fn new(capacity: usize) -> TileCache {
+        TileCache::with_counters(
+            capacity,
+            Counter::detached(),
+            Counter::detached(),
+            Counter::detached(),
+        )
+    }
+
+    /// Build a cache that counts through caller-provided obs handles
+    /// (registered in the server's registry, so `/metrics` exports them).
+    pub fn with_counters(
+        capacity: usize,
+        hits: Counter,
+        misses: Counter,
+        evictions: Counter,
+    ) -> TileCache {
         TileCache {
             shards: (0..N_SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
             per_shard_cap: capacity.div_ceil(N_SHARDS),
             capacity,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            evictions: AtomicU64::new(0),
+            hits,
+            misses,
+            evictions,
         }
     }
 
@@ -78,7 +98,7 @@ impl TileCache {
     /// Look up a tile, refreshing its recency on a hit.
     pub fn get(&self, key: CacheKey) -> Option<Arc<Vec<u8>>> {
         if self.capacity == 0 {
-            self.misses.fetch_add(1, Ordering::Relaxed);
+            self.misses.inc();
             return None;
         }
         let mut guard = self.shard(key).lock().unwrap();
@@ -92,11 +112,11 @@ impl TileCache {
                 let value = Arc::clone(&entry.1);
                 s.by_tick.remove(&old);
                 s.by_tick.insert(fresh, key);
-                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.hits.inc();
                 Some(value)
             }
             None => {
-                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.misses.inc();
                 None
             }
         }
@@ -120,7 +140,7 @@ impl TileCache {
             // oldest tick first; the maps are kept in lockstep
             let (_, victim) = s.by_tick.pop_first().expect("by_tick mirrors map");
             s.map.remove(&victim);
-            self.evictions.fetch_add(1, Ordering::Relaxed);
+            self.evictions.inc();
         }
     }
 
@@ -133,9 +153,9 @@ impl TileCache {
 
     pub fn stats(&self) -> CacheStats {
         CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
-            evictions: self.evictions.load(Ordering::Relaxed),
+            hits: self.hits.value(),
+            misses: self.misses.value(),
+            evictions: self.evictions.value(),
             entries: self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum(),
             capacity: self.capacity,
         }

@@ -11,27 +11,36 @@
 //! * `GET /tiles/{z}/{x}/{y}.png` — LOD tile (cache -> render -> encode);
 //! * `GET /query?x=&y=&k=`        — embedding-space k-nearest points, JSON;
 //! * `GET /stats`                  — cache/latency/request counters, JSON;
+//! * `GET /metrics`                — Prometheus text exposition (obs);
 //! * `GET /`                       — plain-text endpoint listing.
+//!
+//! Telemetry flows through `obs` (DESIGN.md §15): request counters and
+//! per-route latency histograms live in a per-server instance registry
+//! (tests spin up many servers per process), merged with the process-wide
+//! registry at `/metrics` scrape time.  The `/stats` JSON keeps its
+//! original field names — it now reads from the same obs handles.
 //!
 //! Tiles are bitwise-deterministic (see `serve::tiles`), so the cache can
 //! never serve a stale-but-different byte stream, and concurrent clients
 //! always observe identical tiles.
 
 use crate::checkpoint::RunStore;
+use crate::obs::export::prometheus_text;
+use crate::obs::metrics::{Counter, Gauge, Histogram, Registry, DURATION_BUCKETS_S};
 use crate::serve::artifact::MapArtifact;
 use crate::serve::cache::{CacheKey, TileCache};
 use crate::serve::tiles::{tile_key, TileConfig, TileRenderer};
+use crate::util::clock::{self, Stopwatch};
 use crate::util::error::{Context, Result};
 use crate::util::json::{arr, num, obj, Json};
-use crate::util::stats::Summary;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -60,33 +69,77 @@ impl Default for ServeConfig {
     }
 }
 
-/// Last-N service latencies (seconds), lock-protected ring.
-struct LatencyRing {
-    samples: Vec<f64>,
-    next: usize,
-    count: u64,
+/// Per-server obs handles: an instance-scoped registry (each test server
+/// must count independently) plus the handles recorded on the hot path.
+/// `latency_all` is detached — it backs the `/stats` latency summary
+/// across all routes; the registered per-route histograms are what
+/// `/metrics` exposes.
+struct ServeMetrics {
+    registry: Registry,
+    requests: Counter,
+    tiles_served: Counter,
+    queries_served: Counter,
+    errors: Counter,
+    swaps: Counter,
+    generation: Gauge,
+    cache_entries: Gauge,
+    latency_all: Histogram,
+    lat_tiles: Histogram,
+    lat_query: Histogram,
+    lat_stats: Histogram,
+    lat_metrics: Histogram,
+    lat_other: Histogram,
 }
 
-const LATENCY_RING: usize = 4096;
-
-impl LatencyRing {
-    fn new() -> LatencyRing {
-        LatencyRing { samples: Vec::with_capacity(LATENCY_RING), next: 0, count: 0 }
-    }
-
-    fn push(&mut self, secs: f64) {
-        if self.samples.len() < LATENCY_RING {
-            self.samples.push(secs);
-        } else {
-            self.samples[self.next] = secs;
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        let r = Registry::new();
+        let lat = |route: &str| {
+            r.histogram(
+                "nomad_serve_request_seconds",
+                "Request service time by route.",
+                &DURATION_BUCKETS_S,
+                &[("route", route)],
+            )
+        };
+        ServeMetrics {
+            requests: r.counter("nomad_serve_requests_total", "Requests accepted.", &[]),
+            tiles_served: r.counter("nomad_serve_tiles_total", "Tiles served.", &[]),
+            queries_served: r.counter("nomad_serve_queries_total", "kNN queries served.", &[]),
+            errors: r.counter("nomad_serve_errors_total", "Requests answered 4xx/5xx.", &[]),
+            swaps: r.counter("nomad_serve_swaps_total", "Artifact hot swaps completed.", &[]),
+            generation: r.gauge("nomad_serve_generation", "Artifact generation served.", &[]),
+            cache_entries: r.gauge("nomad_serve_cache_entries", "Live tile-cache entries.", &[]),
+            latency_all: Histogram::detached(&DURATION_BUCKETS_S),
+            lat_tiles: lat("/tiles"),
+            lat_query: lat("/query"),
+            lat_stats: lat("/stats"),
+            lat_metrics: lat("/metrics"),
+            lat_other: lat("other"),
+            registry: r,
         }
-        self.next = (self.next + 1) % LATENCY_RING;
-        self.count += 1;
     }
 
-    fn summary(&self) -> Summary {
-        Summary::of(&self.samples)
+    fn record_latency(&self, route: Route, secs: f64) {
+        self.latency_all.observe(secs);
+        match route {
+            Route::Tiles => &self.lat_tiles,
+            Route::Query => &self.lat_query,
+            Route::Stats => &self.lat_stats,
+            Route::Metrics => &self.lat_metrics,
+            Route::Other => &self.lat_other,
+        }
+        .observe(secs);
     }
+}
+
+#[derive(Clone, Copy)]
+enum Route {
+    Tiles,
+    Query,
+    Stats,
+    Metrics,
+    Other,
 }
 
 /// Stripes for the single-flight render locks: enough that unrelated
@@ -106,13 +159,7 @@ pub struct ServerState {
     cache: TileCache,
     /// per-key-stripe single-flight locks for cold-tile renders
     render_locks: Vec<Mutex<()>>,
-    requests: AtomicU64,
-    tiles_served: AtomicU64,
-    queries_served: AtomicU64,
-    errors: AtomicU64,
-    /// completed hot swaps (0 unless watching)
-    swaps: AtomicU64,
-    latency: Mutex<LatencyRing>,
+    metrics: ServeMetrics,
 }
 
 impl ServerState {
@@ -133,21 +180,24 @@ impl ServerState {
         let mut g = self.renderer.write().unwrap();
         *g = (generation, Arc::new(renderer));
         drop(g);
-        self.swaps.fetch_add(1, Ordering::Relaxed);
+        self.metrics.swaps.inc();
+        self.metrics.generation.set(generation as f64);
     }
 
-    /// Counters + latency snapshot as the `/stats` JSON payload.
+    /// Counters + latency snapshot as the `/stats` JSON payload.  The
+    /// field names are a stable contract (regression-tested); the values
+    /// now come from the obs handles (latency quantiles are
+    /// bucket-interpolated instead of the old exact last-4096 ring).
     pub fn stats_json(&self) -> Json {
         let c = self.cache.stats();
-        let lat = self.latency.lock().unwrap();
-        let sum = lat.summary();
+        let lat = &self.metrics.latency_all;
         obj(vec![
             ("generation", num(self.generation() as f64)),
-            ("swaps", num(self.swaps.load(Ordering::Relaxed) as f64)),
-            ("requests", num(self.requests.load(Ordering::Relaxed) as f64)),
-            ("tiles_served", num(self.tiles_served.load(Ordering::Relaxed) as f64)),
-            ("queries_served", num(self.queries_served.load(Ordering::Relaxed) as f64)),
-            ("errors", num(self.errors.load(Ordering::Relaxed) as f64)),
+            ("swaps", num(self.metrics.swaps.value() as f64)),
+            ("requests", num(self.metrics.requests.value() as f64)),
+            ("tiles_served", num(self.metrics.tiles_served.value() as f64)),
+            ("queries_served", num(self.metrics.queries_served.value() as f64)),
+            ("errors", num(self.metrics.errors.value() as f64)),
             (
                 "cache",
                 obj(vec![
@@ -161,13 +211,23 @@ impl ServerState {
             (
                 "latency",
                 obj(vec![
-                    ("count", num(lat.count as f64)),
-                    ("p50_ms", num(sum.p50 * 1e3)),
-                    ("p99_ms", num(sum.p99 * 1e3)),
-                    ("max_ms", num(sum.max * 1e3)),
+                    ("count", num(lat.count() as f64)),
+                    ("p50_ms", num(lat.quantile(0.5) * 1e3)),
+                    ("p99_ms", num(lat.quantile(0.99) * 1e3)),
+                    ("max_ms", num(lat.max() * 1e3)),
                 ]),
             ),
         ])
+    }
+
+    /// `/metrics` body: the process-wide registry merged with this
+    /// server's instance registry.  Point-in-time gauges (generation,
+    /// cache occupancy) are mirrored just before the snapshot.
+    pub fn prometheus(&self) -> String {
+        self.metrics.generation.set(self.generation() as f64);
+        self.metrics.cache_entries.set(self.cache.stats().entries as f64);
+        let snap = crate::obs::metrics::snapshot().merge(self.metrics.registry.snapshot());
+        prometheus_text(&snap)
     }
 }
 
@@ -258,16 +318,25 @@ fn start_with(
     cfg: &ServeConfig,
     watch: Option<(PathBuf, Duration)>,
 ) -> Result<ServerHandle> {
+    let metrics = ServeMetrics::new();
+    metrics.generation.set(generation as f64);
+    // the cache counts through obs handles registered in this server's
+    // instance registry, so `/metrics` and `/stats` read one source
+    let cache = TileCache::with_counters(
+        cfg.cache_entries,
+        metrics.registry.counter("nomad_serve_cache_hits_total", "Tile-cache hits.", &[]),
+        metrics.registry.counter("nomad_serve_cache_misses_total", "Tile-cache misses.", &[]),
+        metrics.registry.counter(
+            "nomad_serve_cache_evictions_total",
+            "Tile-cache LRU evictions.",
+            &[],
+        ),
+    );
     let state = Arc::new(ServerState {
         renderer: RwLock::new((generation, Arc::new(renderer))),
-        cache: TileCache::new(cfg.cache_entries),
+        cache,
         render_locks: (0..RENDER_STRIPES).map(|_| Mutex::new(())).collect(),
-        requests: AtomicU64::new(0),
-        tiles_served: AtomicU64::new(0),
-        queries_served: AtomicU64::new(0),
-        errors: AtomicU64::new(0),
-        swaps: AtomicU64::new(0),
-        latency: Mutex::new(LatencyRing::new()),
+        metrics,
     });
     let listener = TcpListener::bind(&cfg.addr)
         .with_context(|| format!("bind {}", cfg.addr))?;
@@ -380,19 +449,20 @@ fn handle_conn(mut stream: TcpStream, state: &ServerState) {
         Some(r) => r,
         None => return, // unreadable/empty request: nothing to answer
     };
-    let t0 = Instant::now();
-    state.requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Stopwatch::start();
+    state.metrics.requests.inc();
 
     let (method, target) = match parse_request_line(&req) {
         Some(mt) => mt,
         None => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+            state.metrics.errors.inc();
             let _ = respond(&mut stream, 400, "Bad Request", "text/plain", b"bad request\n");
+            state.metrics.record_latency(Route::Other, t0.secs());
             return;
         }
     };
     if method != "GET" {
-        state.errors.fetch_add(1, Ordering::Relaxed);
+        state.metrics.errors.inc();
         let _ = respond(
             &mut stream,
             405,
@@ -400,6 +470,7 @@ fn handle_conn(mut stream: TcpStream, state: &ServerState) {
             "text/plain",
             b"GET only\n",
         );
+        state.metrics.record_latency(Route::Other, t0.secs());
         return;
     }
     let (path, query) = match target.split_once('?') {
@@ -407,26 +478,31 @@ fn handle_conn(mut stream: TcpStream, state: &ServerState) {
         None => (target, ""),
     };
 
-    let ok = if let Some(rest) = path.strip_prefix("/tiles/") {
-        serve_tile(&mut stream, state, rest)
+    let (route, ok) = if let Some(rest) = path.strip_prefix("/tiles/") {
+        (Route::Tiles, serve_tile(&mut stream, state, rest))
     } else if path == "/query" {
-        serve_query(&mut stream, state, query)
+        (Route::Query, serve_query(&mut stream, state, query))
     } else if path == "/stats" {
         let body = state.stats_json().pretty().into_bytes();
-        respond(&mut stream, 200, "OK", "application/json", &body).is_ok()
+        (Route::Stats, respond(&mut stream, 200, "OK", "application/json", &body).is_ok())
+    } else if path == "/metrics" {
+        let body = state.prometheus().into_bytes();
+        let ctype = "text/plain; version=0.0.4; charset=utf-8";
+        (Route::Metrics, respond(&mut stream, 200, "OK", ctype, &body).is_ok())
     } else if path == "/" {
         let body = b"nomad map server\n\
                      GET /tiles/{z}/{x}/{y}.png\n\
                      GET /query?x=&y=&k=\n\
-                     GET /stats\n";
-        respond(&mut stream, 200, "OK", "text/plain", body).is_ok()
+                     GET /stats\n\
+                     GET /metrics\n";
+        (Route::Other, respond(&mut stream, 200, "OK", "text/plain", body).is_ok())
     } else {
-        state.errors.fetch_add(1, Ordering::Relaxed);
-        respond(&mut stream, 404, "Not Found", "text/plain", b"not found\n").is_ok()
+        state.metrics.errors.inc();
+        (Route::Other, respond(&mut stream, 404, "Not Found", "text/plain", b"not found\n").is_ok())
     };
     let _ = ok;
 
-    state.latency.lock().unwrap().push(t0.elapsed().as_secs_f64());
+    state.metrics.record_latency(route, t0.secs());
 }
 
 /// `GET /tiles/{z}/{x}/{y}.png`
@@ -435,7 +511,7 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
     let (z, x, y) = match coords {
         Some(c) => c,
         None => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+            state.metrics.errors.inc();
             return respond(stream, 404, "Not Found", "text/plain", b"bad tile path\n").is_ok();
         }
     };
@@ -446,7 +522,7 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
     // validate against the pyramid before touching the cache: tile_key's
     // packing is only injective for in-pyramid coordinates
     if renderer.tile_view(z, x, y).is_none() {
-        state.errors.fetch_add(1, Ordering::Relaxed);
+        state.metrics.errors.inc();
         return respond(stream, 404, "Not Found", "text/plain", b"tile out of range\n").is_ok();
     }
     let key: CacheKey = (generation, tile_key(z, x, y));
@@ -472,7 +548,7 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
                 Some(b) => b, // filled by a concurrent request while we waited
                 None => match renderer.render_png(z, x, y) {
                     None => {
-                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        state.metrics.errors.inc();
                         return respond(
                             stream,
                             404,
@@ -483,7 +559,7 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
                         .is_ok();
                     }
                     Some(Err(e)) => {
-                        state.errors.fetch_add(1, Ordering::Relaxed);
+                        state.metrics.errors.inc();
                         let msg = format!("encode error: {e}\n");
                         return respond(
                             stream,
@@ -503,7 +579,7 @@ fn serve_tile(stream: &mut TcpStream, state: &ServerState, rest: &str) -> bool {
             }
         }
     };
-    state.tiles_served.fetch_add(1, Ordering::Relaxed);
+    state.metrics.tiles_served.inc();
     respond(stream, 200, "OK", "image/png", &bytes).is_ok()
 }
 
@@ -521,7 +597,7 @@ fn serve_query(stream: &mut TcpStream, state: &ServerState, query: &str) -> bool
         // emit a bare `NaN` token — a 200 with an unparsable body
         (Some(a), Some(b), Some(c)) if a.is_finite() && b.is_finite() => (a, b, c.min(1000)),
         _ => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+            state.metrics.errors.inc();
             let body = br#"{"error": "need finite numeric x=, y= and optional k="}"#;
             return respond(stream, 400, "Bad Request", "application/json", body).is_ok();
         }
@@ -553,7 +629,7 @@ fn serve_query(stream: &mut TcpStream, state: &ServerState, query: &str) -> bool
     ])
     .to_string()
     .into_bytes();
-    state.queries_served.fetch_add(1, Ordering::Relaxed);
+    state.metrics.queries_served.inc();
     respond(stream, 200, "OK", "application/json", &body).is_ok()
 }
 
@@ -583,11 +659,11 @@ fn query_param<'a>(query: &'a str, name: &str) -> Option<&'a str> {
 /// overall deadline — a drip-feeding client that stays under the per-read
 /// timeout must still release the worker).
 fn read_request(stream: &mut TcpStream) -> Option<Vec<u8>> {
-    let deadline = Instant::now() + Duration::from_secs(10);
+    let deadline = clock::deadline_in(Some(Duration::from_secs(10))).expect("some timeout");
     let mut buf = Vec::with_capacity(1024);
     let mut chunk = [0u8; 1024];
     loop {
-        if Instant::now() >= deadline {
+        if clock::expired(deadline) {
             break;
         }
         match stream.read(&mut chunk) {
@@ -846,6 +922,56 @@ mod tests {
         let v = h.state().stats_json();
         assert_eq!(v.get("generation").as_i64(), Some(4));
         assert!(v.get("swaps").as_i64().unwrap() >= 1);
+        h.stop();
+    }
+
+    #[test]
+    fn stats_field_names_are_backward_compatible() {
+        // the /stats JSON shape is a consumer contract: moving the
+        // counters onto obs must not rename or drop a field
+        let h = test_server(200, 64);
+        let addr = h.addr.to_string();
+        let _ = http_get(&addr, "/tiles/0/0/0.png").unwrap();
+        let (st, body) = http_get(&addr, "/stats").unwrap();
+        assert_eq!(st, 200);
+        let v = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        for key in ["generation", "swaps", "requests", "tiles_served", "queries_served", "errors"]
+        {
+            assert!(v.get(key).as_f64().is_some(), "missing top-level field {key}");
+        }
+        for key in ["hits", "misses", "evictions", "entries", "capacity"] {
+            assert!(v.get("cache").get(key).as_f64().is_some(), "missing cache field {key}");
+        }
+        for key in ["count", "p50_ms", "p99_ms", "max_ms"] {
+            assert!(v.get("latency").get(key).as_f64().is_some(), "missing latency field {key}");
+        }
+        assert!(v.get("requests").as_i64().unwrap() >= 2);
+        h.stop();
+    }
+
+    #[test]
+    fn metrics_route_serves_prometheus_exposition() {
+        let h = test_server(200, 64);
+        let addr = h.addr.to_string();
+        let _ = http_get(&addr, "/tiles/0/0/0.png").unwrap();
+        let (st, body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(st, 200);
+        let text = std::str::from_utf8(&body).unwrap();
+        assert!(text.contains("# TYPE nomad_serve_requests_total counter"), "{text}");
+        assert!(text.contains("# TYPE nomad_serve_request_seconds histogram"), "{text}");
+        assert!(
+            text.contains("nomad_serve_request_seconds_bucket{route=\"/tiles\",le=\"+Inf\"} 1"),
+            "{text}"
+        );
+        // well-formedness: every non-comment line is `name{labels} value`
+        // with a parseable value
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, value) = line.rsplit_once(' ').expect("series line has a value");
+            assert!(
+                value == "+Inf" || value.parse::<f64>().is_ok(),
+                "unparsable sample value in {line:?}"
+            );
+        }
         h.stop();
     }
 

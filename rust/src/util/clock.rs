@@ -33,6 +33,17 @@ pub fn deadline_in(timeout: Option<Duration>) -> Option<Instant> {
     timeout.map(|dl| Instant::now() + dl)
 }
 
+/// Time remaining until an absolute deadline (zero once passed) — the
+/// sanctioned way to turn a deadline back into a socket timeout.
+pub fn remaining_until(by: Instant) -> Duration {
+    by.saturating_duration_since(Instant::now())
+}
+
+/// Has `by` passed?  The deadline-polling counterpart of [`deadline_in`].
+pub fn expired(by: Instant) -> bool {
+    Instant::now() >= by
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,59 @@
+//! The zero-perturbation invariant (DESIGN.md §15): telemetry flows out of
+//! training, never back in.  Fitting with the metrics registry and span
+//! tracing enabled must produce **bitwise identical** positions, losses,
+//! and means to fitting with both disabled.
+//!
+//! This lives in its own integration-test binary with a single `#[test]`
+//! on purpose: `obs::metrics::set_enabled` / `obs::trace::set_enabled` are
+//! process-global switches, and the default multi-threaded test harness
+//! would race them across tests.  CI runs this binary at 1 and 8 threads
+//! (NOMAD_THREADS), and the obs-smoke job repeats the A/B over a real
+//! 2-worker multiprocess run.
+
+use nomad::ann::backend::NativeBackend;
+use nomad::ann::IndexParams;
+use nomad::coordinator::{NomadCoordinator, NomadRun, RunConfig};
+use nomad::data::{gaussian_mixture, Dataset};
+use nomad::embed::NomadParams;
+use nomad::obs::{metrics, trace};
+use nomad::util::rng::Rng;
+
+fn corpus() -> Dataset {
+    let mut rng = Rng::new(11);
+    gaussian_mixture(600, 16, 4, 10.0, 0.2, 0.5, &mut rng)
+}
+
+fn fit_once(ds: &Dataset) -> NomadRun {
+    let coord = NomadCoordinator::new(
+        NomadParams { epochs: 12, k: 5, negs: 4, seed: 42, ..Default::default() },
+        RunConfig {
+            n_devices: 3,
+            index: IndexParams { n_clusters: 4, k: 5, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    coord.fit(ds, &NativeBackend::default())
+}
+
+#[test]
+fn telemetry_on_vs_off_is_bitwise_identical() {
+    let ds = corpus();
+
+    metrics::set_enabled(true);
+    trace::set_enabled(true);
+    let on = fit_once(&ds);
+    trace::set_enabled(false);
+    let spans = trace::take_all();
+    assert!(!spans.is_empty(), "tracing was on — the run must have recorded spans");
+
+    metrics::set_enabled(false);
+    let off = fit_once(&ds);
+    metrics::set_enabled(true);
+
+    let bits = |run: &NomadRun| -> Vec<u32> {
+        run.positions.data.iter().map(|v| v.to_bits()).collect()
+    };
+    assert_eq!(bits(&on), bits(&off), "positions must not feel telemetry");
+    assert_eq!(on.loss_history, off.loss_history, "losses must not feel telemetry");
+    assert_eq!(on.final_means, off.final_means, "means must not feel telemetry");
+}

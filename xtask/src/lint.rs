@@ -55,6 +55,12 @@ pub enum Rule {
     /// literal or SCREAMING_CASE-const indices into length-checked
     /// headers are allowed, everything else must use `.get()`.
     ParserIndex,
+    /// (e) raw clock reads (`Instant::now`, `SystemTime`) are banned in
+    /// the instrumented service modules (`serve/`, `distributed/`): obs is
+    /// the one sanctioned telemetry sink (DESIGN.md §15), and its
+    /// zero-perturbation A/B gate only covers time taken through
+    /// `util::clock::Stopwatch`.
+    ObsSink,
     /// A malformed or unused `lint: allow` pragma (not suppressible).
     Pragma,
 }
@@ -70,6 +76,7 @@ impl Rule {
             Rule::DetThread => "det_thread",
             Rule::ParserPanic => "parser_panic",
             Rule::ParserIndex => "parser_index",
+            Rule::ObsSink => "obs_sink",
             Rule::Pragma => "pragma",
         }
     }
@@ -84,6 +91,7 @@ impl Rule {
             "det_thread" => Rule::DetThread,
             "parser_panic" => Rule::ParserPanic,
             "parser_index" => Rule::ParserIndex,
+            "obs_sink" => Rule::ObsSink,
             _ => return None,
         })
     }
@@ -403,6 +411,16 @@ fn is_byte_parser(rel: &str) -> bool {
     matches!(rel, "distributed/proto.rs" | "util/npy.rs" | "data/shard.rs")
 }
 
+/// Instrumented service modules where obs is the one sanctioned telemetry
+/// sink: anything they time must come from `util::clock::Stopwatch`, so
+/// the telemetry-on/off A/B gate (DESIGN.md §15) covers every clock read.
+/// Determinism-critical files are excluded only to avoid double-flagging —
+/// `det_time` already bans the same tokens there.
+fn is_obs_sink(rel: &str) -> bool {
+    (rel.starts_with("serve/") || rel.starts_with("distributed/") || rel.starts_with("obs/"))
+        && !is_determinism_critical(rel)
+}
+
 // ---------------------------------------------------------------------------
 // token scanning helpers
 // ---------------------------------------------------------------------------
@@ -544,6 +562,7 @@ pub fn lint_source(rel: &str, src: &str) -> FileOutcome {
     let critical = is_determinism_critical(rel);
     let parser = is_untrusted_parser(rel);
     let byte_parser = is_byte_parser(rel);
+    let obs_sink = is_obs_sink(rel);
 
     let mut raw: Vec<Violation> = Vec::new();
     let mut pragmas: Vec<(usize, Rule)> = Vec::new(); // (0-based line, rule)
@@ -624,6 +643,20 @@ pub fn lint_source(rel: &str, src: &str) -> FileOutcome {
                     msg: "thread-identity read in a determinism-critical module".to_string(),
                 });
             }
+        }
+
+        // (e) instrumented service modules, non-test code only
+        if obs_sink
+            && !line.in_test
+            && (code.contains("Instant::now") || find_token(code, "SystemTime"))
+        {
+            raw.push(Violation {
+                line: ln + 1,
+                rule: Rule::ObsSink,
+                msg: "direct clock read in an obs-sink module — time through \
+                      `util::clock::Stopwatch` so the telemetry A/B gate covers it"
+                    .to_string(),
+            });
         }
 
         // (d) untrusted-input parsers, non-test code only

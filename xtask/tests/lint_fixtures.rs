@@ -198,8 +198,9 @@ fn f() {
 ";
     let critical = rules("coordinator/mod.rs", src);
     assert_eq!(critical, vec!["det_hash", "det_time", "det_hash", "det_thread"]);
-    // the same source in a non-critical module is clean
-    assert!(lint("serve/http.rs", src).is_empty());
+    // the same source in a plain module is clean (serve/ would still
+    // catch the clock read under rule (e) — see the obs_sink fixtures)
+    assert!(lint("harness.rs", src).is_empty());
 }
 
 #[test]
@@ -223,7 +224,62 @@ fn critical_scope_includes_wire_and_shard_codecs() {
     let src = "fn f() { let _ = std::time::Instant::now(); }\n";
     assert_eq!(rules("distributed/proto.rs", src), vec!["det_time"]);
     assert_eq!(rules("data/shard.rs", src), vec!["det_time"]);
-    assert!(lint("distributed/worker.rs", src).is_empty());
+    // the rest of distributed/ hands the same token off to rule (e)
+    assert_eq!(rules("distributed/worker.rs", src), vec!["obs_sink"]);
+}
+
+// ------------------------------------------------------------ rule (e)
+
+#[test]
+fn obs_sink_bans_raw_clock_reads_in_service_modules() {
+    let src = "\
+fn f() {
+    let t = std::time::Instant::now();
+    let s = std::time::SystemTime::now();
+    let _ = (t, s);
+}
+";
+    let want = vec![(2, "obs_sink".to_string()), (3, "obs_sink".to_string())];
+    assert_eq!(lint("serve/http.rs", src), want);
+    assert_eq!(rules("distributed/transport.rs", src), vec!["obs_sink", "obs_sink"]);
+    assert_eq!(rules("obs/trace.rs", src), vec!["obs_sink", "obs_sink"]);
+    // plain modules are untouched; proto.rs stays det_time's (no double flag)
+    assert!(lint("harness.rs", src).is_empty());
+    assert_eq!(rules("distributed/proto.rs", src), vec!["det_time", "det_time"]);
+}
+
+#[test]
+fn obs_sink_allows_the_sanctioned_stopwatch() {
+    let src = "\
+use crate::util::clock::Stopwatch;
+fn f() -> f64 {
+    let t0 = Stopwatch::start();
+    t0.secs()
+}
+";
+    assert!(lint("serve/cache.rs", src).is_empty());
+}
+
+#[test]
+fn obs_sink_exempts_test_modules_and_honors_pragmas() {
+    let tests_only = "\
+fn prod() {}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t() {
+        let _ = std::time::Instant::now();
+    }
+}
+";
+    assert!(lint("distributed/device.rs", tests_only).is_empty());
+    let pragma = "\
+fn f() {
+    // lint: allow(obs_sink, reason = \"boot-time banner, outside any timed phase\")
+    let _ = std::time::Instant::now();
+}
+";
+    assert!(lint("serve/http.rs", pragma).is_empty());
 }
 
 // ------------------------------------------------------------ rule (d)
