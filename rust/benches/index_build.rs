@@ -9,7 +9,9 @@
 //!   cargo bench --bench index_build -- --n 50000 --d 128 --runs 5
 //!
 //! Emits `bench_results/BENCH_index_build.json`: shapes, naive vs tiled
-//! ns/op, naive/tiled and 1-vs-N speedups, and the determinism verdict.
+//! ns/op, naive/tiled and 1-vs-N speedups, the f32-vs-int8 comparison for
+//! the `--quantize-build` scan, the determinism verdict, and the
+//! quantized-equality verdict (both gates exit nonzero on failure).
 
 use nomad::ann::backend::{assign_naive, NativeBackend};
 use nomad::ann::knn::{within_clusters, within_clusters_naive};
@@ -19,7 +21,7 @@ use nomad::bench::{fmt_secs, save_bench_json, time_fn, Table};
 use nomad::cli::Args;
 use nomad::data::gaussian_mixture;
 use nomad::linalg::distance::{assign_tiled, self_knn_tiled};
-use nomad::linalg::Matrix;
+use nomad::linalg::{quant, Matrix};
 use nomad::util::rng::Rng;
 use std::hint::black_box;
 
@@ -153,14 +155,45 @@ fn main() {
         ("tiled_xn_ns_per_op", num(t_build * 1e9)),
     ]));
 
-    // ---- determinism: bitwise identical across 1/2/4 threads -------------
-    let a1 = assign_tiled(&ds.x, &cent, 1);
-    let det_assign = assign_tiled(&ds.x, &cent, 2) == a1 && assign_tiled(&ds.x, &cent, 4) == a1;
+    // ---- f32 vs int8-screened kNN (the --quantize-build scan) ------------
+    // timed on the biggest cluster; the quantized path screens candidates
+    // with an i32 code dot and reranks survivors with the exact f32 kernel,
+    // so its output is bitwise equal (gated below) and the column is a pure
+    // throughput comparison
     let sub = {
         let big = (0..km.clusters.len()).max_by_key(|&c| km.clusters[c].len()).unwrap();
         let ids: Vec<usize> = km.clusters[big].iter().map(|&m| m as usize).collect();
         ds.x.gather(&ids)
     };
+    let t_q_f32 = time_fn(0, runs, || {
+        black_box(self_knn_tiled(&sub, k, threads));
+    })
+    .mean;
+    let t_q_int8 = time_fn(0, runs, || {
+        black_box(quant::self_knn_quantized(&sub, k, threads));
+    })
+    .mean;
+    table.row(vec![
+        "knn quantized".into(),
+        format!("{}x{d} k={k}", sub.rows).into(),
+        "-".into(),
+        "-".into(),
+        fmt_secs(t_q_int8).into(),
+        format!("f32 {}", fmt_secs(t_q_f32)).into(),
+        format!("{:.2}x", t_q_f32 / t_q_int8.max(1e-12)).into(),
+    ]);
+    rows_json.push(obj(vec![
+        ("kernel", s("knn quantized")),
+        ("shape", s(&format!("{}x{d} k={k}", sub.rows))),
+        ("f32_xn_ns_per_op", num(t_q_f32 * 1e9)),
+        ("int8_xn_ns_per_op", num(t_q_int8 * 1e9)),
+        ("speedup_f32_over_int8", num(t_q_f32 / t_q_int8.max(1e-12))),
+    ]));
+    let quant_equal = quant::quantized_matches_exact(&sub, k, threads);
+
+    // ---- determinism: bitwise identical across 1/2/4 threads -------------
+    let a1 = assign_tiled(&ds.x, &cent, 1);
+    let det_assign = assign_tiled(&ds.x, &cent, 2) == a1 && assign_tiled(&ds.x, &cent, 4) == a1;
     let k1 = self_knn_tiled(&sub, k, 1);
     let det_knn = self_knn_tiled(&sub, k, 2) == k1 && self_knn_tiled(&sub, k, 4) == k1;
     let mut det_build = true;
@@ -185,6 +218,7 @@ fn main() {
     println!(
         "\nbitwise identical across 1/2/4 threads: assign={det_assign} knn={det_knn} build={det_build}"
     );
+    println!("quantized kNN bitwise equal to f32 engine: {quant_equal}");
     table.save_json("index_build");
     save_bench_json(
         "index_build",
@@ -199,10 +233,15 @@ fn main() {
             ("smoke", Json::Bool(smoke)),
             ("rows", arr(rows_json)),
             ("deterministic_across_threads", Json::Bool(deterministic)),
+            ("quantized_bitwise_equal", Json::Bool(quant_equal)),
         ]),
     );
     if !deterministic {
         eprintln!("FAIL: tiled results changed with thread count");
+        std::process::exit(1);
+    }
+    if !quant_equal {
+        eprintln!("FAIL: int8-screened kNN diverged from the exact f32 engine");
         std::process::exit(1);
     }
 }

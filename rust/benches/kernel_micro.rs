@@ -24,7 +24,7 @@ use nomad::embed::native::{nomad_grad_gather, nomad_grad_scatter, HEAD_CHUNK};
 use nomad::embed::ClusterBlock;
 #[cfg(feature = "xla")]
 use nomad::embed::{StepBackend, StepInputs};
-use nomad::linalg::Matrix;
+use nomad::linalg::{simd, Matrix};
 use nomad::util::rng::Rng;
 
 fn block_of_size(
@@ -169,6 +169,32 @@ fn xla_ann_cells(_x: &Matrix, _cent: &Matrix, _sub: &Matrix, _runs: usize) -> (S
     ("n/a".into(), "n/a".into())
 }
 
+/// Seconds per kernel call, batched over `rows` row pairs so one timed
+/// closure is long enough to measure.
+fn time_rows(
+    runs: usize,
+    rows: usize,
+    d: usize,
+    a: &[f32],
+    b: &[f32],
+    f: &dyn Fn(&[f32], &[f32]) -> f32,
+) -> f64 {
+    let t = time_fn(2, runs, || {
+        let mut acc = 0.0f32;
+        for r in 0..rows {
+            acc += f(&a[r * d..(r + 1) * d], &b[r * d..(r + 1) * d]);
+        }
+        std::hint::black_box(acc);
+    });
+    t.mean / rows as f64
+}
+
+/// NaN-aware bit equality — the dispatch contract compares payloads except
+/// that any NaN matches any NaN (payload bits are not contractual).
+fn bits_eq(x: f32, y: f32) -> bool {
+    x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan())
+}
+
 fn main() {
     let args = Args::from_env();
     args.apply_thread_flag();
@@ -290,14 +316,72 @@ fn main() {
     t2.print();
     t2.save_json("kernel_micro_ann");
 
+    // ---- SIMD kernels -----------------------------------------------------
+    // the runtime-dispatched path vs the forced-scalar fallback on the
+    // dot-bound kernels (DESIGN.md §16).  On hosts without AVX2 (or under
+    // NOMAD_SIMD=scalar) both columns time the same code path and the
+    // speedup reads ~1.0x.
+    let mut t3 = Table::new(
+        "SIMD microbench — dispatched vs scalar 8-lane kernels (both x1)",
+        &["Kernel", "d", "scalar", "simd", "speedup"],
+    );
+    let mut simd_rows: Vec<Json> = Vec::new();
+    let mut rng4 = Rng::new(4);
+    for d in [64usize, 256, 1024] {
+        let rows = 256usize;
+        let a: Vec<f32> = (0..rows * d).map(|_| rng4.normal()).collect();
+        let b: Vec<f32> = (0..rows * d).map(|_| rng4.normal()).collect();
+        let kernels: [(&str, fn(&[f32], &[f32]) -> f32, fn(&[f32], &[f32]) -> f32); 2] =
+            [("dot", simd::dot_scalar, simd::dot), ("d2", simd::d2_scalar, simd::d2)];
+        for (kernel, scalar, dispatched) in kernels {
+            let t_sc = time_rows(runs, rows, d, &a, &b, &scalar);
+            let t_si = time_rows(runs, rows, d, &a, &b, &dispatched);
+            t3.row(vec![
+                kernel.into(),
+                format!("{d}").into(),
+                fmt_secs(t_sc).into(),
+                fmt_secs(t_si).into(),
+                format!("{:.2}x", t_sc / t_si.max(1e-18)).into(),
+            ]);
+            simd_rows.push(obj(vec![
+                ("kernel", s(kernel)),
+                ("d", num(d as f64)),
+                ("scalar_ns_per_op", num(t_sc * 1e9)),
+                ("simd_ns_per_op", num(t_si * 1e9)),
+                ("speedup_scalar_over_simd", num(t_sc / t_si.max(1e-18))),
+            ]));
+        }
+    }
+    t3.print();
+    t3.save_json("kernel_micro_simd");
+
+    // scalar-vs-simd bitwise gate: the dispatch contract (DESIGN.md §16)
+    // is bitwise identity, so any divergence fails the bench-smoke CI job.
+    let mut rng5 = Rng::new(5);
+    let mut gate_ok = true;
+    for _ in 0..500 {
+        let d = rng5.below(130);
+        let a: Vec<f32> = (0..d).map(|_| rng5.normal()).collect();
+        let b: Vec<f32> = (0..d).map(|_| rng5.normal()).collect();
+        gate_ok &= bits_eq(simd::dot(&a, &b), simd::dot_scalar(&a, &b));
+        gate_ok &= bits_eq(simd::d2(&a, &b), simd::d2_scalar(&a, &b));
+    }
+    if !gate_ok {
+        eprintln!("FAIL: dispatched SIMD kernels diverge bitwise from the scalar fallback");
+        std::process::exit(1);
+    }
+    println!("\nscalar-vs-simd bitwise gate: OK (simd_active = {})", simd::simd_active());
+
     save_bench_json(
         "kernel_micro",
         obj(vec![
             ("bench", s("kernel_micro")),
             ("threads", num(threads as f64)),
             ("runs", num(runs as f64)),
+            ("simd_active", Json::Bool(simd::simd_active())),
             ("step", arr(step_rows)),
             ("ann", arr(ann_rows)),
+            ("simd", arr(simd_rows)),
         ]),
     );
 }

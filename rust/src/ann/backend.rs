@@ -12,7 +12,7 @@
 //! `(d², index)` ordering contract as the engine, which the property
 //! tests in `tests/distance_engine.rs` compare against exactly.
 
-use crate::linalg::{d2, distance, Matrix};
+use crate::linalg::{d2, distance, quant, Matrix};
 use crate::util::parallel::num_threads;
 
 /// Pluggable distance engine for the ANN index build.
@@ -42,8 +42,23 @@ pub trait AnnBackend: Sync {
 
 /// Tiled, multithreaded pure-Rust backend over the norm-trick distance
 /// engine (`crate::linalg::distance`).
+///
+/// With `quantize` set (the `--quantize-build` flag), the within-cluster
+/// kNN scan runs through the int8 screen-and-rerank path
+/// (`crate::linalg::quant`, DESIGN.md §16); the exact f32 rerank makes the
+/// output bitwise equal to the unquantized engine, so the flag is purely a
+/// throughput knob. Assignment is unaffected.
 #[derive(Default)]
-pub struct NativeBackend {}
+pub struct NativeBackend {
+    pub quantize: bool,
+}
+
+impl NativeBackend {
+    /// Backend with the int8-screened kNN build enabled or not.
+    pub fn quantized(quantize: bool) -> NativeBackend {
+        NativeBackend { quantize }
+    }
+}
 
 impl AnnBackend for NativeBackend {
     fn assign(&self, x: &Matrix, centroids: &Matrix) -> Vec<(u32, f32)> {
@@ -51,11 +66,15 @@ impl AnnBackend for NativeBackend {
     }
 
     fn knn(&self, x: &Matrix, k: usize) -> (Vec<u32>, Vec<f32>) {
-        distance::self_knn_tiled(x, k, num_threads())
+        self.knn_with_budget(x, k, num_threads())
     }
 
     fn knn_with_budget(&self, x: &Matrix, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
-        distance::self_knn_tiled(x, k, threads)
+        if self.quantize {
+            quant::self_knn_quantized(x, k, threads)
+        } else {
+            distance::self_knn_tiled(x, k, threads)
+        }
     }
 }
 
@@ -210,6 +229,27 @@ mod tests {
             assert_eq!(idx[i * 5 + 2], u32::MAX);
             assert!(dd[i * 5 + 2].is_infinite());
             assert_ne!(idx[i * 5], u32::MAX);
+        }
+    }
+
+    /// The int8 screen is containment-guaranteed and the rerank is the
+    /// exact f32 kernel, so the quantized backend must reproduce the
+    /// default backend bit for bit (the `--quantize-build` contract).
+    #[test]
+    fn quantized_backend_is_bitwise_equal() {
+        let mut rng = Rng::new(4);
+        let x = randm(&mut rng, 150, 12);
+        let exact = NativeBackend::default();
+        let quant = NativeBackend::quantized(true);
+        for k in [1, 7, 16] {
+            let (ia, da) = exact.knn(&x, k);
+            let (ib, db) = quant.knn(&x, k);
+            assert_eq!(ia, ib, "k={k}: index mismatch");
+            assert_eq!(
+                da.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                db.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "k={k}: distance bits mismatch"
+            );
         }
     }
 

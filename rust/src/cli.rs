@@ -2,6 +2,9 @@
 //!
 //! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
 //! positional arguments; used by the `nomad` binary and the examples.
+//! Flags are free-form: subcommands pull what they need through the typed
+//! accessors (e.g. the boolean `--quantize-build` consumed by the `nomad`
+//! binary's backend selection).
 //!
 //! Malformed values are **errors**: `--threads abc` used to silently fall
 //! back to the default (running single-threaded with no warning); now the

@@ -28,11 +28,14 @@
 //!   in a fixed edge order, the result is bitwise independent of the
 //!   worker-thread count *by construction* rather than by careful chunking.
 //!   The remote-means table arrives SoA (xs/ys/ws) so the O(R) mean pass
-//!   runs as an unrolled 4-lane microkernel (same discipline as
-//!   `linalg::distance::dot4`).
+//!   runs on the runtime-dispatched 8-lane microkernels
+//!   (`linalg::simd::mean_field` / `mean_repulse` — the same lane
+//!   discipline as the distance engine's `simd::dot4`, bitwise identical
+//!   with SIMD on or off; DESIGN.md §16).
 
 use super::block::EdgeTranspose;
 use super::{ClusterBlock, StepBackend, StepInputs, SyncStepBackend};
+use crate::linalg::simd;
 use crate::util::parallel::{num_threads, par_for_chunks, par_map, par_rows_mut};
 use crate::util::rng::Rng;
 
@@ -99,102 +102,6 @@ fn q2(ax: f32, ay: f32, bx: f32, by: f32) -> (f32, f32, f32) {
     let dx = ax - bx;
     let dy = ay - by;
     (1.0 / (1.0 + dx * dx + dy * dy), dx, dy)
-}
-
-/// SoA mean-field microkernel: Cauchy kernels of one head against every
-/// remote mean, 4 independent accumulator lanes combined as
-/// `((a0+a1)+(a2+a3))+tail` (the `dot4` association discipline).  Caches
-/// q and the deltas for the repulsion pass and returns Σ_r w_r q_r.
-#[inline]
-fn mean_field4(
-    px: f32,
-    py: f32,
-    xs: &[f32],
-    ys: &[f32],
-    ws: &[f32],
-    q: &mut [f32],
-    dx: &mut [f32],
-    dy: &mut [f32],
-) -> f32 {
-    let r = ws.len();
-    let chunks = r / 4 * 4;
-    let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    let mut i = 0;
-    while i < chunks {
-        let d0x = px - xs[i];
-        let d0y = py - ys[i];
-        let q0 = 1.0 / (1.0 + d0x * d0x + d0y * d0y);
-        q[i] = q0;
-        dx[i] = d0x;
-        dy[i] = d0y;
-        a0 += ws[i] * q0;
-
-        let d1x = px - xs[i + 1];
-        let d1y = py - ys[i + 1];
-        let q1 = 1.0 / (1.0 + d1x * d1x + d1y * d1y);
-        q[i + 1] = q1;
-        dx[i + 1] = d1x;
-        dy[i + 1] = d1y;
-        a1 += ws[i + 1] * q1;
-
-        let d2x = px - xs[i + 2];
-        let d2y = py - ys[i + 2];
-        let qq2 = 1.0 / (1.0 + d2x * d2x + d2y * d2y);
-        q[i + 2] = qq2;
-        dx[i + 2] = d2x;
-        dy[i + 2] = d2y;
-        a2 += ws[i + 2] * qq2;
-
-        let d3x = px - xs[i + 3];
-        let d3y = py - ys[i + 3];
-        let q3 = 1.0 / (1.0 + d3x * d3x + d3y * d3y);
-        q[i + 3] = q3;
-        dx[i + 3] = d3x;
-        dy[i + 3] = d3y;
-        a3 += ws[i + 3] * q3;
-
-        i += 4;
-    }
-    let mut tail = 0.0f32;
-    while i < r {
-        let dix = px - xs[i];
-        let diy = py - ys[i];
-        let qi = 1.0 / (1.0 + dix * dix + diy * diy);
-        q[i] = qi;
-        dx[i] = dix;
-        dy[i] = diy;
-        tail += ws[i] * qi;
-        i += 1;
-    }
-    ((a0 + a1) + (a2 + a3)) + tail
-}
-
-/// Mean-repulsion microkernel over the cached q/delta buffers: returns
-/// `(Σ_r w_r q_r² dx_r, Σ_r w_r q_r² dy_r)` with the same 4-lane
-/// accumulator layout as [`mean_field4`].
-#[inline]
-fn mean_repulse4(ws: &[f32], q: &[f32], dx: &[f32], dy: &[f32]) -> (f32, f32) {
-    let r = ws.len();
-    let chunks = r / 4 * 4;
-    let mut gx = [0.0f32; 4];
-    let mut gy = [0.0f32; 4];
-    let mut i = 0;
-    while i < chunks {
-        for lane in 0..4 {
-            let c = ws[i + lane] * q[i + lane] * q[i + lane];
-            gx[lane] += c * dx[i + lane];
-            gy[lane] += c * dy[i + lane];
-        }
-        i += 4;
-    }
-    let (mut tx, mut ty) = (0.0f32, 0.0f32);
-    while i < r {
-        let c = ws[i] * q[i] * q[i];
-        tx += c * dx[i];
-        ty += c * dy[i];
-        i += 1;
-    }
-    (((gx[0] + gx[1]) + (gx[2] + gx[3])) + tx, ((gy[0] + gy[1]) + (gy[2] + gy[3])) + ty)
 }
 
 /// Accumulate the unnormalized gradient and loss contributions of heads
@@ -440,7 +347,8 @@ fn gather_head_pass(
         let (pix, piy) = (pos[i * 2], pos[i * 2 + 1]);
 
         // ---- negative mass A_i (SoA means microkernel + exact negatives) -
-        let mut a = mean_field4(pix, piy, mean_x, mean_y, mean_w, &mut q_ir, &mut dxr, &mut dyr);
+        let mut a =
+            simd::mean_field(pix, piy, mean_x, mean_y, mean_w, &mut q_ir, &mut dxr, &mut dyr);
         for s in 0..negs {
             let nloc = neg_idx[i * negs + s] as usize;
             let (q, _, _) = q2(pix, piy, pos[nloc * 2], pos[nloc * 2 + 1]);
@@ -471,7 +379,7 @@ fn gather_head_pass(
 
         if s_i != 0.0 {
             // ---- mean repulsion (means are stop-gradient, no reaction) ---
-            let (mx, my) = mean_repulse4(mean_w, &q_ir, &dxr, &dyr);
+            let (mx, my) = simd::mean_repulse(mean_w, &q_ir, &dxr, &dyr);
             gx -= 2.0 * s_i * mx;
             gy -= 2.0 * s_i * my;
 

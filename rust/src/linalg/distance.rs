@@ -14,9 +14,11 @@
 //! Row squared-norms are precomputed once; the inner loop is a
 //! cache-blocked x·yᵀ microkernel ([`TILE_Q`] query rows × [`TILE_C`]
 //! corpus rows per tile, one corpus tile stays L1-resident while every
-//! query row of the chunk streams over it) with a **fused** top-k
-//! selection pass ([`TopK`]) consuming each d² tile as it is produced —
-//! the full n×m distance matrix is never materialized.
+//! query row of the chunk streams over it) built on the runtime-
+//! dispatched 1×4 register block [`simd::dot4`] (8-lane accumulators,
+//! bitwise identical SIMD-on and SIMD-off — DESIGN.md §16), with a
+//! **fused** top-k selection pass ([`TopK`]) consuming each d² tile as
+//! it is produced — the full n×m distance matrix is never materialized.
 //!
 //! **Determinism contract** (mirrors the step path, DESIGN.md §7): tile
 //! sizes are fixed constants, each query row is processed start-to-finish
@@ -28,7 +30,7 @@
 //! contract, and the property tests in `tests/distance_engine.rs` check
 //! exact agreement.
 
-use super::{dot, Matrix};
+use super::{dot, simd, Matrix};
 use crate::util::parallel::par_for_chunks;
 
 /// Query rows per worker chunk (i-tile).  Each chunk is claimed by one
@@ -50,8 +52,10 @@ const NO_IDX: u32 = u32::MAX;
 /// The engine's total order on candidates: ascending squared distance,
 /// ties broken toward the smaller corpus index.  `total_cmp` keeps NaN
 /// from panicking (NaN sorts above +∞, so it never wins a slot).
+/// `pub(crate)` so the quantized candidate scan (`linalg::quant`) can
+/// implement the identical contract.
 #[inline]
-fn lex_less(da: f32, ia: u32, db: f32, ib: u32) -> bool {
+pub(crate) fn lex_less(da: f32, ia: u32, db: f32, ib: u32) -> bool {
     match da.total_cmp(&db) {
         std::cmp::Ordering::Less => true,
         std::cmp::Ordering::Greater => false,
@@ -63,9 +67,11 @@ fn lex_less(da: f32, ia: u32, db: f32, ib: u32) -> bool {
 /// `f32::max(NaN, 0.0)` returns 0.0, which would let a NaN row win every
 /// top-k/argmin slot with a perfect distance — the opposite of the
 /// documented contract.  `NaN < 0.0` is false, so NaN passes through and
-/// `total_cmp` sorts it above +∞ where it never wins.
+/// `total_cmp` sorts it above +∞ where it never wins.  `pub(crate)` for
+/// the exact rerank in `linalg::quant`, which must reproduce this
+/// expression bit for bit.
 #[inline]
-fn clamp0(d: f32) -> f32 {
+pub(crate) fn clamp0(d: f32) -> f32 {
     if d < 0.0 {
         0.0
     } else {
@@ -83,32 +89,6 @@ pub fn row_sq_norms(m: &Matrix) -> Vec<f32> {
             dot(row, row)
         })
         .collect()
-}
-
-/// Dot products of one query row against four corpus rows in one pass.
-/// Each accumulator follows exactly the 4-way-unrolled association order
-/// of [`dot`], so `dot4(a, b0, b1, b2, b3)[t]` is bitwise equal to
-/// `dot(a, bt)` — the engine's numerics do not depend on the microkernel
-/// blocking.
-#[inline]
-fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b0[j] + a[j + 1] * b0[j + 1] + a[j + 2] * b0[j + 2] + a[j + 3] * b0[j + 3];
-        s1 += a[j] * b1[j] + a[j + 1] * b1[j + 1] + a[j + 2] * b1[j + 2] + a[j + 3] * b1[j + 3];
-        s2 += a[j] * b2[j] + a[j + 1] * b2[j + 1] + a[j + 2] * b2[j + 2] + a[j + 3] * b2[j + 3];
-        s3 += a[j] * b3[j] + a[j + 1] * b3[j + 1] + a[j + 2] * b3[j + 2] + a[j + 3] * b3[j + 3];
-    }
-    for j in chunks * 4..n {
-        s0 += a[j] * b0[j];
-        s1 += a[j] * b1[j];
-        s2 += a[j] * b2[j];
-        s3 += a[j] * b3[j];
-    }
-    [s0, s1, s2, s3]
 }
 
 /// Bounded best-k accumulator under the `(d², index)` order: an
@@ -259,7 +239,7 @@ pub fn topk_tiled_into(
                 let top = &mut sel[bi];
                 let mut j = j0;
                 while j + 4 <= j1 {
-                    let ds = dot4(
+                    let ds = simd::dot4(
                         qi,
                         corpus.row(j),
                         corpus.row(j + 1),
@@ -360,7 +340,7 @@ pub fn assign_tiled(q: &Matrix, corpus: &Matrix, threads: usize) -> Vec<(u32, f3
                 let (mut bd, mut bj) = best[bi];
                 let mut j = j0;
                 while j + 4 <= j1 {
-                    let ds = dot4(
+                    let ds = simd::dot4(
                         qi,
                         corpus.row(j),
                         corpus.row(j + 1),
@@ -425,7 +405,7 @@ mod tests {
             let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
             let bs: Vec<Vec<f32>> =
                 (0..4).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
-            let got = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            let got = simd::dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
             for t in 0..4 {
                 assert_eq!(
                     got[t].to_bits(),

@@ -1,12 +1,16 @@
 //! Dense linear algebra substrate: row-major f32 matrices, the operations
 //! NOMAD needs (norms, distances, matmul-free PCA via power iteration),
-//! the LSH used to seed the K-Means ANN index, and the tiled norm-trick
+//! the LSH used to seed the K-Means ANN index, the tiled norm-trick
 //! distance engine behind the ANN build pipeline ([`distance`],
-//! DESIGN.md §8).
+//! DESIGN.md §8), the runtime-dispatched SIMD kernel layer every hot
+//! f32 loop funnels through ([`simd`], DESIGN.md §16), and the int8
+//! row quantizer for the `--quantize-build` candidate scan ([`quant`]).
 
 pub mod distance;
 pub mod lsh;
 pub mod pca;
+pub mod quant;
+pub mod simd;
 
 /// A dense row-major f32 matrix (`rows x cols`).
 ///
@@ -49,15 +53,20 @@ impl Matrix {
         out
     }
 
-    /// Column means.
+    /// Column means. The mean of zero rows is undefined — an empty
+    /// matrix is rejected loudly rather than silently yielding an
+    /// all-zero mean (which once masked bugs upstream; the K-Means
+    /// reseed path guards its counts and can never reach this, and PCA
+    /// runs on non-empty datasets by construction).
     pub fn col_means(&self) -> Vec<f32> {
+        assert!(self.rows > 0, "col_means: empty matrix has no mean");
         let mut m = vec![0.0f64; self.cols];
         for r in 0..self.rows {
             for (c, v) in self.row(r).iter().enumerate() {
                 m[c] += *v as f64;
             }
         }
-        m.iter().map(|v| (*v / self.rows.max(1) as f64) as f32).collect()
+        m.iter().map(|v| (*v / self.rows as f64) as f32).collect()
     }
 
     /// Subtract a row vector from every row, in place.
@@ -71,45 +80,23 @@ impl Matrix {
     }
 }
 
-/// Squared euclidean distance of two equal-length slices.
+/// Squared euclidean distance of two equal-length slices — the
+/// canonical 8-lane kernel ([`simd::d2`]), runtime-dispatched between
+/// AVX2 and a bitwise-identical scalar fallback. This is the innermost
+/// loop of the native K-Means / kNN path.
 #[inline]
 pub fn d2(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-way unrolled: autovectorizes well; this is the innermost loop of the
-    // native K-Means / kNN path.
-    let n = a.len();
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        let d0 = a[j] - b[j];
-        let d1 = a[j + 1] - b[j + 1];
-        let d2_ = a[j + 2] - b[j + 2];
-        let d3 = a[j + 3] - b[j + 3];
-        acc += d0 * d0 + d1 * d1 + d2_ * d2_ + d3 * d3;
-    }
-    for j in chunks * 4..n {
-        let d = a[j] - b[j];
-        acc += d * d;
-    }
-    acc
+    simd::d2(a, b)
 }
 
-/// Dot product.
+/// Dot product — the canonical 8-lane kernel ([`simd::dot`]),
+/// runtime-dispatched between AVX2 and a bitwise-identical scalar
+/// fallback.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    let n = a.len();
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc += a[j] * b[j] + a[j + 1] * b[j + 1] + a[j + 2] * b[j + 2] + a[j + 3] * b[j + 3];
-    }
-    for j in chunks * 4..n {
-        acc += a[j] * b[j];
-    }
-    acc
+    simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -154,6 +141,16 @@ mod tests {
         assert_eq!(mu, vec![2., 20.]);
         m.sub_row(&mu);
         assert_eq!(m.data, vec![-1., -10., 1., 10.]);
+    }
+
+    /// An empty matrix has no mean; the old code silently returned an
+    /// all-zero vector, which upstream consumers can't tell apart from
+    /// a legitimate centered dataset.
+    #[test]
+    #[should_panic(expected = "col_means: empty matrix")]
+    fn col_means_rejects_empty_matrix() {
+        let m = Matrix::zeros(0, 3);
+        let _ = m.col_means();
     }
 
     #[test]

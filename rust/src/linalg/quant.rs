@@ -1,0 +1,349 @@
+//! Int8 row quantization for the ANN build's candidate scan
+//! (DESIGN.md §16, `--quantize-build`).
+//!
+//! Each corpus row is affinely quantized on its own scale:
+//! `x̂_t = offset + scale · code_t` with `code_t ∈ [-127, 127]`, chosen
+//! so the row's finite range maps onto the full code range. The
+//! quantized candidate scan computes, per pair, a **conservative
+//! interval** `[lb, ub]` around the exact engine's clamped norm-trick
+//! distance using only int8 dot products (i32 accumulate) and per-row
+//! f64 stats:
+//!
+//! * the reconstructed distance expands to
+//!   `d̂² = d·Δo² + 2Δo(s_iΣa − s_jΣb) + s_i²Σa² + s_j²Σb² − 2s_is_jΣab`
+//!   where `Σab` is the only per-pair term — one int8 dot;
+//! * the triangle inequality bounds the true distance by
+//!   `d̂ ± (‖x_i − x̂_i‖ + ‖x_j − x̂_j‖)` (residual norms precomputed
+//!   exactly in f64 at quantization time);
+//! * an additive slack covers the exact engine's own f32 rounding, so
+//!   the interval brackets the *computed* distance, not just the true
+//!   one.
+//!
+//! Per query, candidates whose `lb` exceeds the k-th smallest `ub`
+//! cannot reach the top-k and are skipped; every survivor is then
+//! **reranked with the exact f32 kernel, reproducing the engine's
+//! expression bit for bit in the same ascending-j order**. Survivors
+//! provably contain the true top-k (any candidate beaten by k upper
+//! bounds loses to k real distances), so the final kNN output is
+//! **bitwise equal** to [`self_knn_tiled`] — quantization changes build
+//! speed, never results. All bound comparisons keep candidates on NaN,
+//! degrading NaN-poisoned rows to a full exact scan rather than risking
+//! a divergent prune.
+
+use super::distance::{clamp0, row_sq_norms, self_knn_tiled, TopK, TILE_Q};
+use super::{dot, Matrix};
+use crate::util::parallel::par_for_chunks;
+
+/// A row-quantized corpus: int8 codes plus the per-row f64 stats the
+/// bound computation needs (scale, offset, residual norm, Σcode,
+/// Σcode²).
+pub struct QuantizedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    codes: Vec<i8>,
+    scale: Vec<f64>,
+    offset: Vec<f64>,
+    /// Exact reconstruction residual ‖x − x̂‖ per row (NaN when the row
+    /// holds non-finite values — such rows are never pruned).
+    err: Vec<f64>,
+    sum: Vec<i64>,
+    sum_sq: Vec<i64>,
+}
+
+impl QuantizedMatrix {
+    /// Quantize every row of `x` at its own scale/offset. Degenerate
+    /// rows (empty, constant, all-NaN) keep code 0 everywhere and
+    /// reconstruct to the constant `offset`; non-finite values poison
+    /// the row's residual to NaN, which the scan treats as "never
+    /// prune".
+    pub fn quantize(x: &Matrix) -> QuantizedMatrix {
+        let (rows, cols) = (x.rows, x.cols);
+        assert!(cols <= 100_000, "quantized scan: i32 code dot caps dims at 100k");
+        let mut codes = vec![0i8; rows * cols];
+        let mut scale = vec![1.0f64; rows];
+        let mut offset = vec![0.0f64; rows];
+        let mut err = vec![0.0f64; rows];
+        let mut sum = vec![0i64; rows];
+        let mut sum_sq = vec![0i64; rows];
+        for r in 0..rows {
+            let row = x.row(r);
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &v in row {
+                if v.is_nan() {
+                    continue;
+                }
+                let v = v as f64;
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+            let (s, o) = if lo > hi {
+                (1.0, 0.0) // empty or all-NaN row
+            } else if hi == lo {
+                (1.0, lo) // constant row: codes stay 0, exact reconstruction
+            } else {
+                ((hi - lo) / 254.0, (lo + hi) / 2.0)
+            };
+            scale[r] = s;
+            offset[r] = o;
+            let cr = &mut codes[r * cols..(r + 1) * cols];
+            let mut e2 = 0.0f64;
+            let (mut cs, mut cs2) = (0i64, 0i64);
+            for (t, &v) in row.iter().enumerate() {
+                // NaN propagates through clamp and saturates to 0 in the
+                // cast; ±inf saturates to ±127 — either way the residual
+                // goes NaN and disables pruning for this row
+                let c = ((v as f64 - o) / s).round().clamp(-127.0, 127.0) as i8;
+                cr[t] = c;
+                cs += c as i64;
+                cs2 += (c as i64) * (c as i64);
+                let resid = v as f64 - (o + s * c as f64);
+                e2 += resid * resid;
+            }
+            sum[r] = cs;
+            sum_sq[r] = cs2;
+            err[r] = e2.sqrt();
+        }
+        QuantizedMatrix { rows, cols, codes, scale, offset, err, sum, sum_sq }
+    }
+
+    /// Conservative f64 interval around the exact engine's clamped
+    /// norm-trick d²(i, j), from the codes alone (one int8 dot). The
+    /// slack term covers the engine's f32 rounding — `O(d·ε·(nᵢ+nⱼ))`,
+    /// overshot by >20× — so widening only costs rerank work, never
+    /// correctness. NaN stats yield NaN bounds, which the scan keeps.
+    fn bound_pair(&self, i: usize, j: usize, norms: &[f32]) -> (f64, f64) {
+        let d = self.cols as f64;
+        let ni = norms[i] as f64;
+        let nj = norms[j] as f64;
+        let slack = (ni + nj) * (1e-4 + 1e-6 * d) + 1e-6;
+        let si = self.scale[i];
+        let sj = self.scale[j];
+        let doff = self.offset[i] - self.offset[j];
+        let a = &self.codes[i * self.cols..(i + 1) * self.cols];
+        let b = &self.codes[j * self.cols..(j + 1) * self.cols];
+        let mut cd = 0i32;
+        for (ca, cb) in a.iter().zip(b) {
+            cd += (*ca as i32) * (*cb as i32);
+        }
+        let dhat2 = d * doff * doff
+            + 2.0 * doff * (si * self.sum[i] as f64 - sj * self.sum[j] as f64)
+            + si * si * self.sum_sq[i] as f64
+            + sj * sj * self.sum_sq[j] as f64
+            - 2.0 * si * sj * cd as f64;
+        // not f64::max — that would absorb a NaN d̂² into 0.0
+        let dhat = if dhat2 > 0.0 { dhat2.sqrt() } else { 0.0 };
+        let e = self.err[i] + self.err[j];
+        let ub = (dhat + e) * (dhat + e) * (1.0 + 1e-9) + slack;
+        let lo = dhat - e;
+        let lb = if lo > 0.0 { lo * lo * (1.0 - 1e-9) - slack } else { f64::NEG_INFINITY };
+        (lb, ub)
+    }
+}
+
+/// k-th smallest (1-based) upper bound under `total_cmp`; +∞ when there
+/// are at most k candidates (nothing can be pruned) or when the cut
+/// lands on NaN (NaN bounds must never prune anyone).
+fn kth_smallest(scratch: &mut [f64], k: usize) -> f64 {
+    if scratch.len() <= k {
+        return f64::INFINITY;
+    }
+    let (_, kth, _) = scratch.select_nth_unstable_by(k - 1, |a, b| a.total_cmp(b));
+    if kth.is_nan() {
+        f64::INFINITY
+    } else {
+        *kth
+    }
+}
+
+/// Exact kNN among the rows of `x` via the int8-screened candidate scan:
+/// same signature, same padding, and **bitwise-equal output** to
+/// [`self_knn_tiled`] — only the amount of f32 work per query changes.
+/// Thread-invariant for the same reason as the exact engine: each query
+/// row is screened and reranked whole by exactly one worker, in
+/// globally ascending j order.
+pub fn self_knn_quantized(x: &Matrix, k: usize, threads: usize) -> (Vec<u32>, Vec<f32>) {
+    let n = x.rows;
+    let mut idx = vec![u32::MAX; n * k];
+    let mut dd = vec![f32::INFINITY; n * k];
+    if k == 0 || n == 0 {
+        return (idx, dd);
+    }
+    let qm = QuantizedMatrix::quantize(x);
+    let norms = row_sq_norms(x);
+    let idx_base = idx.as_mut_ptr() as usize;
+    let d2_base = dd.as_mut_ptr() as usize;
+    par_for_chunks(n, TILE_Q, threads, |i0, i1| {
+        let mut lb = vec![0.0f64; n];
+        let mut scratch: Vec<f64> = Vec::with_capacity(n);
+        for i in i0..i1 {
+            let qi = x.row(i);
+            let nqi = norms[i];
+            scratch.clear();
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let (l, u) = qm.bound_pair(i, j, &norms);
+                lb[j] = l;
+                scratch.push(u);
+            }
+            let u = kth_smallest(&mut scratch, k);
+            let mut top = TopK::new(k);
+            for j in 0..n {
+                // keep-on-NaN: `!(lb > u)` keeps NaN bounds in the scan
+                if j == i || lb[j] > u {
+                    continue;
+                }
+                // the exact engine's expression, bit for bit, in the
+                // same ascending-j candidate order
+                let dist = clamp0(nqi + norms[j] - 2.0 * dot(qi, x.row(j)));
+                top.push(dist, j as u32);
+            }
+            let off = i * k;
+            // SAFETY: par_for_chunks hands out disjoint [i0, i1) ranges,
+            // so row i's k output slots are written by exactly one
+            // worker and both vectors outlive the parallel scope.
+            let oi = unsafe { std::slice::from_raw_parts_mut((idx_base as *mut u32).add(off), k) };
+            // SAFETY: as above — the same row of the d² vector.
+            let od = unsafe { std::slice::from_raw_parts_mut((d2_base as *mut f32).add(off), k) };
+            top.write_into(oi, od);
+        }
+    });
+    (idx, dd)
+}
+
+/// Exhaustive check that the quantized scan is bitwise equal to the
+/// exact engine on `x` — the acceptance gauge wired into
+/// `benches/index_build.rs` (exit-nonzero CI gate) and the tests below.
+pub fn quantized_matches_exact(x: &Matrix, k: usize, threads: usize) -> bool {
+    let (qi, qd) = self_knn_quantized(x, k, threads);
+    let (ei, ed) = self_knn_tiled(x, k, threads);
+    let bits = |a: &f32, b: &f32| a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan());
+    qi == ei && qd.len() == ed.len() && qd.iter().zip(&ed).all(|(a, b)| bits(a, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, n: usize, d: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, d);
+        for v in m.data.iter_mut() {
+            *v = rng.normal();
+        }
+        m
+    }
+
+    fn assert_knn_eq(x: &Matrix, k: usize, threads: usize, ctx: &str) {
+        let (qi, qd) = self_knn_quantized(x, k, threads);
+        let (ei, ed) = self_knn_tiled(x, k, threads);
+        assert_eq!(qi, ei, "{ctx}: indices diverge");
+        assert_eq!(qd.len(), ed.len(), "{ctx}: d² shape");
+        for (s, (a, b)) in qd.iter().zip(&ed).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits() || (a.is_nan() && b.is_nan()),
+                "{ctx}: d²[{s}] {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_knn_bitwise_equal_on_gaussian_data() {
+        let mut rng = Rng::new(21);
+        for &(n, d) in &[(257usize, 8usize), (120, 33), (300, 16)] {
+            let x = randm(&mut rng, n, d);
+            for &k in &[1usize, 5, 17] {
+                assert_knn_eq(&x, k, 3, &format!("gaussian n={n} d={d} k={k}"));
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_knn_bitwise_equal_with_ties_and_duplicates() {
+        // integer grid data: masses of exactly tied distances, where any
+        // deviation from the (d², index) contract shows up immediately
+        let mut rng = Rng::new(22);
+        let mut x = Matrix::zeros(200, 12);
+        for v in x.data.iter_mut() {
+            *v = rng.below(4) as f32;
+        }
+        for r in 0..20 {
+            let dup = x.row(r).to_vec();
+            x.row_mut(199 - r).copy_from_slice(&dup);
+        }
+        assert_knn_eq(&x, 5, 4, "tied integer grid");
+    }
+
+    #[test]
+    fn quantized_knn_bitwise_equal_with_nan_rows() {
+        let mut rng = Rng::new(23);
+        let mut x = randm(&mut rng, 90, 9);
+        for v in x.row_mut(17) {
+            *v = f32::NAN; // fully poisoned row
+        }
+        x.data[5] = f32::NAN; // scattered single NaN
+        x.data[300] = f32::INFINITY;
+        assert_knn_eq(&x, 4, 2, "NaN rows");
+    }
+
+    #[test]
+    fn quantized_knn_bitwise_equal_on_degenerate_shapes() {
+        let mut rng = Rng::new(24);
+        let x = randm(&mut rng, 7, 5);
+        assert_knn_eq(&x, 0, 2, "k=0");
+        assert_knn_eq(&x, 7, 2, "k=n");
+        assert_knn_eq(&x, 20, 2, "k>n");
+        assert_knn_eq(&randm(&mut rng, 1, 5), 3, 2, "single row");
+        assert_knn_eq(&randm(&mut rng, 2, 5), 1, 2, "two rows");
+        assert_knn_eq(&Matrix::zeros(0, 5), 3, 2, "empty matrix");
+        assert_knn_eq(&Matrix::zeros(40, 6), 3, 2, "constant zero matrix");
+        let mut wide = randm(&mut rng, 30, 8);
+        wide.data[10] = 1.0e30;
+        wide.data[50] = -1.0e30;
+        assert_knn_eq(&wide, 3, 2, "huge-range rows");
+    }
+
+    #[test]
+    fn quantized_knn_thread_invariant() {
+        let mut rng = Rng::new(25);
+        let x = randm(&mut rng, 150, 14);
+        let base = self_knn_quantized(&x, 6, 1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(self_knn_quantized(&x, 6, threads), base, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn quantized_matches_exact_gauge() {
+        let mut rng = Rng::new(26);
+        let x = randm(&mut rng, 128, 32);
+        assert!(quantized_matches_exact(&x, 15, 4));
+    }
+
+    #[test]
+    fn quantize_reconstruction_is_tight_and_consistent() {
+        let mut rng = Rng::new(27);
+        let x = randm(&mut rng, 40, 23);
+        let qm = QuantizedMatrix::quantize(&x);
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let s = qm.scale[r];
+            let o = qm.offset[r];
+            let mut e2 = 0.0f64;
+            for (t, &v) in row.iter().enumerate() {
+                let c = qm.codes[r * qm.cols + t] as f64;
+                let resid = (v as f64 - (o + s * c)).abs();
+                assert!(resid <= s * 0.5 + 1e-12, "row {r} col {t}: resid {resid} > s/2 {s}");
+                e2 += resid * resid;
+            }
+            let err = qm.err[r];
+            assert!((err - e2.sqrt()).abs() <= 1e-12 * e2.sqrt().max(1.0), "row {r} err");
+        }
+    }
+}

@@ -1,0 +1,727 @@
+//! Runtime-dispatched 8-lane SIMD microkernels (DESIGN.md §16).
+//!
+//! Every hot f32 kernel in the crate funnels through this module: the
+//! canonical [`dot`]/[`d2`] pair (re-wrapped by `linalg`), the distance
+//! engine's 1×4 register block ([`dot4`]), and the gather engine's fused
+//! mean-field / mean-repulsion passes ([`mean_field`]/[`mean_repulse`]).
+//! Two implementations exist per kernel:
+//!
+//! * an **AVX2 path** built from `std::arch` intrinsics — deliberately
+//!   FMA-free (`vmulps`/`vaddps`/`vsubps`/`vdivps` only), because every
+//!   per-lane AVX2 op rounds exactly like its scalar f32 counterpart,
+//!   while an FMA contraction would not;
+//! * an **array-based scalar fallback** that keeps the same eight
+//!   accumulators (`[f32; 8]`, lane `l` sums elements `j*8 + l`) and
+//!   reduces them with the same fixed tree ([`reduce8`]), followed by
+//!   the identical sequential tail.
+//!
+//! Both paths therefore perform bit-identical IEEE-754 operations in the
+//! same association order, so SIMD-on vs SIMD-off is **bitwise equal**
+//! on every input shape and the engine's (d², index) tie contract and
+//! thread-invariance gates carry over unchanged. (NaN *payload* bits are
+//! propagated but not part of the contract — the compiler may commute
+//! add/mul operands, which only matters when two distinct NaN payloads
+//! meet.)
+//!
+//! Dispatch is resolved once per process: `NOMAD_SIMD=scalar|off|0`
+//! forces the fallback, otherwise AVX2 is used when the CPU reports it
+//! ([`simd_active`] tells which path won). The `*_scalar` kernels stay
+//! `pub` so tests and benches can compare the dispatched path against
+//! the fallback in-process, whatever the host CPU.
+//!
+//! This is the only module allowed to touch `std::arch` — the xtask
+//! `simd_arch` lint rule (DESIGN.md §14) rejects raw intrinsics
+//! anywhere else in the tree.
+
+#[cfg(target_arch = "x86_64")]
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Accumulator lanes per block; one AVX2 `__m256` register of f32.
+pub const LANES: usize = 8;
+
+#[cfg(target_arch = "x86_64")]
+const MODE_UNRESOLVED: u8 = 0;
+#[cfg(target_arch = "x86_64")]
+const MODE_SCALAR: u8 = 1;
+#[cfg(target_arch = "x86_64")]
+const MODE_AVX2: u8 = 2;
+
+/// Process-wide dispatch decision; 0 until first use, then sticky.
+#[cfg(target_arch = "x86_64")]
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNRESOLVED);
+
+#[cfg(target_arch = "x86_64")]
+#[inline(always)]
+fn mode() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m == MODE_UNRESOLVED {
+        resolve_mode()
+    } else {
+        m
+    }
+}
+
+/// One-time dispatch resolution: honour the `NOMAD_SIMD` kill switch,
+/// then probe the CPU. Racing threads compute the same value, so the
+/// relaxed store is benign.
+#[cfg(target_arch = "x86_64")]
+#[cold]
+fn resolve_mode() -> u8 {
+    let forced_scalar = matches!(
+        std::env::var("NOMAD_SIMD").map(|v| v.to_ascii_lowercase()).as_deref(),
+        Ok("scalar") | Ok("off") | Ok("0")
+    );
+    let m = if !forced_scalar && std::is_x86_feature_detected!("avx2") {
+        MODE_AVX2
+    } else {
+        MODE_SCALAR
+    };
+    MODE.store(m, Ordering::Relaxed);
+    m
+}
+
+/// True when the AVX2 path is active for this process (false on
+/// non-x86_64 builds, CPUs without AVX2, or under `NOMAD_SIMD=scalar`).
+pub fn simd_active() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        mode() == MODE_AVX2
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The fixed reduction tree shared by both paths: pairwise within each
+/// 128-bit half, then across halves — the order a hardware horizontal
+/// reduction would use, spelled out so the scalar fallback matches the
+/// AVX2 path bit for bit.
+#[inline(always)]
+fn reduce8(s: [f32; 8]) -> f32 {
+    ((s[0] + s[1]) + (s[2] + s[3])) + ((s[4] + s[5]) + (s[6] + s[7]))
+}
+
+// ---- scalar fallbacks (the semantic reference) ---------------------------
+
+/// Scalar fallback for [`dot`]: eight accumulators, fixed reduction
+/// tree, sequential tail.
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let blocks = n - n % LANES;
+    let mut s = [0.0f32; LANES];
+    let mut j = 0;
+    while j < blocks {
+        for l in 0..LANES {
+            s[l] += a[j + l] * b[j + l];
+        }
+        j += LANES;
+    }
+    let mut acc = reduce8(s);
+    while j < n {
+        acc += a[j] * b[j];
+        j += 1;
+    }
+    acc
+}
+
+/// Scalar fallback for [`d2`]: per-lane `(a-b)²` accumulation with the
+/// same lane discipline as [`dot_scalar`].
+pub fn d2_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let blocks = n - n % LANES;
+    let mut s = [0.0f32; LANES];
+    let mut j = 0;
+    while j < blocks {
+        for l in 0..LANES {
+            let d = a[j + l] - b[j + l];
+            s[l] += d * d;
+        }
+        j += LANES;
+    }
+    let mut acc = reduce8(s);
+    while j < n {
+        let d = a[j] - b[j];
+        acc += d * d;
+        j += 1;
+    }
+    acc
+}
+
+/// Scalar fallback for [`dot4`]: one shared `a` load against four
+/// corpus rows — the distance engine's 1×4 register block, each lane
+/// set identical to a standalone [`dot_scalar`] call.
+pub fn dot4_scalar(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    let n = a.len();
+    let blocks = n - n % LANES;
+    let mut s = [[0.0f32; LANES]; 4];
+    let mut j = 0;
+    while j < blocks {
+        for l in 0..LANES {
+            let av = a[j + l];
+            s[0][l] += av * b0[j + l];
+            s[1][l] += av * b1[j + l];
+            s[2][l] += av * b2[j + l];
+            s[3][l] += av * b3[j + l];
+        }
+        j += LANES;
+    }
+    let mut out = [reduce8(s[0]), reduce8(s[1]), reduce8(s[2]), reduce8(s[3])];
+    while j < n {
+        let av = a[j];
+        out[0] += av * b0[j];
+        out[1] += av * b1[j];
+        out[2] += av * b2[j];
+        out[3] += av * b3[j];
+        j += 1;
+    }
+    out
+}
+
+/// Scalar fallback for [`mean_field`]: the gather engine's fused
+/// attractive mean pass — Cauchy kernel `q = 1/((1 + dx²) + dy²)`
+/// against every mean point, caching `q`/`dx`/`dy` for the repulsion
+/// pass, returning the weighted sum `Σ w·q`.
+pub fn mean_field_scalar(
+    px: f32,
+    py: f32,
+    xs: &[f32],
+    ys: &[f32],
+    ws: &[f32],
+    q: &mut [f32],
+    dx: &mut [f32],
+    dy: &mut [f32],
+) -> f32 {
+    let r = ws.len();
+    let blocks = r - r % LANES;
+    let mut s = [0.0f32; LANES];
+    let mut i = 0;
+    while i < blocks {
+        for l in 0..LANES {
+            let dix = px - xs[i + l];
+            let diy = py - ys[i + l];
+            let qi = 1.0 / ((1.0 + dix * dix) + diy * diy);
+            q[i + l] = qi;
+            dx[i + l] = dix;
+            dy[i + l] = diy;
+            s[l] += ws[i + l] * qi;
+        }
+        i += LANES;
+    }
+    let mut acc = reduce8(s);
+    while i < r {
+        let dix = px - xs[i];
+        let diy = py - ys[i];
+        let qi = 1.0 / ((1.0 + dix * dix) + diy * diy);
+        q[i] = qi;
+        dx[i] = dix;
+        dy[i] = diy;
+        acc += ws[i] * qi;
+        i += 1;
+    }
+    acc
+}
+
+/// Scalar fallback for [`mean_repulse`]: per-mean repulsive coefficient
+/// `c = (w·q)·q` applied to the cached displacement, accumulated into
+/// separate x/y lane sets.
+pub fn mean_repulse_scalar(ws: &[f32], q: &[f32], dx: &[f32], dy: &[f32]) -> (f32, f32) {
+    let r = ws.len();
+    let blocks = r - r % LANES;
+    let mut gx = [0.0f32; LANES];
+    let mut gy = [0.0f32; LANES];
+    let mut i = 0;
+    while i < blocks {
+        for l in 0..LANES {
+            let c = (ws[i + l] * q[i + l]) * q[i + l];
+            gx[l] += c * dx[i + l];
+            gy[l] += c * dy[i + l];
+        }
+        i += LANES;
+    }
+    let (mut ax, mut ay) = (reduce8(gx), reduce8(gy));
+    while i < r {
+        let c = (ws[i] * q[i]) * q[i];
+        ax += c * dx[i];
+        ay += c * dy[i];
+        i += 1;
+    }
+    (ax, ay)
+}
+
+// ---- AVX2 mirrors --------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! AVX2 mirrors of the scalar fallbacks. Every function performs
+    //! exactly the per-lane operation sequence of its fallback (no FMA
+    //! contraction, no reciprocal approximations), stores the lane
+    //! accumulators and reduces them with the same `reduce8` tree, then
+    //! runs the identical sequential tail — so results are bitwise
+    //! equal to the fallback on every input shape.
+
+    use super::{reduce8, LANES};
+    use std::arch::x86_64::*;
+
+    /// Unaligned 8-lane load of `p[i..i + 8]`.
+    ///
+    /// # Safety
+    /// `i + 8 <= p.len()` (debug-asserted) and the CPU must support
+    /// AVX2 — callers are themselves `target_feature(avx2)` functions
+    /// reached only through the module's dispatch gate.
+    // SAFETY: bounds are the caller's contract (debug-asserted below);
+    // the avx2 feature is guaranteed by the resolve_mode dispatch gate.
+    #[target_feature(enable = "avx2")]
+    unsafe fn load8(p: &[f32], i: usize) -> __m256 {
+        debug_assert!(i + LANES <= p.len());
+        _mm256_loadu_ps(p.as_ptr().add(i))
+    }
+
+    /// Unaligned 8-lane store to `p[i..i + 8]`.
+    ///
+    /// # Safety
+    /// `i + 8 <= p.len()` (debug-asserted) and the CPU must support
+    /// AVX2 (same contract as [`load8`]).
+    // SAFETY: bounds are the caller's contract (debug-asserted below);
+    // the avx2 feature is guaranteed by the resolve_mode dispatch gate.
+    #[target_feature(enable = "avx2")]
+    unsafe fn store8(p: &mut [f32], i: usize, v: __m256) {
+        debug_assert!(i + LANES <= p.len());
+        _mm256_storeu_ps(p.as_mut_ptr().add(i), v);
+    }
+
+    /// Horizontal reduction through the shared fixed tree: spill the
+    /// lanes and reuse the scalar `reduce8` so both paths agree bit for
+    /// bit.
+    ///
+    /// # Safety
+    /// CPU must support AVX2 (same contract as [`load8`]).
+    // SAFETY: writes 8 lanes into a stack array of exactly 8 f32s; the
+    // avx2 feature is guaranteed by the resolve_mode dispatch gate.
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        reduce8(lanes)
+    }
+
+    /// AVX2 mirror of [`super::dot_scalar`].
+    ///
+    /// # Safety
+    /// CPU must support AVX2; `a.len() == b.len()`.
+    // SAFETY: all lane loads stay inside a/b (blocks <= len, asserted
+    // in load8); avx2 is guaranteed by the resolve_mode dispatch gate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j < blocks {
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(load8(a, j), load8(b, j)));
+            j += LANES;
+        }
+        let mut t = reduce(acc);
+        while j < n {
+            t += a[j] * b[j];
+            j += 1;
+        }
+        t
+    }
+
+    /// AVX2 mirror of [`super::d2_scalar`].
+    ///
+    /// # Safety
+    /// CPU must support AVX2; `a.len() == b.len()`.
+    // SAFETY: all lane loads stay inside a/b (blocks <= len, asserted
+    // in load8); avx2 is guaranteed by the resolve_mode dispatch gate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn d2(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let blocks = n - n % LANES;
+        let mut acc = _mm256_setzero_ps();
+        let mut j = 0;
+        while j < blocks {
+            let vd = _mm256_sub_ps(load8(a, j), load8(b, j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(vd, vd));
+            j += LANES;
+        }
+        let mut t = reduce(acc);
+        while j < n {
+            let d = a[j] - b[j];
+            t += d * d;
+            j += 1;
+        }
+        t
+    }
+
+    /// AVX2 mirror of [`super::dot4_scalar`].
+    ///
+    /// # Safety
+    /// CPU must support AVX2; all five slices must have equal length.
+    // SAFETY: all lane loads stay inside the five equal-length slices
+    // (asserted in load8); avx2 is guaranteed by the dispatch gate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dot4(
+        a: &[f32],
+        b0: &[f32],
+        b1: &[f32],
+        b2: &[f32],
+        b3: &[f32],
+    ) -> [f32; 4] {
+        let n = a.len();
+        let blocks = n - n % LANES;
+        let mut s0 = _mm256_setzero_ps();
+        let mut s1 = _mm256_setzero_ps();
+        let mut s2 = _mm256_setzero_ps();
+        let mut s3 = _mm256_setzero_ps();
+        let mut j = 0;
+        while j < blocks {
+            let va = load8(a, j);
+            s0 = _mm256_add_ps(s0, _mm256_mul_ps(va, load8(b0, j)));
+            s1 = _mm256_add_ps(s1, _mm256_mul_ps(va, load8(b1, j)));
+            s2 = _mm256_add_ps(s2, _mm256_mul_ps(va, load8(b2, j)));
+            s3 = _mm256_add_ps(s3, _mm256_mul_ps(va, load8(b3, j)));
+            j += LANES;
+        }
+        let mut out = [reduce(s0), reduce(s1), reduce(s2), reduce(s3)];
+        while j < n {
+            let av = a[j];
+            out[0] += av * b0[j];
+            out[1] += av * b1[j];
+            out[2] += av * b2[j];
+            out[3] += av * b3[j];
+            j += 1;
+        }
+        out
+    }
+
+    /// AVX2 mirror of [`super::mean_field_scalar`].
+    ///
+    /// # Safety
+    /// CPU must support AVX2; all six slices must have equal length.
+    // SAFETY: lane loads/stores stay inside the equal-length slices
+    // (asserted in load8/store8); avx2 is guaranteed by the gate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mean_field(
+        px: f32,
+        py: f32,
+        xs: &[f32],
+        ys: &[f32],
+        ws: &[f32],
+        q: &mut [f32],
+        dx: &mut [f32],
+        dy: &mut [f32],
+    ) -> f32 {
+        let r = ws.len();
+        let blocks = r - r % LANES;
+        let vpx = _mm256_set1_ps(px);
+        let vpy = _mm256_set1_ps(py);
+        let one = _mm256_set1_ps(1.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < blocks {
+            let vdx = _mm256_sub_ps(vpx, load8(xs, i));
+            let vdy = _mm256_sub_ps(vpy, load8(ys, i));
+            let den = _mm256_add_ps(
+                _mm256_add_ps(one, _mm256_mul_ps(vdx, vdx)),
+                _mm256_mul_ps(vdy, vdy),
+            );
+            let vq = _mm256_div_ps(one, den);
+            store8(q, i, vq);
+            store8(dx, i, vdx);
+            store8(dy, i, vdy);
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(load8(ws, i), vq));
+            i += LANES;
+        }
+        let mut t = reduce(acc);
+        while i < r {
+            let dix = px - xs[i];
+            let diy = py - ys[i];
+            let qi = 1.0 / ((1.0 + dix * dix) + diy * diy);
+            q[i] = qi;
+            dx[i] = dix;
+            dy[i] = diy;
+            t += ws[i] * qi;
+            i += 1;
+        }
+        t
+    }
+
+    /// AVX2 mirror of [`super::mean_repulse_scalar`].
+    ///
+    /// # Safety
+    /// CPU must support AVX2; all four slices must have equal length.
+    // SAFETY: all lane loads stay inside the four equal-length slices
+    // (asserted in load8); avx2 is guaranteed by the dispatch gate.
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn mean_repulse(ws: &[f32], q: &[f32], dx: &[f32], dy: &[f32]) -> (f32, f32) {
+        let r = ws.len();
+        let blocks = r - r % LANES;
+        let mut gx = _mm256_setzero_ps();
+        let mut gy = _mm256_setzero_ps();
+        let mut i = 0;
+        while i < blocks {
+            let c = _mm256_mul_ps(_mm256_mul_ps(load8(ws, i), load8(q, i)), load8(q, i));
+            gx = _mm256_add_ps(gx, _mm256_mul_ps(c, load8(dx, i)));
+            gy = _mm256_add_ps(gy, _mm256_mul_ps(c, load8(dy, i)));
+            i += LANES;
+        }
+        let (mut ax, mut ay) = (reduce(gx), reduce(gy));
+        while i < r {
+            let c = (ws[i] * q[i]) * q[i];
+            ax += c * dx[i];
+            ay += c * dy[i];
+            i += 1;
+        }
+        (ax, ay)
+    }
+}
+
+// ---- dispatched entry points ---------------------------------------------
+
+/// Canonical 8-lane dot product; runtime-dispatched, bitwise identical
+/// across the AVX2 and scalar paths.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true, so the
+            // required target feature is present; lengths match.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    dot_scalar(a, b)
+}
+
+/// Canonical 8-lane squared Euclidean distance; runtime-dispatched,
+/// bitwise identical across the AVX2 and scalar paths.
+#[inline]
+pub fn d2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "d2: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true, so the
+            // required target feature is present; lengths match.
+            return unsafe { avx2::d2(a, b) };
+        }
+    }
+    d2_scalar(a, b)
+}
+
+/// 1×4 register block: one query row against four corpus rows. Lane `t`
+/// of the result is bitwise equal to `dot(a, b_t)`.
+#[inline]
+pub fn dot4(a: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> [f32; 4] {
+    debug_assert!(
+        a.len() == b0.len() && a.len() == b1.len() && a.len() == b2.len() && a.len() == b3.len(),
+        "dot4: length mismatch"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true, so the
+            // required target feature is present; lengths match.
+            return unsafe { avx2::dot4(a, b0, b1, b2, b3) };
+        }
+    }
+    dot4_scalar(a, b0, b1, b2, b3)
+}
+
+/// Fused attractive mean-field pass of the gather engine (DESIGN.md §9):
+/// caches `q`/`dx`/`dy` per mean point and returns `Σ w·q`.
+/// Runtime-dispatched, bitwise identical across paths.
+#[inline]
+pub fn mean_field(
+    px: f32,
+    py: f32,
+    xs: &[f32],
+    ys: &[f32],
+    ws: &[f32],
+    q: &mut [f32],
+    dx: &mut [f32],
+    dy: &mut [f32],
+) -> f32 {
+    let r = ws.len();
+    debug_assert!(
+        xs.len() == r && ys.len() == r && q.len() == r && dx.len() == r && dy.len() == r,
+        "mean_field: length mismatch"
+    );
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true, so the
+            // required target feature is present; lengths match.
+            return unsafe { avx2::mean_field(px, py, xs, ys, ws, q, dx, dy) };
+        }
+    }
+    mean_field_scalar(px, py, xs, ys, ws, q, dx, dy)
+}
+
+/// Repulsive mean accumulation over the buffers cached by
+/// [`mean_field`]. Runtime-dispatched, bitwise identical across paths.
+#[inline]
+pub fn mean_repulse(ws: &[f32], q: &[f32], dx: &[f32], dy: &[f32]) -> (f32, f32) {
+    let r = ws.len();
+    debug_assert!(q.len() == r && dx.len() == r && dy.len() == r, "mean_repulse: length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if mode() == MODE_AVX2 {
+            // SAFETY: MODE_AVX2 is only ever stored after
+            // `is_x86_feature_detected!("avx2")` returned true, so the
+            // required target feature is present; lengths match.
+            return unsafe { avx2::mean_repulse(ws, q, dx, dy) };
+        }
+    }
+    mean_repulse_scalar(ws, q, dx, dy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Bitwise equality with NaN-payload tolerance: NaN payload bits are
+    /// propagated but not contractual (see module doc).
+    fn bits_eq(x: f32, y: f32) -> bool {
+        x.to_bits() == y.to_bits() || (x.is_nan() && y.is_nan())
+    }
+
+    fn assert_bits_eq(x: f32, y: f32, ctx: &str) {
+        assert!(bits_eq(x, y), "{ctx}: {x:?} ({:#x}) vs {y:?} ({:#x})", x.to_bits(), y.to_bits());
+    }
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal()).collect()
+    }
+
+    /// Every remainder class mod 8 (d = 0..=17): dispatched kernels are
+    /// bitwise equal to the scalar fallbacks, and dot4 lane `t` equals a
+    /// standalone dot against row `t`.
+    #[test]
+    fn tail_sweep_dispatch_matches_scalar() {
+        let mut rng = Rng::new(42);
+        for d in 0..=17usize {
+            let a = randv(d, &mut rng);
+            let bs: Vec<Vec<f32>> = (0..4).map(|_| randv(d, &mut rng)).collect();
+            let b = &bs[0];
+            assert_bits_eq(dot(&a, b), dot_scalar(&a, b), &format!("dot d={d}"));
+            assert_bits_eq(d2(&a, b), d2_scalar(&a, b), &format!("d2 d={d}"));
+            let v = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            let w = dot4_scalar(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for t in 0..4 {
+                assert_bits_eq(v[t], w[t], &format!("dot4 lane {t} d={d}"));
+                assert_bits_eq(v[t], dot(&a, &bs[t]), &format!("dot4 vs dot lane {t} d={d}"));
+            }
+        }
+    }
+
+    /// NaN, ±inf and −0.0 propagate identically through both paths, at
+    /// head, lane-interior and tail positions of every alignment class.
+    #[test]
+    fn specials_propagate_bitwise() {
+        let specials = [f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0f32];
+        let mut rng = Rng::new(7);
+        for &d in &[1usize, 3, 7, 8, 9, 15, 16, 17] {
+            for &sv in &specials {
+                for pos in [0, d / 2, d - 1] {
+                    let mut a = randv(d, &mut rng);
+                    a[pos] = sv;
+                    let b = randv(d, &mut rng);
+                    let ctx = format!("special {sv:?} at {pos} d={d}");
+                    assert_bits_eq(dot(&a, &b), dot_scalar(&a, &b), &ctx);
+                    assert_bits_eq(d2(&a, &b), d2_scalar(&a, &b), &ctx);
+                    assert_bits_eq(dot(&b, &a), dot_scalar(&b, &a), &ctx);
+                }
+            }
+        }
+        // empty input reduces zeroed accumulators to +0.0 on both paths
+        assert_eq!(dot(&[], &[]).to_bits(), 0.0f32.to_bits());
+        assert_eq!(d2(&[], &[]).to_bits(), 0.0f32.to_bits());
+        // −0.0·+0.0 products leave the +0.0 accumulator positive
+        let nz = [-0.0f32; 5];
+        let pz = [0.0f32; 5];
+        assert_eq!(dot(&nz, &pz).to_bits(), 0.0f32.to_bits());
+    }
+
+    /// Random ragged shapes: the mean-pass kernels agree bitwise between
+    /// the dispatched and fallback paths, including the cached q/dx/dy
+    /// side buffers.
+    #[test]
+    fn mean_kernels_dispatch_invariant_on_ragged_shapes() {
+        let mut rng = Rng::new(11);
+        for trial in 0..60 {
+            let r = rng.below(66);
+            let xs = randv(r, &mut rng);
+            let ys = randv(r, &mut rng);
+            let mut ws = randv(r, &mut rng);
+            if r > 0 && trial % 5 == 0 {
+                ws[rng.below(r)] = f32::NAN;
+            }
+            let (mut q1, mut dx1, mut dy1) = (vec![0.0; r], vec![0.0; r], vec![0.0; r]);
+            let (mut q2, mut dx2, mut dy2) = (vec![0.0; r], vec![0.0; r], vec![0.0; r]);
+            let px = rng.normal();
+            let py = rng.normal();
+            let f1 = mean_field(px, py, &xs, &ys, &ws, &mut q1, &mut dx1, &mut dy1);
+            let f2 = mean_field_scalar(px, py, &xs, &ys, &ws, &mut q2, &mut dx2, &mut dy2);
+            assert_bits_eq(f1, f2, &format!("mean_field r={r}"));
+            for i in 0..r {
+                assert_bits_eq(q1[i], q2[i], &format!("q[{i}] r={r}"));
+                assert_bits_eq(dx1[i], dx2[i], &format!("dx[{i}] r={r}"));
+                assert_bits_eq(dy1[i], dy2[i], &format!("dy[{i}] r={r}"));
+            }
+            let (gx1, gy1) = mean_repulse(&ws, &q1, &dx1, &dy1);
+            let (gx2, gy2) = mean_repulse_scalar(&ws, &q2, &dx2, &dy2);
+            assert_bits_eq(gx1, gx2, &format!("mean_repulse gx r={r}"));
+            assert_bits_eq(gy1, gy2, &format!("mean_repulse gy r={r}"));
+        }
+    }
+
+    /// Random ragged shapes for the dot-family kernels, with occasional
+    /// specials mixed in.
+    #[test]
+    fn dot_kernels_dispatch_invariant_on_ragged_shapes() {
+        let mut rng = Rng::new(13);
+        for trial in 0..120 {
+            let d = rng.below(66);
+            let mut a = randv(d, &mut rng);
+            let b = randv(d, &mut rng);
+            if d > 0 && trial % 7 == 0 {
+                a[rng.below(d)] = [f32::NAN, f32::INFINITY, -0.0][trial % 3];
+            }
+            assert_bits_eq(dot(&a, &b), dot_scalar(&a, &b), &format!("dot d={d}"));
+            assert_bits_eq(d2(&a, &b), d2_scalar(&a, &b), &format!("d2 d={d}"));
+        }
+    }
+
+    /// The 8-lane kernels agree with a sequential f64 reference to
+    /// f32-roundoff accuracy (association changes bits, not magnitude).
+    #[test]
+    fn kernels_match_f64_reference() {
+        let mut rng = Rng::new(17);
+        for &d in &[16usize, 123, 512] {
+            let a = randv(d, &mut rng);
+            let b = randv(d, &mut rng);
+            let dref: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+            let scale: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 * y as f64).abs()).sum();
+            assert!(
+                (dot(&a, &b) as f64 - dref).abs() <= 1e-5 * scale.max(1.0),
+                "dot d={d}: {} vs {dref}",
+                dot(&a, &b)
+            );
+            let d2ref: f64 = a.iter().zip(&b).map(|(&x, &y)| (x as f64 - y as f64).powi(2)).sum();
+            assert!(
+                (d2(&a, &b) as f64 - d2ref).abs() <= 1e-5 * d2ref.max(1.0),
+                "d2 d={d}: {} vs {d2ref}",
+                d2(&a, &b)
+            );
+        }
+    }
+}

@@ -38,6 +38,9 @@
 //!
 //! `--threads N` (or the NOMAD_THREADS env var) bounds the worker threads
 //! used by the parallel kernels; the default is the machine's parallelism.
+//! `--quantize-build` routes the within-cluster kNN build through the int8
+//! screen-and-rerank scan (DESIGN.md §16); the exact f32 rerank keeps the
+//! resulting index bitwise identical to the unquantized build.
 
 use nomad::ann::backend::NativeBackend;
 use nomad::ann::graph::{edge_weights, mutuality};
@@ -144,6 +147,14 @@ fn dataset_spec(args: &Args, ds: &Dataset) -> DatasetSpec {
     }
 }
 
+/// The native distance backend for this invocation. `--quantize-build`
+/// turns on the int8 screen-and-rerank kNN build (`linalg::quant`,
+/// DESIGN.md §16); its exact f32 rerank keeps the index bitwise identical
+/// to the unquantized build, so the flag is safe on every subcommand.
+fn native_backend(args: &Args) -> NativeBackend {
+    NativeBackend::quantized(args.bool("quantize-build"))
+}
+
 fn index_params(args: &Args) -> IndexParams {
     IndexParams {
         n_clusters: args.usize("clusters", 64),
@@ -237,10 +248,10 @@ fn cmd_embed(args: &Args) -> Result<()> {
             match &coord.run.placement {
                 // worker sockets can fail mid-run: take the fallible path
                 Placement::Remote { .. } => {
-                    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                    let prep = coord.prepare(&ds.x, &native_backend(args));
                     coord.fit_resumable(ds.n(), &prep, None)?
                 }
-                Placement::InProcess => coord.fit(&ds, &NativeBackend::default()),
+                Placement::InProcess => coord.fit(&ds, &native_backend(args)),
             }
         }
         Some(dir) => {
@@ -279,7 +290,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
                     "resuming from checkpoint @ epoch {} / {}",
                     state.epochs_done, coord.params.epochs
                 );
-                let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                let prep = coord.prepare(&ds.x, &native_backend(args));
                 coord.resume_from(ds.n(), &prep, state, Some((&mut store, &cfg)))?
             } else {
                 let info = checkpoint::run_info_json(
@@ -296,7 +307,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
                     cfg.every,
                     cfg.retain
                 );
-                let prep = coord.prepare(&ds.x, &NativeBackend::default());
+                let prep = coord.prepare(&ds.x, &native_backend(args));
                 coord.fit_resumable(ds.n(), &prep, Some((&mut store, &cfg)))?
             }
         }
@@ -354,7 +365,7 @@ fn cmd_resume(args: &Args) -> Result<()> {
     println!("resuming from checkpoint @ epoch {} / {}", state.epochs_done, coord.params.epochs);
 
     let cfg = checkpoint_cfg(args, &ds);
-    let prep = coord.prepare(&ds.x, &NativeBackend::default());
+    let prep = coord.prepare(&ds.x, &native_backend(args));
     let run = coord.resume_from(ds.n(), &prep, state, Some((&mut store, &cfg)))?;
     write_outputs(args, &ds, &coord, &run)
 }
@@ -374,7 +385,7 @@ fn cmd_shard(args: &Args) -> Result<()> {
 
     let mut rng = Rng::new(seed);
     let t0 = std::time::Instant::now();
-    let index = ClusterIndex::build(&ds.x, &idxp, &NativeBackend::default(), &mut rng);
+    let index = ClusterIndex::build(&ds.x, &idxp, &native_backend(args), &mut rng);
     let weights = edge_weights(&index, weight_model);
     let spec = dataset_spec(args, &ds);
     let manifest = shard::write_shards(
@@ -565,7 +576,7 @@ fn cmd_index(args: &Args) -> Result<()> {
     let ds = load_dataset(args)?;
     let mut rng = Rng::new(args.u64("seed", 0));
     let t0 = std::time::Instant::now();
-    let idx = ClusterIndex::build(&ds.x, &index_params(args), &NativeBackend::default(), &mut rng);
+    let idx = ClusterIndex::build(&ds.x, &index_params(args), &native_backend(args), &mut rng);
     let secs = t0.elapsed().as_secs_f64();
     let sizes: Vec<usize> = idx.clusters.iter().map(|c| c.len()).collect();
     println!(

@@ -25,17 +25,23 @@ pub fn prometheus_text(snap: &Snapshot) -> String {
                 Value::Gauge(g) => {
                     out.push_str(&series_line(name, labels, &fmt_f64(*g)));
                 }
-                Value::Histogram { bounds, buckets, sum, count, .. } => {
+                Value::Histogram { bounds, buckets, sum, .. } => {
                     let mut cum = 0u64;
                     for (i, b) in bounds.iter().enumerate() {
                         cum += buckets[i];
                         let le = with_le(labels, &fmt_f64(*b));
                         out.push_str(&series_line(&format!("{name}_bucket"), &le, &cum.to_string()));
                     }
+                    // `+Inf` and `_count` come from the bucket sum, not the
+                    // separate count atomic: a scrape racing `observe` could
+                    // otherwise see a bucket increment the count atomic
+                    // hasn't caught up with, rendering a cumulative series
+                    // where `+Inf` < the last finite bucket.
+                    let total: u64 = cum + buckets[bounds.len()];
                     let le = with_le(labels, "+Inf");
-                    out.push_str(&series_line(&format!("{name}_bucket"), &le, &count.to_string()));
+                    out.push_str(&series_line(&format!("{name}_bucket"), &le, &total.to_string()));
                     out.push_str(&series_line(&format!("{name}_sum"), labels, &fmt_f64(*sum)));
-                    out.push_str(&series_line(&format!("{name}_count"), labels, &count.to_string()));
+                    out.push_str(&series_line(&format!("{name}_count"), labels, &total.to_string()));
                 }
             }
         }
@@ -217,6 +223,33 @@ nomad_test_wait_seconds_sum 8.25
 nomad_test_wait_seconds_count 4
 ";
         assert_eq!(text, expect);
+    }
+
+    /// A scrape can race `observe` between its bucket increment and its
+    /// count increment. The exposition must stay internally consistent
+    /// anyway: `+Inf` equals the bucket sum (monotone cumulative series)
+    /// and `_count` equals `+Inf`, whatever the count atomic said.
+    #[test]
+    fn torn_histogram_snapshot_renders_monotone() {
+        use crate::obs::metrics::{FamilySnap, Kind};
+        use std::collections::BTreeMap;
+        let torn = Value::Histogram {
+            bounds: vec![1.0, 2.0],
+            buckets: vec![2, 1, 1],
+            sum: 5.0,
+            count: 3, // lags the buckets by one observation
+            max: 4.0,
+        };
+        let mut series = BTreeMap::new();
+        series.insert(String::new(), torn);
+        let mut families = BTreeMap::new();
+        families.insert(
+            "nomad_torn_seconds".to_string(),
+            FamilySnap { help: "Torn.".to_string(), kind: Kind::Histogram, series },
+        );
+        let text = prometheus_text(&Snapshot { families });
+        assert!(text.contains("nomad_torn_seconds_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("nomad_torn_seconds_count 4"), "{text}");
     }
 
     #[test]

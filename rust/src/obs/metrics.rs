@@ -519,6 +519,54 @@ mod tests {
         assert_eq!(max, 9.0);
     }
 
+    /// Property sweep over randomized bucket edges: every observation —
+    /// including ones placed exactly on an edge — lands in exactly one
+    /// bucket, boundary samples count into the bucket whose upper bound
+    /// they equal (`le` semantics), and the cumulative `+Inf` total equals
+    /// the observation counter.
+    #[test]
+    fn histogram_edges_property() {
+        let mut rng = crate::util::rng::Rng::new(0xed6e5);
+        for trial in 0..50 {
+            let n_edges = 1 + rng.below(6);
+            let mut edges: Vec<f64> = (0..n_edges)
+                .map(|_| (rng.below(200) as f64 - 100.0) / 8.0)
+                .collect();
+            edges.sort_by(|a, b| a.total_cmp(b));
+            edges.dedup();
+            let h = Histogram::detached(&edges);
+            // observe each edge exactly, plus points strictly between and
+            // beyond the edges
+            let mut values: Vec<f64> = edges.clone();
+            for w in edges.windows(2) {
+                values.push((w[0] + w[1]) / 2.0);
+            }
+            values.push(edges[0] - 1.0);
+            values.push(edges[edges.len() - 1] + 1.0);
+            for &v in &values {
+                h.observe(v);
+            }
+            let Value::Histogram { bounds, buckets, count, .. } = h.snapshot_value() else {
+                panic!("histogram snapshot")
+            };
+            assert_eq!(bounds, edges, "trial {trial}: bounds survive");
+            let total: u64 = buckets.iter().sum();
+            assert_eq!(total, values.len() as u64, "trial {trial}: one bucket per sample");
+            assert_eq!(total, count, "trial {trial}: +Inf cumulative == counter");
+            // per-bucket recount from `le` semantics: bucket i holds values
+            // in (edge[i-1], edge[i]]; an exact-edge sample is in bucket i
+            for (i, &b) in bounds.iter().enumerate() {
+                let expect = values
+                    .iter()
+                    .filter(|&&v| v <= b && (i == 0 || v > bounds[i - 1]))
+                    .count() as u64;
+                assert_eq!(buckets[i], expect, "trial {trial}: bucket {i} (le {b})");
+            }
+            let beyond = values.iter().filter(|&&v| v > bounds[bounds.len() - 1]).count();
+            assert_eq!(buckets[bounds.len()], beyond as u64, "trial {trial}: overflow");
+        }
+    }
+
     #[test]
     fn histogram_quantile_interpolates() {
         let h = Histogram::detached(&[1.0, 2.0]);

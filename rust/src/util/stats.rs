@@ -24,8 +24,13 @@ impl Summary {
             / (n.max(2) - 1) as f64;
         let mut sorted = samples.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
+        // nearest-rank percentile: the smallest sample with at least p·n
+        // samples ≤ it. The old `round(p·(n-1))` interpolation index
+        // under-reported the tail — at n = 67 it mapped p99 to sorted[65]
+        // instead of sorted[66], dropping the worst latency sample from
+        // the bench tables.
         let q = |p: f64| -> f64 {
-            let idx = (p * (n - 1) as f64).round() as usize;
+            let idx = ((p * n as f64).ceil() as usize).max(1) - 1;
             sorted[idx.min(n - 1)]
         };
         Summary {
@@ -101,6 +106,37 @@ mod tests {
         let t = Summary::of(&[f64::NAN, f64::NAN]);
         assert_eq!(t.n, 2);
         assert!(t.max.is_nan());
+    }
+
+    /// Nearest-rank regression sweep: for every n in 1..=100 and each
+    /// reported percentile, the result must equal the brute-force
+    /// nearest-rank oracle ceil(p·n) on a distinct-valued sample. The old
+    /// round(p·(n-1)) index failed this at, e.g., n = 67 / p = 0.99
+    /// (round(65.34) = 65 instead of rank ceil(66.33) = 66 -> index 65
+    /// vs 66 — it never reported the worst sample).
+    #[test]
+    fn percentiles_match_nearest_rank_oracle() {
+        for n in 1..=100usize {
+            // distinct, shuffled-ish values so a wrong index is visible
+            // (37 is coprime to the prime 101 > n, so no collisions)
+            let samples: Vec<f64> = (0..n).map(|i| ((i * 37) % 101) as f64).collect();
+            let s = Summary::of(&samples);
+            let mut sorted = samples.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let oracle = |p: f64| {
+                let rank = (p * n as f64).ceil() as usize; // 1-based
+                sorted[rank.max(1) - 1]
+            };
+            assert_eq!(s.p50, oracle(0.50), "n={n} p50");
+            assert_eq!(s.p90, oracle(0.90), "n={n} p90");
+            assert_eq!(s.p99, oracle(0.99), "n={n} p99");
+        }
+        // the motivating case, spelled out: with 67 samples the p99 must
+        // be the maximum (ceil(0.99 * 67) = 67, the last rank); the old
+        // index reported sorted[65] and the worst sample never surfaced.
+        let s = Summary::of(&(0..67).map(|i| i as f64).collect::<Vec<_>>());
+        assert_eq!(s.p99, 66.0);
+        assert_eq!(s.p99, s.max);
     }
 
     #[test]

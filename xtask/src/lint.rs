@@ -61,6 +61,11 @@ pub enum Rule {
     /// zero-perturbation A/B gate only covers time taken through
     /// `util::clock::Stopwatch`.
     ObsSink,
+    /// (f) raw SIMD — `std::arch`/`core::arch` paths, `_mm*` intrinsic
+    /// names, `#[target_feature]` — is banned outside `linalg/simd.rs`:
+    /// the bitwise scalar/vector equivalence contract (DESIGN.md §16) is
+    /// only audited there, and a stray intrinsic elsewhere would dodge it.
+    SimdArch,
     /// A malformed or unused `lint: allow` pragma (not suppressible).
     Pragma,
 }
@@ -77,6 +82,7 @@ impl Rule {
             Rule::ParserPanic => "parser_panic",
             Rule::ParserIndex => "parser_index",
             Rule::ObsSink => "obs_sink",
+            Rule::SimdArch => "simd_arch",
             Rule::Pragma => "pragma",
         }
     }
@@ -92,6 +98,7 @@ impl Rule {
             "parser_panic" => Rule::ParserPanic,
             "parser_index" => Rule::ParserIndex,
             "obs_sink" => Rule::ObsSink,
+            "simd_arch" => Rule::SimdArch,
             _ => return None,
         })
     }
@@ -642,6 +649,27 @@ pub fn lint_source(rel: &str, src: &str) -> FileOutcome {
                     rule: Rule::DetThread,
                     msg: "thread-identity read in a determinism-critical module".to_string(),
                 });
+            }
+        }
+
+        // (f) raw SIMD outside the audited kernel module, everywhere
+        // (tests included).  Plain `contains` on purpose: intrinsic names
+        // like `_mm256_add_ps` must match the `_mm256_` needle, which
+        // ident-boundary matching would reject.
+        if rel != "linalg/simd.rs" {
+            for needle in
+                ["std::arch", "core::arch", "_mm_", "_mm256_", "_mm512_", "target_feature"]
+            {
+                if code.contains(needle) {
+                    raw.push(Violation {
+                        line: ln + 1,
+                        rule: Rule::SimdArch,
+                        msg: format!(
+                            "raw SIMD (`{needle}`) outside `linalg/simd.rs` — the dispatch and \
+                             bitwise-equivalence contract lives there (DESIGN.md §16)"
+                        ),
+                    });
+                }
             }
         }
 

@@ -373,6 +373,41 @@ fn array_type_brackets_are_not_indexing() {
     assert!(lint("util/npy.rs", src).is_empty());
 }
 
+// ------------------------------------------------------------ rule (f)
+
+#[test]
+fn simd_arch_fires_outside_the_kernel_module() {
+    let ident = "fn f(x: f32) -> f32 { crate::helpers::_mm256_frob(x) }\n";
+    assert_eq!(rules("linalg/distance.rs", ident), vec!["simd_arch"]);
+    let attr = "#[target_feature(enable = \"avx2\")]\nfn g() {}\n";
+    assert_eq!(rules("embed/native.rs", attr), vec!["simd_arch"]);
+    let path = "fn f() -> bool { std::arch::is_x86_feature_detected!(\"avx2\") }\n";
+    assert_eq!(rules("a.rs", path), vec!["simd_arch"]);
+    // prose mentions are fine — only the code stream is scanned
+    assert!(lint("a.rs", "// _mm256_add_ps discussed in a comment\nfn f() {}\n").is_empty());
+}
+
+#[test]
+fn simd_arch_is_exempt_in_the_kernel_module() {
+    let src = "\
+// SAFETY: caller proved the avx2 target feature is available
+#[target_feature(enable = \"avx2\")]
+unsafe fn d(a: &[f32]) -> f32 { a[0] }
+";
+    assert!(lint("linalg/simd.rs", src).is_empty());
+}
+
+#[test]
+fn simd_arch_pragma_suppresses() {
+    let src = "\
+// lint: allow(simd_arch, reason = \"names the intrinsic in a diagnostic string builder\")
+fn f() -> &'static str { stringify!(_mm256_add_ps) }
+";
+    let out = lint_source("a.rs", src);
+    assert!(out.violations.is_empty(), "{:?}", out.violations);
+    assert_eq!(out.pragmas_used, 1);
+}
+
 // ------------------------------------------------------------- pragmas
 
 #[test]
